@@ -1,0 +1,55 @@
+//! Code explorer: inspect any code family side by side — values, bin
+//! boundaries, usage under the block-scaled distribution, expected errors.
+//!
+//! ```bash
+//! cargo run --release --example code_explorer -- --specs nf4,af4-4096,balanced-ep-4096 --block 4096
+//! ```
+
+use afq::codes::{expected_l1, expected_l2, registry};
+use afq::dist::BlockScaledDist;
+use afq::util::cli::Command;
+use afq::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("code_explorer", "compare quantization codes")
+        .opt("specs", "comma-separated code specs", Some("nf4,af4-64,af4-4096"))
+        .opt("block", "block size for the usage simulation", Some("64"))
+        .opt("samples", "number of simulated blocks", Some("4096"))
+        .opt("seed", "rng seed", Some("0"));
+    let args = cmd.parse(&argv)?;
+    let b = args.usize("block", 64);
+    let dist = BlockScaledDist::new(b);
+    let mut rng = Rng::new(args.u64("seed", 0));
+    let xs = dist.sample(&mut rng, args.usize("samples", 4096));
+
+    for spec in args.str_list("specs", &[]) {
+        let code =
+            registry::build(&spec).ok_or_else(|| format!("unknown code spec {spec:?}"))?;
+        let usage = code.usage(&xs);
+        println!("\n── {spec} ──────────────────────────────────────────");
+        println!(
+            "expected L1 {:.6} | expected L2 {:.6} | has ±1/0: {}",
+            expected_l1(&code, &dist),
+            expected_l2(&code, &dist),
+            code.has_endpoints_and_zero()
+        );
+        println!("{:>4} {:>10} {:>10} {:>8}", "q", "value", "usage", "");
+        for (j, (&v, &u)) in code.values.iter().zip(&usage).enumerate() {
+            let bar = "#".repeat((u * 300.0).round() as usize);
+            println!("{:>4} {v:>10.5} {:>9.2}% {bar}", j + 1, u * 100.0);
+        }
+    }
+    println!(
+        "\n(usage simulated from {} blocks of B={b} standard normals)",
+        args.usize("samples", 4096)
+    );
+    Ok(())
+}

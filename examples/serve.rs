@@ -1,0 +1,115 @@
+//! Serving demo: a batched scoring service over a quantized model —
+//! dynamic batcher + device-resident NF4 weights, with a latency /
+//! throughput report (the paper-system-as-a-service scenario).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve -- [--clients 16] [--requests 64]
+//! ```
+
+use afq::coordinator::{Batcher, EngineHandle, ModelService, QuantSpec};
+use afq::model::{generate_corpus, BatchSampler, ParamSet};
+use afq::util::cli::Command;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("serve", "batched scoring service demo")
+        .opt("model", "tiny|small|base", Some("tiny"))
+        .opt("code", "fp|nf4|af4", Some("nf4"))
+        .opt("block", "quantization block size", Some("64"))
+        .opt("clients", "concurrent client threads", Some("16"))
+        .opt("requests", "requests per client", Some("16"))
+        .opt("max-wait-ms", "batcher deadline", Some("20"))
+        .opt("artifacts", "artifacts dir", Some("artifacts"));
+    let args = cmd.parse(&argv)?;
+    let model = args.get_or("model", "tiny");
+
+    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
+    let meta = eng.manifest().config(model)?.clone();
+    // Serve from random-init weights (the service doesn't care; swap in a
+    // checkpoint via `afq train` for a real model).
+    let params = ParamSet::init(&meta, 3);
+    let spec = if args.get_or("code", "nf4") == "fp" {
+        QuantSpec::fp()
+    } else {
+        QuantSpec {
+            family: args.get_or("code", "nf4").into(),
+            block_size: args.usize("block", 64),
+        }
+    };
+    println!(
+        "serving {model} ({:.2}M params) quantized as {}@B={} — weights device-resident",
+        meta.n_params() as f64 / 1e6,
+        spec.family,
+        spec.block_size
+    );
+    let service = Arc::new(ModelService::prepare(&eng, model, &params, spec)?);
+    let (handle, mut batcher) = Batcher::spawn(
+        Arc::clone(&service),
+        Duration::from_millis(args.u64("max-wait-ms", 20)),
+        4096,
+    );
+
+    // Client load: each client scores `requests` random windows.
+    let corpus = generate_corpus("english", 200_000, 11)?;
+    let n_clients = args.usize("clients", 16);
+    let n_requests = args.usize("requests", 16);
+    let seq = meta.seq_len;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let h = handle.clone();
+        let corpus = corpus.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut s = BatchSampler::new(corpus, seq, 1, c as u64);
+            let mut lat = Vec::with_capacity(n_requests);
+            let mut total_nll = 0.0f64;
+            for _ in 0..n_requests {
+                let (ids, tgt) = s.sample();
+                let t = Instant::now();
+                let resp = h.score(ids, tgt).expect("scored");
+                lat.push(t.elapsed());
+                total_nll += resp.nll.iter().map(|&x| x as f64).sum::<f64>();
+            }
+            (lat, total_nll)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    for j in joins {
+        let (lat, _) = j.join().unwrap();
+        all_lat.extend(lat);
+    }
+    let wall = t0.elapsed();
+    all_lat.sort();
+    let total_requests = n_clients * n_requests;
+    let total_tokens = total_requests * seq;
+    println!("\n== load test report ==");
+    println!("requests     : {total_requests} over {wall:.2?}");
+    println!(
+        "throughput   : {:.1} req/s, {:.0} tokens/s",
+        total_requests as f64 / wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "client p50/p95/p99: {:.2?} / {:.2?} / {:.2?}",
+        all_lat[all_lat.len() / 2],
+        all_lat[all_lat.len() * 95 / 100],
+        all_lat[all_lat.len() * 99 / 100]
+    );
+    println!("engine batch latency: {}", service.latency.summary());
+    println!(
+        "batch efficiency: {:.1}% (padding waste {:.1}%)",
+        service.counters.batch_efficiency() * 100.0,
+        (1.0 - service.counters.batch_efficiency()) * 100.0
+    );
+    batcher.stop();
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! END-TO-END driver (DESIGN.md §6): trains a char-LM **from Rust** via the
+//! AOT-compiled AdamW train step, logs the loss curve, quantizes the
+//! trained weights with NF4 and AF4 at several block sizes, and reports
+//! held-out word-perplexity per configuration — the full three-layer stack
+//! (Pallas kernels → JAX graph → Rust coordinator) on one real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_e2e -- [--model small] [--steps 300]
+//! ```
+
+use afq::coordinator::{train, EngineHandle, ModelService, QuantSpec, TrainConfig};
+use afq::model::{bytes_per_word, generate_corpus, word_ppl, BatchSampler, ParamSet};
+use afq::util::cli::Command;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("train_e2e", "end-to-end train → quantize → eval")
+        .opt("model", "tiny|small|base", Some("small"))
+        .opt("steps", "training steps", Some("300"))
+        .opt("corpus", "english|markov", Some("english"))
+        .opt("eval-batches", "eval batches", Some("8"))
+        .opt("artifacts", "artifacts dir", Some("artifacts"));
+    let args = cmd.parse(&argv)?;
+    let model = args.get_or("model", "small");
+    let steps = args.usize("steps", 300);
+
+    println!("== e2e: spawn engine ==");
+    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
+    let meta = eng.manifest().config(model)?.clone();
+    println!(
+        "model {model}: {} layers, d={}, {:.2}M params",
+        meta.n_layer,
+        meta.d_model,
+        meta.n_params() as f64 / 1e6
+    );
+
+    println!("\n== e2e: train {steps} steps on {} ==", args.get_or("corpus", "english"));
+    let corpus = args.get_or("corpus", "english");
+    let data = generate_corpus(corpus, 400_000, 1234)?;
+    let mut sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 7);
+    let params = ParamSet::init(&meta, 42);
+    let cfg = TrainConfig { steps, lr: 3e-3, warmup: 20, seed: 0, log_every: steps.div_ceil(20) };
+    let result = train(&eng, model, params, &mut sampler, &cfg)?;
+    println!("loss curve:");
+    for (s, l) in &result.losses {
+        let bar = "▆".repeat(((l / result.losses[0].1) * 40.0) as usize);
+        println!("  step {s:>5}  {l:.4}  {bar}");
+    }
+    let first = result.losses.first().unwrap().1;
+    let last = result.losses.last().unwrap().1;
+    println!(
+        "trained in {:.1}s ({:.2} steps/s); loss {first:.3} → {last:.3}",
+        result.seconds,
+        steps as f64 / result.seconds
+    );
+    if last >= first {
+        return Err("training did not reduce loss".into());
+    }
+
+    println!("\n== e2e: quantize + eval held-out ppl ==");
+    let val = generate_corpus(corpus, 200_000, afq::exp::lm::VAL_SEED)?;
+    let bpw = bytes_per_word(&val);
+    let vs = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
+    let batches = vs.eval_batches(args.usize("eval-batches", 8));
+    let n_tok = batches.len() * meta.batch * meta.seq_len;
+
+    let fp = ModelService::prepare(&eng, model, &result.params, QuantSpec::fp())?;
+    let nll_fp = fp.mean_nll(&batches)?;
+    println!(
+        "  {:>12} {:>7}: nll {nll_fp:.4}  word-ppl {:8.2}",
+        "fp32",
+        "-",
+        word_ppl(nll_fp * n_tok as f64, n_tok, bpw)
+    );
+    let mut rows = vec![("fp".to_string(), 0usize, nll_fp)];
+    for family in ["nf4", "af4"] {
+        for &b in &[64usize, 1024, 4096] {
+            let svc = ModelService::prepare(
+                &eng,
+                model,
+                &result.params,
+                QuantSpec { family: family.into(), block_size: b },
+            )?;
+            let nll = svc.mean_nll(&batches)?;
+            println!(
+                "  {:>12} {b:>7}: nll {nll:.4}  word-ppl {:8.2}  (Δ {:+.4})",
+                family,
+                word_ppl(nll * n_tok as f64, n_tok, bpw),
+                nll - nll_fp
+            );
+            rows.push((family.to_string(), b, nll));
+            svc.release();
+        }
+    }
+
+    // Shape assertions: quantization degrades ≥ ~0, and worsens with B.
+    let get = |f: &str, b: usize| rows.iter().find(|(ff, bb, _)| ff == f && *bb == b).unwrap().2;
+    assert!(get("nf4", 4096) >= get("nf4", 64) - 2e-3, "NF4 must degrade with B");
+    println!(
+        "\nAF4 vs NF4 at B=4096: Δnll = {:+.4} (negative favours AF4)",
+        get("af4", 4096) - get("nf4", 4096)
+    );
+    println!("e2e OK — all three layers exercised (Pallas dequant kernels ran inside the scoring graph).");
+    Ok(())
+}

@@ -1,0 +1,271 @@
+"""AOT compiler: lower every L2 entrypoint to HLO **text** + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the Rust ``xla`` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from ``python/``
+(the Makefile target ``make artifacts`` does this and is a no-op when
+sources are older than the manifest).
+
+Artifacts produced:
+  kernel_quantize_b64        Pallas quantize kernel, N=65536
+  kernel_dequantize_b64      Pallas dequantize kernel, N=65536
+  kernel_qmatmul_b64         fused dequant-matmul, 8×512 @ 512×512
+  score_fp_<model>           fp32 scoring graph  (nll, correct)
+  score_q<B>_<model>         quantized scoring graph for each block size
+  train_<model>              AdamW train step (tiny, small)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.dequantize import dequantize_blockwise
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.quantize import quantize_blockwise
+
+DEFAULT_BLOCKS = [64, 256, 1024, 4096]
+TRAIN_MODELS = ["tiny", "small", "base"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, arr_spec):
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[arr_spec.dtype]
+    return {"name": name, "dtype": dt, "shape": list(arr_spec.shape)}
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_artifact(fn, in_specs, out_dir, name, meta):
+    """Lower fn(*in_specs), write HLO text, return manifest entry."""
+    lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *[s for _, s in in_specs])
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [spec(n, s) for n, s in in_specs],
+        "outputs": [spec(f"out{i}", s) for i, s in enumerate(outs)],
+    }
+    entry.update(meta)
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO, "
+          f"{len(entry['inputs'])} inputs, {len(entry['outputs'])} outputs")
+    return entry
+
+
+def quant_input_specs(cfg, block_size):
+    """(name, spec) list for a quantized scoring artifact, in call order."""
+    ins = [
+        ("ids", i32(cfg.batch, cfg.seq_len)),
+        ("targets", i32(cfg.batch, cfg.seq_len)),
+        ("code", f32(16)),
+    ]
+    for name, shape in M.vector_specs(cfg):
+        ins.append((name, f32(*shape)))
+    for name, (out, inn) in M.matrix_specs(cfg):
+        n = out * inn
+        assert n % block_size == 0, (name, n, block_size)
+        ins.append((f"{name}.idx", i32(n)))
+        ins.append((f"{name}.scales", f32(n // block_size)))
+    return ins
+
+
+def build_score_quant(cfg, block_size):
+    nv = len(M.vector_specs(cfg))
+    nm = len(M.matrix_specs(cfg))
+
+    def fn(ids, targets, code, *rest):
+        vectors = list(rest[:nv])
+        flat_q = rest[nv:]
+        qpairs = [(flat_q[2 * i], flat_q[2 * i + 1]) for i in range(nm)]
+        nll, correct = M.score_quant(cfg, vectors, qpairs, code, ids, targets, block_size)
+        return (nll, correct)
+
+    return fn, quant_input_specs(cfg, block_size)
+
+
+def build_score_fp(cfg):
+    nv = len(M.vector_specs(cfg))
+
+    def fn(ids, targets, *params):
+        vectors = list(params[:nv])
+        matrices = list(params[nv:])
+        nll, correct = M.score_fp(cfg, vectors, matrices, ids, targets)
+        return (nll, correct)
+
+    ins = [("ids", i32(cfg.batch, cfg.seq_len)), ("targets", i32(cfg.batch, cfg.seq_len))]
+    for name, shape in M.param_specs(cfg):
+        ins.append((name, f32(*shape)))
+    return fn, ins
+
+
+def build_train(cfg):
+    np_ = len(M.param_specs(cfg))
+
+    def fn(step, lr, ids, targets, *rest):
+        params = list(rest[:np_])
+        m = list(rest[np_ : 2 * np_])
+        v = list(rest[2 * np_ :])
+        new_p, new_m, new_v, loss = M.train_step(cfg, params, m, v, step, ids, targets, lr)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    ins = [
+        ("step", f32()),
+        ("lr", f32()),
+        ("ids", i32(cfg.batch, cfg.seq_len)),
+        ("targets", i32(cfg.batch, cfg.seq_len)),
+    ]
+    for prefix in ["p", "m", "v"]:
+        for name, shape in M.param_specs(cfg):
+            ins.append((f"{prefix}.{name}", f32(*shape)))
+    return fn, ins
+
+
+def build_kernels(out_dir):
+    entries = []
+    n, b = 65536, 64
+    entries.append(
+        lower_artifact(
+            lambda x, code: quantize_blockwise(x, code, b),
+            [("x", f32(n)), ("code", f32(16))],
+            out_dir,
+            "kernel_quantize_b64",
+            {"kind": "kernel", "block_size": b, "n": n},
+        )
+    )
+    entries.append(
+        lower_artifact(
+            lambda idx, scales, code: (dequantize_blockwise(idx, scales, code, b),),
+            [("idx", i32(n)), ("scales", f32(n // b)), ("code", f32(16))],
+            out_dir,
+            "kernel_dequantize_b64",
+            {"kind": "kernel", "block_size": b, "n": n},
+        )
+    )
+    batch, k, nout = 8, 512, 512
+    entries.append(
+        lower_artifact(
+            lambda x, idx, scales, code: (qmatmul(x, idx, scales, code, b, nout),),
+            [
+                ("x", f32(batch, k)),
+                ("idx", i32(nout * k)),
+                ("scales", f32(nout * k // b)),
+                ("code", f32(16)),
+            ],
+            out_dir,
+            "kernel_qmatmul_b64",
+            {"kind": "kernel", "block_size": b, "batch": batch, "k": k, "n": nout},
+        )
+    )
+    return entries
+
+
+def config_meta(cfg):
+    return {
+        "n_layer": cfg.n_layer,
+        "d_model": cfg.d_model,
+        "n_head": cfg.n_head,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "vocab": M.VOCAB,
+        "param_order": [
+            {"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)
+        ],
+        "matrix_order": [
+            {"name": n, "shape": list(s)} for n, s in M.matrix_specs(cfg)
+        ],
+    }
+
+
+def source_digest():
+    """Hash of the compile-path sources, recorded in the manifest so `make`
+    and the runtime can detect staleness."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small,base")
+    ap.add_argument("--blocks", default=",".join(str(b) for b in DEFAULT_BLOCKS))
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    models = [m for m in args.models.split(",") if m]
+    blocks = [int(b) for b in args.blocks.split(",") if b]
+
+    entries = []
+    if not args.skip_kernels:
+        print("kernels:")
+        entries += build_kernels(out_dir)
+
+    for mname in models:
+        cfg = M.CONFIGS[mname]
+        print(f"model {mname} ({M.n_params(cfg)/1e6:.2f}M params):")
+        fn, ins = build_score_fp(cfg)
+        entries.append(
+            lower_artifact(fn, ins, out_dir, f"score_fp_{mname}",
+                           {"kind": "score_fp", "model": mname})
+        )
+        for b in blocks:
+            fn, ins = build_score_quant(cfg, b)
+            entries.append(
+                lower_artifact(fn, ins, out_dir, f"score_q{b}_{mname}",
+                               {"kind": "score_quant", "model": mname, "block_size": b})
+            )
+        if mname in TRAIN_MODELS and not args.skip_train:
+            fn, ins = build_train(cfg)
+            entries.append(
+                lower_artifact(fn, ins, out_dir, f"train_{mname}",
+                               {"kind": "train", "model": mname})
+            )
+
+    manifest = {
+        "version": 1,
+        "digest": source_digest(),
+        "artifacts": entries,
+        "configs": {m: config_meta(M.CONFIGS[m]) for m in models},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

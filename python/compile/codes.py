@@ -1,0 +1,115 @@
+"""Code construction on the Python side — used to cross-validate the Rust
+implementation (`rust/src/codes`) and to seed tests. The Rust side is the
+production path; this module exists so the two independent implementations
+can be checked against each other.
+"""
+
+import numpy as np
+from scipy.stats import norm
+
+
+def nf4_delta():
+    return 0.5 * (1.0 / 32.0 + 1.0 / 30.0)
+
+
+def nf4():
+    """Canonical NF4 (quantile-of-evenly-spaced-probabilities variant)."""
+    d = nf4_delta()
+    neg = norm.ppf(np.linspace(d, 0.5, 8))
+    pos = norm.ppf(np.linspace(0.5, 1.0 - d, 9))[1:]
+    tilde = np.concatenate([neg, pos])
+    vals = tilde / np.max(np.abs(tilde))
+    # snap structural values exactly
+    vals[0], vals[7], vals[15] = -1.0, 0.0, 1.0
+    return vals.astype(np.float64)
+
+
+def m_median(block_size):
+    """Median of M = max|Z_i| over a block: Þ⁻¹(2^{-1/B})."""
+    p = 0.5 ** (1.0 / block_size)
+    return norm.ppf((1.0 + p) / 2.0)
+
+
+def approx_block_cdf(x, block_size):
+    """Appendix-A approximation of the full mixed CDF F_X(x; B)."""
+    x = np.asarray(x, dtype=np.float64)
+    m0 = m_median(block_size)
+    lo, hi = norm.cdf(-m0), norm.cdf(m0)
+    g = np.clip((norm.cdf(x * m0) - lo) / (hi - lo), 0.0, 1.0)
+    a = 1.0 / (2.0 * block_size)
+    out = a + (1.0 - 1.0 / block_size) * g
+    out = np.where(x < -1.0, 0.0, np.where(x >= 1.0, 1.0, out))
+    return out
+
+
+def approx_block_quantile(p, block_size):
+    """Inverse of ``approx_block_cdf`` (continuous region only)."""
+    a = 1.0 / (2.0 * block_size)
+    p = np.asarray(p, dtype=np.float64)
+    t = np.clip((p - a) / (1.0 - 1.0 / block_size), 1e-15, 1 - 1e-15)
+    m0 = m_median(block_size)
+    lo, hi = norm.cdf(-m0), norm.cdf(m0)
+    return norm.ppf(lo + t * (hi - lo)) / m0
+
+
+def af4_approx(block_size):
+    """AF4-B built on the Appendix-A CDF — the Python twin of the Rust
+    ``af4x-<B>`` registry entry (close to exact AF4; see paper Fig. 10).
+
+    Same shooting construction as ``rust/src/codes/af4.rs``.
+    """
+    F = lambda x: float(approx_block_cdf(x, block_size))
+    Finv = lambda p: float(approx_block_quantile(p, block_size))
+
+    def chain(start, a2, steps):
+        vals = [start, a2]
+        for _ in range(steps):
+            prev, cur = vals[-2], vals[-1]
+            rho = 2.0 * F(cur) - F(0.5 * (prev + cur))
+            if not (1e-9 < rho < 1 - 1e-9):
+                return None
+            nxt = 2.0 * Finv(rho) - cur
+            if nxt <= cur + 1e-12:
+                return None
+            vals.append(nxt)
+        return vals
+
+    def shoot(start, a2, steps, target):
+        c = chain(start, a2, steps)
+        if c is None:
+            # diagnose direction as in the Rust solver
+            prev, cur = start, a2
+            for _ in range(steps):
+                rho = 2.0 * F(cur) - F(0.5 * (prev + cur))
+                if rho >= 1 - 1e-9:
+                    return 1e6
+                if rho <= 1e-9:
+                    return -1e6
+                nxt = 2.0 * Finv(rho) - cur
+                if nxt <= cur + 1e-12:
+                    return -1e6
+                prev, cur = cur, nxt
+            raise AssertionError
+        return c[-1] - target
+
+    def solve(start, lo, hi, steps, target):
+        xs = np.linspace(lo, hi, 400)[1:-1]
+        fprev, xprev = None, None
+        bracket = None
+        for x in xs:
+            fx = shoot(start, float(x), steps, target)
+            if fprev is not None and fprev * fx <= 0:
+                bracket = (xprev, float(x))
+                break
+            fprev, xprev = fx, float(x)
+        assert bracket, "no bracket"
+        from scipy.optimize import brentq
+
+        root = brentq(lambda t: shoot(start, t, steps, target), *bracket, xtol=1e-13)
+        c = chain(start, root, steps)
+        c[-1] = target
+        return c
+
+    lower = solve(-1.0, -1.0, 0.0, 6, 0.0)
+    upper = solve(0.0, 0.0, 1.0, 7, 1.0)
+    return np.array(lower + upper[1:], dtype=np.float64)

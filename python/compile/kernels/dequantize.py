@@ -1,0 +1,94 @@
+"""Pallas kernel: blockwise dequantization ``w = code[idx] * scale``.
+
+This is the request-path kernel: every quantized matmul in the L2 model
+first reconstitutes its weight tile from (packed indices, scales, code).
+TPU mapping: the 16-entry code table lives in VMEM for the whole kernel;
+the gather is expressed as a one-hot matmul (idx → one-hot(16) @ code),
+which on TPU feeds the MXU instead of a serial gather unit — the standard
+trick for tiny tables. Under ``interpret=True`` XLA simplifies it back to
+a take, so CPU correctness is identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 8
+
+
+def pick_rows(n_blocks, block_size, max_grid=16, max_tile_bytes=1 << 22):
+    """Rows of blocks per grid step.
+
+    Two constraints shape the HBM↔VMEM schedule: (1) few grid steps — at
+    B=64 a 256Ki-element matrix has 4096 blocks, and a grid of 512 tiny
+    steps is pure loop overhead (measured 3.8× on the end-to-end scoring
+    graph, EXPERIMENTS.md §Perf); (2) the tile must fit VMEM (~4 MB here,
+    half of a 16 MB VMEM budget leaving room for double buffering).
+    """
+    rows = max(1, n_blocks // max_grid)
+    while rows > 1 and rows * block_size * 4 > max_tile_bytes:
+        rows //= 2
+    while n_blocks % rows:
+        rows -= 1
+    return rows
+
+
+# Lookup strategy: `take` (gather) vs one-hot matmul. One-hot feeds the MXU
+# on real TPU, but on the CPU interpret path it materializes a ×16 f32
+# temporary that blows past cache — measured 5.2× end-to-end slowdown on the
+# `small` scoring graph (EXPERIMENTS.md §Perf). Default to gather; flip to
+# one-hot when compiling for a Mosaic target.
+USE_ONEHOT_LOOKUP = False
+
+
+def _lookup(idx, code):
+    if USE_ONEHOT_LOOKUP:
+        onehot = (idx[..., None] == jnp.arange(16)[None, None, :]).astype(jnp.float32)
+        return onehot @ code
+    return jnp.take(code, idx, axis=0)
+
+
+def _dequant_kernel(idx_ref, scale_ref, code_ref, out_ref):
+    idx = idx_ref[...]
+    vals = _lookup(idx, code_ref[...])
+    out_ref[...] = vals * scale_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def dequantize_blockwise(idx, scales, code, block_size):
+    """Dequantize flat indices back to f32 via Pallas.
+
+    Args:
+      idx: i32[N]; scales: f32[N // block_size]; code: f32[16].
+    Returns:
+      f32[N]
+    """
+    n = idx.shape[0]
+    assert n % block_size == 0
+    n_blocks = n // block_size
+    rows = pick_rows(n_blocks, block_size)
+    assert n_blocks % rows == 0, (n_blocks, rows)
+    ib = idx.reshape(n_blocks, block_size)
+    grid = (n_blocks // rows,)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_size), jnp.float32),
+        interpret=True,
+    )(ib, scales, code)
+    return out.reshape(-1)
+
+
+def vmem_bytes(block_size, rows=ROWS_PER_TILE):
+    """VMEM estimate per grid step: idx tile i32 + one-hot f32 (dominant)
+    + out f32 + scales + table."""
+    tile = rows * block_size
+    return tile * 4 + tile * 16 * 4 + tile * 4 + rows * 4 + 16 * 4

@@ -1,0 +1,99 @@
+"""Pallas kernel: fused dequantize-matmul — the paper system's compute
+hot-spot, ``y = x @ W`` with W stored as 4-bit indices + per-block scales.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (N-tiles);
+each step keeps one ``(K, n_tile)`` packed weight tile + its scales in
+VMEM, dequantizes in-register (one-hot MXU lookup like dequantize.py), and
+issues a ``(batch, K) × (K, n_tile)`` MXU matmul. This replaces the CUDA
+threadblock staging of bitsandbytes with a BlockSpec-expressed HBM↔VMEM
+schedule. The weight layout is W^T rows (``wt[n, k] = W[k, n]``) so a tile
+of output columns is contiguous, and flat absmax blocks of B run along
+that layout exactly as the Rust quantizer wrote them.
+
+Constraint for the fused path: block_size divides K (a tile row), so each
+W^T row holds an integer number of blocks. aot.py checks this; the general
+case falls back to dequantize-then-matmul.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-feature tile width; multiple of the 128-lane VPU/MXU width.
+N_TILE = 128
+
+
+def _qmatmul_kernel(x_ref, idx_ref, scale_ref, code_ref, out_ref):
+    """One grid step: out (batch, nt) = x (batch, K) @ W_tile (K, nt)."""
+    from compile.kernels.dequantize import _lookup
+
+    idx = idx_ref[...]  # (nt, K) i32 — rows of W^T
+    wt = _lookup(idx, code_ref[...])  # (nt, K)
+    # scales: (nt, K // B) — broadcast over each block segment
+    nt, k = idx.shape
+    b = k // scale_ref.shape[-1]
+    wt = (wt.reshape(nt, -1, b) * scale_ref[...][:, :, None]).reshape(nt, k)
+    out_ref[...] = x_ref[...] @ wt.T
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "out_features"))
+def qmatmul(x, idx, scales, code, block_size, out_features):
+    """Fused dequant-matmul via Pallas.
+
+    Args:
+      x: f32[batch, K]
+      idx: i32[out_features * K] (flat W^T, row-major)
+      scales: f32[(out_features * K) // block_size]
+      code: f32[16]
+    Returns:
+      f32[batch, out_features]
+    """
+    batch, k = x.shape
+    assert k % block_size == 0, (
+        f"fused qmatmul needs block_size | K (got B={block_size}, K={k}); "
+        "use dequantize_blockwise + matmul otherwise"
+    )
+    n = out_features
+    nt = min(N_TILE, n)
+    assert n % nt == 0
+    blocks_per_row = k // block_size
+    idx2 = idx.reshape(n, k)
+    scales2 = scales.reshape(n, blocks_per_row)
+    grid = (n // nt,)
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, k), lambda i: (0, 0)),
+            pl.BlockSpec((nt, k), lambda i: (i, 0)),
+            pl.BlockSpec((nt, blocks_per_row), lambda i: (i, 0)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((batch, nt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        interpret=True,
+    )(x, idx2, scales2, code)
+    return out
+
+
+def vmem_bytes(batch, k, block_size, nt=N_TILE):
+    """VMEM per grid step: x + idx tile + dequant temp (one-hot dominates)
+    + scales + out tile."""
+    return (
+        batch * k * 4
+        + nt * k * 4
+        + nt * k * 16 * 4
+        + nt * (k // block_size) * 4
+        + batch * nt * 4
+    )
+
+
+def mxu_utilization_estimate(batch, k, nt=N_TILE):
+    """Fraction of MXU-issue slots doing useful work for one tile matmul,
+    assuming a 128×128 MXU: util = (batch·k·nt) / (ceil-padded dims)."""
+    pad = lambda d: -(-d // 128) * 128
+    useful = batch * k * nt
+    issued = pad(batch) * pad(k) * pad(nt)
+    return useful / issued

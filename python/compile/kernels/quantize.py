@@ -1,0 +1,81 @@
+"""Pallas kernel: blockwise absmax quantization (L1 of the stack).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): one grid step owns a
+``(rows_per_tile, B)`` tile resident in VMEM; the absmax is a per-row VPU
+reduction (the paper's CUDA warp-reduce equivalent), and the nearest-code
+search is a vectorized comparison against the 15 bin boundaries — a
+(tile × 15) broadcast compare + sum, not a loop. On this image Pallas runs
+``interpret=True`` (CPU PJRT can't execute Mosaic custom-calls), which
+lowers the kernel to plain HLO; the *structure* (BlockSpec tiling, VMEM
+footprint) is what carries to real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of blocks processed per grid step. 8 matches the TPU sublane count;
+# with B = 128 lanes a tile is a single native (8, 128) VREG layout.
+ROWS_PER_TILE = 8
+
+
+def _quantize_kernel(x_ref, bounds_ref, idx_ref, scale_ref):
+    """Grid step: x_ref (R, B) → idx_ref (R, B) i32, scale_ref (R,) f32."""
+    x = x_ref[...]
+    scale = jnp.max(jnp.abs(x), axis=1)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    scaled = x * inv[:, None]
+    # Vectorized nearest-code: count boundaries strictly below each value.
+    idx = jnp.sum(scaled[..., None] > bounds_ref[...], axis=-1)
+    idx_ref[...] = idx.astype(jnp.int32)
+    scale_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def quantize_blockwise(x, code, block_size):
+    """Blockwise absmax quantize via Pallas.
+
+    Args:
+      x: f32[N], N % block_size == 0 and (N // block_size) % ROWS_PER_TILE
+         == 0 (pad upstream; aot.py always sizes buffers accordingly).
+      code: f32[16].
+    Returns:
+      (idx i32[N], scales f32[N // block_size])
+    """
+    n = x.shape[0]
+    assert n % block_size == 0, (n, block_size)
+    n_blocks = n // block_size
+    from compile.kernels.dequantize import pick_rows
+
+    rows = pick_rows(n_blocks, block_size)
+    assert n_blocks % rows == 0, (n_blocks, rows)
+    bounds = 0.5 * (code[1:] + code[:-1])
+    xb = x.reshape(n_blocks, block_size)
+    grid = (n_blocks // rows,)
+    idx, scales = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((15,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block_size), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(xb, bounds)
+    return idx.reshape(-1), scales
+
+
+def vmem_bytes(block_size, rows=ROWS_PER_TILE):
+    """Estimated VMEM footprint of one grid step (for DESIGN.md §Perf):
+    input tile f32 + output idx i32 + scaled temp f32 + scales."""
+    tile = rows * block_size
+    return tile * 4 * 3 + rows * 4 + 15 * 4

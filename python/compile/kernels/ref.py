@@ -1,0 +1,67 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests``; the Rust quantizer (``rust/src/quant``) implements the same
+semantics bit-for-bit: ties at a bin midpoint resolve to the lower index,
+all-zero blocks get scale 0 (and decode to exact zeros).
+"""
+
+import jax.numpy as jnp
+
+
+def encode(scaled, code):
+    """Nearest-code index for values already scaled into [-1, 1].
+
+    idx = #{boundaries strictly below x}; ties at a boundary go to the
+    LOWER index, matching ``afq::quant::encode_f32`` on the Rust side.
+    """
+    bounds = 0.5 * (code[1:] + code[:-1])  # (k-1,)
+    return jnp.sum(scaled[..., None] > bounds, axis=-1).astype(jnp.int32)
+
+
+def quantize_blockwise(x, code, block_size):
+    """Blockwise absmax quantization of a flat array.
+
+    Args:
+      x: f32[N] with N % block_size == 0.
+      code: f32[k] sorted code values in [-1, 1].
+      block_size: quantization block size B.
+
+    Returns:
+      (idx i32[N], scales f32[N // B])
+    """
+    n = x.shape[0]
+    assert n % block_size == 0, (n, block_size)
+    xb = x.reshape(-1, block_size)
+    scales = jnp.max(jnp.abs(xb), axis=1)
+    inv = jnp.where(scales > 0, 1.0 / scales, 0.0)
+    scaled = xb * inv[:, None]
+    idx = encode(scaled, code)
+    return idx.reshape(-1), scales
+
+
+def dequantize_blockwise(idx, scales, code, block_size):
+    """Inverse of ``quantize_blockwise``: w ≈ code[idx] * scale."""
+    vals = jnp.take(code, idx.reshape(-1, block_size), axis=0)
+    return (vals * scales[:, None]).reshape(-1)
+
+
+def qmatmul(x, idx, scales, code, block_size, out_features):
+    """x @ W with W stored quantized.
+
+    Storage layout (matches the Rust side): W^T flattened row-major, i.e.
+    ``wt_flat[n * K + k] = W[k, n]``; absmax blocks of B run along this flat
+    axis (bitsandbytes-style flat blocking, so B may exceed K).
+
+    Args:
+      x: f32[batch, K]
+      idx: i32[out_features * K] quantized indices of flat W^T
+      scales: f32[(out_features * K) // B]
+      code: f32[16]
+    Returns:
+      f32[batch, out_features]
+    """
+    k = x.shape[-1]
+    wt_flat = dequantize_blockwise(idx, scales, code, block_size)
+    wt = wt_flat.reshape(out_features, k)  # = W^T
+    return x @ wt.T

@@ -1,0 +1,232 @@
+"""L2: decoder-only transformer LM in JAX, consuming quantized weights.
+
+Build-time only — this module is traced by ``aot.py`` into HLO text that
+the Rust runtime loads; Python never runs on the request path.
+
+Design notes:
+- Every weight matrix is stored **transposed** (``wt[out, in] = W[in, out]``)
+  and, when quantized, flattened row-major with absmax blocks of B along
+  the flat axis — exactly the layout ``afq::quant`` writes, so Rust can
+  feed its buffers straight in.
+- Quantized matrices arrive as ``(idx i32[out*in], scales f32[out*in/B])``
+  pairs plus one shared 16-entry code table; dequantization runs through
+  the Pallas kernel (L1) inside the same jit, so the whole stack lowers to
+  one HLO module.
+- The parameter list is FLAT and ORDERED (see ``param_specs``); the same
+  order is recorded in the artifact manifest for the Rust marshaller.
+- LayerNorms, embeddings and biases stay f32 (the paper quantizes only the
+  matmul weights).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dequantize import dequantize_blockwise
+
+VOCAB = 256  # byte-level tokenizer
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_head
+
+
+CONFIGS = {
+    "tiny": Config("tiny", n_layer=2, d_model=128, n_head=4, d_ff=512, seq_len=128, batch=8),
+    "small": Config("small", n_layer=4, d_model=256, n_head=8, d_ff=1024, seq_len=128, batch=8),
+    "base": Config("base", n_layer=6, d_model=512, n_head=8, d_ff=2048, seq_len=128, batch=8),
+}
+
+
+def matrix_specs(cfg: Config) -> List[Tuple[str, Tuple[int, int]]]:
+    """The quantizable matrices, in order, as (name, (out, in)) of W^T."""
+    d, ff = cfg.d_model, cfg.d_ff
+    specs = []
+    for l in range(cfg.n_layer):
+        specs += [
+            (f"l{l}.wq", (d, d)),
+            (f"l{l}.wk", (d, d)),
+            (f"l{l}.wv", (d, d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.w1", (ff, d)),
+            (f"l{l}.w2", (d, ff)),
+        ]
+    return specs
+
+
+def vector_specs(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Non-quantized parameters, in order."""
+    d = cfg.d_model
+    specs = [("embed", (VOCAB, d)), ("pos", (cfg.seq_len, d))]
+    for l in range(cfg.n_layer):
+        specs += [
+            (f"l{l}.ln1_g", (d,)),
+            (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.ln2_g", (d,)),
+            (f"l{l}.ln2_b", (d,)),
+        ]
+    specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return specs
+
+
+def param_specs(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Full fp32 parameter list: vectors first, then W^T matrices."""
+    return vector_specs(cfg) + matrix_specs(cfg)
+
+
+def n_params(cfg: Config) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: Config, seed: int = 0):
+    """GPT-2-style init; mirrored by the Rust initializer for checkpoints."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b",)):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            sd = 0.02
+            if name.endswith((".wo", ".w2")):  # residual-path scaling
+                sd = 0.02 / jnp.sqrt(2.0 * cfg.n_layer)
+            params.append(sd * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attention(cfg: Config, h, wq, wk, wv, wo):
+    b, s, d = h.shape
+    nh, hd = cfg.n_head, cfg.head_dim
+
+    def proj(x, wt):  # x [b,s,d] @ W (= wt.T): [b,s,out]
+        return jnp.einsum("bsd,od->bso", x, wt)
+
+    q = proj(h, wq).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = proj(h, wk).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = proj(h, wv).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return jnp.einsum("bsd,od->bso", out, wo)
+
+
+def _mlp(h, w1, w2):
+    x = jnp.einsum("bsd,od->bso", h, w1)
+    x = jax.nn.gelu(x)
+    return jnp.einsum("bsf,of->bso", x, w2)
+
+
+def forward_fp(cfg: Config, vectors, matrices, ids):
+    """Forward pass with fp32 W^T matrices. Returns logits [b, s, V]."""
+    vec = dict(zip([n for n, _ in vector_specs(cfg)], vectors))
+    mat = dict(zip([n for n, _ in matrix_specs(cfg)], matrices))
+    s = ids.shape[1]
+    h = vec["embed"][ids] + vec["pos"][None, :s]
+    for l in range(cfg.n_layer):
+        a = _layernorm(h, vec[f"l{l}.ln1_g"], vec[f"l{l}.ln1_b"])
+        h = h + _attention(
+            cfg, a, mat[f"l{l}.wq"], mat[f"l{l}.wk"], mat[f"l{l}.wv"], mat[f"l{l}.wo"]
+        )
+        a = _layernorm(h, vec[f"l{l}.ln2_g"], vec[f"l{l}.ln2_b"])
+        h = h + _mlp(a, mat[f"l{l}.w1"], mat[f"l{l}.w2"])
+    h = _layernorm(h, vec["lnf_g"], vec["lnf_b"])
+    return jnp.einsum("bsd,vd->bsv", h, vec["embed"])  # tied head
+
+
+def dequant_matrices(cfg: Config, qpairs, code, block_size):
+    """Reconstruct the ordered W^T matrices from (idx, scales) pairs via the
+    Pallas dequantize kernel."""
+    mats = []
+    for (name, (out, inn)), (idx, scales) in zip(matrix_specs(cfg), qpairs):
+        flat = dequantize_blockwise(idx, scales, code, block_size)
+        mats.append(flat.reshape(out, inn))
+    return mats
+
+
+def forward_quant(cfg: Config, vectors, qpairs, code, ids, block_size):
+    """Forward pass with quantized matrices (the request-path graph)."""
+    mats = dequant_matrices(cfg, qpairs, code, block_size)
+    return forward_fp(cfg, vectors, mats, ids)
+
+
+def score(logits, targets):
+    """Per-token NLL (natural log) and argmax-correctness.
+
+    Position t scores the prediction of ``targets[:, t]`` from input t —
+    the caller supplies ids = text[:-1], targets = text[1:].
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    correct = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.int32)
+    return nll, correct
+
+
+def score_fp(cfg: Config, vectors, matrices, ids, targets):
+    return score(forward_fp(cfg, vectors, matrices, ids), targets)
+
+
+def score_quant(cfg: Config, vectors, qpairs, code, ids, targets, block_size):
+    return score(forward_quant(cfg, vectors, qpairs, code, ids, block_size), targets)
+
+
+# ---------------------------------------------------------------------------
+# training (AdamW)
+
+
+def loss_fn(cfg: Config, params, ids, targets):
+    nv = len(vector_specs(cfg))
+    logits = forward_fp(cfg, params[:nv], params[nv:], ids)
+    nll, _ = score(logits, targets)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: Config, params, m, v, step, ids, targets, lr):
+    """One AdamW step. Flat lists in, flat lists out (+ scalar loss).
+
+    step is the 1-based step counter as f32[] (for bias correction).
+    """
+    beta1, beta2, eps, wd = 0.9, 0.999, 1e-8, 0.01
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, ids, targets))(params)
+    t = step
+    new_params, new_m, new_v = [], [], []
+    names = [n for n, _ in param_specs(cfg)]
+    for name, p, g, mi, vi in zip(names, params, grads, m, v):
+        mi = beta1 * mi + (1 - beta1) * g
+        vi = beta2 * vi + (1 - beta2) * g * g
+        mhat = mi / (1 - beta1**t)
+        vhat = vi / (1 - beta2**t)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        decay = 0.0 if name.endswith(("_g", "_b")) else wd
+        p = p - lr * (upd + decay * p)
+        new_params.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, loss

@@ -1,0 +1,82 @@
+"""AOT/manifest consistency: what aot.py writes must match what model.py
+defines and what the Rust marshaller (rust/src/model/mod.rs) expects."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_has_all_models_and_kernels():
+    m = manifest()
+    names = {a["name"] for a in m["artifacts"]}
+    for model in ["tiny", "small", "base"]:
+        assert f"score_fp_{model}" in names
+        for b in [64, 256, 1024, 4096]:
+            assert f"score_q{b}_{model}" in names
+    assert "kernel_quantize_b64" in names
+    assert "kernel_dequantize_b64" in names
+    assert "kernel_qmatmul_b64" in names
+
+
+def test_param_order_matches_model():
+    m = manifest()
+    for name, cfg in m["configs"].items():
+        expect = [
+            {"name": n, "shape": list(s)} for n, s in M.param_specs(M.CONFIGS[name])
+        ]
+        assert cfg["param_order"] == expect, name
+        assert cfg["vocab"] == M.VOCAB
+
+
+def test_quant_artifact_inputs_cover_all_matrices():
+    m = manifest()
+    art = next(a for a in m["artifacts"] if a["name"] == "score_q64_small")
+    cfg = M.CONFIGS["small"]
+    in_names = [i["name"] for i in art["inputs"]]
+    assert in_names[0] == "ids" and in_names[1] == "targets" and in_names[2] == "code"
+    for mat, (out, inn) in M.matrix_specs(cfg):
+        assert f"{mat}.idx" in in_names
+        assert f"{mat}.scales" in in_names
+        idx_spec = next(i for i in art["inputs"] if i["name"] == f"{mat}.idx")
+        assert idx_spec["shape"] == [out * inn]
+        assert idx_spec["dtype"] == "i32"
+        sc_spec = next(i for i in art["inputs"] if i["name"] == f"{mat}.scales")
+        assert sc_spec["shape"] == [out * inn // 64]
+
+
+def test_train_artifact_io_counts():
+    m = manifest()
+    art = next(a for a in m["artifacts"] if a["name"] == "train_tiny")
+    np_ = len(M.param_specs(M.CONFIGS["tiny"]))
+    assert len(art["inputs"]) == 4 + 3 * np_
+    assert len(art["outputs"]) == 3 * np_ + 1
+
+
+def test_hlo_files_exist_and_are_text():
+    m = manifest()
+    for a in m["artifacts"][:5]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, a["file"]
+
+
+def test_source_digest_is_stable():
+    d1 = aot.source_digest()
+    d2 = aot.source_digest()
+    assert d1 == d2 and len(d1) == 16

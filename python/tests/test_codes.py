@@ -1,0 +1,98 @@
+"""Code-construction cross-validation (Python twin vs paper constants)."""
+
+import numpy as np
+import pytest
+
+from compile import codes
+
+# Published bitsandbytes NF4 table (float32), same constant as the Rust
+# side's NF4_REFERENCE.
+NF4_REFERENCE = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ]
+)
+
+
+def test_nf4_structure():
+    c = codes.nf4()
+    assert len(c) == 16
+    assert c[0] == -1.0 and c[7] == 0.0 and c[15] == 1.0
+    assert np.all(np.diff(c) > 0)
+
+
+def test_nf4_matches_published_table():
+    c = codes.nf4()
+    np.testing.assert_allclose(c, NF4_REFERENCE, atol=2.5e-3)
+
+
+def test_m_median_paper_value():
+    # §3.1: m_4096 ≈ 3.76
+    assert abs(codes.m_median(4096) - 3.761036005990325) < 1e-9
+
+
+def test_approx_cdf_basics():
+    for b in [32, 64, 4096]:
+        f = lambda x: codes.approx_block_cdf(x, b)
+        assert f(-1.0001) == 0.0
+        assert f(1.0) == 1.0
+        assert abs(f(0.0) - 0.5) < 1e-12
+        # monotone
+        xs = np.linspace(-0.999, 0.999, 101)
+        assert np.all(np.diff(f(xs)) >= 0)
+
+
+def test_approx_quantile_roundtrip():
+    for b in [32, 4096]:
+        for p in [0.1, 0.3, 0.5, 0.7, 0.9]:
+            x = codes.approx_block_quantile(p, b)
+            assert abs(codes.approx_block_cdf(x, b) - p) < 1e-9, (b, p)
+
+
+def test_appendix_a_value():
+    # Paper Appendix A: P[X ≤ 1/2] ≈ 0.8712 for B = 32 (approximation).
+    v = codes.approx_block_cdf(0.5, 32)
+    assert abs(v - 0.8712) < 2e-3, v
+
+
+def test_af4_structure_and_concentration():
+    c64 = codes.af4_approx(64)
+    assert len(c64) == 16
+    assert c64[0] == -1.0 and c64[7] == 0.0 and c64[15] == 1.0
+    assert np.all(np.diff(c64) > 0)
+    c1024 = codes.af4_approx(1024)
+    # Fig. 1: interior values shrink toward 0 as B grows.
+    for j in [2, 5, 10, 13]:
+        assert abs(c1024[j]) < abs(c64[j])
+
+
+def test_af4_stationarity():
+    b = 64
+    c = codes.af4_approx(b)
+    F = lambda x: codes.approx_block_cdf(x, b)
+    for j in range(1, 15):
+        if j == 7:
+            continue
+        left = F(c[j]) - F(0.5 * (c[j - 1] + c[j]))
+        right = F(0.5 * (c[j] + c[j + 1])) - F(c[j])
+        assert abs(left - right) < 1e-7, j
+
+
+def test_af4_monte_carlo_l1_beats_nf4_at_4096():
+    rng = np.random.default_rng(0)
+    b = 4096
+    z = rng.normal(size=(256, b))
+    x = z / np.abs(z).max(axis=1, keepdims=True)
+    flat = x.reshape(-1)
+
+    def l1(code):
+        d = np.abs(flat[:, None] - code[None, :]).min(axis=1)
+        return d.mean()
+
+    e_af4 = l1(codes.af4_approx(b))
+    e_nf4 = l1(codes.nf4())
+    assert e_af4 < e_nf4, (e_af4, e_nf4)

@@ -1,0 +1,126 @@
+"""L2 model: shapes, quantized-vs-fp consistency, train-step sanity."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import codes
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.Config("test", n_layer=2, d_model=64, n_head=4, d_ff=128, seq_len=32, batch=2)
+NF4 = jnp.asarray(codes.nf4(), jnp.float32)
+
+
+def split_params(cfg, params):
+    nv = len(M.vector_specs(cfg))
+    return params[:nv], params[nv:]
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, M.VOCAB, (cfg.batch, cfg.seq_len)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, M.VOCAB, (cfg.batch, cfg.seq_len)), jnp.int32)
+    return ids, tgt
+
+
+def quantize_matrices(cfg, matrices, block):
+    qpairs = []
+    for m in matrices:
+        idx, scales = ref.quantize_blockwise(m.reshape(-1), NF4, block)
+        qpairs.append((idx, scales))
+    return qpairs
+
+
+def test_param_specs_counts():
+    specs = M.param_specs(CFG)
+    names = [n for n, _ in specs]
+    assert len(names) == len(set(names)), "duplicate param names"
+    assert len(M.matrix_specs(CFG)) == 6 * CFG.n_layer
+    # ~85k params for the test config (embed 16k + pos 2k + 2 layers × 33k)
+    assert 5e4 < M.n_params(CFG) < 2e5
+
+
+def test_forward_shapes_and_finiteness():
+    params = M.init_params(CFG, seed=1)
+    vec, mat = split_params(CFG, params)
+    ids, tgt = make_batch(CFG)
+    logits = M.forward_fp(CFG, vec, mat, ids)
+    assert logits.shape == (CFG.batch, CFG.seq_len, M.VOCAB)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    nll, correct = M.score(logits, tgt)
+    assert nll.shape == (CFG.batch, CFG.seq_len)
+    assert set(np.unique(np.asarray(correct))) <= {0, 1}
+    # random init ⇒ loss near ln(256)
+    assert abs(float(nll.mean()) - np.log(256)) < 0.5
+
+
+def test_causality():
+    """Changing a future token must not affect earlier scores."""
+    params = M.init_params(CFG, seed=2)
+    vec, mat = split_params(CFG, params)
+    ids, tgt = make_batch(CFG)
+    logits1 = M.forward_fp(CFG, vec, mat, ids)
+    ids2 = ids.at[:, -1].set((ids[:, -1] + 1) % M.VOCAB)
+    logits2 = M.forward_fp(CFG, vec, mat, ids2)
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits1[:, -1]), np.asarray(logits2[:, -1]))
+
+
+def test_quant_forward_close_to_fp_small_blocks():
+    params = M.init_params(CFG, seed=3)
+    vec, mat = split_params(CFG, params)
+    ids, tgt = make_batch(CFG)
+    nll_fp, _ = M.score_fp(CFG, vec, mat, ids, tgt)
+    qpairs = quantize_matrices(CFG, mat, 16)
+    nll_q, _ = M.score_quant(CFG, vec, qpairs, NF4, ids, tgt, 16)
+    # Fine-grained quantization barely moves the loss at random init.
+    assert abs(float(nll_q.mean()) - float(nll_fp.mean())) < 0.05
+
+
+def test_quant_degrades_with_block_size():
+    params = M.init_params(CFG, seed=4)
+    vec, mat = split_params(CFG, params)
+    ids, tgt = make_batch(CFG)
+    nll_fp, _ = M.score_fp(CFG, vec, mat, ids, tgt)
+    errs = []
+    for block in [16, 1024]:
+        qpairs = quantize_matrices(CFG, mat, block)
+        nll_q, _ = M.score_quant(CFG, vec, qpairs, NF4, ids, tgt, block)
+        errs.append(abs(float(nll_q.mean()) - float(nll_fp.mean())))
+    assert errs[1] > errs[0] * 0.5, errs  # larger blocks ⇒ no better
+
+
+def test_train_step_reduces_loss():
+    cfg = CFG
+    params = M.init_params(cfg, seed=5)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    ids, tgt = make_batch(cfg, seed=6)
+    step_fn = jax.jit(
+        lambda p, m, v, s, i, t: M.train_step(cfg, p, m, v, s, i, t, jnp.float32(3e-3))
+    )
+    losses = []
+    for s in range(1, 9):
+        params, m, v, loss = step_fn(params, m, v, jnp.float32(s), ids, tgt)
+        losses.append(float(loss))
+    # overfitting one batch: loss must drop substantially
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_train_step_no_nans_and_decay_skips_norms():
+    cfg = CFG
+    params = M.init_params(cfg, seed=7)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    ids, tgt = make_batch(cfg, seed=8)
+    new_p, new_m, new_v, loss = M.train_step(
+        cfg, params, m, v, jnp.float32(1.0), ids, tgt, jnp.float32(1e-3)
+    )
+    assert np.isfinite(float(loss))
+    for p in new_p:
+        assert bool(jnp.all(jnp.isfinite(p)))

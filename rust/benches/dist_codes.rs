@@ -1,0 +1,41 @@
+//! Bench: distributional machinery — exact quadrature vs the PCHIP memo
+//! (the §Perf L3 "construction path" optimization), code construction
+//! costs, and the expected-error functionals.
+//!
+//! Run: `cargo bench --bench dist_codes`
+
+use afq::codes::{af4, expected_l1, nf4};
+use afq::dist::BlockScaledDist;
+use afq::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    println!("-- G_B evaluation: quadrature vs memo table --");
+    let d = BlockScaledDist::new(64);
+    d.g_cdf(0.3); // force table build outside the timed region
+    b.bench("g_cdf/exact-quadrature", || d.g_cdf_exact(0.3));
+    b.bench("g_cdf/memo-table", || d.g_cdf(0.3));
+    b.bench("g_quantile/memo", || d.g_quantile(0.77));
+
+    println!("-- table construction (one-off per B) --");
+    b.bench("table-build/B=4096", || {
+        let d = BlockScaledDist::new(4096);
+        d.g_cdf(0.5)
+    });
+
+    println!("-- code construction --");
+    b.bench("construct/nf4", nf4);
+    b.bench("construct/af4-64", || af4(64));
+    b.bench("construct/af4-4096", || af4(4096));
+
+    println!("-- expected error functionals --");
+    let code = nf4();
+    let d64 = BlockScaledDist::new(64);
+    d64.g_cdf(0.0);
+    b.bench("expected_l1/nf4/B=64", || expected_l1(&code, &d64));
+
+    let json = b.to_json().to_string_pretty();
+    let _ = afq::util::write_file("results/bench_dist_codes.json", &json);
+    println!("\nsaved results/bench_dist_codes.json");
+}

@@ -1,0 +1,117 @@
+//! Bench: PJRT execution path — kernel artifacts (Pallas quantize /
+//! dequantize / fused qmatmul) and the per-model scoring step (fp vs
+//! quantized), plus the host↔device upload cost that motivated
+//! device-resident weights.
+//!
+//! Needs `make artifacts`. Run: `cargo bench --bench engine`
+
+use afq::codes::registry;
+use afq::coordinator::{EngineHandle, ModelService, QuantSpec};
+use afq::model::ParamSet;
+use afq::runtime::TensorData;
+use afq::util::bench::Bencher;
+use afq::util::rng::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping engine bench: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new();
+    let (eng, _th) = EngineHandle::spawn("artifacts").expect("engine");
+    let nf4 = registry::build("nf4").unwrap();
+    let mut rng = Rng::new(0);
+
+    println!("-- Pallas kernel artifacts (65536 elements, B=64) --");
+    let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32 * 0.02).collect();
+    eng.upload("b/code", &[16], TensorData::F32(nf4.table_f32())).unwrap();
+    let xt = TensorData::F32(x.clone());
+    b.bench_with_elements("pjrt/kernel_quantize", Some(65536.0), || {
+        eng.execute(
+            "kernel_quantize_b64",
+            vec![
+                afq::coordinator::OwnedArg::Data(xt.clone()),
+                afq::coordinator::OwnedArg::Cached("b/code".into()),
+            ],
+        )
+        .unwrap()
+    });
+    let q = afq::quant::quantize(&x, 64, &nf4);
+    let idx_t = TensorData::from_indices(&q);
+    let sc_t = TensorData::F32(q.scales.clone());
+    b.bench_with_elements("pjrt/kernel_dequantize", Some(65536.0), || {
+        eng.execute(
+            "kernel_dequantize_b64",
+            vec![
+                afq::coordinator::OwnedArg::Data(idx_t.clone()),
+                afq::coordinator::OwnedArg::Data(sc_t.clone()),
+                afq::coordinator::OwnedArg::Cached("b/code".into()),
+            ],
+        )
+        .unwrap()
+    });
+    // host-side reference for the same op
+    b.bench_with_elements("host/dequantize-64k", Some(65536.0), || {
+        afq::quant::dequantize(&q, &nf4)
+    });
+
+    println!("-- fused qmatmul artifact (8×512 @ 512×512, B=64) --");
+    let xs: Vec<f32> = (0..8 * 512).map(|_| rng.normal() as f32).collect();
+    let wflat: Vec<f32> = (0..512 * 512).map(|_| rng.normal() as f32 * 0.02).collect();
+    let qw = afq::quant::quantize(&wflat, 64, &nf4);
+    let flops = 2.0 * 8.0 * 512.0 * 512.0;
+    b.bench_with_elements("pjrt/kernel_qmatmul (flops)", Some(flops), || {
+        eng.execute(
+            "kernel_qmatmul_b64",
+            vec![
+                afq::coordinator::OwnedArg::Data(TensorData::F32(xs.clone())),
+                afq::coordinator::OwnedArg::Data(TensorData::from_indices(&qw)),
+                afq::coordinator::OwnedArg::Data(TensorData::F32(qw.scales.clone())),
+                afq::coordinator::OwnedArg::Cached("b/code".into()),
+            ],
+        )
+        .unwrap()
+    });
+
+    println!("-- scoring step latency (batch=8, seq=128) --");
+    for model in ["tiny", "small"] {
+        let meta = eng.manifest().config(model).unwrap().clone();
+        let params = ParamSet::init(&meta, 5);
+        let tokens = (meta.batch * meta.seq_len) as f64;
+        let ids: Vec<i32> = (0..meta.batch * meta.seq_len).map(|i| (i % 256) as i32).collect();
+        let fp = ModelService::prepare(&eng, model, &params, QuantSpec::fp()).unwrap();
+        b.bench_with_elements(&format!("score/{model}/fp32 (tokens)"), Some(tokens), || {
+            fp.score(ids.clone(), ids.clone()).unwrap()
+        });
+        fp.release();
+        for bs in [64usize, 4096] {
+            let svc = ModelService::prepare(
+                &eng,
+                model,
+                &params,
+                QuantSpec { family: "nf4".into(), block_size: bs },
+            )
+            .unwrap();
+            b.bench_with_elements(
+                &format!("score/{model}/nf4-B{bs} (tokens)"),
+                Some(tokens),
+                || svc.score(ids.clone(), ids.clone()).unwrap(),
+            );
+            svc.release();
+        }
+    }
+
+    println!("-- weight upload cost (why weights are device-resident) --");
+    let meta = eng.manifest().config("small").unwrap().clone();
+    let params = ParamSet::init(&meta, 6);
+    b.bench("upload/small-fp-weights", || {
+        for (key, shape, data) in afq::model::fp_weight_args(&meta, &params, "bench-up") {
+            eng.upload(&key, &shape, data).unwrap();
+        }
+    });
+    eng.evict("bench-up");
+
+    let json = b.to_json().to_string_pretty();
+    let _ = afq::util::write_file("results/bench_engine.json", &json);
+    println!("\nsaved results/bench_engine.json");
+}

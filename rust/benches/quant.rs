@@ -1,0 +1,71 @@
+//! Bench: L3 quantizer hot path — blockwise quantize/dequantize throughput
+//! across block sizes, the encode kernel variants, and double quantization.
+//! (harness = false; uses afq::util::bench.)
+//!
+//! Run: `cargo bench --bench quant [-- <filter>]`
+//! Quick mode: AFQ_BENCH_QUICK=1
+
+use afq::codes::registry;
+use afq::quant::{dequantize, quantize, Quantized};
+use afq::util::bench::Bencher;
+use afq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0);
+    let n = 1 << 20; // 1M weights
+    let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.02).collect();
+    let nf4 = registry::build("nf4").unwrap();
+
+    println!("-- quantize throughput (1M f32 weights) --");
+    for &bs in &[64usize, 256, 1024, 4096] {
+        b.bench_with_elements(&format!("quantize/nf4/B={bs}"), Some(n as f64), || {
+            quantize(&w, bs, &nf4)
+        });
+    }
+
+    println!("-- dequantize throughput --");
+    let q64: Quantized = quantize(&w, 64, &nf4);
+    let q4096: Quantized = quantize(&w, 4096, &nf4);
+    b.bench_with_elements("dequantize/nf4/B=64", Some(n as f64), || {
+        dequantize(&q64, &nf4)
+    });
+    b.bench_with_elements("dequantize/nf4/B=4096", Some(n as f64), || {
+        dequantize(&q4096, &nf4)
+    });
+
+    println!("-- encode variants (per element) --");
+    let bounds: Vec<f32> = nf4.boundaries().iter().map(|&x| x as f32).collect();
+    let xs: Vec<f32> = (0..4096).map(|i| (i as f32 / 2048.0) - 1.0).collect();
+    b.bench_with_elements("encode/f32-tree (hot path)", Some(xs.len() as f64), || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc += afq::quant::encode_f32(&bounds, x) as u32;
+        }
+        acc
+    });
+    b.bench_with_elements("encode/f64-bisect (Code::encode)", Some(xs.len() as f64), || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc += nf4.encode(x as f64) as u32;
+        }
+        acc
+    });
+
+    println!("-- double quantization of scales --");
+    let scales = q64.scales.clone();
+    b.bench_with_elements("dq/quantize-scales", Some(scales.len() as f64), || {
+        afq::quant::double::DqScales::quantize(&scales, 256)
+    });
+
+    println!("-- matrix quant (512x512, col axis) --");
+    let mut rng2 = Rng::new(1);
+    let m = afq::tensor::Matrix::randn(512, 512, 0.02, &mut rng2);
+    b.bench_with_elements("matrix/col-axis/B=64", Some((512 * 512) as f64), || {
+        afq::quant::MatrixQuant::quantize(&m, 64, &nf4, afq::quant::QuantAxis::Col)
+    });
+
+    let json = b.to_json().to_string_pretty();
+    let _ = afq::util::write_file("results/bench_quant.json", &json);
+    println!("\nsaved results/bench_quant.json");
+}

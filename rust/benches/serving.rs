@@ -1,0 +1,88 @@
+//! Bench: end-to-end serving — dynamic-batcher throughput/latency vs
+//! offered concurrency, and batching-policy ablation (deadline sweep).
+//! This regenerates the serving-shape table for EXPERIMENTS.md §Perf.
+//!
+//! Needs `make artifacts`. Run: `cargo bench --bench serving`
+
+use afq::coordinator::{Batcher, EngineHandle, ModelService, QuantSpec};
+use afq::model::{generate_corpus, BatchSampler, ParamSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping serving bench: run `make artifacts` first");
+        return;
+    }
+    let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
+    let (eng, _th) = EngineHandle::spawn("artifacts").expect("engine");
+    let model = "tiny";
+    let meta = eng.manifest().config(model).unwrap().clone();
+    let params = ParamSet::init(&meta, 3);
+    let corpus = generate_corpus("english", 200_000, 11).unwrap();
+    let seq = meta.seq_len;
+
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "clients", "wait(ms)", "req/s", "p50", "p99", "batch-eff"
+    );
+    let client_counts: &[usize] = if quick { &[1, 8] } else { &[1, 4, 8, 16, 32] };
+    let waits_ms: &[u64] = if quick { &[10] } else { &[2, 10, 40] };
+    let mut rows = Vec::new();
+    for &wait in waits_ms {
+        for &clients in client_counts {
+            let service = Arc::new(
+                ModelService::prepare(
+                    &eng,
+                    model,
+                    &params,
+                    QuantSpec { family: "nf4".into(), block_size: 64 },
+                )
+                .unwrap(),
+            );
+            let (handle, mut batcher) =
+                Batcher::spawn(Arc::clone(&service), Duration::from_millis(wait), 4096);
+            let reqs_per_client = if quick { 4 } else { 12 };
+            let t0 = Instant::now();
+            let mut joins = Vec::new();
+            for c in 0..clients {
+                let h = handle.clone();
+                let corpus = corpus.clone();
+                joins.push(std::thread::spawn(move || {
+                    let mut s = BatchSampler::new(corpus, seq, 1, c as u64);
+                    let mut lat = Vec::new();
+                    for _ in 0..reqs_per_client {
+                        let (ids, tgt) = s.sample();
+                        let t = Instant::now();
+                        h.score(ids, tgt).expect("scored");
+                        lat.push(t.elapsed());
+                    }
+                    lat
+                }));
+            }
+            let mut lat: Vec<Duration> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+            let wall = t0.elapsed().as_secs_f64();
+            lat.sort();
+            let total = clients * reqs_per_client;
+            let eff = service.counters.batch_efficiency();
+            println!(
+                "{clients:>8} {wait:>10} {:>10.1} {:>12.2?} {:>12.2?} {:>9.1}%",
+                total as f64 / wall,
+                lat[lat.len() / 2],
+                lat[lat.len() * 99 / 100],
+                eff * 100.0
+            );
+            rows.push(format!(
+                "{{\"clients\":{clients},\"wait_ms\":{wait},\"rps\":{:.2},\"p50_us\":{},\"p99_us\":{},\"batch_eff\":{:.4}}}",
+                total as f64 / wall,
+                lat[lat.len() / 2].as_micros(),
+                lat[lat.len() * 99 / 100].as_micros(),
+                eff
+            ));
+            batcher.stop();
+        }
+    }
+    let json = format!("[\n{}\n]", rows.join(",\n"));
+    let _ = afq::util::write_file("results/bench_serving.json", &json);
+    println!("\nsaved results/bench_serving.json");
+}

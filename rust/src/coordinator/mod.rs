@@ -1,0 +1,26 @@
+//! L3 coordinator: engine thread, model services, dynamic batcher,
+//! training driver, and metrics.
+//!
+//! Architecture (vLLM-router shape, CPU-scale):
+//!
+//! ```text
+//! request threads ──► BatcherHandle ──► Batcher (size/deadline policy)
+//!                                          │ [batch, seq]
+//!                                          ▼
+//!                    ModelService (device-resident quantized weights)
+//!                                          │ channel
+//!                                          ▼
+//!                    EngineHandle ──► engine thread (owns PJRT client)
+//! ```
+
+pub mod batcher;
+pub mod engine_thread;
+pub mod metrics;
+pub mod service;
+pub mod trainer;
+
+pub use batcher::{Batcher, BatcherHandle, ScoreResponse};
+pub use engine_thread::{EngineHandle, EngineThread, OwnedArg};
+pub use metrics::{Counters, LatencyHistogram};
+pub use service::{ModelService, QuantSpec};
+pub use trainer::{ensure_checkpoint, train, TrainConfig, TrainResult};

@@ -1,0 +1,217 @@
+//! ModelService: a prepared (model × code × block-size) evaluation target.
+//!
+//! Preparing a service quantizes the checkpoint with the requested code,
+//! uploads all weights to the device **once** (device-resident across
+//! calls), and pre-compiles the scoring executable. Scoring then only
+//! moves (ids, targets) per call — the serving hot path.
+
+use crate::codes::registry;
+use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
+use crate::coordinator::metrics::{Counters, LatencyHistogram};
+use crate::model::{fp_weight_args, quantized_weight_args, ParamSet};
+use crate::runtime::{ModelMeta, TensorData};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What to quantize with: `fp` or a code-family spec (see codes::registry).
+#[derive(Clone, Debug)]
+pub struct QuantSpec {
+    pub family: String,
+    pub block_size: usize,
+}
+
+impl QuantSpec {
+    pub fn fp() -> Self {
+        Self { family: "fp".into(), block_size: 0 }
+    }
+
+    pub fn is_fp(&self) -> bool {
+        registry::is_fp(&self.family)
+    }
+
+    pub fn artifact_name(&self, model: &str) -> String {
+        if self.is_fp() {
+            format!("score_fp_{model}")
+        } else {
+            format!("score_q{}_{model}", self.block_size)
+        }
+    }
+
+    pub fn key_prefix(&self, model: &str) -> String {
+        format!("w/{model}/{}/{}", self.family, self.block_size)
+    }
+}
+
+pub struct ModelService {
+    eng: EngineHandle,
+    pub meta: ModelMeta,
+    pub spec: QuantSpec,
+    artifact: String,
+    keys: Vec<String>,
+    pub latency: Arc<LatencyHistogram>,
+    pub counters: Arc<Counters>,
+}
+
+impl ModelService {
+    /// Quantize + upload weights and compile the scoring executable.
+    pub fn prepare(
+        eng: &EngineHandle,
+        model: &str,
+        params: &ParamSet,
+        spec: QuantSpec,
+    ) -> Result<ModelService, String> {
+        let meta = eng.manifest().config(model)?.clone();
+        params.validate(&meta)?;
+        let artifact = spec.artifact_name(model);
+        eng.manifest().artifact(&artifact)?; // fail fast if missing
+        let prefix = spec.key_prefix(model);
+        let weight_args = if spec.is_fp() {
+            fp_weight_args(&meta, params, &prefix)
+        } else {
+            let code = registry::for_block_size(&spec.family, spec.block_size)
+                .ok_or_else(|| format!("unknown code family {:?}", spec.family))?;
+            quantized_weight_args(&meta, params, &code, spec.block_size, &prefix)
+        };
+        let mut keys = Vec::with_capacity(weight_args.len());
+        for (key, shape, data) in weight_args {
+            eng.upload(&key, &shape, data)?;
+            keys.push(key);
+        }
+        eng.preload(&artifact)?;
+        Ok(ModelService {
+            eng: eng.clone(),
+            meta,
+            spec,
+            artifact,
+            keys,
+            latency: Arc::new(LatencyHistogram::new()),
+            counters: Arc::new(Counters::default()),
+        })
+    }
+
+    /// Score one [batch, seq] batch: returns (nll f32[b*s], correct i32[b*s]).
+    pub fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
+        let t0 = Instant::now();
+        let mut args: Vec<OwnedArg> = Vec::with_capacity(2 + self.keys.len());
+        args.push(OwnedArg::Data(TensorData::I32(ids)));
+        args.push(OwnedArg::Data(TensorData::I32(targets)));
+        for k in &self.keys {
+            args.push(OwnedArg::Cached(k.clone()));
+        }
+        let out = self.eng.execute(&self.artifact, args)?;
+        let nll = out[0].as_f32().ok_or("nll dtype")?.to_vec();
+        let correct = out[1].as_i32().ok_or("correct dtype")?.to_vec();
+        self.latency.observe(t0.elapsed());
+        self.counters.inc(&self.counters.batches, 1);
+        self.counters.inc(&self.counters.tokens, nll.len() as u64);
+        Ok((nll, correct))
+    }
+
+    /// Mean NLL/token over a list of eval batches.
+    pub fn mean_nll(&self, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<f64, String> {
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for (ids, tgt) in batches {
+            let (nll, _) = self.score(ids.clone(), tgt.clone())?;
+            total += nll.iter().map(|&x| x as f64).sum::<f64>();
+            n += nll.len();
+        }
+        Ok(total / n.max(1) as f64)
+    }
+
+    /// Free this service's device-resident weights.
+    pub fn release(self) {
+        self.eng.evict(&self.spec.key_prefix(&self.meta.name));
+    }
+
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.meta.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine_thread::EngineHandle;
+    use crate::model::{corpus, BatchSampler, ParamSet};
+
+    fn setup() -> Option<(EngineHandle, crate::coordinator::engine_thread::EngineThread)> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(EngineHandle::spawn("artifacts").expect("spawn"))
+    }
+
+    #[test]
+    fn fp_and_quant_scores_agree_at_small_blocks() {
+        let Some((eng, mut th)) = setup() else { return };
+        let meta = eng.manifest().config("tiny").unwrap().clone();
+        let params = ParamSet::init(&meta, 11);
+        let fp = ModelService::prepare(&eng, "tiny", &params, QuantSpec::fp()).unwrap();
+        let q = ModelService::prepare(
+            &eng,
+            "tiny",
+            &params,
+            QuantSpec { family: "nf4".into(), block_size: 64 },
+        )
+        .unwrap();
+        let data = corpus::english(40_000, 1);
+        let sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 0);
+        let batches = sampler.eval_batches(2);
+        let nll_fp = fp.mean_nll(&batches).unwrap();
+        let nll_q = q.mean_nll(&batches).unwrap();
+        // random-init logits are tiny; NF4@64 barely moves the loss
+        assert!((nll_fp - (256f64).ln()).abs() < 0.5, "fp nll {nll_fp}");
+        assert!((nll_q - nll_fp).abs() < 0.1, "q {nll_q} vs fp {nll_fp}");
+        assert!(fp.latency.count() >= 2);
+        q.release();
+    }
+
+    #[test]
+    fn quantization_error_grows_with_block_size_on_real_graph() {
+        let Some((eng, _th)) = setup() else { return };
+        let meta = eng.manifest().config("tiny").unwrap().clone();
+        let params = ParamSet::init(&meta, 13);
+        let fp = ModelService::prepare(&eng, "tiny", &params, QuantSpec::fp()).unwrap();
+        let data = corpus::english(40_000, 2);
+        let sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 0);
+        let batches = sampler.eval_batches(2);
+        let base = fp.mean_nll(&batches).unwrap();
+        let mut errs = Vec::new();
+        for b in [64usize, 4096] {
+            let q = ModelService::prepare(
+                &eng,
+                "tiny",
+                &params,
+                QuantSpec { family: "nf4".into(), block_size: b },
+            )
+            .unwrap();
+            errs.push((q.mean_nll(&batches).unwrap() - base).abs());
+            q.release();
+        }
+        assert!(
+            errs[1] >= errs[0] * 0.8,
+            "B=4096 should not beat B=64 materially: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_model_or_family_errors() {
+        let Some((eng, _th)) = setup() else { return };
+        let meta = eng.manifest().config("tiny").unwrap().clone();
+        let params = ParamSet::init(&meta, 1);
+        assert!(ModelService::prepare(&eng, "nope", &params, QuantSpec::fp()).is_err());
+        assert!(ModelService::prepare(
+            &eng,
+            "tiny",
+            &params,
+            QuantSpec { family: "bogus".into(), block_size: 64 }
+        )
+        .is_err());
+    }
+}

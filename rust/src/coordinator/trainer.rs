@@ -1,0 +1,175 @@
+//! Training driver: runs the AOT-compiled AdamW train step from Rust.
+//!
+//! Python lowered `train_<model>` once at build time; this module owns the
+//! optimizer state, the data order, LR schedule, and checkpointing — the
+//! whole loop is Rust + PJRT.
+
+use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
+use crate::model::{BatchSampler, ParamSet};
+use crate::runtime::TensorData;
+
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 200, lr: 3e-3, warmup: 20, seed: 0, log_every: 10 }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainResult {
+    pub params: ParamSet,
+    pub losses: Vec<(usize, f64)>,
+    pub seconds: f64,
+}
+
+/// Linear warmup then cosine decay to 10% of peak.
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    if step < cfg.warmup {
+        return cfg.lr * (step + 1) as f32 / cfg.warmup as f32;
+    }
+    let t = (step - cfg.warmup) as f32 / (cfg.steps - cfg.warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    cfg.lr * (0.1 + 0.9 * cos)
+}
+
+/// Train `model` from `params` on `sampler` batches; returns updated params
+/// and the loss curve.
+pub fn train(
+    eng: &EngineHandle,
+    model: &str,
+    mut params: ParamSet,
+    sampler: &mut BatchSampler,
+    cfg: &TrainConfig,
+) -> Result<TrainResult, String> {
+    let artifact = format!("train_{model}");
+    let meta = eng.manifest().config(model)?.clone();
+    params.validate(&meta)?;
+    eng.preload(&artifact)?;
+    let np = params.tensors.len();
+    let mut m: Vec<Vec<f32>> =
+        params.tensors.iter().map(|(_, _, d)| vec![0.0; d.len()]).collect();
+    let mut v: Vec<Vec<f32>> =
+        params.tensors.iter().map(|(_, _, d)| vec![0.0; d.len()]).collect();
+    let t0 = crate::util::Timer::start("train");
+    let mut losses = Vec::new();
+    for step in 0..cfg.steps {
+        let (ids, tgt) = sampler.sample();
+        let mut args: Vec<OwnedArg> = Vec::with_capacity(4 + 3 * np);
+        args.push(OwnedArg::Data(TensorData::F32(vec![(step + 1) as f32])));
+        args.push(OwnedArg::Data(TensorData::F32(vec![lr_at(cfg, step)])));
+        args.push(OwnedArg::Data(TensorData::I32(ids)));
+        args.push(OwnedArg::Data(TensorData::I32(tgt)));
+        for (_, _, d) in &params.tensors {
+            args.push(OwnedArg::Data(TensorData::F32(d.clone())));
+        }
+        for d in &m {
+            args.push(OwnedArg::Data(TensorData::F32(d.clone())));
+        }
+        for d in &v {
+            args.push(OwnedArg::Data(TensorData::F32(d.clone())));
+        }
+        let mut out = eng.execute(&artifact, args)?;
+        // outputs: new params (np), new m (np), new v (np), loss
+        let loss = out
+            .pop()
+            .and_then(|t| t.as_f32().map(|v| v[0] as f64))
+            .ok_or("train: missing loss output")?;
+        if !loss.is_finite() {
+            return Err(format!("train: loss diverged at step {step}"));
+        }
+        let mut rest = out;
+        let new_v: Vec<TensorData> = rest.split_off(2 * np);
+        let new_m: Vec<TensorData> = rest.split_off(np);
+        let new_p: Vec<TensorData> = rest;
+        for (i, t) in new_p.into_iter().enumerate() {
+            params.tensors[i].2 = t.into_f32();
+        }
+        for (i, t) in new_m.into_iter().enumerate() {
+            m[i] = t.into_f32();
+        }
+        for (i, t) in new_v.into_iter().enumerate() {
+            v[i] = t.into_f32();
+        }
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            crate::log_info!("step {step:>5}  loss {loss:.4}  lr {:.2e}", lr_at(cfg, step));
+            losses.push((step, loss));
+        }
+    }
+    Ok(TrainResult { params, losses, seconds: t0.elapsed_s() })
+}
+
+/// Train-or-load: reuse a checkpoint if present, otherwise train and save.
+pub fn ensure_checkpoint(
+    eng: &EngineHandle,
+    model: &str,
+    corpus_name: &str,
+    steps: usize,
+    dir: &str,
+) -> Result<ParamSet, String> {
+    let path = format!("{dir}/{model}_{corpus_name}_{steps}.ckpt");
+    if let Ok(p) = ParamSet::load(&path) {
+        let meta = eng.manifest().config(model)?;
+        if p.validate(meta).is_ok() {
+            crate::log_info!("loaded checkpoint {path}");
+            return Ok(p);
+        }
+    }
+    let meta = eng.manifest().config(model)?.clone();
+    let data = crate::model::generate_corpus(corpus_name, 400_000, 1234)?;
+    let mut sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 7);
+    let params = ParamSet::init(&meta, 42);
+    let cfg = TrainConfig { steps, ..Default::default() };
+    crate::log_info!("training {model} on {corpus_name} for {steps} steps…");
+    let result = train(eng, model, params, &mut sampler, &cfg)?;
+    crate::log_info!(
+        "trained {model}: loss {:.3} → {:.3} in {:.1}s",
+        result.losses.first().map(|x| x.1).unwrap_or(f64::NAN),
+        result.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
+        result.seconds
+    );
+    result.params.save(&path).map_err(|e| format!("save {path}: {e}"))?;
+    Ok(result.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { steps: 100, lr: 1e-3, warmup: 10, ..Default::default() };
+        assert!(lr_at(&cfg, 0) < lr_at(&cfg, 9));
+        assert!((lr_at(&cfg, 9) - 1e-3).abs() < 1e-4);
+        assert!(lr_at(&cfg, 99) < 2.0e-4);
+        assert!(lr_at(&cfg, 99) >= 1.0e-4 * 0.99);
+    }
+
+    #[test]
+    fn short_training_reduces_loss() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let (eng, _th) =
+            crate::coordinator::engine_thread::EngineHandle::spawn("artifacts").unwrap();
+        let meta = eng.manifest().config("tiny").unwrap().clone();
+        let data = crate::model::corpus::english(120_000, 8);
+        let mut sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 3);
+        let params = ParamSet::init(&meta, 5);
+        let cfg = TrainConfig { steps: 30, lr: 3e-3, warmup: 5, log_every: 5, seed: 0 };
+        let r = train(&eng, "tiny", params, &mut sampler, &cfg).expect("train");
+        let first = r.losses.first().unwrap().1;
+        let last = r.losses.last().unwrap().1;
+        assert!(
+            last < first - 0.3,
+            "loss should drop in 30 steps: {first} → {last}"
+        );
+    }
+}

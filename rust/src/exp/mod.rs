@@ -1,0 +1,125 @@
+//! Experiment harness — regenerates every figure in the paper.
+//!
+//! Each experiment returns a [`Report`]: printed rows (what the paper's
+//! figure shows), a JSON payload saved under `results/`, and a set of
+//! shape checks (who wins / what trend holds) that assert the paper's
+//! qualitative claims on our substrate. `afq exp <id>` runs one;
+//! `afq exp all-theory` runs everything engine-free.
+
+pub mod ablation;
+pub mod lm;
+pub mod theory;
+
+use crate::util::json::Json;
+
+/// Collected output of one experiment.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub lines: Vec<String>,
+    pub json: Json,
+    pub checks: Vec<(String, bool)>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        println!("\n=== {id}: {title} ===");
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            lines: Vec::new(),
+            json: Json::obj(),
+            checks: Vec::new(),
+        }
+    }
+
+    pub fn println(&mut self, line: &str) {
+        println!("{line}");
+        self.lines.push(line.to_string());
+    }
+
+    /// Record a shape check (the paper's qualitative claim).
+    pub fn check(&mut self, name: &str, ok: bool) {
+        println!("  [{}] {name}", if ok { "ok" } else { "FAIL" });
+        self.checks.push((name.to_string(), ok));
+    }
+
+    pub fn all_checks_pass(&self) -> bool {
+        self.checks.iter().all(|(_, ok)| *ok)
+    }
+
+    pub fn failed_checks(&self) -> Vec<&str> {
+        self.checks.iter().filter(|(_, ok)| !ok).map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Append a row to a JSON array field.
+    pub fn json_push(&mut self, key: &str, row: Json) {
+        let arr = match self.json.get(key) {
+            Some(Json::Arr(a)) => {
+                let mut a = a.to_vec();
+                a.push(row);
+                a
+            }
+            _ => vec![row],
+        };
+        self.json.set(key, Json::Arr(arr));
+    }
+
+    /// Save to `<dir>/<id>.json`.
+    pub fn save(&self, dir: &str) -> std::io::Result<String> {
+        let mut doc = Json::obj();
+        doc.set("id", Json::Str(self.id.clone()))
+            .set("title", Json::Str(self.title.clone()))
+            .set(
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|(n, ok)| {
+                            let mut o = Json::obj();
+                            o.set("name", Json::Str(n.clone())).set("pass", Json::Bool(*ok));
+                            o
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "lines",
+                Json::from_strs(&self.lines.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+            )
+            .set("data", self.json.clone());
+        let path = format!("{dir}/{}.json", self.id);
+        crate::util::write_file(&path, &doc.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_accumulates_and_saves() {
+        let mut r = Report::new("test-rep", "a test");
+        r.println("row 1");
+        r.check("always", true);
+        r.json_push("rows", Json::Num(1.0));
+        r.json_push("rows", Json::Num(2.0));
+        assert!(r.all_checks_pass());
+        let dir = std::env::temp_dir().join("afq_exp_test");
+        let path = r.save(dir.to_str().unwrap()).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("id").unwrap().as_str().unwrap(), "test-rep");
+        assert_eq!(back.at(&["data", "rows"]).unwrap().as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn failed_checks_reported() {
+        let mut r = Report::new("t2", "x");
+        r.check("good", true);
+        r.check("bad", false);
+        assert!(!r.all_checks_pass());
+        assert_eq!(r.failed_checks(), vec!["bad"]);
+    }
+}

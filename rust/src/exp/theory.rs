@@ -1,0 +1,361 @@
+//! Theory-side experiments: Figures 1, 2, 3, 10, 11, 12, the §3.1
+//! calculations, and Fig. 4(a) (synthetic code usage). None of these need
+//! the PJRT engine — they exercise `dist`, `codes`, and `quant` directly.
+
+use crate::codes::{self, registry, Code};
+use crate::dist::BlockScaledDist;
+use crate::exp::Report;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Fig. 1 — AF4-B code values as a function of block size, with the NF4
+/// values as reference lines.
+pub fn fig01(blocks: &[usize]) -> Report {
+    let mut rep = Report::new("fig01", "AF4-B code values vs block size (paper Fig. 1)");
+    let nf4 = codes::nf4();
+    rep.json.set("nf4", Json::from_f64s(&nf4.values));
+    let mut rows = Vec::new();
+    rep.println(&format!("{:>6}  {}", "B", "AF4-B values (16)"));
+    for &b in blocks {
+        let c = registry::build(&format!("af4-{b}")).expect("af4");
+        rep.println(&format!(
+            "{b:>6}  [{}]",
+            c.values.iter().map(|v| format!("{v:+.4}")).collect::<Vec<_>>().join(", ")
+        ));
+        let mut row = Json::obj();
+        row.set("B", Json::Num(b as f64)).set("values", Json::from_f64s(&c.values));
+        rows.push(row);
+    }
+    rep.json.set("af4", Json::Arr(rows));
+    // Headline property: interior values shrink toward 0 with B.
+    let a64 = registry::build("af4-64").unwrap();
+    let a4096 = registry::build("af4-4096").unwrap();
+    rep.check(
+        "af4-4096 interior values tighter than af4-64",
+        (1..15).all(|j| a4096.values[j].abs() <= a64.values[j].abs() + 1e-12),
+    );
+    rep
+}
+
+/// Fig. 2 — density histograms of X_i for varying B (2^20 draws each).
+pub fn fig02(blocks: &[usize], draws_log2: u32, seed: u64) -> Report {
+    let mut rep = Report::new("fig02", "density of X_i vs block size (paper Fig. 2)");
+    let n_bins = 101usize;
+    let mut all = Vec::new();
+    for &b in blocks {
+        let dist = BlockScaledDist::new(b);
+        let mut rng = Rng::new(seed ^ b as u64);
+        let n_draws = 1usize << draws_log2;
+        let n_blocks = n_draws / b;
+        let mut hist = vec![0usize; n_bins];
+        let mut blk = Vec::with_capacity(b);
+        for _ in 0..n_blocks.max(1) {
+            dist.sample_block(&mut rng, &mut blk);
+            for &x in &blk {
+                let bin = (((x + 1.0) / 2.0) * (n_bins as f64 - 1.0)).round() as usize;
+                hist[bin.min(n_bins - 1)] += 1;
+            }
+        }
+        let total: usize = hist.iter().sum();
+        let dens: Vec<f64> = hist
+            .iter()
+            .map(|&c| c as f64 / total as f64 * n_bins as f64 / 2.0)
+            .collect();
+        // Central density (the distribution's mode) and the endpoint-atom
+        // mass are reported separately: the histogram's raw max at small B
+        // is the ±1 atom bin, not the continuous peak.
+        let center = dens[n_bins / 2];
+        let atom_frac = (hist[0] + hist[n_bins - 1]) as f64 / total as f64;
+        rep.println(&format!(
+            "B={b:>5}: density at 0 ≈ {center:6.3}, at ±0.8 ≈ {:.3}, endpoint mass {atom_frac:.4} (theory {:.4})",
+            dens[(0.9 * (n_bins - 1) as f64) as usize],
+            1.0 / b as f64
+        ));
+        let mut row = Json::obj();
+        row.set("B", Json::Num(b as f64))
+            .set("density", Json::from_f64s(&dens))
+            .set("atom_mass", Json::Num(atom_frac));
+        all.push((b, center, row));
+    }
+    // Concentration check: central density increases with B (Fig. 2's
+    // message), and the endpoint atoms shrink as 1/B.
+    let centers: Vec<f64> = all.iter().map(|(_, p, _)| *p).collect();
+    rep.check(
+        "density concentrates (central density grows with B)",
+        centers.windows(2).all(|w| w[1] > w[0] * 0.98),
+    );
+    rep.json.set(
+        "histograms",
+        Json::Arr(all.into_iter().map(|(_, _, r)| r).collect()),
+    );
+    rep
+}
+
+/// §3.1 — the worked example: median of M and the fraction of samples
+/// assigned above 0.65 (i.e. to q15/q16) for B = 4096, plus the same
+/// numbers across block sizes.
+pub fn sec3(blocks: &[usize]) -> Report {
+    let mut rep = Report::new("sec3", "§3.1 worked example: m_B and outer-code usage");
+    rep.println(&format!(
+        "{:>6}  {:>8}  {:>12}",
+        "B", "m_B", "P[X>0.65|M=m_B]"
+    ));
+    let mut rows = Vec::new();
+    for &b in blocks {
+        let d = BlockScaledDist::new(b);
+        let m = d.m_median();
+        let frac = d.upper_tail_at_median_m(0.65);
+        rep.println(&format!("{b:>6}  {m:>8.4}  {frac:>12.5}"));
+        let mut row = Json::obj();
+        row.set("B", Json::Num(b as f64))
+            .set("m_median", Json::Num(m))
+            .set("upper_tail_0.65", Json::Num(frac));
+        rows.push(row);
+    }
+    rep.json.set("rows", Json::Arr(rows));
+    let d = BlockScaledDist::new(4096);
+    rep.check("m_4096 ≈ 3.76 (paper)", (d.m_median() - 3.76).abs() < 0.01);
+    rep.check(
+        "q15/q16 usage < 1% at B=4096 (paper: ≈0.007)",
+        d.upper_tail_at_median_m(0.65) < 0.01,
+    );
+    rep
+}
+
+/// Fig. 3 — the unequal-bin-width illustration: two adjacent equal-mass
+/// bins of a skewed CDF have different widths, so centering code values in
+/// them misallocates mass.
+pub fn fig03() -> Report {
+    let mut rep = Report::new("fig03", "why quantile midpoints misallocate mass (paper Fig. 3)");
+    let d = BlockScaledDist::new(64);
+    // Two adjacent bins of mass 0.1: [F⁻¹(0.7), F⁻¹(0.8)], [F⁻¹(0.8), F⁻¹(0.9)]
+    let b0 = d.quantile(0.7);
+    let b1 = d.quantile(0.8);
+    let b2 = d.quantile(0.9);
+    let a = 0.5 * (b0 + b1);
+    let bb = 0.5 * (b1 + b2);
+    // If a, b are used as code values, the boundary is (a+b)/2 ≠ b1, so the
+    // mass assigned to a is not 0.1.
+    let mass_a = d.cdf(0.5 * (a + bb)) - d.cdf(b0);
+    rep.println(&format!(
+        "bins [{b0:.4},{b1:.4}] and [{b1:.4},{b2:.4}] (mass 0.1 each); widths {:.4} vs {:.4}",
+        b1 - b0,
+        b2 - b1
+    ));
+    rep.println(&format!(
+        "bin centers as code values ⇒ mass assigned to lower value = {mass_a:.4} (≠ 0.1)"
+    ));
+    rep.json
+        .set("boundaries", Json::from_f64s(&[b0, b1, b2]))
+        .set("centers", Json::from_f64s(&[a, bb]))
+        .set("mass_to_lower_center", Json::Num(mass_a));
+    rep.check("widths differ", ((b1 - b0) - (b2 - b1)).abs() > 1e-4);
+    rep.check("mass misallocated", (mass_a - 0.1).abs() > 1e-3);
+    rep
+}
+
+/// Fig. 4(a) — usage of each NF4 code value on samples from the Eq. 1
+/// generative process at B = 64. (Fig. 4(b), real model weights, lives in
+/// `exp::lm` since it needs a trained checkpoint.)
+pub fn fig04a(seed: u64) -> Report {
+    let mut rep = Report::new("fig04a", "NF4 code usage, synthetic Eq.-1 samples (Fig. 4a)");
+    let b = 64usize;
+    let dist = BlockScaledDist::new(b);
+    let mut rng = Rng::new(seed);
+    let xs = dist.sample(&mut rng, 1 << 14);
+    let code = codes::nf4();
+    let usage = code.usage(&xs);
+    print_usage(&mut rep, &code, &usage);
+    rep.json.set("usage", Json::from_f64s(&usage));
+    rep.json.set("code", Json::from_f64s(&code.values));
+    // Paper: usages range between ~2% and ~9% rather than uniform 6.25%.
+    let mx = usage.iter().cloned().fold(0.0, f64::max);
+    let mn = usage.iter().cloned().fold(1.0, f64::min);
+    rep.check("usage is non-uniform (max > 7.5%)", mx > 0.075);
+    rep.check("usage is non-uniform (min < 4%)", mn < 0.04);
+    rep
+}
+
+/// Fig. 10 + Appendix A — exact CDF vs the truncated-normal approximation
+/// at B = 32, plus the P[X ≤ 1/2] numbers.
+pub fn fig10(mc_draws_log2: u32, seed: u64) -> Report {
+    let mut rep = Report::new("fig10", "exact vs Appendix-A CDF, B=32 (paper Fig. 10)");
+    let d = BlockScaledDist::new(32);
+    let mut xs = Vec::new();
+    let mut exact = Vec::new();
+    let mut approx = Vec::new();
+    let mut max_gap = 0.0f64;
+    // Open interval: the mixture's atoms at ±1 are handled identically by
+    // both sides; the approximation is only for the continuous part.
+    for i in 1..100 {
+        let x = -1.0 + 2.0 * i as f64 / 100.0;
+        let e = d.cdf(x);
+        let a = d.atom_mass() + (1.0 - 1.0 / 32.0) * d.g_cdf_approx(x);
+        max_gap = max_gap.max((e - a).abs());
+        xs.push(x);
+        exact.push(e);
+        approx.push(a);
+    }
+    rep.println(&format!("max |exact − approx| over [−1,1]: {max_gap:.5}"));
+    // Appendix A numbers.
+    let approx_half = d.atom_mass() + (1.0 - 1.0 / 32.0) * d.g_cdf_approx(0.5);
+    let exact_half = d.cdf(0.5);
+    // Monte-Carlo estimate (paper: 0.8728 ± 2e-5 at 2^30 blocks; we use
+    // fewer draws, tolerance scales accordingly).
+    let mut rng = Rng::new(seed);
+    let n_blocks = (1usize << mc_draws_log2) / 32;
+    let mut below = 0usize;
+    let mut blk = Vec::with_capacity(32);
+    for _ in 0..n_blocks {
+        d.sample_block(&mut rng, &mut blk);
+        // one sample per block, like the paper, to avoid dependence
+        if blk[0] <= 0.5 {
+            below += 1;
+        }
+    }
+    let mc = below as f64 / n_blocks as f64;
+    rep.println(&format!(
+        "P[X ≤ 1/2]: approx {approx_half:.4} (paper 0.8712), exact {exact_half:.4}, MC {mc:.4} (paper 0.8728)"
+    ));
+    rep.json
+        .set("x", Json::from_f64s(&xs))
+        .set("exact", Json::from_f64s(&exact))
+        .set("approx", Json::from_f64s(&approx))
+        .set("p_half_approx", Json::Num(approx_half))
+        .set("p_half_exact", Json::Num(exact_half))
+        .set("p_half_mc", Json::Num(mc));
+    rep.check("approximation within 6e-3 everywhere", max_gap < 6e-3);
+    rep.check("approx P[X≤1/2] ≈ 0.8712", (approx_half - 0.8712).abs() < 2e-3);
+    rep.check("exact ≈ MC", (exact_half - mc).abs() < 0.01);
+    rep.check(
+        "exact sits above approx at 1/2 (paper's sign)",
+        exact_half > approx_half,
+    );
+    rep
+}
+
+/// Fig. 11 — the one-parameter family of uniform-usage codes for B = 64.
+pub fn fig11(n_family: usize) -> Report {
+    let mut rep = Report::new("fig11", "family of uniform-usage codes, B=64 (paper Fig. 11)");
+    let dist = BlockScaledDist::new(64);
+    let (lo, hi) = codes::balanced::feasible_q1_range(&dist, 16, 2000)
+        .expect("balanced family nonempty");
+    rep.println(&format!("feasible q1 range: [{lo:.5}, {hi:.5}]"));
+    let mut members = Vec::new();
+    let mut non_monotone_spacing = false;
+    for i in 0..n_family {
+        let q1 = lo + (hi - lo) * i as f64 / (n_family - 1).max(1) as f64;
+        let (vals, ok) = codes::balanced::balanced_from_q1(&dist, 16, q1);
+        if !ok {
+            continue;
+        }
+        // Paper's observation: spacing is non-monotone w.r.t. |distance from 0|
+        let gaps: Vec<f64> = vals.windows(2).map(|w| w[1] - w[0]).collect();
+        let pos_gaps: Vec<f64> = gaps[8..].to_vec();
+        if pos_gaps.windows(2).any(|w| w[1] < w[0]) {
+            non_monotone_spacing = true;
+        }
+        let mut row = Json::obj();
+        row.set("q1", Json::Num(q1)).set("values", Json::from_f64s(&vals));
+        members.push(row);
+    }
+    rep.println(&format!("emitted {} valid family members", members.len()));
+    rep.check("family has multiple members", members.len() >= 2);
+    rep.check("spacing non-monotone for some member (paper note)", non_monotone_spacing);
+    rep.json.set("members", Json::Arr(members));
+    rep.json.set("q1_range", Json::from_f64s(&[lo, hi]));
+    rep
+}
+
+/// Fig. 12 — relative usage of code values for NF4 / AF4 / balanced /
+/// balanced-with-endpoints when quantizing blocks of 4096 normal samples.
+pub fn fig12(seed: u64) -> Report {
+    let mut rep = Report::new(
+        "fig12",
+        "code usage at B=4096: balanced vs endpoints vs NF4/AF4 (paper Fig. 12)",
+    );
+    let b = 4096usize;
+    let dist = BlockScaledDist::new(b);
+    let mut rng = Rng::new(seed);
+    let xs = dist.sample(&mut rng, 512);
+    let mut spreads = Vec::new();
+    for spec in ["nf4", "af4-4096", "balanced-4096", "balanced-ep-4096"] {
+        let code = registry::build(spec).expect(spec);
+        let usage = code.usage(&xs);
+        let mx = usage.iter().cloned().fold(0.0, f64::max);
+        let mn = usage.iter().cloned().fold(1.0, f64::min);
+        rep.println(&format!("{spec:>18}: min {mn:.4} max {mx:.4}"));
+        let mut row = Json::obj();
+        row.set("code", Json::Str(spec.into())).set("usage", Json::from_f64s(&usage));
+        rep.json_push("usages", row);
+        spreads.push((spec, mx - mn));
+    }
+    let get = |name: &str| spreads.iter().find(|(s, _)| *s == name).unwrap().1;
+    rep.check("balanced is the most uniform", get("balanced-4096") < get("nf4"));
+    rep.check(
+        "grafting endpoints breaks uniformity",
+        get("balanced-ep-4096") > get("balanced-4096"),
+    );
+    rep.check("NF4 heavily non-uniform at B=4096", get("nf4") > 0.10);
+    rep
+}
+
+fn print_usage(rep: &mut Report, code: &Code, usage: &[f64]) {
+    for (j, (&v, &u)) in code.values.iter().zip(usage).enumerate() {
+        let bar = "#".repeat((u * 400.0).round() as usize);
+        rep.println(&format!("q{:<2} {v:+.4}  {:>6.2}%  {bar}", j + 1, u * 100.0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig01_runs_and_validates() {
+        let rep = fig01(&[32, 64, 256]);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn fig02_concentration() {
+        let rep = fig02(&[16, 64, 256], 16, 1);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn sec3_paper_numbers() {
+        let rep = sec3(&[64, 1024, 4096]);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn fig03_misallocation() {
+        let rep = fig03();
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn fig04a_nonuniform() {
+        let rep = fig04a(3);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn fig10_approx_quality() {
+        let rep = fig10(18, 5);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn fig11_family() {
+        let rep = fig11(9);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn fig12_usage_ordering() {
+        let rep = fig12(7);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+}

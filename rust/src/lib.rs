@@ -1,0 +1,31 @@
+//! # AFQ — AbnormalFloat Quantization framework
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *"NF4 Isn't Information
+//! Theoretically Optimal (and that's Good)"* (Yoshida, 2023): blockwise
+//! absmax 4-bit quantization, the block-size-dependent input distribution
+//! `F_X(x; B)`, the NF4 / AF4 / balanced code constructions, a quantized
+//! transformer-LM substrate, and the experiment harness that regenerates
+//! every figure in the paper.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — code construction, quantization, PJRT runtime,
+//!   eval coordinator, experiments. Python never runs at request time.
+//! - **L2 (`python/compile/model.py`)** — JAX transformer fwd/loss/train
+//!   step, AOT-lowered to HLO text in `artifacts/`.
+//! - **L1 (`python/compile/kernels/`)** — Pallas blockwise quantize /
+//!   dequantize / fused dequant-matmul kernels (interpret mode on CPU).
+//!
+//! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
+//! and [`quant`] (the mechanism). `examples/quickstart.rs` shows the
+//! end-to-end flow.
+
+pub mod codes;
+pub mod coordinator;
+pub mod dist;
+pub mod exp;
+pub mod model;
+pub mod numerics;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

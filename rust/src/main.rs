@@ -1,0 +1,330 @@
+//! `afq` — CLI for the AbnormalFloat quantization framework.
+//!
+//! Subcommands:
+//!   codes      print/construct quantization code tables
+//!   quantize   quantize synthetic weights, report reconstruction errors
+//!   train      train a model via the AOT train-step artifact
+//!   eval       perplexity / cloze eval of a (model × code × B) config
+//!   exp        regenerate a paper figure (fig01..fig13, sec3, ablations)
+//!   info       artifact manifest summary
+//!
+//! Run `afq <cmd> --help` for options.
+
+use afq::codes::registry;
+use afq::coordinator::{ensure_checkpoint, EngineHandle, ModelService, QuantSpec};
+use afq::exp;
+use afq::model::{bytes_per_word, generate_corpus, BatchSampler};
+use afq::util::cli::Command;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "codes" => cmd_codes(&rest),
+        "quantize" => cmd_quantize(&rest),
+        "train" => cmd_train(&rest),
+        "eval" => cmd_eval(&rest),
+        "exp" => cmd_exp(&rest),
+        "info" => cmd_info(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{}", usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "afq — AbnormalFloat (NF4/AF4) quantization framework\n\
+     \n\
+     usage: afq <command> [options]\n\
+     \n\
+     commands:\n\
+       codes      print code tables (nf4, af4-<B>, balanced-<B>, …)\n\
+       quantize   quantize synthetic weights, report reconstruction error\n\
+       train      train a model from Rust via the AOT train step\n\
+       eval       perplexity eval of a model × code × block-size config\n\
+       exp        regenerate paper figures (fig01..fig13, sec3, ablation-*)\n\
+       info       artifact manifest summary"
+        .to_string()
+}
+
+fn cmd_codes(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("codes", "print code tables")
+        .opt("spec", "code spec(s), comma separated", Some("nf4,af4-64,af4-4096"))
+        .flag("json", "emit JSON");
+    let args = cmd.parse(argv)?;
+    for spec in args.str_list("spec", &[]) {
+        let code = registry::build(&spec).ok_or_else(|| format!("unknown code {spec:?}"))?;
+        if args.flag("json") {
+            println!("{}", code.to_json().to_string_compact());
+        } else {
+            println!("{spec}:");
+            for (i, v) in code.values.iter().enumerate() {
+                println!("  q{:<2} {v:+.6}", i + 1);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("quantize", "quantize synthetic normal weights, report errors")
+        .opt("code", "code family (nf4|af4|balanced-ep|kmedians)", Some("nf4"))
+        .opt("blocks", "block sizes", Some("64,256,1024,4096"))
+        .opt("n", "number of weights", Some("1048576"))
+        .opt("seed", "rng seed", Some("0"));
+    let args = cmd.parse(argv)?;
+    let n = args.usize("n", 1 << 20);
+    let mut rng = afq::util::rng::Rng::new(args.u64("seed", 0));
+    let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.02).collect();
+    let family = args.get_or("code", "nf4");
+    println!("{:>6} {:>10} {:>12} {:>12} {:>12}", "B", "bits", "L1", "L2", "max");
+    for b in args.usize_list("blocks", &[64, 256, 1024, 4096]) {
+        let code = registry::for_block_size(family, b)
+            .ok_or_else(|| format!("unknown code family {family:?}"))?;
+        let q = afq::quant::quantize(&w, b, &code);
+        let back = afq::quant::dequantize(&q, &code);
+        let err = afq::quant::recon_error(&w, &back);
+        println!(
+            "{b:>6} {:>10.4} {:>12.4e} {:>12.4e} {:>12.4e}",
+            q.bits_per_param(),
+            err.l1,
+            err.l2,
+            err.max
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("train", "train a model via the AOT train step")
+        .opt("model", "tiny|small|base", Some("small"))
+        .opt("corpus", "english|markov", Some("english"))
+        .opt("steps", "training steps", Some("200"))
+        .opt("artifacts", "artifacts dir", Some("artifacts"))
+        .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"));
+    let args = cmd.parse(argv)?;
+    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
+    let params = ensure_checkpoint(
+        &eng,
+        args.get_or("model", "small"),
+        args.get_or("corpus", "english"),
+        args.usize("steps", 200),
+        args.get_or("ckpt-dir", "checkpoints"),
+    )?;
+    println!("trained/loaded: {} params", params.n_params());
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("eval", "perplexity eval of model × code × B")
+        .opt("model", "tiny|small|base", Some("small"))
+        .opt("corpus", "english|markov", Some("english"))
+        .opt("code", "fp|nf4|af4|balanced-ep|…", Some("nf4"))
+        .opt("block", "block size", Some("64"))
+        .opt("steps", "train steps for checkpoint", Some("200"))
+        .opt("eval-batches", "number of eval batches", Some("6"))
+        .opt("artifacts", "artifacts dir", Some("artifacts"))
+        .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"));
+    let args = cmd.parse(argv)?;
+    let model = args.get_or("model", "small");
+    let corpus = args.get_or("corpus", "english");
+    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
+    let params = ensure_checkpoint(
+        &eng,
+        model,
+        corpus,
+        args.usize("steps", 200),
+        args.get_or("ckpt-dir", "checkpoints"),
+    )?;
+    let meta = eng.manifest().config(model)?.clone();
+    let spec = if registry::is_fp(args.get_or("code", "nf4")) {
+        QuantSpec::fp()
+    } else {
+        QuantSpec {
+            family: args.get_or("code", "nf4").to_string(),
+            block_size: args.usize("block", 64),
+        }
+    };
+    let svc = ModelService::prepare(&eng, model, &params, spec)?;
+    let val = generate_corpus(corpus, 300_000, exp::lm::VAL_SEED)?;
+    let bpw = bytes_per_word(&val);
+    let sampler = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
+    let batches = sampler.eval_batches(args.usize("eval-batches", 6));
+    let n_tok = batches.len() * meta.batch * meta.seq_len;
+    let nll = svc.mean_nll(&batches)?;
+    println!(
+        "model={model} corpus={corpus} code={} B={}  nll/token={nll:.4}  word-ppl={:.2}  ({} tokens; latency {})",
+        svc.spec.family,
+        svc.spec.block_size,
+        afq::model::word_ppl(nll * n_tok as f64, n_tok, bpw),
+        n_tok,
+        svc.latency.summary(),
+    );
+    Ok(())
+}
+
+fn cmd_exp(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("exp", "regenerate a paper figure")
+        .opt("blocks", "block sizes", Some("64,256,1024,4096"))
+        .opt("models", "models for LM experiments", Some("tiny,small,base"))
+        .opt("train-steps", "checkpoint training steps", Some("200"))
+        .opt("eval-batches", "eval batches per config", Some("6"))
+        .opt("artifacts", "artifacts dir", Some("artifacts"))
+        .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"))
+        .opt("results", "results output dir", Some("results"))
+        .opt("seed", "rng seed", Some("0"));
+    let args = cmd.parse(argv)?;
+    let id = args.positional.first().cloned().ok_or(
+        "usage: afq exp <fig01..fig13|sec3|ablation-codes|ablation-objective|ablation-dq|all-theory|all-lm>",
+    )?;
+    let blocks = args.usize_list("blocks", &[64, 256, 1024, 4096]);
+    let seed = args.u64("seed", 0);
+    let results_dir = args.get_or("results", "results").to_string();
+    let lm_opts = exp::lm::LmOpts {
+        models: args.str_list("models", &["tiny", "small", "base"]),
+        blocks: blocks.clone(),
+        train_steps: args.usize("train-steps", 200),
+        eval_batches: args.usize("eval-batches", 6),
+        ckpt_dir: args.get_or("ckpt-dir", "checkpoints").to_string(),
+    };
+    let needs_engine = matches!(
+        id.as_str(),
+        "fig04" | "fig05" | "fig06" | "fig07" | "fig08" | "fig09" | "fig13" | "all-lm"
+    );
+    let eng = if needs_engine {
+        Some(EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?)
+    } else {
+        None
+    };
+    let e = eng.as_ref().map(|(h, _)| h);
+    let fig_blocks_big = vec![16usize, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+
+    let mut reports = Vec::new();
+    {
+        let mut run = |rep: exp::Report| reports.push(rep);
+        match id.as_str() {
+            "fig01" => run(exp::theory::fig01(&fig_blocks_big)),
+            "fig02" => run(exp::theory::fig02(&[16, 64, 256, 1024, 4096], 20, seed)),
+            "fig03" => run(exp::theory::fig03()),
+            "fig04" => {
+                run(exp::theory::fig04a(seed));
+                run(exp::lm::fig04b(e.unwrap(), &lm_opts)?);
+            }
+            "fig05" => {
+                run(exp::lm::ppl_grid(e.unwrap(), &lm_opts, "english", &["nf4", "af4"], "fig05")?)
+            }
+            "fig06" => {
+                run(exp::lm::ppl_grid(e.unwrap(), &lm_opts, "markov", &["nf4", "af4"], "fig06")?)
+            }
+            "fig07" => {
+                // The paper's Fig. 7 is its largest model; `base` here. The
+                // markov half can be added with `--corpora both` time
+                // permitting — english carries the claim.
+                let o = exp::lm::LmOpts { models: vec!["base".into()], ..lm_opts };
+                run(exp::lm::ppl_grid(e.unwrap(), &o, "english", &["nf4", "af4"], "fig07")?);
+            }
+            "fig08" => {
+                run(exp::lm::cloze_grid(e.unwrap(), &lm_opts, "english", &["nf4", "af4"], "fig08")?)
+            }
+            "fig09" => {
+                let o = exp::lm::LmOpts { models: vec!["base".into()], ..lm_opts };
+                run(exp::lm::cloze_grid(e.unwrap(), &o, "english", &["nf4", "af4"], "fig09")?);
+            }
+            "fig10" => run(exp::theory::fig10(22, seed)),
+            "fig11" => run(exp::theory::fig11(9)),
+            "fig12" => run(exp::theory::fig12(seed)),
+            "fig13" => run(exp::lm::ppl_grid(
+                e.unwrap(),
+                &lm_opts,
+                "english",
+                &["nf4", "af4", "balanced-ep"],
+                "fig13",
+            )?),
+            "sec3" => run(exp::theory::sec3(&[32, 64, 256, 1024, 4096])),
+            "ablation-codes" => run(exp::ablation::code_error_table(&blocks)),
+            "ablation-objective" => run(exp::ablation::l1_vs_l2_objective(64)),
+            "ablation-dq" => run(exp::ablation::double_quant_tradeoff(seed)),
+            "all-theory" => {
+                run(exp::theory::fig01(&fig_blocks_big));
+                run(exp::theory::fig02(&[16, 64, 256, 1024, 4096], 20, seed));
+                run(exp::theory::fig03());
+                run(exp::theory::fig04a(seed));
+                run(exp::theory::fig10(22, seed));
+                run(exp::theory::fig11(9));
+                run(exp::theory::fig12(seed));
+                run(exp::theory::sec3(&[32, 64, 256, 1024, 4096]));
+                run(exp::ablation::code_error_table(&blocks));
+                run(exp::ablation::l1_vs_l2_objective(64));
+                run(exp::ablation::double_quant_tradeoff(seed));
+            }
+            "all-lm" => {
+                let e = e.unwrap();
+                run(exp::theory::fig04a(seed));
+                run(exp::lm::fig04b(e, &lm_opts)?);
+                run(exp::lm::ppl_grid(e, &lm_opts, "english", &["nf4", "af4"], "fig05")?);
+                run(exp::lm::ppl_grid(e, &lm_opts, "markov", &["nf4", "af4"], "fig06")?);
+                run(exp::lm::cloze_grid(e, &lm_opts, "english", &["nf4", "af4"], "fig08")?);
+                run(exp::lm::ppl_grid(
+                    e,
+                    &lm_opts,
+                    "english",
+                    &["nf4", "af4", "balanced-ep"],
+                    "fig13",
+                )?);
+            }
+            other => return Err(format!("unknown experiment {other:?}")),
+        }
+    }
+    let mut failures = Vec::new();
+    for rep in &reports {
+        let path = rep.save(&results_dir).map_err(|e| format!("save report: {e}"))?;
+        println!("saved {path}");
+        if !rep.all_checks_pass() {
+            failures.push(format!("{}: {:?}", rep.id, rep.failed_checks()));
+        }
+    }
+    if failures.is_empty() {
+        println!("\nall shape checks passed ({} report(s))", reports.len());
+        Ok(())
+    } else {
+        Err(format!("shape-check failures: {failures:?}"))
+    }
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("info", "artifact manifest summary")
+        .opt("artifacts", "artifacts dir", Some("artifacts"));
+    let args = cmd.parse(argv)?;
+    let m = afq::runtime::Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    println!("manifest digest: {}", m.digest);
+    println!("configs:");
+    for (name, cfg) in &m.configs {
+        println!(
+            "  {name}: {}L d{} h{} ff{} seq{} batch{}  ({:.2}M params)",
+            cfg.n_layer,
+            cfg.d_model,
+            cfg.n_head,
+            cfg.d_ff,
+            cfg.seq_len,
+            cfg.batch,
+            cfg.n_params() as f64 / 1e6
+        );
+    }
+    println!("artifacts ({}):", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!("  {name}  [{} in / {} out]  {}", a.inputs.len(), a.outputs.len(), a.file);
+    }
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Cloze (final-token prediction) task — the LAMBADA substitute.
+//!
+//! The paper's zero-shot metric is LAMBADA cloze accuracy. Our substitution
+//! (DESIGN.md §2): from a held-out corpus, pick contexts that end exactly at
+//! a word boundary and ask the model to predict the *first byte of the next
+//! word* — accuracy@1 at the final position. Same shape of signal (noisy,
+//! small-departure-from-baseline), same integration point (the `correct`
+//! output of the score artifacts).
+
+use crate::util::rng::Rng;
+
+/// A cloze item: a context window of `seq` tokens; the score at the last
+/// position is the prediction of `answer`.
+#[derive(Clone, Debug)]
+pub struct ClozeItem {
+    /// seq token ids (the context, ending at a word boundary).
+    pub ids: Vec<i32>,
+    /// the held-out next byte.
+    pub answer: i32,
+}
+
+/// A batched cloze evaluation suite.
+pub struct ClozeSuite {
+    pub items: Vec<ClozeItem>,
+    pub seq: usize,
+}
+
+impl ClozeSuite {
+    /// Build `n_items` cloze items from a corpus: positions where a space
+    /// precedes a letter, so the task is "predict how the next word starts".
+    pub fn build(data: &[u8], seq: usize, n_items: usize, seed: u64) -> ClozeSuite {
+        let mut rng = Rng::new(seed);
+        let mut items = Vec::with_capacity(n_items);
+        let mut guard = 0usize;
+        while items.len() < n_items && guard < n_items * 1000 {
+            guard += 1;
+            let end = seq + rng.index(data.len() - seq - 1);
+            // require: data[end-1] is a space, data[end] is a letter
+            if data[end - 1] == b' ' && data[end].is_ascii_alphabetic() {
+                let ids = data[end - seq..end].iter().map(|&c| c as i32).collect();
+                items.push(ClozeItem { ids, answer: data[end] as i32 });
+            }
+        }
+        ClozeSuite { items, seq }
+    }
+
+    /// Pack items into [batch, seq] id/target matrices. The target row is
+    /// the input shifted by one with the held-out answer in the last slot;
+    /// only the final position's `correct` output is the cloze signal.
+    pub fn batches(&self, batch: usize) -> Vec<(Vec<i32>, Vec<i32>, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.items.len() {
+            let n = (self.items.len() - i).min(batch);
+            let mut ids = Vec::with_capacity(batch * self.seq);
+            let mut tgt = Vec::with_capacity(batch * self.seq);
+            for j in 0..batch {
+                let item = &self.items[(i + j).min(self.items.len() - 1)]; // pad w/ last
+                ids.extend_from_slice(&item.ids);
+                for t in 0..self.seq - 1 {
+                    tgt.push(item.ids[t + 1]);
+                }
+                tgt.push(item.answer);
+            }
+            out.push((ids, tgt, n));
+            i += n;
+        }
+        out
+    }
+
+    /// Accuracy from per-batch `correct` outputs ([batch, seq] i32 each).
+    pub fn accuracy(&self, batch: usize, corrects: &[Vec<i32>]) -> f64 {
+        let mut right = 0usize;
+        let mut total = 0usize;
+        let batches = self.batches(batch);
+        assert_eq!(batches.len(), corrects.len(), "one correct-matrix per batch");
+        for ((_, _, n), c) in batches.iter().zip(corrects) {
+            assert_eq!(c.len(), batch * self.seq);
+            for j in 0..*n {
+                right += (c[j * self.seq + self.seq - 1] == 1) as usize;
+                total += 1;
+            }
+        }
+        right as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::corpus::english;
+
+    #[test]
+    fn builds_items_at_word_boundaries() {
+        let data = english(50_000, 3);
+        let suite = ClozeSuite::build(&data, 32, 64, 1);
+        assert_eq!(suite.items.len(), 64);
+        for item in &suite.items {
+            assert_eq!(item.ids.len(), 32);
+            assert_eq!(item.ids[31], b' ' as i32, "context ends with space");
+            assert!((item.answer as u8).is_ascii_alphabetic());
+        }
+    }
+
+    #[test]
+    fn batches_pad_and_report_valid_counts() {
+        let data = english(50_000, 4);
+        let suite = ClozeSuite::build(&data, 16, 10, 2);
+        let batches = suite.batches(4);
+        assert_eq!(batches.len(), 3); // 4+4+2
+        assert_eq!(batches[2].2, 2);
+        for (ids, tgt, _) in &batches {
+            assert_eq!(ids.len(), 4 * 16);
+            assert_eq!(tgt.len(), 4 * 16);
+            // shifted-by-one structure everywhere except the answer slot
+            assert_eq!(ids[1], tgt[0]);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_only_valid_rows() {
+        let data = english(50_000, 5);
+        let suite = ClozeSuite::build(&data, 16, 6, 3);
+        let batches = suite.batches(4);
+        // all-correct matrices
+        let corrects: Vec<Vec<i32>> = batches.iter().map(|_| vec![1; 4 * 16]).collect();
+        assert_eq!(suite.accuracy(4, &corrects), 1.0);
+        // all-wrong
+        let wrong: Vec<Vec<i32>> = batches.iter().map(|_| vec![0; 4 * 16]).collect();
+        assert_eq!(suite.accuracy(4, &wrong), 0.0);
+    }
+}

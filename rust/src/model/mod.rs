@@ -1,0 +1,142 @@
+//! Host-side model substrate: parameters, corpora, and the cloze task.
+//!
+//! The transformer's compute graph lives in `python/compile/model.py` (L2,
+//! AOT-compiled); this module owns everything around it — initialization,
+//! checkpoints, data, and the marshalling of (quantized) weights into the
+//! artifact calling convention.
+
+pub mod cloze;
+pub mod corpus;
+pub mod params;
+
+pub use cloze::ClozeSuite;
+pub use corpus::{generate as generate_corpus, BatchSampler};
+pub use params::ParamSet;
+
+use crate::codes::Code;
+use crate::runtime::{ModelMeta, TensorData};
+
+/// Per-token word-renormalized perplexity, the paper's LM metric.
+///
+/// The paper renormalizes token perplexity to *word* perplexity; for the
+/// byte-level tokenizer the analogue is bytes-per-word renormalization:
+/// ppl_word = exp(total_nll / n_words) with words ≈ whitespace-separated
+/// spans. `bytes_per_word` comes from the eval corpus.
+pub fn word_ppl(total_nll: f64, n_tokens: usize, bytes_per_word: f64) -> f64 {
+    (total_nll / (n_tokens as f64 / bytes_per_word)).exp()
+}
+
+/// Mean bytes per whitespace-separated word in a corpus. Falls back to 1
+/// (token-level ppl) for streams without separator structure, where the
+/// word renormalization is meaningless.
+pub fn bytes_per_word(data: &[u8]) -> f64 {
+    let words = data.split(|&c| c == b' ' || c == b'\n').filter(|w| !w.is_empty()).count();
+    let bpw = data.len() as f64 / words.max(1) as f64;
+    if bpw > 50.0 {
+        1.0
+    } else {
+        bpw
+    }
+}
+
+/// The arguments a `score_q<B>_<model>` artifact expects after
+/// (ids, targets): code table, vector params, then per-matrix (idx, scales).
+/// Returns (cache_key, shape, tensor) triples for device-resident upload.
+pub fn quantized_weight_args(
+    meta: &ModelMeta,
+    params: &ParamSet,
+    code: &Code,
+    block_size: usize,
+    key_prefix: &str,
+) -> Vec<(String, Vec<usize>, TensorData)> {
+    let mut out = Vec::new();
+    out.push((
+        format!("{key_prefix}/code"),
+        vec![16],
+        TensorData::F32(code.table_f32()),
+    ));
+    for (name, shape, t) in params.vector_tensors(meta) {
+        out.push((format!("{key_prefix}/{name}"), shape, t));
+    }
+    for (name, q) in params.quantize_matrices(meta, code, block_size) {
+        let n = q.len;
+        out.push((
+            format!("{key_prefix}/{name}.idx"),
+            vec![n],
+            TensorData::from_indices(&q),
+        ));
+        out.push((
+            format!("{key_prefix}/{name}.scales"),
+            vec![q.scales.len()],
+            TensorData::F32(q.scales.clone()),
+        ));
+    }
+    out
+}
+
+/// The arguments a `score_fp_<model>` artifact expects after (ids, targets):
+/// every fp32 param in order.
+pub fn fp_weight_args(
+    _meta: &ModelMeta,
+    params: &ParamSet,
+    key_prefix: &str,
+) -> Vec<(String, Vec<usize>, TensorData)> {
+    params
+        .tensors
+        .iter()
+        .map(|(n, s, d)| (format!("{key_prefix}/{n}"), s.clone(), TensorData::F32(d.clone())))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn word_ppl_math() {
+        // 1000 tokens at nll ln(4)/token, 5 bytes/word ⇒ word ppl = 4^5
+        let ppl = word_ppl(1000.0 * (4.0f64).ln(), 1000, 5.0);
+        assert!((ppl - 4.0f64.powi(5)).abs() / ppl < 1e-12);
+    }
+
+    #[test]
+    fn bytes_per_word_on_text() {
+        let b = bytes_per_word(b"the cat sat on the mat");
+        assert!((b - 22.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantized_args_match_manifest_order() {
+        let Ok(m) = Manifest::load("artifacts") else { return };
+        let meta = m.config("tiny").unwrap();
+        let params = ParamSet::init(meta, 0);
+        let code = crate::codes::nf4();
+        let args = quantized_weight_args(meta, &params, &code, 64, "w");
+        let spec = m.artifact("score_q64_tiny").unwrap();
+        // artifact inputs = ids, targets, then exactly our args
+        assert_eq!(args.len(), spec.inputs.len() - 2);
+        for (arg, ispec) in args.iter().zip(spec.inputs.iter().skip(2)) {
+            assert!(
+                arg.0.ends_with(&ispec.name),
+                "order mismatch: {} vs {}",
+                arg.0,
+                ispec.name
+            );
+            arg.2.check(ispec).expect("spec check");
+        }
+    }
+
+    #[test]
+    fn fp_args_match_manifest_order() {
+        let Ok(m) = Manifest::load("artifacts") else { return };
+        let meta = m.config("tiny").unwrap();
+        let params = ParamSet::init(meta, 0);
+        let args = fp_weight_args(meta, &params, "w");
+        let spec = m.artifact("score_fp_tiny").unwrap();
+        assert_eq!(args.len(), spec.inputs.len() - 2);
+        for (arg, ispec) in args.iter().zip(spec.inputs.iter().skip(2)) {
+            arg.2.check(ispec).expect("spec check");
+        }
+    }
+}

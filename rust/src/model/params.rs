@@ -1,0 +1,267 @@
+//! Host-side parameter store for the transformer: initialization,
+//! checkpoint I/O (own binary format), and quantized views.
+
+use crate::codes::Code;
+use crate::quant::{quantize, Quantized};
+use crate::runtime::{ModelMeta, TensorData};
+use crate::util::rng::Rng;
+
+/// Ordered, named fp32 parameter set matching `ModelMeta::param_order`.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub model: String,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+const MAGIC: u32 = 0xAF4C_4B50; // "AF4" checkpoint
+
+impl ParamSet {
+    /// GPT-2-style init, mirroring `python/compile/model.py::init_params`
+    /// (scheme, not bitwise: training happens from this init either way).
+    pub fn init(meta: &ModelMeta, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut tensors = Vec::with_capacity(meta.param_order.len());
+        let resid_sd = 0.02 / (2.0 * meta.n_layer as f64).sqrt();
+        for (name, shape) in &meta.param_order {
+            let n: usize = shape.iter().product();
+            let data = if name.ends_with("_g") {
+                vec![1.0f32; n]
+            } else if name.ends_with("_b") {
+                vec![0.0f32; n]
+            } else {
+                let sd = if name.ends_with(".wo") || name.ends_with(".w2") {
+                    resid_sd
+                } else {
+                    0.02
+                };
+                (0..n).map(|_| (rng.normal() * sd) as f32).collect()
+            };
+            tensors.push((name.clone(), shape.clone(), data));
+        }
+        ParamSet { model: meta.name.clone(), tensors }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|(_, _, d)| d.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&(String, Vec<usize>, Vec<f32>)> {
+        self.tensors.iter().find(|(n, _, _)| n == name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Vec<f32>> {
+        self.tensors.iter_mut().find(|(n, _, _)| n == name).map(|(_, _, d)| d)
+    }
+
+    /// Save to the AFQ checkpoint format:
+    /// magic u32 | version u32 | model-name (len u32 + utf8) | count u32 |
+    /// per tensor: name, ndim u32, dims u64..., f32 data (LE).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        write_str(&mut buf, &self.model);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in &self.tensors {
+            write_str(&mut buf, name);
+            buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+            for &d in shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, buf)
+    }
+
+    pub fn load(path: &str) -> Result<ParamSet, String> {
+        let buf = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+        let mut r = Reader { b: &buf, i: 0 };
+        if r.u32()? != MAGIC {
+            return Err(format!("{path}: not an AFQ checkpoint"));
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            return Err(format!("{path}: unsupported version {version}"));
+        }
+        let model = r.str()?;
+        let count = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = r.str()?;
+            let ndim = r.u32()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u64()? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let data = r.f32s(n)?;
+            tensors.push((name, shape, data));
+        }
+        Ok(ParamSet { model, tensors })
+    }
+
+    /// Check this set matches a manifest config (names, shapes, order).
+    pub fn validate(&self, meta: &ModelMeta) -> Result<(), String> {
+        if self.tensors.len() != meta.param_order.len() {
+            return Err(format!(
+                "param count mismatch: checkpoint {} vs manifest {}",
+                self.tensors.len(),
+                meta.param_order.len()
+            ));
+        }
+        for ((n, s, _), (mn, ms)) in self.tensors.iter().zip(&meta.param_order) {
+            if n != mn || s != ms {
+                return Err(format!("param mismatch: checkpoint ({n}, {s:?}) vs manifest ({mn}, {ms:?})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantize every W^T matrix with `code` at `block_size` (flat blocking,
+    /// matching the L2 layout). Returns (name, Quantized) in matrix order.
+    pub fn quantize_matrices(
+        &self,
+        meta: &ModelMeta,
+        code: &Code,
+        block_size: usize,
+    ) -> Vec<(String, Quantized)> {
+        meta.matrix_order
+            .iter()
+            .map(|(name, _)| {
+                let (_, _, data) = self.get(name).expect("matrix in param set");
+                (name.clone(), quantize(data, block_size, code))
+            })
+            .collect()
+    }
+
+    /// The vector (non-matrix) params in manifest order as TensorData.
+    pub fn vector_tensors(&self, meta: &ModelMeta) -> Vec<(String, Vec<usize>, TensorData)> {
+        let nv = meta.n_vectors();
+        self.tensors[..nv]
+            .iter()
+            .map(|(n, s, d)| (n.clone(), s.clone(), TensorData::F32(d.clone())))
+            .collect()
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.i + n > self.b.len() {
+            return Err("truncated checkpoint".into());
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| "bad utf8".into())
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq_len: 4,
+            batch: 2,
+            vocab: 256,
+            param_order: vec![
+                ("embed".into(), vec![256, 8]),
+                ("l0.ln1_g".into(), vec![8]),
+                ("l0.wq".into(), vec![8, 8]),
+            ],
+            matrix_order: vec![("l0.wq".into(), vec![8, 8])],
+        }
+    }
+
+    #[test]
+    fn init_respects_shapes_and_kinds() {
+        let m = meta();
+        let p = ParamSet::init(&m, 42);
+        assert_eq!(p.tensors.len(), 3);
+        assert_eq!(p.get("embed").unwrap().2.len(), 2048);
+        assert!(p.get("l0.ln1_g").unwrap().2.iter().all(|&v| v == 1.0));
+        let wq = &p.get("l0.wq").unwrap().2;
+        let sd = (wq.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 64.0).sqrt();
+        assert!((sd - 0.02).abs() < 0.01, "init sd {sd}");
+        p.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = meta();
+        let p = ParamSet::init(&m, 1);
+        let path = std::env::temp_dir().join("afq_test_ckpt.bin");
+        let path = path.to_str().unwrap();
+        p.save(path).unwrap();
+        let q = ParamSet::load(path).unwrap();
+        assert_eq!(p.model, q.model);
+        assert_eq!(p.tensors, q.tensors);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("afq_bad_ckpt.bin");
+        std::fs::write(&path, b"nonsense").unwrap();
+        assert!(ParamSet::load(path.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn validate_detects_mismatch() {
+        let m = meta();
+        let mut p = ParamSet::init(&m, 1);
+        p.tensors[0].0 = "wrong".into();
+        assert!(p.validate(&m).is_err());
+    }
+
+    #[test]
+    fn quantize_matrices_layout() {
+        let m = meta();
+        let p = ParamSet::init(&m, 2);
+        let code = crate::codes::nf4();
+        let qs = p.quantize_matrices(&m, &code, 16);
+        assert_eq!(qs.len(), 1);
+        let (name, q) = &qs[0];
+        assert_eq!(name, "l0.wq");
+        assert_eq!(q.len, 64);
+        assert_eq!(q.n_blocks(), 4);
+        // deterministic vs direct quantize
+        let direct = quantize(&p.get("l0.wq").unwrap().2, 16, &code);
+        assert_eq!(q.packed, direct.packed);
+    }
+}

@@ -1,0 +1,14 @@
+//! Numerical foundations: special functions (Φ, Φ⁻¹, half-normal "Þ"),
+//! quadrature, and root finding.
+//!
+//! Everything downstream — the block-absmax distribution, the NF4/AF4 code
+//! constructions — is built from these three submodules.
+
+pub mod interp;
+pub mod quad;
+pub mod roots;
+pub mod special;
+
+pub use quad::{adaptive_simpson, GaussLegendre};
+pub use roots::{bisect, brent, find_bracket};
+pub use special::{erf, erfc, halfnorm_cdf, halfnorm_inv, halfnorm_pdf, phi, phi_inv, phi_pdf};

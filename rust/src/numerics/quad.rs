@@ -1,0 +1,188 @@
+//! Numerical integration: adaptive Simpson and fixed-order Gauss–Legendre.
+//!
+//! The paper's exact CDF `G_B` (Eq. 3) is an integral over the absmax value
+//! `m`; evaluating it inside a code-construction search means quadrature is
+//! on the critical path, so both an adaptive method (for verification) and
+//! a fast fixed-node method (for the inner loop) are provided.
+
+/// Adaptive Simpson quadrature on [a, b] with absolute tolerance `tol`.
+pub fn adaptive_simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, tol: f64) -> f64 {
+    let fa = f(a);
+    let fb = f(b);
+    let m = 0.5 * (a + b);
+    let fm = f(m);
+    let whole = (b - a) / 6.0 * (fa + 4.0 * fm + fb);
+    simpson_rec(f, a, b, fa, fb, fm, whole, tol, 50)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simpson_rec<F: Fn(f64) -> f64>(
+    f: &F,
+    a: f64,
+    b: f64,
+    fa: f64,
+    fb: f64,
+    fm: f64,
+    whole: f64,
+    tol: f64,
+    depth: u32,
+) -> f64 {
+    let m = 0.5 * (a + b);
+    let lm = 0.5 * (a + m);
+    let rm = 0.5 * (m + b);
+    let flm = f(lm);
+    let frm = f(rm);
+    let left = (m - a) / 6.0 * (fa + 4.0 * flm + fm);
+    let right = (b - m) / 6.0 * (fm + 4.0 * frm + fb);
+    let delta = left + right - whole;
+    if depth == 0 || delta.abs() <= 15.0 * tol {
+        left + right + delta / 15.0
+    } else {
+        simpson_rec(f, a, m, fa, fm, flm, left, tol / 2.0, depth - 1)
+            + simpson_rec(f, m, b, fm, fb, frm, right, tol / 2.0, depth - 1)
+    }
+}
+
+/// Nodes and weights for 64-point Gauss–Legendre on [-1, 1], computed once
+/// by Newton iteration on Legendre polynomials (no table needed).
+pub struct GaussLegendre {
+    pub nodes: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl GaussLegendre {
+    /// n-point rule. Nodes found by Newton from the Chebyshev initial guess.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2);
+        let mut nodes = vec![0.0; n];
+        let mut weights = vec![0.0; n];
+        let m = n.div_ceil(2);
+        for i in 0..m {
+            // Initial guess (Abramowitz & Stegun 22.16.6).
+            let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+            let mut dp = 0.0;
+            for _ in 0..100 {
+                // Evaluate P_n(x) and P'_n(x) by recurrence.
+                let mut p0 = 1.0;
+                let mut p1 = x;
+                for k in 2..=n {
+                    let kf = k as f64;
+                    let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+                    p0 = p1;
+                    p1 = p2;
+                }
+                dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+                let dx = p1 / dp;
+                x -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            nodes[i] = -x;
+            nodes[n - 1 - i] = x;
+            let w = 2.0 / ((1.0 - x * x) * dp * dp);
+            weights[i] = w;
+            weights[n - 1 - i] = w;
+        }
+        Self { nodes, weights }
+    }
+
+    /// ∫_a^b f(x) dx with this rule.
+    pub fn integrate<F: Fn(f64) -> f64>(&self, f: F, a: f64, b: f64) -> f64 {
+        let c = 0.5 * (b - a);
+        let d = 0.5 * (a + b);
+        let mut s = 0.0;
+        for (x, w) in self.nodes.iter().zip(&self.weights) {
+            s += w * f(c * x + d);
+        }
+        c * s
+    }
+
+    /// Composite rule: split [a,b] into `panels` panels.
+    pub fn integrate_composite<F: Fn(f64) -> f64>(
+        &self,
+        f: F,
+        a: f64,
+        b: f64,
+        panels: usize,
+    ) -> f64 {
+        let h = (b - a) / panels as f64;
+        let mut s = 0.0;
+        for p in 0..panels {
+            let lo = a + p as f64 * h;
+            s += self.integrate(&f, lo, lo + h);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::special::phi_pdf;
+
+    #[test]
+    fn simpson_polynomial_exact() {
+        // Simpson is exact for cubics.
+        let f = |x: f64| 3.0 * x * x * x - x + 2.0;
+        let got = adaptive_simpson(&f, -1.0, 2.0, 1e-12);
+        // ∫ = 3/4 x^4 - x²/2 + 2x over [-1,2] = (12-2+4) - (0.75-0.5-2) = 14 - (-1.75)
+        let want = 15.75;
+        assert!((got - want).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn simpson_gaussian_integral() {
+        let got = adaptive_simpson(&phi_pdf, -8.0, 8.0, 1e-12);
+        assert!((got - 1.0).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn simpson_oscillatory() {
+        let f = |x: f64| (10.0 * x).sin();
+        let got = adaptive_simpson(&f, 0.0, 1.0, 1e-11);
+        let want = (1.0 - (10.0f64).cos()) / 10.0;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn gauss_legendre_nodes_symmetric_and_weights_sum() {
+        for n in [8, 16, 64] {
+            let gl = GaussLegendre::new(n);
+            let wsum: f64 = gl.weights.iter().sum();
+            assert!((wsum - 2.0).abs() < 1e-12, "weight sum for n={n}: {wsum}");
+            for i in 0..n {
+                assert!((gl.nodes[i] + gl.nodes[n - 1 - i]).abs() < 1e-12);
+            }
+            // nodes strictly increasing
+            for i in 1..n {
+                assert!(gl.nodes[i] > gl.nodes[i - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_legendre_high_degree_exactness() {
+        // n-point GL is exact for degree 2n-1: check n=8 on x^14.
+        let gl = GaussLegendre::new(8);
+        let got = gl.integrate(|x| x.powi(14), -1.0, 1.0);
+        let want = 2.0 / 15.0;
+        assert!((got - want).abs() < 1e-13, "{got}");
+    }
+
+    #[test]
+    fn gauss_legendre_gaussian() {
+        let gl = GaussLegendre::new(64);
+        let got = gl.integrate_composite(phi_pdf, -8.0, 8.0, 4);
+        assert!((got - 1.0).abs() < 1e-13, "{got}");
+    }
+
+    #[test]
+    fn composite_matches_adaptive() {
+        let gl = GaussLegendre::new(32);
+        let f = |x: f64| (x.sin() * x).exp();
+        let a = adaptive_simpson(&f, 0.0, 3.0, 1e-12);
+        let g = gl.integrate_composite(f, 0.0, 3.0, 6);
+        assert!((a - g).abs() < 1e-9, "{a} vs {g}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Scalar root finding: bisection and Brent's method.
+//!
+//! Used to invert CDFs (`F_X⁻¹` in the AF4 construction) and in the shooting
+//! search that pins AF4's interior code values.
+
+/// Result of a root search.
+#[derive(Clone, Copy, Debug)]
+pub struct Root {
+    pub x: f64,
+    pub fx: f64,
+    pub iters: u32,
+}
+
+/// Brent's method on [a, b]; requires f(a) and f(b) to bracket a root.
+pub fn brent<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, tol: f64, max_iter: u32) -> Option<Root> {
+    let mut a = a;
+    let mut b = b;
+    let mut fa = f(a);
+    let mut fb = f(b);
+    if fa == 0.0 {
+        return Some(Root { x: a, fx: 0.0, iters: 0 });
+    }
+    if fb == 0.0 {
+        return Some(Root { x: b, fx: 0.0, iters: 0 });
+    }
+    if fa * fb > 0.0 {
+        return None;
+    }
+    if fa.abs() < fb.abs() {
+        std::mem::swap(&mut a, &mut b);
+        std::mem::swap(&mut fa, &mut fb);
+    }
+    let mut c = a;
+    let mut fc = fa;
+    let mut mflag = true;
+    let mut d = 0.0;
+    for it in 1..=max_iter {
+        if fb.abs() < tol || (b - a).abs() < tol {
+            return Some(Root { x: b, fx: fb, iters: it });
+        }
+        let mut s = if fa != fc && fb != fc {
+            // inverse quadratic interpolation
+            a * fb * fc / ((fa - fb) * (fa - fc))
+                + b * fa * fc / ((fb - fa) * (fb - fc))
+                + c * fa * fb / ((fc - fa) * (fc - fb))
+        } else {
+            // secant
+            b - fb * (b - a) / (fb - fa)
+        };
+        let lo = (3.0 * a + b) / 4.0;
+        let cond1 = !((lo.min(b)..=lo.max(b)).contains(&s));
+        let cond2 = mflag && (s - b).abs() >= (b - c).abs() / 2.0;
+        let cond3 = !mflag && (s - b).abs() >= (c - d).abs() / 2.0;
+        let cond4 = mflag && (b - c).abs() < tol;
+        let cond5 = !mflag && (c - d).abs() < tol;
+        if cond1 || cond2 || cond3 || cond4 || cond5 {
+            s = 0.5 * (a + b);
+            mflag = true;
+        } else {
+            mflag = false;
+        }
+        let fs = f(s);
+        d = c;
+        c = b;
+        fc = fb;
+        if fa * fs < 0.0 {
+            b = s;
+            fb = fs;
+        } else {
+            a = s;
+            fa = fs;
+        }
+        if fa.abs() < fb.abs() {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut fa, &mut fb);
+        }
+    }
+    Some(Root { x: b, fx: fb, iters: max_iter })
+}
+
+/// Plain bisection — slower but unconditionally robust; used for sanity
+/// cross-checks of Brent results in tests.
+pub fn bisect<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, tol: f64, max_iter: u32) -> Option<Root> {
+    let mut a = a;
+    let mut b = b;
+    let mut fa = f(a);
+    let fb = f(b);
+    if fa == 0.0 {
+        return Some(Root { x: a, fx: 0.0, iters: 0 });
+    }
+    if fb == 0.0 {
+        return Some(Root { x: b, fx: 0.0, iters: 0 });
+    }
+    if fa * fb > 0.0 {
+        return None;
+    }
+    for it in 1..=max_iter {
+        let m = 0.5 * (a + b);
+        let fm = f(m);
+        if fm == 0.0 || (b - a).abs() < tol {
+            return Some(Root { x: m, fx: fm, iters: it });
+        }
+        if fa * fm < 0.0 {
+            b = m;
+        } else {
+            a = m;
+            fa = fm;
+        }
+    }
+    let m = 0.5 * (a + b);
+    Some(Root { x: m, fx: f(m), iters: max_iter })
+}
+
+/// Expand a bracket outward from an initial guess until the function changes
+/// sign; returns (lo, hi) or None.
+pub fn find_bracket<F: Fn(f64) -> f64>(f: F, x0: f64, step0: f64, max_expand: u32) -> Option<(f64, f64)> {
+    let mut step = step0;
+    let f0 = f(x0);
+    if f0 == 0.0 {
+        return Some((x0, x0));
+    }
+    for _ in 0..max_expand {
+        let lo = x0 - step;
+        let hi = x0 + step;
+        if f(lo) * f0 < 0.0 {
+            return Some((lo, x0));
+        }
+        if f(hi) * f0 < 0.0 {
+            return Some((x0, hi));
+        }
+        step *= 2.0;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brent_finds_sqrt2() {
+        let r = brent(|x| x * x - 2.0, 0.0, 2.0, 1e-14, 100).unwrap();
+        assert!((r.x - std::f64::consts::SQRT_2).abs() < 1e-10, "{r:?}");
+    }
+
+    #[test]
+    fn brent_transcendental() {
+        // x = cos(x) → 0.7390851332151607
+        let r = brent(|x| x - x.cos(), 0.0, 1.0, 1e-14, 100).unwrap();
+        assert!((r.x - 0.7390851332151607).abs() < 1e-10);
+    }
+
+    #[test]
+    fn brent_rejects_unbracketed() {
+        assert!(brent(|x| x * x + 1.0, -1.0, 1.0, 1e-12, 50).is_none());
+    }
+
+    #[test]
+    fn brent_exact_endpoint() {
+        let r = brent(|x| x, 0.0, 1.0, 1e-14, 50).unwrap();
+        assert_eq!(r.x, 0.0);
+    }
+
+    #[test]
+    fn bisect_agrees_with_brent() {
+        let f = |x: f64| x.exp() - 3.0;
+        let rb = brent(f, 0.0, 2.0, 1e-13, 200).unwrap();
+        let rs = bisect(f, 0.0, 2.0, 1e-13, 200).unwrap();
+        assert!((rb.x - rs.x).abs() < 1e-10);
+        assert!((rb.x - 3.0f64.ln()).abs() < 1e-10);
+        assert!(rb.iters < rs.iters, "brent should converge faster");
+    }
+
+    #[test]
+    fn bracket_expansion() {
+        let f = |x: f64| x - 10.0;
+        let (lo, hi) = find_bracket(f, 0.0, 1.0, 20).unwrap();
+        assert!(f(lo) * f(hi) <= 0.0);
+        assert!(find_bracket(|_| 1.0, 0.0, 1.0, 5).is_none());
+    }
+}

@@ -1,0 +1,269 @@
+//! Special functions: erf/erfc, the standard normal CDF Φ and its inverse
+//! Φ⁻¹, and the half-normal CDF Þ ("thorn", the paper's notation) with its
+//! inverse.
+//!
+//! Accuracy targets (verified in tests): |erf| ≤ 3e-13 abs, Φ⁻¹ ≤ 1e-12 abs
+//! after one Newton polish of the Acklam initial estimate. This is far below
+//! anything a 4-bit code construction can resolve.
+
+/// erf via the standard two-regime expansion:
+/// series for |x| < 2, continued-fraction-free complementary expansion
+/// (Cody-style rational approximation) for the tail through erfc.
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    if x < 3.25 {
+        // Maclaurin series erf(x) = 2/sqrt(pi) * sum (-1)^n x^(2n+1)/(n!(2n+1)).
+        // Alternating-series cancellation costs ~e^{x²}·ε absolute error, so
+        // the series is only used below 3.25 (error ≲ 3e-12); the tail uses
+        // the continued fraction, which converges fast exactly there.
+        let mut term = x;
+        let mut sum = x;
+        let x2 = x * x;
+        let mut n = 0u32;
+        loop {
+            n += 1;
+            term *= -x2 / n as f64;
+            let add = term / (2 * n + 1) as f64;
+            sum += add;
+            if add.abs() < 1e-17 * sum.abs() {
+                break;
+            }
+            if n > 200 {
+                break;
+            }
+        }
+        sum * std::f64::consts::FRAC_2_SQRT_PI
+    } else {
+        1.0 - erfc(x)
+    }
+}
+
+/// erfc with asymptotic continued fraction for large x, 1-erf otherwise.
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    if x < 3.25 {
+        return 1.0 - erf(x);
+    }
+    // Continued fraction (Abramowitz & Stegun 7.1.14), evaluated backwards:
+    //   erfc(x) = e^{-x²}/√π · 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + 2/(x + …)))))
+    // with partial numerators k/2 and constant denominators x.
+    let terms = 80;
+    let mut cf = 0.0;
+    for k in (1..=terms).rev() {
+        cf = (k as f64 / 2.0) / (x + cf);
+    }
+    (-x * x).exp() / (std::f64::consts::PI.sqrt() * (x + cf))
+}
+
+/// Standard normal PDF φ(x).
+#[inline]
+pub fn phi_pdf(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF Φ(x).
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Inverse standard normal CDF Φ⁻¹(p) — Acklam's rational approximation
+/// polished with one Halley step (accuracy ~1e-15 relative in the body).
+pub fn phi_inv(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "phi_inv domain: p={p}");
+    // Acklam coefficients.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley polish step.
+    let e = phi(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Half-normal CDF Þ(x) = P[|Z| ≤ x] = 2Φ(x) − 1 for x ≥ 0.
+/// (The paper spells this CDF with the thorn character.)
+#[inline]
+pub fn halfnorm_cdf(x: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        erf(x / std::f64::consts::SQRT_2)
+    }
+}
+
+/// Half-normal PDF: 2φ(x) for x ≥ 0.
+#[inline]
+pub fn halfnorm_pdf(x: f64) -> f64 {
+    if x < 0.0 {
+        0.0
+    } else {
+        2.0 * phi_pdf(x)
+    }
+}
+
+/// Inverse half-normal CDF Þ⁻¹(p) = Φ⁻¹((1+p)/2).
+#[inline]
+pub fn halfnorm_inv(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p), "halfnorm_inv domain: p={p}");
+    if p == 0.0 {
+        0.0
+    } else {
+        phi_inv((1.0 + p) / 2.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference values from scipy.special (16 digits).
+    const ERF_REF: &[(f64, f64)] = &[
+        (0.0, 0.0),
+        (0.1, 0.1124629160182849),
+        (0.5, 0.5204998778130465),
+        (1.0, 0.8427007929497149),
+        (1.5, 0.9661051464753107),
+        (2.0, 0.9953222650189527),
+        (2.5, 0.999593047982555),
+        (3.0, 0.9999779095030014),
+        (4.0, 0.9999999845827421),
+    ];
+
+    #[test]
+    fn erf_matches_reference() {
+        for &(x, want) in ERF_REF {
+            let got = erf(x);
+            assert!((got - want).abs() < 3e-13, "erf({x}) = {got}, want {want}");
+            assert!((erf(-x) + want).abs() < 3e-13, "odd symmetry at {x}");
+        }
+    }
+
+    #[test]
+    fn erfc_tail_accuracy() {
+        // scipy: erfc(3)=2.209049699858544e-05, erfc(5)=1.537459794428035e-12
+        // (erfc via 1−erf pays ~e^{x²}·ε cancellation below the CF cutoff,
+        // so 2e-9 relative is the honest bound at x=3.)
+        assert!((erfc(3.0) - 2.209049699858544e-05).abs() / 2.2e-5 < 2e-9);
+        assert!((erfc(5.0) - 1.537459794428035e-12).abs() / 1.5e-12 < 1e-9);
+        // complement identity
+        for x in [-3.0, -1.0, 0.0, 0.5, 2.5] {
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn phi_matches_reference() {
+        // scipy.stats.norm.cdf
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.8413447460685429),
+            (-1.0, 0.15865525393145707),
+            (1.959963984540054, 0.975),
+            (3.76, 0.999915043321502),
+        ];
+        for (x, want) in cases {
+            assert!((phi(x) - want).abs() < 1e-12, "phi({x})");
+        }
+    }
+
+    #[test]
+    fn phi_inv_roundtrip() {
+        for i in 1..1000 {
+            let p = i as f64 / 1000.0;
+            let x = phi_inv(p);
+            assert!((phi(x) - p).abs() < 1e-12, "roundtrip p={p}: phi(phi_inv) err");
+        }
+        // extreme tails
+        for p in [1e-10, 1e-6, 1.0 - 1e-6, 1.0 - 1e-10] {
+            let x = phi_inv(p);
+            assert!((phi(x) - p).abs() / p.min(1.0 - p) < 1e-6, "tail p={p}");
+        }
+    }
+
+    #[test]
+    fn phi_inv_known_values() {
+        assert!((phi_inv(0.975) - 1.959963984540054).abs() < 1e-12);
+        assert!(phi_inv(0.5).abs() < 1e-14);
+        // NF4 outermost quantile, from the paper: Φ⁻¹(1−δ) ≈ 1.848 with
+        // δ = (1/32 + 1/30)/2
+        let delta = 0.5 * (1.0 / 32.0 + 1.0 / 30.0);
+        let q = phi_inv(1.0 - delta);
+        assert!((q - 1.848131420707975).abs() < 1e-10, "got {q}");
+    }
+
+    #[test]
+    fn halfnorm_properties() {
+        assert_eq!(halfnorm_cdf(0.0), 0.0);
+        assert!((halfnorm_cdf(1.0) - 0.6826894921370859).abs() < 1e-12);
+        for p in [0.1, 0.5, 0.9, 0.99] {
+            let x = halfnorm_inv(p);
+            assert!((halfnorm_cdf(x) - p).abs() < 1e-11, "roundtrip p={p}");
+        }
+        // Paper §3.1: m_B = Þ⁻¹((1/2)^{1/4096}) ≈ 3.76
+        let m = halfnorm_inv(0.5f64.powf(1.0 / 4096.0));
+        assert!((m - 3.76).abs() < 0.005, "median of max for B=4096: {m}");
+    }
+
+    #[test]
+    fn pdf_integrates_to_cdf() {
+        // Trapezoid check: ∫φ over [-4,x] ≈ Φ(x) - Φ(-4)
+        let n = 4000;
+        let a = -4.0;
+        for xend in [0.0, 1.0, 2.5] {
+            let h = (xend - a) / n as f64;
+            let mut s = 0.5 * (phi_pdf(a) + phi_pdf(xend));
+            for i in 1..n {
+                s += phi_pdf(a + i as f64 * h);
+            }
+            s *= h;
+            // trapezoid error is O(h²) ≈ 1e-6 at n=4000
+            assert!((s - (phi(xend) - phi(a))).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT execution engine: loads AOT artifacts (HLO text), compiles them on
+//! the CPU PJRT client, keeps weights device-resident, and executes.
+//!
+//! The engine deliberately is **not** `Send`: the `xla` crate wraps raw
+//! PJRT pointers. All multithreaded access goes through
+//! [`crate::coordinator`], which owns one engine on a dedicated thread and
+//! talks to it over channels (the vLLM-router pattern: request threads
+//! never touch the device).
+
+use crate::runtime::manifest::{ArtifactSpec, DType, Manifest};
+use crate::runtime::tensor_data::TensorData;
+use std::collections::HashMap;
+
+/// An argument to [`Engine::execute`]: either host data uploaded for this
+/// call, or a reference to a named device-resident buffer uploaded earlier
+/// (weights, code tables — anything reused across calls).
+pub enum Arg<'a> {
+    Data(&'a TensorData),
+    Owned(TensorData),
+    Cached(&'a str),
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str) -> Result<Engine, String> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
+        Ok(Engine { client, manifest, exes: HashMap::new(), cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and memoize) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<(), String> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t = crate::util::Timer::start(&format!("compile {name}"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parse {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
+        crate::log_debug!("{}", t.report());
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn to_buffer(&self, t: &TensorData, shape: &[usize]) -> Result<xla::PjRtBuffer, String> {
+        let r = match t {
+            TensorData::F32(v) => self.client.buffer_from_host_buffer(v, shape, None),
+            TensorData::I32(v) => self.client.buffer_from_host_buffer(v, shape, None),
+        };
+        r.map_err(|e| format!("host→device upload: {e}"))
+    }
+
+    /// Upload a named tensor to the device cache (idempotent overwrite).
+    pub fn upload(&mut self, key: &str, t: &TensorData, shape: &[usize]) -> Result<(), String> {
+        let buf = self.to_buffer(t, shape)?;
+        self.cache.insert(key.to_string(), buf);
+        Ok(())
+    }
+
+    pub fn evict(&mut self, key_prefix: &str) {
+        self.cache.retain(|k, _| !k.starts_with(key_prefix));
+    }
+
+    pub fn cached_keys(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute an artifact. `args` must match the manifest's input order;
+    /// host args are validated against the specs.
+    pub fn execute(&mut self, name: &str, args: &[Arg]) -> Result<Vec<TensorData>, String> {
+        self.load(name)?;
+        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
+        if args.len() != spec.inputs.len() {
+            return Err(format!(
+                "{name}: got {} args, artifact takes {}",
+                args.len(),
+                spec.inputs.len()
+            ));
+        }
+        // Upload per-call args; collect borrowed device buffers.
+        let mut temp: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        for (i, (arg, ispec)) in args.iter().zip(&spec.inputs).enumerate() {
+            match arg {
+                Arg::Data(t) => {
+                    t.check(ispec)?;
+                    temp.push((i, self.to_buffer(t, &ispec.shape)?));
+                }
+                Arg::Owned(t) => {
+                    t.check(ispec)?;
+                    temp.push((i, self.to_buffer(t, &ispec.shape)?));
+                }
+                Arg::Cached(key) => {
+                    if !self.cache.contains_key(*key) {
+                        return Err(format!("{name}: cached buffer {key:?} not uploaded"));
+                    }
+                }
+            }
+        }
+        let mut buf_refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut ti = 0usize;
+        for (i, arg) in args.iter().enumerate() {
+            match arg {
+                Arg::Data(_) | Arg::Owned(_) => {
+                    debug_assert_eq!(temp[ti].0, i);
+                    buf_refs.push(&temp[ti].1);
+                    ti += 1;
+                }
+                Arg::Cached(key) => buf_refs.push(&self.cache[*key]),
+            }
+        }
+        let exe = &self.exes[name];
+        let out = exe.execute_b(&buf_refs).map_err(|e| format!("{name}: execute: {e}"))?;
+        // return_tuple=True: one tuple buffer holding all outputs.
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{name}: readback: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| format!("{name}: untuple: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(format!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut results = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let t = match ospec.dtype {
+                DType::F32 => TensorData::F32(
+                    lit.to_vec::<f32>().map_err(|e| format!("{name}: out f32: {e}"))?,
+                ),
+                DType::I32 => TensorData::I32(
+                    lit.to_vec::<i32>().map_err(|e| format!("{name}: out i32: {e}"))?,
+                ),
+            };
+            results.push(t);
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping engine test: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::new("artifacts").expect("engine"))
+    }
+
+    #[test]
+    fn kernel_quantize_roundtrip_via_pjrt() {
+        let Some(mut eng) = engine() else { return };
+        let code = crate::codes::nf4();
+        let code_t = TensorData::F32(code.table_f32());
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32 * 0.02).collect();
+        let xt = TensorData::F32(x.clone());
+        let out = eng
+            .execute("kernel_quantize_b64", &[Arg::Data(&xt), Arg::Data(&code_t)])
+            .expect("execute");
+        let idx = out[0].as_i32().unwrap();
+        let scales = out[1].as_f32().unwrap();
+        // Compare against the Rust quantizer bit-for-bit.
+        let q = crate::quant::quantize(&x, 64, &code);
+        assert_eq!(scales.len(), q.scales.len());
+        for (a, b) in scales.iter().zip(&q.scales) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+        let mut mismatches = 0;
+        for i in 0..q.len {
+            if idx[i] != q.index(i) as i32 {
+                mismatches += 1;
+            }
+        }
+        // f32 boundary rounding can flip values that land exactly on a bin
+        // edge; allow a vanishing fraction.
+        assert!(
+            mismatches <= q.len / 10_000,
+            "kernel vs rust quantizer: {mismatches}/{} mismatched indices",
+            q.len
+        );
+    }
+
+    #[test]
+    fn kernel_dequantize_matches_rust() {
+        let Some(mut eng) = engine() else { return };
+        let code = crate::codes::nf4();
+        let code_t = TensorData::F32(code.table_f32());
+        let mut rng = crate::util::rng::Rng::new(6);
+        let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32).collect();
+        let q = crate::quant::quantize(&x, 64, &code);
+        let idx_t = TensorData::from_indices(&q);
+        let scale_t = TensorData::F32(q.scales.clone());
+        let out = eng
+            .execute(
+                "kernel_dequantize_b64",
+                &[Arg::Data(&idx_t), Arg::Data(&scale_t), Arg::Data(&code_t)],
+            )
+            .expect("execute");
+        let got = out[0].as_f32().unwrap();
+        let want = crate::quant::dequantize(&q, &code);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cached_buffers_reused() {
+        let Some(mut eng) = engine() else { return };
+        let code = crate::codes::nf4();
+        eng.upload("code/nf4", &TensorData::F32(code.table_f32()), &[16]).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32).collect();
+        let xt = TensorData::F32(x);
+        let a = eng
+            .execute("kernel_quantize_b64", &[Arg::Data(&xt), Arg::Cached("code/nf4")])
+            .expect("cached execute");
+        let b = eng
+            .execute("kernel_quantize_b64", &[Arg::Data(&xt), Arg::Cached("code/nf4")])
+            .expect("second execute");
+        assert_eq!(a[0], b[0]);
+        assert_eq!(eng.cached_keys(), 1);
+        eng.evict("code/");
+        assert_eq!(eng.cached_keys(), 0);
+    }
+
+    #[test]
+    fn arg_count_mismatch_is_error() {
+        let Some(mut eng) = engine() else { return };
+        let e = eng.execute("kernel_quantize_b64", &[]);
+        assert!(e.is_err());
+    }
+}

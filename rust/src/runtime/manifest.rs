@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime (which loads the
+//! HLO text files it describes).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Tensor dtype in the artifact interface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+/// One input or output tensor of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        Some(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+            shape: j.get("shape")?.as_arr()?.iter().filter_map(|v| v.as_usize()).collect(),
+        })
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub block_size: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model configuration mirrored from `python/compile/model.py`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    /// Ordered fp32 parameter list (vectors then W^T matrices).
+    pub param_order: Vec<(String, Vec<usize>)>,
+    /// Ordered quantizable-matrix list: (name, (out, in)).
+    pub matrix_order: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelMeta {
+    pub fn n_params(&self) -> usize {
+        self.param_order.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Index of a parameter in `param_order`.
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.param_order.iter().position(|(n, _)| n == name)
+    }
+
+    /// Number of non-matrix (vector) params.
+    pub fn n_vectors(&self) -> usize {
+        self.param_order.len() - self.matrix_order.len()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub digest: String,
+    pub dir: String,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path}: {e} — run `make artifacts` first"))?;
+        let j = Json::parse(&src).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &str) -> Result<Manifest, String> {
+        let digest =
+            j.get("digest").and_then(|d| d.as_str()).unwrap_or("unknown").to_string();
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let spec = ArtifactSpec {
+                name: a.get("name").and_then(|v| v.as_str()).ok_or("artifact.name")?.into(),
+                file: a.get("file").and_then(|v| v.as_str()).ok_or("artifact.file")?.into(),
+                kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("").into(),
+                model: a.get("model").and_then(|v| v.as_str()).map(String::from),
+                block_size: a.get("block_size").and_then(|v| v.as_usize()),
+                inputs: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("artifact.inputs")?
+                    .iter()
+                    .filter_map(TensorSpec::from_json)
+                    .collect(),
+                outputs: a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("artifact.outputs")?
+                    .iter()
+                    .filter_map(TensorSpec::from_json)
+                    .collect(),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        let mut configs = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("configs") {
+            for (name, c) in map {
+                let parse_order = |key: &str| -> Vec<(String, Vec<usize>)> {
+                    c.get(key)
+                        .and_then(|v| v.as_arr())
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|e| {
+                            Some((
+                                e.get("name")?.as_str()?.to_string(),
+                                e.get("shape")?
+                                    .as_arr()?
+                                    .iter()
+                                    .filter_map(|v| v.as_usize())
+                                    .collect(),
+                            ))
+                        })
+                        .collect()
+                };
+                let get = |key: &str| c.get(key).and_then(|v| v.as_usize()).unwrap_or(0);
+                configs.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        n_layer: get("n_layer"),
+                        d_model: get("d_model"),
+                        n_head: get("n_head"),
+                        d_ff: get("d_ff"),
+                        seq_len: get("seq_len"),
+                        batch: get("batch"),
+                        vocab: get("vocab"),
+                        param_order: parse_order("param_order"),
+                        matrix_order: parse_order("matrix_order"),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { digest, dir: dir.to_string(), artifacts, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelMeta, String> {
+        self.configs.get(name).ok_or_else(|| format!("model config {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<String, String> {
+        Ok(format!("{}/{}", self.dir, self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "digest": "abc123",
+      "artifacts": [
+        {"name": "score_fp_tiny", "file": "score_fp_tiny.hlo.txt",
+         "kind": "score_fp", "model": "tiny",
+         "inputs": [{"name": "ids", "dtype": "i32", "shape": [8, 128]},
+                    {"name": "embed", "dtype": "f32", "shape": [256, 128]}],
+         "outputs": [{"name": "out0", "dtype": "f32", "shape": [8, 128]}]},
+        {"name": "kernel_quantize_b64", "file": "k.hlo.txt", "kind": "kernel",
+         "block_size": 64, "inputs": [], "outputs": []}
+      ],
+      "configs": {
+        "tiny": {"n_layer": 2, "d_model": 128, "n_head": 4, "d_ff": 512,
+                 "seq_len": 128, "batch": 8, "vocab": 256,
+                 "param_order": [{"name": "embed", "shape": [256, 128]},
+                                  {"name": "l0.wq", "shape": [128, 128]}],
+                 "matrix_order": [{"name": "l0.wq", "shape": [128, 128]}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, "/tmp/a").unwrap();
+        assert_eq!(m.digest, "abc123");
+        let a = m.artifact("score_fp_tiny").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, DType::I32);
+        assert_eq!(a.inputs[0].numel(), 8 * 128);
+        assert_eq!(a.model.as_deref(), Some("tiny"));
+        let k = m.artifact("kernel_quantize_b64").unwrap();
+        assert_eq!(k.block_size, Some(64));
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.d_model, 128);
+        assert_eq!(cfg.n_params(), 256 * 128 + 128 * 128);
+        assert_eq!(cfg.n_vectors(), 1);
+        assert_eq!(cfg.param_index("l0.wq"), Some(1));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, "/tmp/a").unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.config("nope").is_err());
+        assert!(m.hlo_path("score_fp_tiny").unwrap().ends_with("score_fp_tiny.hlo.txt"));
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration-ish: parse the actual artifacts/manifest.json when the
+        // build has produced one.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.contains_key("score_fp_tiny"));
+            let cfg = m.config("tiny").unwrap();
+            assert_eq!(cfg.vocab, 256);
+            assert_eq!(cfg.matrix_order.len(), 6 * cfg.n_layer);
+        }
+    }
+}

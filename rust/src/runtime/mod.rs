@@ -1,0 +1,13 @@
+//! Runtime: PJRT client wrapper, artifact manifest, and tensor payloads.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`) and executes them on the CPU PJRT client — Python is
+//! never on this path.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor_data;
+
+pub use engine::{Arg, Engine};
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelMeta, TensorSpec};
+pub use tensor_data::TensorData;

@@ -1,0 +1,109 @@
+//! Host-side tensor payloads crossing the runtime boundary.
+
+use crate::runtime::manifest::{DType, TensorSpec};
+
+/// A host tensor: shape + typed data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            TensorData::F32(v) => v,
+            TensorData::I32(v) => v.into_iter().map(|x| x as f32).collect(),
+        }
+    }
+
+    /// Validate against a spec (dtype + element count).
+    pub fn check(&self, spec: &TensorSpec) -> Result<(), String> {
+        if self.dtype() != spec.dtype {
+            return Err(format!(
+                "input {:?}: dtype mismatch (got {:?}, want {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            ));
+        }
+        if self.len() != spec.numel() {
+            return Err(format!(
+                "input {:?}: size mismatch (got {}, want {} = {:?})",
+                spec.name,
+                self.len(),
+                spec.numel(),
+                spec.shape
+            ));
+        }
+        Ok(())
+    }
+
+    /// Quantized indices from the Rust quantizer (u8) as the i32 tensor the
+    /// artifacts expect.
+    pub fn from_indices(q: &crate::quant::Quantized) -> TensorData {
+        TensorData::I32((0..q.len).map(|i| q.index(i) as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dtype: DType, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: "t".into(), dtype, shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn check_validates() {
+        let t = TensorData::F32(vec![0.0; 6]);
+        assert!(t.check(&spec(DType::F32, &[2, 3])).is_ok());
+        assert!(t.check(&spec(DType::F32, &[7])).is_err());
+        assert!(t.check(&spec(DType::I32, &[6])).is_err());
+    }
+
+    #[test]
+    fn from_indices_unpacks() {
+        let code = crate::codes::nf4();
+        let x = vec![-1.0f32, 1.0, 0.0, 0.5];
+        let q = crate::quant::quantize(&x, 4, &code);
+        let t = TensorData::from_indices(&q);
+        let idx = t.as_i32().unwrap();
+        assert_eq!(idx.len(), 4);
+        assert_eq!(idx[0], 0);
+        assert_eq!(idx[1], 15);
+        assert_eq!(idx[2], 7);
+    }
+}

@@ -1,0 +1,167 @@
+//! Minimal host-side tensor type.
+//!
+//! The heavy math runs inside AOT-compiled XLA executables; the Rust side
+//! only needs a row-major f32 matrix for weight storage, quantization, and
+//! literal marshalling — so this is deliberately small instead of pulling a
+//! full ndarray dependency into the vendor set.
+
+use crate::util::rng::Rng;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Matrix with iid N(0, sd²) entries.
+    pub fn randn(rows: usize, cols: usize, sd: f32, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal() as f32 * sd;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column extracted into a new Vec (columns are strided in row-major).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.at(r, c));
+            }
+        }
+        t
+    }
+
+    /// Naive matmul — reference implementation for tests (the production
+    /// path runs inside XLA).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for kk in 0..self.cols {
+                let a = self.at(i, kk);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.at(kk, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m.set(1, 2, 7.5);
+        assert_eq!(m.at(1, 2), 7.5);
+        assert_eq!(m.data[1 * 4 + 2], 7.5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(3, 2), m.at(2, 3));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::randn(4, 4, 1.0, &mut rng);
+        let mut id = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            id.set(i, i, 1.0);
+        }
+        let prod = m.matmul(&id);
+        assert!(prod.max_abs_diff(&m) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn row_col_access() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.col(2), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.frobenius() - 5.0).abs() < 1e-6);
+        assert!((m.mean_abs() - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn bad_shape_panics() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Benchmark harness (the vendor set has no `criterion`).
+//!
+//! Provides warmup, calibrated iteration counts, and robust statistics
+//! (median, mean, p95, MAD) for `cargo bench` targets declared with
+//! `harness = false`. Output format is one line per benchmark:
+//!
+//! ```text
+//! quant/nf4/pack            med   1.234 µs   mean   1.301 µs   p95   1.410 µs   (1000 iters)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub mad_ns: f64,
+    /// Optional throughput denominator (elements/bytes per iteration).
+    pub elements_per_iter: Option<f64>,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements_per_iter.map(|e| e / (self.median_ns * 1e-9))
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1e6 {
+        format!("{:8.3} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.3} ms", ns / 1e6)
+    } else {
+        format!("{:8.3} s ", ns / 1e9)
+    }
+}
+
+fn fmt_rate(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:7.2} G/s", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:7.2} M/s", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:7.2} K/s", x / 1e3)
+    } else {
+        format!("{x:7.2} /s")
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} med {}   mean {}   p95 {}   ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )?;
+        if let Some(tp) = self.throughput_per_sec() {
+            write!(f, "   {}", fmt_rate(tp))?;
+        }
+        Ok(())
+    }
+}
+
+/// Benchmark runner. Collects all results so a bench binary can print a
+/// summary and optionally dump JSON for EXPERIMENTS.md.
+pub struct Bencher {
+    pub target_time: Duration,
+    pub warmup_time: Duration,
+    pub max_iters: usize,
+    pub results: Vec<Stats>,
+    /// Filter substring from AFQ_BENCH_FILTER / argv.
+    pub filter: Option<String>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
+        // honour `cargo bench -- <filter>`: first non-flag arg
+        let filter = filter.or_else(|| std::env::var("AFQ_BENCH_FILTER").ok());
+        let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
+        Self {
+            target_time: if quick { Duration::from_millis(120) } else { Duration::from_millis(700) },
+            warmup_time: if quick { Duration::from_millis(40) } else { Duration::from_millis(200) },
+            max_iters: 1_000_000,
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Run one benchmark: `f` is the timed closure; it should return a value
+    /// that is consumed by `std::hint::black_box` to prevent elision.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, f: F) -> Option<&Stats> {
+        self.bench_with_elements(name, None, f)
+    }
+
+    /// As `bench`, with a throughput denominator (elements per iteration).
+    pub fn bench_with_elements<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elements_per_iter: Option<f64>,
+        mut f: F,
+    ) -> Option<&Stats> {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return None;
+            }
+        }
+        // Warmup and per-iteration estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup_time {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+
+        // Sample in batches: 30 samples, each batch sized so one batch ≈ target/30.
+        let samples_wanted = 30usize;
+        let batch = ((self.target_time.as_nanos() as f64 / samples_wanted as f64 / est_ns)
+            .ceil() as usize)
+            .clamp(1, self.max_iters);
+        let mut samples = Vec::with_capacity(samples_wanted);
+        let mut total_iters = 0usize;
+        let bench_start = Instant::now();
+        while samples.len() < samples_wanted && bench_start.elapsed() < self.target_time * 3 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        let min = samples[0];
+        let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = dev[dev.len() / 2];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mean_ns: mean,
+            p95_ns: p95,
+            min_ns: min,
+            mad_ns: mad,
+            elements_per_iter,
+        };
+        println!("{stats}");
+        self.results.push(stats);
+        self.results.last()
+    }
+
+    /// Dump results as JSON (used to archive bench runs in results/).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut arr = Vec::new();
+        for s in &self.results {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(s.name.clone()))
+                .set("median_ns", Json::Num(s.median_ns))
+                .set("mean_ns", Json::Num(s.mean_ns))
+                .set("p95_ns", Json::Num(s.p95_ns))
+                .set("min_ns", Json::Num(s.min_ns))
+                .set("iters", Json::Num(s.iters as f64));
+            if let Some(tp) = s.throughput_per_sec() {
+                o.set("throughput_per_s", Json::Num(tp));
+            }
+            arr.push(o);
+        }
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            target_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+            filter: None,
+        };
+        b.bench("noop-ish", || std::hint::black_box(1u64 + 1));
+        let s = &b.results[0];
+        assert!(s.median_ns > 0.0);
+        assert!(s.median_ns < 1e6, "a trivial op should be <1ms: {}", s.median_ns);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher {
+            target_time: Duration::from_millis(10),
+            warmup_time: Duration::from_millis(2),
+            max_iters: 1000,
+            results: Vec::new(),
+            filter: Some("match-me".into()),
+        };
+        assert!(b.bench("other", || 1).is_none());
+        assert!(b.bench("match-me/x", || 1).is_some());
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "t".into(),
+            iters: 1,
+            median_ns: 1000.0, // 1 µs
+            mean_ns: 1000.0,
+            p95_ns: 1000.0,
+            min_ns: 1000.0,
+            mad_ns: 0.0,
+            elements_per_iter: Some(1000.0),
+        };
+        // 1000 elements per µs = 1e9/s
+        assert!((s.throughput_per_sec().unwrap() - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn json_dump_contains_names() {
+        let mut b = Bencher {
+            target_time: Duration::from_millis(5),
+            warmup_time: Duration::from_millis(1),
+            max_iters: 1000,
+            results: Vec::new(),
+            filter: None,
+        };
+        b.bench("alpha", || 0u8);
+        let j = b.to_json().to_string_compact();
+        assert!(j.contains("alpha"));
+        assert!(j.contains("median_ns"));
+    }
+}

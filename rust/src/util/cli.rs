@@ -1,0 +1,231 @@
+//! Tiny argument parser (the vendor set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Each binary declares its options up front so `--help` output
+//! is generated consistently.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--blocks 64,256,1024`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer {t:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+        }
+    }
+}
+
+/// Command definition: name, description, options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "\noptions:");
+            for o in &self.opts {
+                let d = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+                let kind = if o.is_flag { "" } else { " <value>" };
+                let _ = writeln!(s, "  --{}{}\t{}{}", o.name, kind, o.help, d);
+            }
+        }
+        s
+    }
+
+    /// Parse args for this command. Returns Err(usage) on `--help` or error.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    out.flags.insert(key, true);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                        }
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "testing")
+            .opt("size", "a size", Some("64"))
+            .opt("name", "a name", None)
+            .flag("verbose", "noisy")
+    }
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&v(&[])).unwrap();
+        assert_eq!(a.usize("size", 0), 64);
+        assert_eq!(a.get("name"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = cmd().parse(&v(&["--size", "128", "--name=x"])).unwrap();
+        assert_eq!(a.usize("size", 0), 128);
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = cmd().parse(&v(&["pos1", "--verbose", "pos2"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&v(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = cmd().parse(&v(&["--help"])).unwrap_err();
+        assert!(e.contains("--size"));
+        assert!(e.contains("testing"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let c = Command::new("t", "t").opt("blocks", "b", Some("64,256"));
+        let a = c.parse(&v(&[])).unwrap();
+        assert_eq!(a.usize_list("blocks", &[]), vec![64, 256]);
+        let a = c.parse(&v(&["--blocks", "32, 64,4096"])).unwrap();
+        assert_eq!(a.usize_list("blocks", &[]), vec![32, 64, 4096]);
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cmd().parse(&v(&["--verbose=1"])).is_err());
+    }
+}

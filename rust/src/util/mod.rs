@@ -1,0 +1,97 @@
+//! Infrastructure substrates: RNG, JSON, CLI parsing, benchmarking,
+//! property testing, and a thread pool.
+//!
+//! These exist because the offline vendor set lacks `rand`, `serde_json`,
+//! `clap`, `criterion`, `proptest`, and `tokio`; each submodule is a small,
+//! fully-tested replacement scoped to what AFQ needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+use std::time::Instant;
+
+/// Wall-clock timer with human-readable display.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Self { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!("[{}] {:.3}s", self.label, self.elapsed_s())
+    }
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: &str, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+/// Simple leveled logger controlled by AFQ_LOG (error|warn|info|debug).
+pub fn log_level() -> u8 {
+    match std::env::var("AFQ_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2, // info default
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 { eprintln!("[info] {}", format!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 3 { eprintln!("[debug] {}", format!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 { eprintln!("[warn] {}", format!($($arg)*)); }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::start("x");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(t.elapsed_s() >= 0.009);
+        assert!(t.report().contains("[x]"));
+    }
+
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join("afq_util_test");
+        let path = dir.join("a/b/c.txt");
+        let p = path.to_str().unwrap();
+        write_file(p, "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "hello");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

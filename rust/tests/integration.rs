@@ -1,0 +1,121 @@
+//! Cross-module integration tests: the full three-layer loop at small
+//! scale. These need `make artifacts`; each test skips (with a message)
+//! when artifacts are absent so `cargo test` stays green pre-build.
+
+use afq::codes::registry;
+use afq::coordinator::{train, EngineHandle, ModelService, QuantSpec, TrainConfig};
+use afq::model::{generate_corpus, BatchSampler, ClozeSuite, ParamSet};
+use afq::quant::{dequantize, quantize};
+
+fn engine() -> Option<(EngineHandle, afq::coordinator::EngineThread)> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    Some(EngineHandle::spawn("artifacts").expect("engine"))
+}
+
+/// Rust quantizer → PJRT dequant kernel → Rust dequant: all three
+/// implementations agree on the same buffers.
+#[test]
+fn quantizer_parity_rust_vs_pallas() {
+    let Some((eng, _th)) = engine() else { return };
+    let code = registry::build("af4-64").unwrap();
+    let mut rng = afq::util::rng::Rng::new(99);
+    let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32 * 0.03).collect();
+    let q = quantize(&x, 64, &code);
+    let host = dequantize(&q, &code);
+    let out = eng
+        .execute(
+            "kernel_dequantize_b64",
+            vec![
+                afq::coordinator::OwnedArg::Data(afq::runtime::TensorData::from_indices(&q)),
+                afq::coordinator::OwnedArg::Data(afq::runtime::TensorData::F32(q.scales.clone())),
+                afq::coordinator::OwnedArg::Data(afq::runtime::TensorData::F32(code.table_f32())),
+            ],
+        )
+        .expect("pjrt dequant");
+    let dev = out[0].as_f32().unwrap();
+    for (a, b) in host.iter().zip(dev) {
+        assert!((a - b).abs() <= 1e-6, "{a} vs {b}");
+    }
+}
+
+/// Mini end-to-end: train tiny for a few steps, quantize, score, and check
+/// the quantized model tracks the fp model.
+#[test]
+fn e2e_train_quantize_score() {
+    let Some((eng, _th)) = engine() else { return };
+    let meta = eng.manifest().config("tiny").unwrap().clone();
+    let data = generate_corpus("english", 120_000, 31).unwrap();
+    let mut sampler = BatchSampler::new(data.clone(), meta.seq_len, meta.batch, 1);
+    let cfg = TrainConfig { steps: 25, lr: 3e-3, warmup: 5, seed: 0, log_every: 25 };
+    let result = train(&eng, "tiny", ParamSet::init(&meta, 17), &mut sampler, &cfg).unwrap();
+    assert!(result.losses.last().unwrap().1 < result.losses.first().unwrap().1);
+
+    let val = generate_corpus("english", 60_000, 32).unwrap();
+    let vs = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
+    let batches = vs.eval_batches(2);
+    let fp = ModelService::prepare(&eng, "tiny", &result.params, QuantSpec::fp()).unwrap();
+    let nll_fp = fp.mean_nll(&batches).unwrap();
+    for family in ["nf4", "af4"] {
+        let svc = ModelService::prepare(
+            &eng,
+            "tiny",
+            &result.params,
+            QuantSpec { family: family.into(), block_size: 64 },
+        )
+        .unwrap();
+        let nll_q = svc.mean_nll(&batches).unwrap();
+        assert!(
+            (nll_q - nll_fp).abs() < 0.25,
+            "{family}@64 should track fp on a lightly-trained model: {nll_q} vs {nll_fp}"
+        );
+        svc.release();
+    }
+}
+
+/// Cloze pipeline over the scoring artifact: accuracy is computable and in
+/// range for every code family.
+#[test]
+fn cloze_pipeline_runs() {
+    let Some((eng, _th)) = engine() else { return };
+    let meta = eng.manifest().config("tiny").unwrap().clone();
+    let params = ParamSet::init(&meta, 3);
+    let data = generate_corpus("english", 80_000, 41).unwrap();
+    let suite = ClozeSuite::build(&data, meta.seq_len, 2 * meta.batch, 5);
+    for spec in [QuantSpec::fp(), QuantSpec { family: "nf4".into(), block_size: 256 }] {
+        let svc = ModelService::prepare(&eng, "tiny", &params, spec).unwrap();
+        let mut corrects = Vec::new();
+        for (ids, tgt, _) in suite.batches(meta.batch) {
+            let (_, c) = svc.score(ids, tgt).unwrap();
+            corrects.push(c);
+        }
+        let acc = suite.accuracy(meta.batch, &corrects);
+        assert!((0.0..=1.0).contains(&acc));
+        svc.release();
+    }
+}
+
+/// All score artifacts in the manifest are loadable and their input specs
+/// match what the weight marshaller produces.
+#[test]
+fn every_score_artifact_matches_marshaller() {
+    let Some((eng, _th)) = engine() else { return };
+    let manifest = eng.manifest().clone();
+    for (name, spec) in &manifest.artifacts {
+        if spec.kind != "score_quant" {
+            continue;
+        }
+        let model = spec.model.as_deref().unwrap();
+        let b = spec.block_size.unwrap();
+        let meta = manifest.config(model).unwrap();
+        let params = ParamSet::init(meta, 1);
+        let code = registry::build("nf4").unwrap();
+        let args = afq::model::quantized_weight_args(meta, &params, &code, b, "chk");
+        assert_eq!(args.len(), spec.inputs.len() - 2, "{name}");
+        for (arg, ispec) in args.iter().zip(spec.inputs.iter().skip(2)) {
+            arg.2.check(ispec).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}
