@@ -1,0 +1,36 @@
+# AFQ build entry points.
+#
+#   make artifacts   AOT-lower the JAX/Pallas entrypoints to HLO text
+#                    (needs the python/ toolchain; no-op while sources are
+#                    older than the manifest)
+#   make verify      tier-1 gate: release build + full test suite
+#   make bench       run every bench target (engine/serving skip gracefully
+#                    without artifacts); JSON lands in results/BENCH_*.json
+#   make bench-quick same, with short measurement windows
+
+PY_SOURCES := $(shell find python/compile -name '*.py' 2>/dev/null)
+
+.PHONY: verify bench bench-quick artifacts clean
+
+verify:
+	cargo build --release
+	cargo test -q
+
+artifacts: artifacts/manifest.json
+
+artifacts/manifest.json: $(PY_SOURCES)
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+bench:
+	cargo bench --bench dist_codes
+	cargo bench --bench quant
+	cargo bench --bench engine
+	cargo bench --bench serving
+
+bench-quick:
+	AFQ_BENCH_QUICK=1 cargo bench --bench dist_codes
+	AFQ_BENCH_QUICK=1 cargo bench --bench quant
+
+clean:
+	cargo clean
+	rm -rf results

@@ -35,7 +35,8 @@ fn main() {
     d64.g_cdf(0.0);
     b.bench("expected_l1/nf4/B=64", || expected_l1(&code, &d64));
 
-    let json = b.to_json().to_string_pretty();
-    let _ = afq::util::write_file("results/bench_dist_codes.json", &json);
-    println!("\nsaved results/bench_dist_codes.json");
+    match b.save("dist_codes") {
+        Ok(path) => println!("\nsaved {path}"),
+        Err(e) => eprintln!("\ncould not save bench results: {e}"),
+    }
 }

@@ -111,7 +111,8 @@ fn main() {
     });
     eng.evict("bench-up");
 
-    let json = b.to_json().to_string_pretty();
-    let _ = afq::util::write_file("results/bench_engine.json", &json);
-    println!("\nsaved results/bench_engine.json");
+    match b.save("engine") {
+        Ok(path) => println!("\nsaved {path}"),
+        Err(e) => eprintln!("\ncould not save bench results: {e}"),
+    }
 }

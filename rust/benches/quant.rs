@@ -65,7 +65,8 @@ fn main() {
         afq::quant::MatrixQuant::quantize(&m, 64, &nf4, afq::quant::QuantAxis::Col)
     });
 
-    let json = b.to_json().to_string_pretty();
-    let _ = afq::util::write_file("results/bench_quant.json", &json);
-    println!("\nsaved results/bench_quant.json");
+    match b.save("quant") {
+        Ok(path) => println!("\nsaved {path}"),
+        Err(e) => eprintln!("\ncould not save bench results: {e}"),
+    }
 }

@@ -6,6 +6,7 @@
 
 use afq::coordinator::{Batcher, EngineHandle, ModelService, QuantSpec};
 use afq::model::{generate_corpus, BatchSampler, ParamSet};
+use afq::util::json::Json;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -72,17 +73,19 @@ fn main() {
                 lat[lat.len() * 99 / 100],
                 eff * 100.0
             );
-            rows.push(format!(
-                "{{\"clients\":{clients},\"wait_ms\":{wait},\"rps\":{:.2},\"p50_us\":{},\"p99_us\":{},\"batch_eff\":{:.4}}}",
-                total as f64 / wall,
-                lat[lat.len() / 2].as_micros(),
-                lat[lat.len() * 99 / 100].as_micros(),
-                eff
-            ));
+            let mut row = Json::obj();
+            row.set("clients", Json::Num(clients as f64))
+                .set("wait_ms", Json::Num(wait as f64))
+                .set("rps", Json::Num(total as f64 / wall))
+                .set("p50_us", Json::Num(lat[lat.len() / 2].as_micros() as f64))
+                .set("p99_us", Json::Num(lat[lat.len() * 99 / 100].as_micros() as f64))
+                .set("batch_eff", Json::Num(eff));
+            rows.push(row);
             batcher.stop();
         }
     }
-    let json = format!("[\n{}\n]", rows.join(",\n"));
-    let _ = afq::util::write_file("results/bench_serving.json", &json);
-    println!("\nsaved results/bench_serving.json");
+    match afq::util::bench::save_bench_doc("serving", Json::Arr(rows)) {
+        Ok(path) => println!("\nsaved {path}"),
+        Err(e) => eprintln!("\ncould not save bench results: {e}"),
+    }
 }

@@ -1,0 +1,162 @@
+//! The block-scaled input distribution `F_X(·; B)` — the paper's theory.
+//!
+//! Absmax blockwise quantization rescales each block of B i.i.d. normal
+//! weights by the block's absolute maximum, so the values that actually hit
+//! the 4-bit code follow a **block-size-dependent** mixed distribution
+//! (Eq. 1–3 of the paper):
+//!
+//! ```text
+//! X_i = W_i / max_j |W_j|,   W_j ~ N(0, 1) i.i.d.,  j = 1 … B
+//! ```
+//!
+//! With probability 1/B the entry *is* the block argmax, contributing point
+//! masses ("atoms") of 1/(2B) at −1 and +1. Conditioned on not being the
+//! argmax, X_i has a continuous CDF `G_B` on (−1, 1) given by the
+//! order-statistic integral
+//!
+//! ```text
+//! G_B(x) = B ∫₀^∞ Þ(m)^{B−2} þ(m) · (Φ(x·m) − Φ(−m)) dm
+//! ```
+//!
+//! (Þ/þ are the half-normal CDF/PDF; the factor Þ^{B−2}·þ·B combines the
+//! density of the other entries' max with the not-argmax selection.) The
+//! full mixed CDF is `F(x) = 1/(2B) + (1 − 1/B)·G_B(x)` on [−1, 1).
+//!
+//! Three implementations of [`Dist1D`] live here:
+//!
+//! - [`BlockScaledDist`] — the exact mixture. `g_cdf_exact` evaluates the
+//!   integral by adaptive quadrature (the verification path);
+//!   `g_cdf`/`g_quantile` go through a lazily built monotone-PCHIP memo
+//!   table (the construction path — code solvers evaluate F and F⁻¹
+//!   millions of times).
+//! - [`ApproxBlockDist`] — Appendix A's closed form: freeze the absmax at
+//!   its median `m_B = Þ⁻¹(2^{−1/B})` and use a truncated normal. Cheap,
+//!   accurate to a few 1e-3 (paper Fig. 10); backs the registry's `af4x-*`
+//!   family.
+//! - [`ScaledNormal`] — N(0, σ²) without atoms; `nf4_implied()` picks the σ
+//!   under which NF4's quantile construction is self-consistent.
+//!
+//! ## Accuracy contract
+//!
+//! - `g_cdf_exact` agrees with the defining integral to ≲1e-10 (adaptive
+//!   Simpson at tolerance 1e-12 over the truncated m-range; the truncation
+//!   discards < 1e-16 of mass).
+//! - `g_cdf`/`g_quantile` (memo path) agree with `g_cdf_exact` to ≤ 1e-6
+//!   everywhere — in practice ≲ 5e-9 with the 1025-knot table (enforced by
+//!   `memo_matches_exact_quadrature`). The memo CDF and quantile are exact
+//!   mutual inverses to ~1e-15 because both are answered by the *same*
+//!   interpolant, which is what the code constructions rely on.
+//! - The memo path is the hot path: ≥ 10× (measured ~1000×) faster than
+//!   re-integrating; see `benches/dist_codes.rs`.
+
+pub mod approx;
+pub mod block;
+pub mod normal;
+
+pub use approx::ApproxBlockDist;
+pub use block::BlockScaledDist;
+pub use normal::ScaledNormal;
+
+/// A one-dimensional distribution, possibly with point masses (atoms).
+///
+/// The interface is CDF-centric because every consumer — the AF4 shooting
+/// solver, the balanced-code recursion, the expected-error functionals —
+/// works through `cdf`/`quantile`. `pdf` reports the density of the
+/// **continuous component only**; atom locations and masses are listed
+/// separately by `atoms()` so that Stieltjes integration (see
+/// `codes::error`) can place them exactly.
+pub trait Dist1D {
+    /// Density of the continuous component at `x` (0 outside the support).
+    fn pdf(&self, x: f64) -> f64;
+
+    /// Right-continuous CDF `P[X ≤ x]`, including any atom at `x`.
+    fn cdf(&self, x: f64) -> f64;
+
+    /// Generalized inverse CDF: the smallest `x` with `cdf(x) ≥ p`.
+    /// Probabilities inside an atom's band either map onto the atom's
+    /// location (the exact mixture) or clamp to the adjacent continuous
+    /// region (the closed-form approximation, matching
+    /// `python/compile/codes.py`).
+    fn quantile(&self, p: f64) -> f64;
+
+    /// Point masses as `(location, mass)` pairs, in increasing location
+    /// order. Empty for purely continuous distributions.
+    fn atoms(&self) -> Vec<(f64, f64)> {
+        Vec::new()
+    }
+
+    /// Support bounds `(lo, hi)`: the smallest interval with
+    /// `cdf(lo⁻) = 0` and `cdf(hi) = 1` (numerically, for unbounded
+    /// distributions, an interval carrying all but a negligible ≲1e-18 of
+    /// the mass).
+    fn support(&self) -> (f64, f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared contract checks, exercised through `&dyn Dist1D` exactly the
+    /// way `codes::{af4, balanced, error}` consume the trait.
+    fn check_contract(d: &dyn Dist1D) {
+        let (lo, hi) = d.support();
+        assert!(lo < hi);
+        assert!(d.cdf(hi) > 1.0 - 1e-9, "cdf at support hi");
+        assert!(d.cdf(lo - 1e-9) < 1e-6, "cdf below support lo");
+        // CDF is monotone over the support.
+        let mut prev = -1.0;
+        for i in 0..=200 {
+            let x = lo + (hi - lo) * i as f64 / 200.0;
+            let f = d.cdf(x);
+            assert!((0.0..=1.0 + 1e-12).contains(&f), "cdf range at {x}");
+            assert!(f >= prev - 1e-12, "cdf monotone at {x}");
+            prev = f;
+        }
+        // Quantile inverts the CDF on the continuous interior; a
+        // probability inside an atom's band may land anywhere consistent
+        // with the jump, so skip those.
+        let in_atom_band = |p: f64| {
+            d.atoms().iter().any(|&(loc, mass)| {
+                let top = d.cdf(loc);
+                p >= top - mass - 1e-9 && p <= top + 1e-9
+            })
+        };
+        for i in 1..20 {
+            let p = i as f64 / 20.0;
+            if in_atom_band(p) {
+                continue;
+            }
+            let x = d.quantile(p);
+            assert!((d.cdf(x) - p).abs() < 1e-6, "roundtrip p={p}");
+        }
+        // Atom masses are consistent with CDF jumps.
+        for (loc, mass) in d.atoms() {
+            let below = d.cdf(loc - 1e-9);
+            let at = d.cdf(loc);
+            assert!(
+                (at - below - mass).abs() < 1e-6,
+                "atom at {loc}: jump {} vs mass {mass}",
+                at - below
+            );
+        }
+    }
+
+    #[test]
+    fn all_implementations_satisfy_the_contract() {
+        check_contract(&ScaledNormal::nf4_implied());
+        check_contract(&ScaledNormal { sigma: 0.25 });
+        for b in [2usize, 16, 64, 1024] {
+            check_contract(&BlockScaledDist::new(b));
+            check_contract(&ApproxBlockDist::new(b));
+        }
+    }
+
+    #[test]
+    fn exact_and_approx_agree_on_atoms_and_support() {
+        let e = BlockScaledDist::new(32);
+        let a = ApproxBlockDist::new(32);
+        assert_eq!(e.atoms(), a.atoms());
+        assert_eq!(e.support(), a.support());
+        assert_eq!(e.atoms(), vec![(-1.0, 1.0 / 64.0), (1.0, 1.0 / 64.0)]);
+    }
+}

@@ -1,0 +1,100 @@
+//! [`ScaledNormal`] — a centered normal N(0, σ²) as a [`Dist1D`].
+//!
+//! This is the distribution NF4 implicitly assumes: a fixed normal whose
+//! quantiles, rescaled to [−1, 1], give the code values. The paper's point
+//! is that the *actual* input distribution is block-size dependent
+//! ([`super::BlockScaledDist`]); the scaled normal is kept as the baseline
+//! the `normal-l1` registry code is built on, and as the atom-free test
+//! case for the generic solvers.
+
+use crate::codes::nf4::nf4_delta;
+use crate::dist::Dist1D;
+use crate::numerics::special::{phi, phi_inv, phi_pdf};
+
+/// How far (in σ) the reported support extends. Φ(−9) ≈ 1.1e-19, far below
+/// every quadrature tolerance used against this distribution.
+const SUPPORT_SIGMAS: f64 = 9.0;
+
+/// Centered normal with standard deviation `sigma`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaledNormal {
+    pub sigma: f64,
+}
+
+impl ScaledNormal {
+    /// The σ that makes NF4's construction self-consistent: NF4 divides the
+    /// normal quantiles by Φ⁻¹(1 − δ) ≈ 1.8481 so the outermost value lands
+    /// on ±1, which is exactly the quantile map of N(0, σ²) with
+    /// σ = 1/Φ⁻¹(1 − δ). Under this distribution the NF4 values *are*
+    /// evenly spaced quantiles.
+    pub fn nf4_implied() -> ScaledNormal {
+        ScaledNormal { sigma: 1.0 / phi_inv(1.0 - nf4_delta()) }
+    }
+}
+
+impl Dist1D for ScaledNormal {
+    fn pdf(&self, x: f64) -> f64 {
+        phi_pdf(x / self.sigma) / self.sigma
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        phi(x / self.sigma)
+    }
+
+    fn quantile(&self, p: f64) -> f64 {
+        self.sigma * phi_inv(p)
+    }
+
+    fn support(&self) -> (f64, f64) {
+        (-SUPPORT_SIGMAS * self.sigma, SUPPORT_SIGMAS * self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::quad::adaptive_simpson;
+
+    #[test]
+    fn nf4_implied_normalizes_the_outer_quantile() {
+        // The defining property: the (1 − δ) quantile sits exactly at 1.
+        let d = ScaledNormal::nf4_implied();
+        let delta = nf4_delta();
+        assert!((d.quantile(1.0 - delta) - 1.0).abs() < 1e-12);
+        assert!((d.cdf(1.0) - (1.0 - delta)).abs() < 1e-12);
+        // σ ≈ 1/1.8481 ≈ 0.5411
+        assert!((d.sigma - 0.5411).abs() < 1e-3, "sigma {}", d.sigma);
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        let d = ScaledNormal { sigma: 0.5 };
+        for i in 1..100 {
+            let p = i as f64 / 100.0;
+            assert!((d.cdf(d.quantile(p)) - p).abs() < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn pdf_integrates_to_one_over_support() {
+        let d = ScaledNormal { sigma: 0.7 };
+        let (lo, hi) = d.support();
+        let mass = adaptive_simpson(&|x| d.pdf(x), lo, hi, 1e-12);
+        assert!((mass - 1.0).abs() < 1e-10, "mass {mass}");
+    }
+
+    #[test]
+    fn scales_linearly_in_sigma() {
+        let a = ScaledNormal { sigma: 0.3 };
+        let b = ScaledNormal { sigma: 0.6 };
+        for p in [0.05, 0.2, 0.5, 0.8, 0.95] {
+            assert!((2.0 * a.quantile(p) - b.quantile(p)).abs() < 1e-12);
+        }
+        assert!((a.cdf(0.3) - b.cdf(0.6)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn no_atoms() {
+        assert!(ScaledNormal::nf4_implied().atoms().is_empty());
+    }
+}

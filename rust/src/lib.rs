@@ -15,6 +15,24 @@
 //! - **L1 (`python/compile/kernels/`)** — Pallas blockwise quantize /
 //!   dequantize / fused dequant-matmul kernels (interpret mode on CPU).
 //!
+//! Inside L3, the modules stack bottom-up:
+//!
+//! - [`numerics`] — Φ/Φ⁻¹/Þ, quadrature, root finding, monotone PCHIP.
+//! - [`dist`] — the paper's theory: the block-size-dependent mixed
+//!   distribution `F_X(·; B)` of absmax-scaled weights (atoms of 1/(2B) at
+//!   ±1 plus a continuous part), with an exact quadrature path
+//!   (`g_cdf_exact`) and a memoized PCHIP fast path (`g_cdf`/`g_quantile`)
+//!   that the construction layer hammers. Accuracy contract: memo vs exact
+//!   ≤ 1e-6 (observed ≲5e-9); the memo CDF/quantile pair are mutual
+//!   inverses to ~1e-15.
+//! - [`codes`] — the paper's contribution: NF4, the AF4-B family built by
+//!   shooting on `dist`, balanced codes, expected-error functionals
+//!   (Stieltjes by parts, atom-exact).
+//! - [`quant`] / [`tensor`] — blockwise quantization of real buffers.
+//! - [`model`] / [`runtime`] / [`coordinator`] — the LM substrate, PJRT
+//!   engine, and serving/eval loop.
+//! - [`exp`] — the figure-by-figure experiment harness.
+//!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
 //! and [`quant`] (the mechanism). `examples/quickstart.rs` shows the
 //! end-to-end flow.

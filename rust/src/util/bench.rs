@@ -173,6 +173,12 @@ impl Bencher {
         self.results.last()
     }
 
+    /// Persist results as `results/BENCH_<name>.json` (see
+    /// [`save_bench_doc`]). Returns the written path.
+    pub fn save(&self, name: &str) -> std::io::Result<String> {
+        save_bench_doc(name, self.to_json())
+    }
+
     /// Dump results as JSON (used to archive bench runs in results/).
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
@@ -192,6 +198,22 @@ impl Bencher {
         }
         Json::Arr(arr)
     }
+}
+
+/// Write a bench payload as `results/BENCH_<name>.json` via
+/// [`crate::util::write_file`] (which creates `results/` as needed). The
+/// payload is one JSON object — `{"bench": <name>, "results": [...]}` — so
+/// downstream tooling can glob `BENCH_*.json` and key on the `bench`
+/// field. Single owner of that envelope: used by [`Bencher::save`] and by
+/// bench binaries that collect rows without a `Bencher` (the serving
+/// sweep). Returns the written path.
+pub fn save_bench_doc(name: &str, results: crate::util::json::Json) -> std::io::Result<String> {
+    use crate::util::json::Json;
+    let path = format!("results/BENCH_{name}.json");
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str(name.to_string())).set("results", results);
+    crate::util::write_file(&path, &doc.to_string_pretty())?;
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -243,6 +265,17 @@ mod tests {
         };
         // 1000 elements per µs = 1e9/s
         assert!((s.throughput_per_sec().unwrap() - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn save_bench_doc_writes_envelope() {
+        use crate::util::json::Json;
+        let path = save_bench_doc("unit_test_tmp", Json::Arr(vec![Json::Num(1.0)])).unwrap();
+        assert!(path.ends_with("BENCH_unit_test_tmp.json"));
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "unit_test_tmp");
+        assert_eq!(back.at(&["results"]).unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
