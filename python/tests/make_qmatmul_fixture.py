@@ -1,0 +1,68 @@
+"""Generate the golden-vector fixture for the Rust↔Pallas qmatmul parity
+test (`rust/tests/fused_parity.rs`).
+
+The fixture pins the L1 Pallas kernel's output on a small problem so the
+Rust fused `qgemm` can be parity-tested in CI *without* `make artifacts`
+(the artifact-gated integration test still covers the full engine path).
+Layout matches `compile.kernels.qmatmul`: `idx` is flat W^T row-major
+(out_features × K), `scales` are flat absmax blocks of `block_size` along
+that buffer, and `y = x @ W`.
+
+Regenerate (from `python/`):
+
+    python tests/make_qmatmul_fixture.py
+
+All floats in the JSON are exact float32 values (printed as shortest
+round-trip doubles), so both sides reconstruct identical bits.
+"""
+
+import json
+import pathlib
+import sys
+
+# Allow `python tests/make_qmatmul_fixture.py` from python/ without
+# PYTHONPATH gymnastics.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import codes
+from compile.kernels import ref
+from compile.kernels.qmatmul import qmatmul
+
+OUT = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures" / "qmatmul_parity.json"
+
+BATCH, K, N, BLOCK = 3, 32, 8, 8
+
+
+def main():
+    code = jnp.asarray(codes.nf4(), jnp.float32)
+    rng = np.random.default_rng(20230706)
+    x = jnp.asarray(rng.normal(size=(BATCH, K)) * 0.7, jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(N * K,)) * 0.02, jnp.float32)
+
+    idx, scales = ref.quantize_blockwise(wt, code, BLOCK)
+    y = qmatmul(x, idx, scales, code, BLOCK, N)
+
+    doc = {
+        "description": "golden vectors: Pallas qmatmul (interpret mode) on NF4 "
+        "quantized W^T; regenerate with python/tests/make_qmatmul_fixture.py",
+        "batch": BATCH,
+        "k": K,
+        "n": N,
+        "block_size": BLOCK,
+        "code_name": "nf4",
+        "code": [float(v) for v in np.asarray(code, np.float32)],
+        "x": [float(v) for v in np.asarray(x, np.float32).reshape(-1)],
+        "idx": [int(v) for v in np.asarray(idx).reshape(-1)],
+        "scales": [float(v) for v in np.asarray(scales, np.float32).reshape(-1)],
+        "y": [float(v) for v in np.asarray(y, np.float32).reshape(-1)],
+    }
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {OUT} ({len(doc['idx'])} indices, {len(doc['scales'])} scales)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,18 @@
 //! Bench: L3 quantizer hot path — blockwise quantize/dequantize throughput
-//! across block sizes, the encode kernel variants, and double quantization.
+//! across block sizes, the encode kernel variants, double quantization, and
+//! the fused serving path: qgemm vs dequantize-then-matmul, plus
+//! serial-vs-parallel rows for both the quantizer and qgemm.
 //! (harness = false; uses afq::util::bench.)
 //!
 //! Run: `cargo bench --bench quant [-- <filter>]`
 //! Quick mode: AFQ_BENCH_QUICK=1
 
 use afq::codes::registry;
-use afq::quant::{dequantize, quantize, Quantized};
+use afq::quant::{dequantize, quantize, quantize_par, MatrixQuant, QuantAxis, Quantized};
+use afq::tensor::Matrix;
 use afq::util::bench::Bencher;
 use afq::util::rng::Rng;
+use afq::util::threadpool::default_workers;
 
 fn main() {
     let mut b = Bencher::new();
@@ -60,9 +64,30 @@ fn main() {
 
     println!("-- matrix quant (512x512, col axis) --");
     let mut rng2 = Rng::new(1);
-    let m = afq::tensor::Matrix::randn(512, 512, 0.02, &mut rng2);
+    let m = Matrix::randn(512, 512, 0.02, &mut rng2);
     b.bench_with_elements("matrix/col-axis/B=64", Some((512 * 512) as f64), || {
-        afq::quant::MatrixQuant::quantize(&m, 64, &nf4, afq::quant::QuantAxis::Col)
+        MatrixQuant::quantize(&m, 64, &nf4, QuantAxis::Col)
+    });
+
+    println!("-- fused qgemm vs dequantize+matmul (x 8x512 · W 512x512) --");
+    let wq = MatrixQuant::quantize(&m, 64, &nf4, QuantAxis::Col);
+    let mut rng3 = Rng::new(2);
+    let x = Matrix::randn(8, 512, 1.0, &mut rng3);
+    let flops = (8 * 512 * 512) as f64;
+    b.bench_with_elements("qgemm/fused/B=64", Some(flops), || wq.qgemm(&x, &nf4));
+    b.bench_with_elements("qgemm/dequant+matmul/B=64", Some(flops), || {
+        x.matmul(&wq.dequantize(&nf4))
+    });
+
+    // Serial baselines for these: quantize/nf4/B=64 and qgemm/fused/B=64
+    // above (same workloads — not re-measured under a second name).
+    let workers = default_workers();
+    println!("-- parallel variants ({workers} workers) --");
+    b.bench_with_elements(&format!("quantize/par/w={workers}/B=64"), Some(n as f64), || {
+        quantize_par(&w, 64, &nf4, workers)
+    });
+    b.bench_with_elements(&format!("qgemm/par/w={workers}/B=64"), Some(flops), || {
+        wq.qgemm_par(&x, &nf4, workers)
     });
 
     match b.save("quant") {

@@ -184,8 +184,7 @@ mod tests {
 
     #[test]
     fn batched_results_match_direct_scoring() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+        if !crate::util::artifacts_available("artifacts") {
             return;
         }
         let (eng, _th) = EngineHandle::spawn("artifacts").expect("spawn");
@@ -238,7 +237,7 @@ mod tests {
 
     #[test]
     fn wrong_length_request_rejected() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::util::artifacts_available("artifacts") {
             return;
         }
         let (eng, _th) = EngineHandle::spawn("artifacts").expect("spawn");

@@ -185,8 +185,7 @@ mod tests {
     use super::*;
 
     fn with_engine<F: FnOnce(&EngineHandle)>(f: F) {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+        if !crate::util::artifacts_available("artifacts") {
             return;
         }
         let (handle, mut thread) = EngineHandle::spawn("artifacts").expect("spawn");

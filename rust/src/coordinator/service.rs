@@ -4,6 +4,12 @@
 //! uploads all weights to the device **once** (device-resident across
 //! calls), and pre-compiles the scoring executable. Scoring then only
 //! moves (ids, targets) per call — the serving hot path.
+//!
+//! The weight path is the parallel quantizer (`quantize_par`, bit-identical
+//! to serial; see [`crate::quant::fused`]), and with `AFQ_HOST_PARITY=1`
+//! every matrix is cross-checked on the host — fused `qgemm` vs
+//! dequantize-then-matmul — before upload (see
+//! [`crate::model::quantized_weight_args`]).
 
 use crate::codes::registry;
 use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
@@ -53,7 +59,9 @@ pub struct ModelService {
 }
 
 impl ModelService {
-    /// Quantize + upload weights and compile the scoring executable.
+    /// Quantize (parallel, bit-identical to serial) + upload weights and
+    /// compile the scoring executable. `AFQ_HOST_PARITY=1` adds a fused
+    /// qgemm vs dequant+matmul cross-check per matrix before upload.
     pub fn prepare(
         eng: &EngineHandle,
         model: &str,
@@ -140,8 +148,7 @@ mod tests {
     use crate::model::{corpus, BatchSampler, ParamSet};
 
     fn setup() -> Option<(EngineHandle, crate::coordinator::engine_thread::EngineThread)> {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+        if !crate::util::artifacts_available("artifacts") {
             return None;
         }
         Some(EngineHandle::spawn("artifacts").expect("spawn"))

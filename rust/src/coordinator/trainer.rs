@@ -153,8 +153,7 @@ mod tests {
 
     #[test]
     fn short_training_reduces_loss() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+        if !crate::util::artifacts_available("artifacts") {
             return;
         }
         let (eng, _th) =

@@ -321,8 +321,7 @@ mod tests {
     use super::*;
 
     fn engine() -> Option<(EngineHandle, crate::coordinator::EngineThread)> {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+        if !crate::util::artifacts_available("artifacts") {
             return None;
         }
         Some(EngineHandle::spawn("artifacts").expect("spawn"))

@@ -28,9 +28,17 @@
 //! - [`codes`] — the paper's contribution: NF4, the AF4-B family built by
 //!   shooting on `dist`, balanced codes, expected-error functionals
 //!   (Stieltjes by parts, atom-exact).
-//! - [`quant`] / [`tensor`] — blockwise quantization of real buffers.
+//! - [`quant`] / [`tensor`] — blockwise quantization of real buffers, and
+//!   the fused serving path ([`quant::fused`]): `qgemm` multiplies through
+//!   packed nibbles + per-block scales directly (no dequantized
+//!   intermediate), mirroring the L1 Pallas `qmatmul` kernel; the
+//!   `quantize_par`/`qgemm_par` variants are **bit-identical** to their
+//!   serial counterparts for any worker count, and golden-vector parity
+//!   with the Pallas kernel is pinned by `rust/tests/fused_parity.rs`.
 //! - [`model`] / [`runtime`] / [`coordinator`] — the LM substrate, PJRT
-//!   engine, and serving/eval loop.
+//!   engine, and serving/eval loop; weight preparation quantizes in
+//!   parallel and can cross-check fused-vs-reference on the host
+//!   (`AFQ_HOST_PARITY=1`).
 //! - [`exp`] — the figure-by-figure experiment harness.
 //!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),

@@ -42,6 +42,13 @@ pub fn bytes_per_word(data: &[u8]) -> f64 {
 /// The arguments a `score_q<B>_<model>` artifact expects after
 /// (ids, targets): code table, vector params, then per-matrix (idx, scales).
 /// Returns (cache_key, shape, tensor) triples for device-resident upload.
+///
+/// With `AFQ_HOST_PARITY=1`, every quantized matrix is additionally run
+/// through the fused host kernel ([`crate::quant::fused::qgemm`]) against
+/// the dequantize-then-matmul reference on a probe batch before upload —
+/// a prepare-time guardrail that catches packing/scale-layout corruption
+/// on the host before bad weights ever reach the device. Panics on
+/// mismatch (corrupt weights must never serve).
 pub fn quantized_weight_args(
     meta: &ModelMeta,
     params: &ParamSet,
@@ -49,6 +56,8 @@ pub fn quantized_weight_args(
     block_size: usize,
     key_prefix: &str,
 ) -> Vec<(String, Vec<usize>, TensorData)> {
+    let host_parity =
+        std::env::var("AFQ_HOST_PARITY").map(|v| v == "1").unwrap_or(false);
     let mut out = Vec::new();
     out.push((
         format!("{key_prefix}/code"),
@@ -58,7 +67,11 @@ pub fn quantized_weight_args(
     for (name, shape, t) in params.vector_tensors(meta) {
         out.push((format!("{key_prefix}/{name}"), shape, t));
     }
-    for (name, q) in params.quantize_matrices(meta, code, block_size) {
+    let quantized = params.quantize_matrices(meta, code, block_size);
+    for ((name, q), (_, shape)) in quantized.into_iter().zip(&meta.matrix_order) {
+        if host_parity {
+            host_parity_check(&name, &q, shape, code);
+        }
         let n = q.len;
         out.push((
             format!("{key_prefix}/{name}.idx"),
@@ -72,6 +85,41 @@ pub fn quantized_weight_args(
         ));
     }
     out
+}
+
+/// Fused-vs-reference check of one quantized weight matrix (see
+/// [`quantized_weight_args`]): views the flat buffer as a row-major
+/// matrix, multiplies a deterministic probe batch through both the fused
+/// nibble-domain path and dequantize-then-matmul, and panics when they
+/// disagree beyond f32 accumulation-order noise.
+fn host_parity_check(name: &str, q: &crate::quant::Quantized, shape: &[usize], code: &Code) {
+    use crate::quant::{MatrixQuant, QuantAxis};
+    use crate::tensor::Matrix;
+    let rows = shape[0];
+    let cols: usize = shape[1..].iter().product();
+    if rows * cols != q.len {
+        panic!("host parity: {name} shape {shape:?} does not match {} quantized elements", q.len);
+    }
+    let view = MatrixQuant {
+        rows,
+        cols,
+        axis: QuantAxis::Row,
+        q: q.clone(),
+        dq: None,
+        code_name: code.name.clone(),
+        per_line: None,
+    };
+    let mut rng = crate::util::rng::Rng::new(0xA11CE);
+    let probe = Matrix::randn(2, rows, 1.0, &mut rng);
+    let fused = view.qgemm(&probe, code);
+    let reference = probe.matmul(&view.dequantize(code));
+    let denom = reference.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6);
+    let diff = fused.max_abs_diff(&reference);
+    assert!(
+        diff <= 1e-4 * denom,
+        "host qgemm parity failure in {name}: max abs diff {diff} (scale {denom}) — \
+         packed indices or scale layout are corrupt; refusing to upload"
+    );
 }
 
 /// The arguments a `score_fp_<model>` artifact expects after (ids, targets):
@@ -107,8 +155,28 @@ mod tests {
     }
 
     #[test]
+    fn host_parity_check_accepts_consistent_weights() {
+        let code = crate::codes::nf4();
+        let mut rng = crate::util::rng::Rng::new(4);
+        let data: Vec<f32> = (0..24 * 16).map(|_| rng.normal() as f32 * 0.02).collect();
+        let q = crate::quant::quantize(&data, 64, &code);
+        host_parity_check("w.test", &q, &[24, 16], &code); // must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn host_parity_check_rejects_shape_mismatch() {
+        let code = crate::codes::nf4();
+        let q = crate::quant::quantize(&vec![0.5f32; 64], 64, &code);
+        host_parity_check("w.bad", &q, &[9, 9], &code);
+    }
+
+    #[test]
     fn quantized_args_match_manifest_order() {
-        let Ok(m) = Manifest::load("artifacts") else { return };
+        if !crate::util::artifacts_available("artifacts") {
+            return;
+        }
+        let m = Manifest::load("artifacts").expect("manifest parses");
         let meta = m.config("tiny").unwrap();
         let params = ParamSet::init(meta, 0);
         let code = crate::codes::nf4();
@@ -129,7 +197,10 @@ mod tests {
 
     #[test]
     fn fp_args_match_manifest_order() {
-        let Ok(m) = Manifest::load("artifacts") else { return };
+        if !crate::util::artifacts_available("artifacts") {
+            return;
+        }
+        let m = Manifest::load("artifacts").expect("manifest parses");
         let meta = m.config("tiny").unwrap();
         let params = ParamSet::init(meta, 0);
         let args = fp_weight_args(meta, &params, "w");

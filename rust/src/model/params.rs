@@ -2,7 +2,7 @@
 //! checkpoint I/O (own binary format), and quantized views.
 
 use crate::codes::Code;
-use crate::quant::{quantize, Quantized};
+use crate::quant::{quantize, quantize_par, Quantized};
 use crate::runtime::{ModelMeta, TensorData};
 use crate::util::rng::Rng;
 
@@ -124,17 +124,23 @@ impl ParamSet {
 
     /// Quantize every W^T matrix with `code` at `block_size` (flat blocking,
     /// matching the L2 layout). Returns (name, Quantized) in matrix order.
+    ///
+    /// Blocks are sharded over [`crate::util::threadpool::scope_map`]
+    /// (`quantize_par`), which is bit-identical to the serial quantizer —
+    /// this is the `ModelService::prepare` weight path, where serial
+    /// scalar quantization used to dominate service start-up.
     pub fn quantize_matrices(
         &self,
         meta: &ModelMeta,
         code: &Code,
         block_size: usize,
     ) -> Vec<(String, Quantized)> {
+        let workers = crate::util::threadpool::default_workers();
         meta.matrix_order
             .iter()
             .map(|(name, _)| {
                 let (_, _, data) = self.get(name).expect("matrix in param set");
-                (name.clone(), quantize(data, block_size, code))
+                (name.clone(), quantize_par(data, block_size, code, workers))
             })
             .collect()
     }

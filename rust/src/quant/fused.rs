@@ -1,0 +1,430 @@
+//! Fused nibble-domain GEMM and parallel quantization — the serving hot
+//! path for blockwise-absmax 4-bit weights.
+//!
+//! [`qgemm`] computes `y = x · W` reading the packed nibbles and per-block
+//! scales of a [`MatrixQuant`] *directly*: per quantization block it
+//! refreshes a 16-entry `table[idx] * scale` LUT, decodes each weight once
+//! through the LUT, and accumulates in f32 — no intermediate dequantized
+//! matrix is ever materialized. This is the host-side mirror of the L1
+//! Pallas kernel `python/compile/kernels/qmatmul.py` (which dequantizes a
+//! `(K, n_tile)` tile in-register per grid step); the two are held together
+//! by the golden-vector parity test in `rust/tests/fused_parity.rs`.
+//!
+//! Both [`QuantAxis`] layouts are supported, including the `per_line` scale
+//! indexing MatrixQuant falls back to when the blocked axis is not
+//! commensurate with the block size, and double-quantized scales (the
+//! reconstructed scales in `q.scales` are read as-is, so DQ round-trips
+//! through the same code path).
+//!
+//! ## Determinism contract
+//!
+//! [`qgemm_par`] shards **output columns** over
+//! [`crate::util::threadpool::scope_map`]; every output element's
+//! accumulation order (ascending along the reduced axis, segment by
+//! segment) is independent of the sharding, so the parallel result is
+//! **bit-identical** to serial [`qgemm`] for any worker count.
+//! [`quantize_par`] shards whole blocks and delegates each shard to the
+//! serial [`quantize`] kernel, so its packed indices and scales are
+//! likewise bit-identical to a serial [`quantize`] call.
+
+use crate::codes::Code;
+use crate::quant::{quantize, MatrixQuant, QuantAxis, Quantized};
+use crate::tensor::Matrix;
+use crate::util::threadpool::scope_map;
+
+/// Fused blockwise matmul `y = x · W` over a quantized `W` (no dequantized
+/// intermediate). `x` is `(m, W.rows)`; the result is `(m, W.cols)`.
+pub fn qgemm(x: &Matrix, w: &MatrixQuant, code: &Code) -> Matrix {
+    let out = qgemm_range(x, w, code, 0, w.cols);
+    Matrix::from_vec(x.rows, w.cols, out)
+}
+
+/// Parallel [`qgemm`]: output columns sharded over `workers` scoped
+/// threads. Bit-identical to serial `qgemm` for any `workers` (see the
+/// module-level determinism contract).
+pub fn qgemm_par(x: &Matrix, w: &MatrixQuant, code: &Code, workers: usize) -> Matrix {
+    let n = w.cols;
+    let m = x.rows;
+    let workers = workers.max(1);
+    // Several chunks per worker so scope_map's atomic-counter stealing can
+    // balance uneven column costs; chunk boundaries don't affect bits.
+    let cols_per_chunk = n.div_ceil(workers * 4).max(1);
+    let n_chunks = n.div_ceil(cols_per_chunk);
+    if n_chunks <= 1 {
+        return qgemm(x, w, code);
+    }
+    let parts = scope_map(workers, n_chunks, |ci| {
+        let c0 = ci * cols_per_chunk;
+        let c1 = (c0 + cols_per_chunk).min(n);
+        (c0, c1, qgemm_range(x, w, code, c0, c1))
+    });
+    let mut out = vec![0.0f32; m * n];
+    for (c0, c1, part) in &parts {
+        let width = c1 - c0;
+        for i in 0..m {
+            out[i * n + c0..i * n + c1].copy_from_slice(&part[i * width..(i + 1) * width]);
+        }
+    }
+    Matrix::from_vec(m, n, out)
+}
+
+/// Parallel blockwise quantization: shards contiguous runs of blocks over
+/// `workers` scoped threads, each delegating to the serial [`quantize`]
+/// kernel, then concatenates. Bit-identical to `quantize(x, block_size,
+/// code)` for any worker count.
+pub fn quantize_par(x: &[f32], block_size: usize, code: &Code, workers: usize) -> Quantized {
+    assert!(block_size >= 1);
+    let n_blocks = x.len().div_ceil(block_size);
+    let workers = workers.max(1);
+    // Finer than one-chunk-per-worker for the same stealing reason as
+    // qgemm_par; the serial-delegation merge keeps bytes identical.
+    let mut blocks_per_chunk = n_blocks.div_ceil(workers * 4).max(1);
+    if block_size % 2 == 1 {
+        // Keep every chunk's element start even so each shard's packed
+        // bytes concatenate on a byte boundary (two nibbles per byte).
+        blocks_per_chunk += blocks_per_chunk % 2;
+    }
+    let n_chunks = n_blocks.div_ceil(blocks_per_chunk);
+    if n_chunks <= 1 {
+        return quantize(x, block_size, code);
+    }
+    let parts = scope_map(workers, n_chunks, |ci| {
+        let lo = ci * blocks_per_chunk * block_size;
+        let hi = (lo + blocks_per_chunk * block_size).min(x.len());
+        quantize(&x[lo..hi], block_size, code)
+    });
+    let mut packed = Vec::with_capacity(x.len().div_ceil(2));
+    let mut scales = Vec::with_capacity(n_blocks);
+    let mut consumed = 0usize;
+    for part in &parts {
+        // Chunk alignment guarantees every shard after the first starts on
+        // an even element index, so packed bytes concatenate exactly.
+        debug_assert_eq!(consumed % 2, 0, "shard start must fall on a byte boundary");
+        packed.extend_from_slice(&part.packed);
+        scales.extend_from_slice(&part.scales);
+        consumed += part.len;
+    }
+    Quantized { len: x.len(), block_size, packed, scales }
+}
+
+/// Compute output columns `[c0, c1)` of `y = x · W` as an `(x.rows,
+/// c1-c0)` row-major buffer. Shared by the serial and parallel entry
+/// points so both run the exact same per-element code path.
+fn qgemm_range(x: &Matrix, w: &MatrixQuant, code: &Code, c0: usize, c1: usize) -> Vec<f32> {
+    assert_eq!(
+        x.cols, w.rows,
+        "qgemm shape mismatch: x is {}x{}, W is {}x{}",
+        x.rows, x.cols, w.rows, w.cols
+    );
+    assert!(c0 <= c1 && c1 <= w.cols);
+    assert!(code.k() <= 16, "packed nibbles hold at most 16 code values");
+    let mut table = [0.0f32; 16];
+    for (t, &v) in table.iter_mut().zip(code.values.iter()) {
+        *t = v as f32;
+    }
+    let mut out = vec![0.0f32; x.rows * (c1 - c0)];
+    match w.axis {
+        QuantAxis::Col => qgemm_range_col(x, w, &table, c0, c1, &mut out),
+        QuantAxis::Row => qgemm_range_row(x, w, &table, c0, c1, &mut out),
+    }
+    out
+}
+
+/// End (exclusive, in within-line coordinates) of the quantization-block
+/// segment containing offset `off` of the line starting at `line_base`.
+#[inline]
+fn seg_end(w: &MatrixQuant, line_base: usize, off: usize, line_len: usize) -> usize {
+    let bs = w.q.block_size;
+    let next = match w.per_line {
+        // Flat blocking: boundaries sit at flat multiples of the block
+        // size (a block may span several whole lines when bs > line_len).
+        None => ((line_base + off) / bs + 1) * bs - line_base,
+        // Per-line blocking: boundaries restart at each line.
+        Some(_) => (off / bs + 1) * bs,
+    };
+    next.min(line_len)
+}
+
+/// Scale of element `off` of line `li` (line starting at `line_base`),
+/// honouring the flat vs per-line indexing rule.
+#[inline]
+fn scale_at(w: &MatrixQuant, line_base: usize, li: usize, off: usize) -> f32 {
+    match w.per_line {
+        None => w.q.scales[(line_base + off) / w.q.block_size],
+        Some((_, bpl)) => w.q.scales[li * bpl + off / w.q.block_size],
+    }
+}
+
+/// Col-axis layout: the packed buffer stores W^T row-major (`w.cols` lines
+/// of length `w.rows`), blocks running along the reduced axis — the Pallas
+/// qmatmul layout. One stored line per output column.
+fn qgemm_range_col(
+    x: &Matrix,
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    c0: usize,
+    c1: usize,
+    out: &mut [f32],
+) {
+    let k = w.rows;
+    let m = x.rows;
+    let width = c1 - c0;
+    // Per-segment decode scratch (≤ one block, never a full matrix): each
+    // weight is unpacked + LUT-decoded exactly once, then reused across
+    // all m batch rows. Same products in the same order as decoding
+    // inline, so bitwise output is unchanged.
+    let mut vals = vec![0.0f32; k.min(w.q.block_size).max(1)];
+    for c in c0..c1 {
+        let base = c * k;
+        let mut off = 0usize;
+        while off < k {
+            let end = seg_end(w, base, off, k);
+            let s = scale_at(w, base, c, off);
+            let mut lut = [0.0f32; 16];
+            for (l, &t) in lut.iter_mut().zip(table.iter()) {
+                *l = t * s;
+            }
+            let seg = &mut vals[..end - off];
+            for (j, v) in seg.iter_mut().enumerate() {
+                *v = lut[w.q.index(base + off + j) as usize];
+            }
+            for i in 0..m {
+                let xrow = &x.data[i * k + off..i * k + end];
+                let mut acc = 0.0f32;
+                for (xv, v) in xrow.iter().zip(seg.iter()) {
+                    acc += xv * v;
+                }
+                out[i * width + (c - c0)] += acc;
+            }
+            off = end;
+        }
+    }
+}
+
+/// Row-axis layout: the packed buffer stores W row-major (`w.rows` lines
+/// of length `w.cols`), blocks running along the output axis. Each stored
+/// line contributes rank-1 updates `x[:, r] ⊗ W[r, c0..c1]`.
+fn qgemm_range_row(
+    x: &Matrix,
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    c0: usize,
+    c1: usize,
+    out: &mut [f32],
+) {
+    let k = w.rows;
+    let n = w.cols;
+    let m = x.rows;
+    let width = c1 - c0;
+    for r in 0..k {
+        let base = r * n;
+        let mut off = c0;
+        while off < c1 {
+            let end = seg_end(w, base, off, n).min(c1);
+            let s = scale_at(w, base, r, off);
+            let mut lut = [0.0f32; 16];
+            for (l, &t) in lut.iter_mut().zip(table.iter()) {
+                *l = t * s;
+            }
+            // No zero-weight skip here: both layouts must propagate
+            // whatever the activations carry (incl. non-finite values)
+            // exactly like the dequantize-then-matmul reference.
+            for c in off..end {
+                let v = lut[w.q.index(base + c) as usize];
+                for i in 0..m {
+                    out[i * width + (c - c0)] += x.data[i * k + r] * v;
+                }
+            }
+            off = end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::nf4;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn randn(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::randn(rows, cols, 1.0, &mut rng)
+    }
+
+    /// Reference: materialize W then naive matmul.
+    fn reference(x: &Matrix, w: &MatrixQuant, code: &Code) -> Matrix {
+        x.matmul(&w.dequantize(code))
+    }
+
+    fn assert_close(got: &Matrix, want: &Matrix, tag: &str) -> Result<(), String> {
+        if (got.rows, got.cols) != (want.rows, want.cols) {
+            return Err(format!("{tag}: shape {:?} vs {:?}", (got.rows, got.cols), (want.rows, want.cols)));
+        }
+        // Normal inputs give |y| = O(√k); flooring the denominator at 1
+        // keeps the bound a *relative* 1e-4 in the typical case without
+        // letting a cancellation-to-zero output blow up the ratio.
+        let denom = want.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1.0);
+        let diff = got.max_abs_diff(want);
+        if diff > 1e-4 * denom {
+            return Err(format!("{tag}: max abs diff {diff} > 1e-4 * {denom}"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn qgemm_known_values() {
+        // W with one block per column, values exactly on code points so
+        // quantization is lossless and the matmul is exact.
+        let code = nf4();
+        let w_mat = Matrix::from_vec(2, 2, vec![1.0, -1.0, 0.0, 1.0]);
+        let wq = MatrixQuant::quantize(&w_mat, 2, &code, QuantAxis::Col);
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = qgemm(&x, &wq, &code);
+        // y = x @ W = [[1, 1], [3, 1]]
+        assert_eq!(y.data, vec![1.0, 1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_qgemm_matches_dequant_matmul() {
+        let code = nf4();
+        prop::check(96, |g| {
+            let m = g.usize_in(1, 5);
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 40);
+            let bs = *g.pick(&[3usize, 8, 64, 1024]);
+            let axis = if g.bool(0.5) { QuantAxis::Row } else { QuantAxis::Col };
+            let dq = g.bool(0.3);
+            let w_data = g.vec_normal_f32(k * n);
+            let w_mat = Matrix::from_vec(k, n, w_data);
+            let mut wq = MatrixQuant::quantize(&w_mat, bs, &code, axis);
+            if dq {
+                wq = wq.with_double_quant(16);
+            }
+            let x = Matrix::from_vec(m, k, g.vec_normal_f32(m * k));
+            let got = qgemm(&x, &wq, &code);
+            let want = reference(&x, &wq, &code);
+            assert_close(
+                &got,
+                &want,
+                &format!("m={m} k={k} n={n} bs={bs} axis={axis:?} dq={dq} per_line={:?}", wq.per_line),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_qgemm_par_bit_identical_to_serial() {
+        let code = nf4();
+        prop::check(48, |g| {
+            let m = g.usize_in(1, 4);
+            let k = g.usize_in(1, 30);
+            let n = g.usize_in(1, 30);
+            let bs = *g.pick(&[3usize, 8, 64]);
+            let axis = if g.bool(0.5) { QuantAxis::Row } else { QuantAxis::Col };
+            let workers = g.usize_in(1, 9);
+            let w_mat = Matrix::from_vec(k, n, g.vec_normal_f32(k * n));
+            let wq = MatrixQuant::quantize(&w_mat, bs, &code, axis);
+            let x = Matrix::from_vec(m, k, g.vec_normal_f32(m * k));
+            let serial = qgemm(&x, &wq, &code);
+            let par = qgemm_par(&x, &wq, &code, workers);
+            if serial.data != par.data {
+                return Err(format!(
+                    "qgemm_par(workers={workers}) diverged from serial at m={m} k={k} n={n} bs={bs} axis={axis:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_line_layout_explicit() {
+        // cols=5, bs=3: 5 % 3 != 0 and 3 % 5 != 0 → per_line layout on the
+        // Row axis; likewise rows=7 on the Col axis.
+        let code = nf4();
+        let w_mat = randn(7, 5, 11);
+        for (axis, bs) in [(QuantAxis::Row, 3usize), (QuantAxis::Col, 3), (QuantAxis::Col, 4)] {
+            let wq = MatrixQuant::quantize(&w_mat, bs, &code, axis);
+            assert!(wq.per_line.is_some(), "expected per_line for axis {axis:?} bs={bs}");
+            let x = randn(3, 7, 12);
+            let got = qgemm(&x, &wq, &code);
+            let want = reference(&x, &wq, &code);
+            assert_close(&got, &want, &format!("per_line axis {axis:?} bs={bs}")).unwrap();
+            assert_eq!(qgemm_par(&x, &wq, &code, 4).data, got.data);
+        }
+    }
+
+    #[test]
+    fn flat_block_spanning_lines() {
+        // bs=8 > cols=4 with Row axis: flat blocking, one block spans two
+        // whole stored lines. rows*cols=12 also leaves a partial final
+        // block of 4.
+        let code = nf4();
+        let w_mat = randn(3, 4, 21);
+        let wq = MatrixQuant::quantize(&w_mat, 8, &code, QuantAxis::Row);
+        assert!(wq.per_line.is_none());
+        assert_eq!(wq.q.n_blocks(), 2); // blocks of 8 and 4
+        let x = randn(2, 3, 22);
+        let got = qgemm(&x, &wq, &code);
+        assert_close(&got, &reference(&x, &wq, &code), "block spans lines").unwrap();
+        assert_eq!(qgemm_par(&x, &wq, &code, 3).data, got.data);
+    }
+
+    #[test]
+    fn prop_quantize_par_bit_identical() {
+        let code = nf4();
+        prop::check(64, |g| {
+            let n = g.usize_in(0, 600);
+            let bs = *g.pick(&[3usize, 8, 64, 1024]);
+            let workers = g.usize_in(1, 9);
+            let xs = g.vec_normal_f32(n);
+            let serial = quantize(&xs, bs, &code);
+            let par = quantize_par(&xs, bs, &code, workers);
+            if par.packed != serial.packed {
+                return Err(format!("packed diverged: n={n} bs={bs} workers={workers}"));
+            }
+            if par.scales != serial.scales {
+                return Err(format!("scales diverged: n={n} bs={bs} workers={workers}"));
+            }
+            if (par.len, par.block_size) != (serial.len, serial.block_size) {
+                return Err("metadata diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_par_odd_block_size_many_workers() {
+        // Odd block size exercises the even-chunk alignment that keeps
+        // nibble packing on byte boundaries across shard joins.
+        let code = nf4();
+        let mut rng = Rng::new(33);
+        let xs: Vec<f32> = (0..10_001).map(|_| rng.normal() as f32).collect();
+        let serial = quantize(&xs, 3, &code);
+        for workers in [2usize, 5, 16] {
+            let par = quantize_par(&xs, 3, &code, workers);
+            assert_eq!(par.packed, serial.packed, "workers={workers}");
+            assert_eq!(par.scales, serial.scales, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn qgemm_empty_batch_and_degenerate_dims() {
+        let code = nf4();
+        let w_mat = randn(4, 3, 5);
+        let wq = MatrixQuant::quantize(&w_mat, 2, &code, QuantAxis::Col);
+        let x = Matrix::zeros(0, 4);
+        let y = qgemm(&x, &wq, &code);
+        assert_eq!((y.rows, y.cols), (0, 3));
+        let y = qgemm_par(&x, &wq, &code, 8);
+        assert_eq!((y.rows, y.cols), (0, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "qgemm shape mismatch")]
+    fn qgemm_rejects_bad_shapes() {
+        let code = nf4();
+        let wq = MatrixQuant::quantize(&randn(4, 3, 6), 2, &code, QuantAxis::Row);
+        let x = Matrix::zeros(2, 5);
+        qgemm(&x, &wq, &code);
+    }
+}

@@ -10,6 +10,7 @@ use crate::codes::Code;
 use crate::quant::double::DqScales;
 use crate::quant::{dequantize, quantize, Quantized};
 use crate::tensor::Matrix;
+use crate::util::threadpool::scope_map;
 
 /// Which axis quantization blocks run along.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +53,30 @@ pub struct MatrixQuant {
 impl MatrixQuant {
     /// Quantize `m` with the given code / block size / axis.
     pub fn quantize(m: &Matrix, block_size: usize, code: &Code, axis: QuantAxis) -> Self {
+        Self::quantize_impl(m, block_size, code, axis, 1)
+    }
+
+    /// Parallel [`Self::quantize`]: shards blocks (flat layout) or lines
+    /// (`per_line` layout) over `workers` scoped threads via
+    /// [`crate::util::threadpool::scope_map`]. Bit-identical to the serial
+    /// constructor for any worker count.
+    pub fn quantize_par(
+        m: &Matrix,
+        block_size: usize,
+        code: &Code,
+        axis: QuantAxis,
+        workers: usize,
+    ) -> Self {
+        Self::quantize_impl(m, block_size, code, axis, workers.max(1))
+    }
+
+    fn quantize_impl(
+        m: &Matrix,
+        block_size: usize,
+        code: &Code,
+        axis: QuantAxis,
+        workers: usize,
+    ) -> Self {
         let data = match axis {
             QuantAxis::Row => m.data.clone(),
             QuantAxis::Col => m.transpose().data,
@@ -69,22 +94,28 @@ impl MatrixQuant {
             // Blocks tile lines exactly (or one block spans whole lines, the
             // bitsandbytes flat-blocking behaviour for B > axis length) —
             // flat quantize is equivalent and fast.
-            (quantize(&data, block_size, code), None)
+            let q = if workers > 1 {
+                crate::quant::fused::quantize_par(&data, block_size, code, workers)
+            } else {
+                quantize(&data, block_size, code)
+            };
+            (q, None)
         } else {
             // General case: quantize each line separately so blocks never
-            // cross a row/col boundary.
+            // cross a row/col boundary. Lines are independent, so they
+            // shard cleanly; the merge below is order-preserving either way.
+            let lines = data.len() / axis_len;
+            let quantized_lines = scope_map(workers, lines, |li| {
+                quantize(&data[li * axis_len..(li + 1) * axis_len], block_size, code)
+            });
             let mut idx_acc = Vec::with_capacity(data.len());
             let mut scales = Vec::new();
-            let lines = data.len() / axis_len;
-            for li in 0..lines {
-                let line = &data[li * axis_len..(li + 1) * axis_len];
-                let ql = quantize(line, block_size, code);
-                repack_append(&mut idx_acc, &mut scales, &ql, line.len());
+            for ql in &quantized_lines {
+                repack_append(&mut idx_acc, &mut scales, ql, ql.len);
             }
-            let len = data.len();
             let bpl = axis_len.div_ceil(block_size);
             (
-                Quantized { len, block_size, packed: pack_indices(&idx_acc), scales },
+                Quantized::from_unpacked(&idx_acc, block_size, scales),
                 Some((axis_len, bpl)),
             )
         };
@@ -133,6 +164,21 @@ impl MatrixQuant {
         }
     }
 
+    /// Fused nibble-domain matmul `y = x · W` reading packed indices and
+    /// per-block scales directly — no dequantized intermediate. See
+    /// [`crate::quant::fused`] for the kernel and its determinism
+    /// contract; agrees with `x.matmul(&self.dequantize(code))` to ≤1e-4
+    /// relative error (f32 accumulation-order differences only).
+    pub fn qgemm(&self, x: &Matrix, code: &Code) -> Matrix {
+        crate::quant::fused::qgemm(x, self, code)
+    }
+
+    /// Parallel [`Self::qgemm`]: output columns sharded over `workers`
+    /// scoped threads; bit-identical to the serial result for any count.
+    pub fn qgemm_par(&self, x: &Matrix, code: &Code, workers: usize) -> Matrix {
+        crate::quant::fused::qgemm_par(x, self, code, workers)
+    }
+
     /// Total storage bytes (packed + scales or DQ store).
     pub fn storage_bytes(&self) -> usize {
         let scale_bytes = match &self.dq {
@@ -153,19 +199,6 @@ fn repack_append(idx_acc: &mut Vec<u8>, scales: &mut Vec<f32>, ql: &Quantized, l
         idx_acc.push(ql.index(i));
     }
     scales.extend_from_slice(&ql.scales);
-}
-
-/// Pack a vector of 4-bit indices two-per-byte.
-fn pack_indices(idx: &[u8]) -> Vec<u8> {
-    let mut packed = vec![0u8; idx.len().div_ceil(2)];
-    for (i, &v) in idx.iter().enumerate() {
-        if i % 2 == 0 {
-            packed[i / 2] |= v & 0x0F;
-        } else {
-            packed[i / 2] |= (v & 0x0F) << 4;
-        }
-    }
-    packed
 }
 
 #[cfg(test)]
@@ -251,6 +284,25 @@ mod tests {
         assert!(e_dq < e_plain * 1.5, "DQ should only slightly hurt: {e_dq} vs {e_plain}");
         assert!(dq.bits_per_param() < 4.2);
         assert!((plain.bits_per_param() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_par_matches_serial_both_layouts() {
+        let mut rng = Rng::new(6);
+        let code = nf4();
+        // 17 cols with block 4 → per_line; 64 cols with block 16 → flat.
+        for (rows, cols, bs) in [(9usize, 17usize, 4usize), (8, 64, 16), (3, 5, 8)] {
+            let m = Matrix::randn(rows, cols, 0.5, &mut rng);
+            for axis in [QuantAxis::Row, QuantAxis::Col] {
+                let serial = MatrixQuant::quantize(&m, bs, &code, axis);
+                for workers in [1usize, 2, 7] {
+                    let par = MatrixQuant::quantize_par(&m, bs, &code, axis, workers);
+                    assert_eq!(par.q.packed, serial.q.packed, "{rows}x{cols} bs={bs} {axis:?} w={workers}");
+                    assert_eq!(par.q.scales, serial.q.scales);
+                    assert_eq!(par.per_line, serial.per_line);
+                }
+            }
+        }
     }
 
     #[test]

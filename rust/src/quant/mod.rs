@@ -6,12 +6,24 @@
 //! store the 4-bit indices packed two-per-byte plus the f32 absmax. Dequant:
 //! `wᵢ ≈ q_{cᵢ}·M`.
 //!
+//! Non-finite inputs follow a **saturating contract** (see [`quantize`]):
+//! the absmax fold ignores them, `±inf` encodes to the `±1` endpoint
+//! index, and `NaN` encodes to the code value nearest 0 — quantization
+//! never emits NaN/inf on dequant and never lets one weight poison its
+//! block's scale.
+//!
 //! Submodules: [`double`] (double quantization of the scales, the QLoRA
-//! §"DQ" extension), matrix row/col blocking, and error/usage metrics.
+//! §"DQ" extension), [`matrix`] (row/col blocking), and [`fused`] — the
+//! serving path: fused nibble-domain `qgemm` plus `quantize_par`/
+//! `qgemm_par`, whose parallel variants are bit-identical to their serial
+//! counterparts for any worker count (the determinism contract lives on
+//! [`fused`]'s module docs).
 
 pub mod double;
+pub mod fused;
 pub mod matrix;
 
+pub use fused::{qgemm, qgemm_par, quantize_par};
 pub use matrix::{MatrixQuant, QuantAxis};
 
 use crate::codes::Code;
@@ -33,6 +45,23 @@ pub struct Quantized {
 impl Quantized {
     pub fn n_blocks(&self) -> usize {
         self.scales.len()
+    }
+
+    /// Build from *unpacked* 4-bit indices (one per element) plus
+    /// per-block scales — the single owner of the two-nibbles-per-byte
+    /// layout (element 2i in the low nibble). Used by the per-line matrix
+    /// quantizer and by fixture/test loaders.
+    pub fn from_unpacked(indices: &[u8], block_size: usize, scales: Vec<f32>) -> Quantized {
+        let mut packed = vec![0u8; indices.len().div_ceil(2)];
+        for (i, &v) in indices.iter().enumerate() {
+            debug_assert!(v < 16, "nibble index out of range: {v}");
+            if i % 2 == 0 {
+                packed[i / 2] |= v & 0x0F;
+            } else {
+                packed[i / 2] |= (v & 0x0F) << 4;
+            }
+        }
+        Quantized { len: indices.len(), block_size, packed, scales }
     }
 
     /// Unpacked 4-bit index of element i.
@@ -60,6 +89,16 @@ impl Quantized {
 /// Quantize a flat f32 buffer blockwise with the given code.
 /// The final block may be partial. A block of all zeros gets scale 0 and
 /// the code index of the value nearest 0.
+///
+/// **Non-finite contract (saturating).** The absmax fold considers only
+/// finite entries, so one bad weight cannot blow a block's scale up to inf
+/// or NaN. Within the block, `+inf` encodes to the top code index (decodes
+/// to `+M`), `-inf` to index 0 (decodes to `-M`), and `NaN` to the code
+/// value nearest 0 (NF4: index 7, decodes to `0`). A block with no finite
+/// nonzero entries gets scale 0 and decodes to all zeros. Rationale: the
+/// serving path must never emit NaN/inf into an accumulator, and absmax
+/// saturation is what a clamping device kernel produces; prior to this
+/// contract a NaN silently encoded as index 0 and decoded to `-M`.
 pub fn quantize(x: &[f32], block_size: usize, code: &Code) -> Quantized {
     assert!(block_size >= 1);
     let n_blocks = x.len().div_ceil(block_size);
@@ -67,16 +106,27 @@ pub fn quantize(x: &[f32], block_size: usize, code: &Code) -> Quantized {
     let mut packed = vec![0u8; x.len().div_ceil(2)];
     // Precompute an f32 boundary table for the hot encode loop.
     let bounds: Vec<f32> = code.boundaries().iter().map(|&b| b as f32).collect();
+    let zero_idx = encode_f32(&bounds, 0.0);
+    let top_idx = (code.k() - 1) as u8;
     for bi in 0..n_blocks {
         let lo = bi * block_size;
         let hi = (lo + block_size).min(x.len());
         let blk = &x[lo..hi];
-        let m = blk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let m = blk
+            .iter()
+            .fold(0.0f32, |a, &v| if v.is_finite() { a.max(v.abs()) } else { a });
         scales.push(m);
         let inv = if m > 0.0 { 1.0 / m } else { 0.0 };
         for (off, &v) in blk.iter().enumerate() {
-            let scaled = v * inv;
-            let idx = encode_f32(&bounds, scaled);
+            let idx = if v.is_finite() {
+                encode_f32(&bounds, v * inv)
+            } else if v.is_nan() {
+                zero_idx
+            } else if v > 0.0 {
+                top_idx
+            } else {
+                0
+            };
             let i = lo + off;
             if i % 2 == 0 {
                 packed[i / 2] |= idx;
@@ -239,6 +289,65 @@ mod tests {
         // error bounded by half max gap * scale
         let err = recon_error(&x, &back);
         assert!(err.max < 3.5 * 0.3);
+    }
+
+    #[test]
+    fn from_unpacked_matches_quantize_packing() {
+        // from_unpacked is the packing layout's single owner: rebuilding a
+        // Quantized from its own unpacked indices is byte-identical.
+        let code = nf4();
+        let mut rng = Rng::new(12);
+        let xs: Vec<f32> = (0..101).map(|_| rng.normal() as f32).collect();
+        let q = quantize(&xs, 16, &code);
+        let idx: Vec<u8> = (0..q.len).map(|i| q.index(i)).collect();
+        let rebuilt = Quantized::from_unpacked(&idx, 16, q.scales.clone());
+        assert_eq!(rebuilt.packed, q.packed);
+        assert_eq!((rebuilt.len, rebuilt.block_size), (q.len, q.block_size));
+    }
+
+    #[test]
+    fn non_finite_saturating_contract() {
+        let code = nf4();
+        // NaN and ±inf mixed with finite values: scale comes from the
+        // finite entries only, inf saturates to ±M, NaN decodes to 0.
+        let x = vec![f32::NAN, 0.5, -2.0, f32::INFINITY, f32::NEG_INFINITY, 1.0];
+        let q = quantize(&x, 6, &code);
+        assert_eq!(q.scales, vec![2.0], "absmax must ignore non-finite entries");
+        let back = dequantize(&q, &code);
+        assert!(back.iter().all(|v| v.is_finite()), "dequant must be finite: {back:?}");
+        assert_eq!(back[0], 0.0, "NaN decodes to the code value nearest 0");
+        assert_eq!(back[3], 2.0, "+inf saturates to +M");
+        assert_eq!(back[4], -2.0, "-inf saturates to -M");
+        assert!((back[2] - -2.0).abs() < 1e-6, "finite absmax entry still exact");
+    }
+
+    #[test]
+    fn all_non_finite_block_decodes_to_zero() {
+        let code = nf4();
+        let x = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::NAN];
+        let q = quantize(&x, 4, &code);
+        assert_eq!(q.scales, vec![0.0]);
+        let back = dequantize(&q, &code);
+        assert!(back.iter().all(|&v| v == 0.0), "{back:?}");
+        // indices are still the documented saturation targets
+        assert_eq!(q.index(0), 7); // NaN → nearest-zero index for NF4
+        assert_eq!(q.index(1), 15);
+        assert_eq!(q.index(2), 0);
+    }
+
+    #[test]
+    fn nan_block_parallel_matches_serial() {
+        // The contract holds identically through quantize_par.
+        let code = nf4();
+        let mut rng = Rng::new(77);
+        let mut x: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        x[3] = f32::NAN;
+        x[100] = f32::INFINITY;
+        x[511] = f32::NEG_INFINITY;
+        let serial = quantize(&x, 64, &code);
+        let par = quantize_par(&x, 64, &code, 4);
+        assert_eq!(serial.packed, par.packed);
+        assert_eq!(serial.scales, par.scales);
     }
 
     #[test]

@@ -155,8 +155,7 @@ mod tests {
     use super::*;
 
     fn engine() -> Option<Engine> {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping engine test: run `make artifacts` first");
+        if !crate::util::artifacts_available("artifacts") {
             return None;
         }
         Some(Engine::new("artifacts").expect("engine"))

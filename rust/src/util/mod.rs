@@ -42,6 +42,31 @@ pub fn write_file(path: &str, contents: &str) -> std::io::Result<()> {
     std::fs::write(path, contents)
 }
 
+/// True when `AFQ_REQUIRE_ARTIFACTS=1`: artifact-gated tests that normally
+/// skip (with a message) when the AOT artifacts are absent must **fail**
+/// instead. Set this in any CI job that runs `make artifacts` first, so a
+/// broken artifact build cannot silently turn the integration suite into
+/// a no-op.
+pub fn artifacts_required() -> bool {
+    std::env::var("AFQ_REQUIRE_ARTIFACTS").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Single artifact-gate for tests: true when the AOT artifacts exist at
+/// `dir`. When absent, panics under [`artifacts_required`] (CI mode),
+/// otherwise logs the skip and returns false — so every artifact-gated
+/// test reduces to `if !artifacts_available("artifacts") { return; }`.
+pub fn artifacts_available(dir: &str) -> bool {
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        return true;
+    }
+    assert!(
+        !artifacts_required(),
+        "AFQ_REQUIRE_ARTIFACTS=1 but {dir}/manifest.json is missing — run `make artifacts`"
+    );
+    eprintln!("skipping: no artifacts at {dir}/ (run `make artifacts`)");
+    false
+}
+
 /// Simple leveled logger controlled by AFQ_LOG (error|warn|info|debug).
 pub fn log_level() -> u8 {
     match std::env::var("AFQ_LOG").as_deref() {

@@ -1,8 +1,14 @@
 //! Small fixed-size thread pool (no tokio in the vendor set; CPU-bound work
 //! doesn't want an async runtime anyway).
 //!
-//! Supports fire-and-forget `execute`, and `scope_map` — a blocking parallel
-//! map over an index range used by the quantizer and experiment sweeps.
+//! Two parallel-map primitives, one per lifetime regime:
+//!
+//! - [`ThreadPool::map_indexed`] — runs on a persistent pool; closures must
+//!   be `'static` (jobs cross a channel), so inputs get `Arc`'d.
+//! - [`scope_map`] — free function on std scoped threads; closures may
+//!   **borrow** from the caller. This is what the quantizer/fused-GEMM hot
+//!   paths use ([`crate::quant::fused`]): no `Arc`, no clones, and the
+//!   same atomic work-stealing discipline.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -104,6 +110,64 @@ impl ThreadPool {
     }
 }
 
+/// Number of workers to use when the caller has no opinion: the machine's
+/// available parallelism (1 if unknown).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Blocking parallel map over `0..n` with *borrowing* closures: spawns up
+/// to `workers` scoped threads that pull indices from a shared atomic
+/// counter (work stealing by atomic increment, like
+/// [`ThreadPool::map_indexed`]) and returns `f(0), f(1), …` in index order.
+///
+/// Determinism contract: `f` is called exactly once per index and results
+/// are returned in index order, so any caller that computes independent
+/// per-index outputs gets a result *bit-identical* to the serial
+/// `(0..n).map(f)` — regardless of worker count or scheduling. The fused
+/// quantizer paths rely on this.
+///
+/// `workers == 1` (or `n <= 1`) short-circuits to the serial loop on the
+/// calling thread: no spawn overhead on the degenerate configurations.
+pub fn scope_map<T, F>(workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut got: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("scoped worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in &self.workers {
@@ -162,6 +226,30 @@ mod tests {
         for (i, (j, _)) in out.iter().enumerate() {
             assert_eq!(i, *j);
         }
+    }
+
+    #[test]
+    fn scope_map_matches_serial_for_any_worker_count() {
+        let data: Vec<u64> = (0..97).map(|i| i * 3 + 1).collect();
+        let serial: Vec<u64> = (0..data.len()).map(|i| data[i] * data[i]).collect();
+        for workers in [1usize, 2, 3, 7, 16, 64] {
+            // closure borrows `data` — the whole point of scope_map
+            let out = scope_map(workers, data.len(), |i| data[i] * data[i]);
+            assert_eq!(out, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn scope_map_empty_and_single() {
+        let out: Vec<u8> = scope_map(8, 0, |_| 1);
+        assert!(out.is_empty());
+        let out = scope_map(8, 1, |i| i + 10);
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn default_workers_at_least_one() {
+        assert!(default_workers() >= 1);
     }
 
     #[test]

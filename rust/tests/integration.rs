@@ -1,6 +1,8 @@
 //! Cross-module integration tests: the full three-layer loop at small
 //! scale. These need `make artifacts`; each test skips (with a message)
 //! when artifacts are absent so `cargo test` stays green pre-build.
+//! `AFQ_REQUIRE_ARTIFACTS=1` turns those skips into failures (CI jobs
+//! that build artifacts must not pass on a silent no-op suite).
 
 use afq::codes::registry;
 use afq::coordinator::{train, EngineHandle, ModelService, QuantSpec, TrainConfig};
@@ -8,8 +10,7 @@ use afq::model::{generate_corpus, BatchSampler, ClozeSuite, ParamSet};
 use afq::quant::{dequantize, quantize};
 
 fn engine() -> Option<(EngineHandle, afq::coordinator::EngineThread)> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping integration test: run `make artifacts` first");
+    if !afq::util::artifacts_available("artifacts") {
         return None;
     }
     Some(EngineHandle::spawn("artifacts").expect("engine"))
