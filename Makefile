@@ -30,6 +30,7 @@ bench:
 bench-quick:
 	AFQ_BENCH_QUICK=1 cargo bench --bench dist_codes
 	AFQ_BENCH_QUICK=1 cargo bench --bench quant
+	AFQ_BENCH_QUICK=1 cargo bench --bench serving
 
 clean:
 	cargo clean

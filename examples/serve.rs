@@ -1,15 +1,18 @@
-//! Serving demo: a batched scoring service over a quantized model —
-//! dynamic batcher + device-resident NF4 weights, with a latency /
-//! throughput report (the paper-system-as-a-service scenario).
+//! Serving demo: ONE router serving MANY (code × block-size) configs of a
+//! quantized model concurrently — per-service dynamic batchers over a
+//! single engine thread, device-resident weights, lazy prepare-on-first-
+//! request, and a per-config latency/throughput report (the
+//! paper-comparison-as-a-service scenario: A/B-serve NF4 vs AF4 vs
+//! balanced under load).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve -- [--clients 16] [--requests 64]
+//! make artifacts && cargo run --release --example serve -- \
+//!     [--codes nf4@64,af4@64,af4@4096] [--clients 16] [--requests 16]
 //! ```
 
-use afq::coordinator::{Batcher, EngineHandle, ModelService, QuantSpec};
+use afq::coordinator::{QuantSpec, Router, RouterConfig, ScoreRequest, ServiceKey};
 use afq::model::{generate_corpus, BatchSampler, ParamSet};
 use afq::util::cli::Command;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -21,78 +24,84 @@ fn main() {
 
 fn run() -> Result<(), String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let cmd = Command::new("serve", "batched scoring service demo")
+    let cmd = Command::new("serve", "multi-tenant batched scoring service demo")
         .opt("model", "tiny|small|base", Some("tiny"))
-        .opt("code", "fp|nf4|af4", Some("nf4"))
-        .opt("block", "quantization block size", Some("64"))
-        .opt("clients", "concurrent client threads", Some("16"))
+        .opt(
+            "codes",
+            "comma-separated service configs (family@B or fp)",
+            Some("nf4@64,af4@64,af4@4096"),
+        )
+        .opt("clients", "concurrent client threads (round-robin over configs)", Some("16"))
         .opt("requests", "requests per client", Some("16"))
         .opt("max-wait-ms", "batcher deadline", Some("20"))
         .opt("artifacts", "artifacts dir", Some("artifacts"));
     let args = cmd.parse(&argv)?;
     let model = args.get_or("model", "tiny");
+    let keys: Vec<ServiceKey> = args
+        .str_list("codes", &[])
+        .iter()
+        .map(|s| QuantSpec::parse_label(s).map(|spec| ServiceKey::new(model, spec)))
+        .collect::<Result<_, _>>()?;
+    if keys.is_empty() {
+        return Err("need at least one --codes entry".into());
+    }
 
-    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
-    let meta = eng.manifest().config(model)?.clone();
+    let router = Router::with_config(
+        args.get_or("artifacts", "artifacts"),
+        RouterConfig {
+            max_wait: Duration::from_millis(args.u64("max-wait-ms", 20)),
+            ..Default::default()
+        },
+    )?;
+    let meta = router.manifest().config(model)?.clone();
     // Serve from random-init weights (the service doesn't care; swap in a
     // checkpoint via `afq train` for a real model).
-    let params = ParamSet::init(&meta, 3);
-    let spec = if args.get_or("code", "nf4") == "fp" {
-        QuantSpec::fp()
-    } else {
-        QuantSpec {
-            family: args.get_or("code", "nf4").into(),
-            block_size: args.usize("block", 64),
-        }
-    };
+    router.register_model(model, ParamSet::init(&meta, 3))?;
     println!(
-        "serving {model} ({:.2}M params) quantized as {}@B={} — weights device-resident",
+        "serving {model} ({:.2}M params) as {} config(s) behind one engine thread:",
         meta.n_params() as f64 / 1e6,
-        spec.family,
-        spec.block_size
+        keys.len()
     );
-    let service = Arc::new(ModelService::prepare(&eng, model, &params, spec)?);
-    let (handle, mut batcher) = Batcher::spawn(
-        Arc::clone(&service),
-        Duration::from_millis(args.u64("max-wait-ms", 20)),
-        4096,
-    );
+    for k in &keys {
+        println!("  {k}  (prepared lazily on first request)");
+    }
 
-    // Client load: each client scores `requests` random windows.
+    // Client load: each client hammers one config, round-robin over keys.
     let corpus = generate_corpus("english", 200_000, 11)?;
     let n_clients = args.usize("clients", 16);
     let n_requests = args.usize("requests", 16);
     let seq = meta.seq_len;
     let t0 = Instant::now();
-    let mut joins = Vec::new();
-    for c in 0..n_clients {
-        let h = handle.clone();
-        let corpus = corpus.clone();
-        joins.push(std::thread::spawn(move || {
-            let mut s = BatchSampler::new(corpus, seq, 1, c as u64);
-            let mut lat = Vec::with_capacity(n_requests);
-            let mut total_nll = 0.0f64;
-            for _ in 0..n_requests {
-                let (ids, tgt) = s.sample();
-                let t = Instant::now();
-                let resp = h.score(ids, tgt).expect("scored");
-                lat.push(t.elapsed());
-                total_nll += resp.nll.iter().map(|&x| x as f64).sum::<f64>();
-            }
-            (lat, total_nll)
-        }));
-    }
     let mut all_lat = Vec::new();
-    for j in joins {
-        let (lat, _) = j.join().unwrap();
-        all_lat.extend(lat);
-    }
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let router = &router;
+                let key = keys[c % keys.len()].clone();
+                let corpus = corpus.clone();
+                s.spawn(move || {
+                    let mut sampler = BatchSampler::new(corpus, seq, 1, c as u64);
+                    let mut lat = Vec::with_capacity(n_requests);
+                    for _ in 0..n_requests {
+                        let (ids, tgt) = sampler.sample();
+                        let t = Instant::now();
+                        router.score(ScoreRequest::new(&key, ids, tgt)).expect("scored");
+                        lat.push(t.elapsed());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for j in joins {
+            all_lat.extend(j.join().unwrap());
+        }
+    });
     let wall = t0.elapsed();
     all_lat.sort();
     let total_requests = n_clients * n_requests;
     let total_tokens = total_requests * seq;
     println!("\n== load test report ==");
-    println!("requests     : {total_requests} over {wall:.2?}");
+    println!("requests     : {total_requests} over {wall:.2?} across {} configs", keys.len());
     println!(
         "throughput   : {:.1} req/s, {:.0} tokens/s",
         total_requests as f64 / wall.as_secs_f64(),
@@ -104,12 +113,9 @@ fn run() -> Result<(), String> {
         all_lat[all_lat.len() * 95 / 100],
         all_lat[all_lat.len() * 99 / 100]
     );
-    println!("engine batch latency: {}", service.latency.summary());
-    println!(
-        "batch efficiency: {:.1}% (padding waste {:.1}%)",
-        service.counters.batch_efficiency() * 100.0,
-        (1.0 - service.counters.batch_efficiency()) * 100.0
-    );
-    batcher.stop();
+    print!("\n{}", router.snapshot());
+    println!("\ngraceful shutdown (drains per-service batchers, then the engine)…");
+    router.shutdown();
+    println!("done");
     Ok(())
 }

@@ -8,7 +8,7 @@
 //! make artifacts && cargo run --release --example train_e2e -- [--model small] [--steps 300]
 //! ```
 
-use afq::coordinator::{train, EngineHandle, ModelService, QuantSpec, TrainConfig};
+use afq::coordinator::{train, Router, ServiceKey, TrainConfig};
 use afq::model::{bytes_per_word, generate_corpus, word_ppl, BatchSampler, ParamSet};
 use afq::util::cli::Command;
 
@@ -31,9 +31,9 @@ fn run() -> Result<(), String> {
     let model = args.get_or("model", "small");
     let steps = args.usize("steps", 300);
 
-    println!("== e2e: spawn engine ==");
-    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
-    let meta = eng.manifest().config(model)?.clone();
+    println!("== e2e: spawn router ==");
+    let router = Router::new(args.get_or("artifacts", "artifacts"))?;
+    let meta = router.manifest().config(model)?.clone();
     println!(
         "model {model}: {} layers, d={}, {:.2}M params",
         meta.n_layer,
@@ -47,7 +47,7 @@ fn run() -> Result<(), String> {
     let mut sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 7);
     let params = ParamSet::init(&meta, 42);
     let cfg = TrainConfig { steps, lr: 3e-3, warmup: 20, seed: 0, log_every: steps.div_ceil(20) };
-    let result = train(&eng, model, params, &mut sampler, &cfg)?;
+    let result = train(&router, model, params, &mut sampler, &cfg)?;
     println!("loss curve:");
     for (s, l) in &result.losses {
         let bar = "▆".repeat(((l / result.losses[0].1) * 40.0) as usize);
@@ -64,15 +64,15 @@ fn run() -> Result<(), String> {
         return Err("training did not reduce loss".into());
     }
 
-    println!("\n== e2e: quantize + eval held-out ppl ==");
+    println!("\n== e2e: register checkpoint + eval held-out ppl via the router ==");
+    router.register_model(model, result.params)?;
     let val = generate_corpus(corpus, 200_000, afq::exp::lm::VAL_SEED)?;
     let bpw = bytes_per_word(&val);
     let vs = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
     let batches = vs.eval_batches(args.usize("eval-batches", 8));
     let n_tok = batches.len() * meta.batch * meta.seq_len;
 
-    let fp = ModelService::prepare(&eng, model, &result.params, QuantSpec::fp())?;
-    let nll_fp = fp.mean_nll(&batches)?;
+    let nll_fp = router.mean_nll(&ServiceKey::fp(model), &batches)?;
     println!(
         "  {:>12} {:>7}: nll {nll_fp:.4}  word-ppl {:8.2}",
         "fp32",
@@ -82,13 +82,7 @@ fn run() -> Result<(), String> {
     let mut rows = vec![("fp".to_string(), 0usize, nll_fp)];
     for family in ["nf4", "af4"] {
         for &b in &[64usize, 1024, 4096] {
-            let svc = ModelService::prepare(
-                &eng,
-                model,
-                &result.params,
-                QuantSpec { family: family.into(), block_size: b },
-            )?;
-            let nll = svc.mean_nll(&batches)?;
+            let nll = router.mean_nll(&ServiceKey::quant(model, family, b), &batches)?;
             println!(
                 "  {:>12} {b:>7}: nll {nll:.4}  word-ppl {:8.2}  (Δ {:+.4})",
                 family,
@@ -96,9 +90,9 @@ fn run() -> Result<(), String> {
                 nll - nll_fp
             );
             rows.push((family.to_string(), b, nll));
-            svc.release();
         }
     }
+    print!("\n{}", router.snapshot());
 
     // Shape assertions: quantization degrades ≥ ~0, and worsens with B.
     let get = |f: &str, b: usize| rows.iter().find(|(ff, bb, _)| ff == f && *bb == b).unwrap().2;

@@ -6,7 +6,7 @@
 //! Needs `make artifacts`. Run: `cargo bench --bench engine`
 
 use afq::codes::registry;
-use afq::coordinator::{EngineHandle, ModelService, QuantSpec};
+use afq::coordinator::{Router, ServiceKey};
 use afq::model::ParamSet;
 use afq::runtime::TensorData;
 use afq::util::bench::Bencher;
@@ -18,7 +18,8 @@ fn main() {
         return;
     }
     let mut b = Bencher::new();
-    let (eng, _th) = EngineHandle::spawn("artifacts").expect("engine");
+    let router = Router::new("artifacts").expect("router");
+    let eng = router.engine();
     let nf4 = registry::build("nf4").unwrap();
     let mut rng = Rng::new(0);
 
@@ -76,28 +77,22 @@ fn main() {
     println!("-- scoring step latency (batch=8, seq=128) --");
     for model in ["tiny", "small"] {
         let meta = eng.manifest().config(model).unwrap().clone();
-        let params = ParamSet::init(&meta, 5);
+        router.register_model(model, ParamSet::init(&meta, 5)).unwrap();
         let tokens = (meta.batch * meta.seq_len) as f64;
         let ids: Vec<i32> = (0..meta.batch * meta.seq_len).map(|i| (i % 256) as i32).collect();
-        let fp = ModelService::prepare(&eng, model, &params, QuantSpec::fp()).unwrap();
+        let fp_key = ServiceKey::fp(model);
         b.bench_with_elements(&format!("score/{model}/fp32 (tokens)"), Some(tokens), || {
-            fp.score(ids.clone(), ids.clone()).unwrap()
+            router.score_batch(&fp_key, ids.clone(), ids.clone()).unwrap()
         });
-        fp.release();
+        router.release(&fp_key);
         for bs in [64usize, 4096] {
-            let svc = ModelService::prepare(
-                &eng,
-                model,
-                &params,
-                QuantSpec { family: "nf4".into(), block_size: bs },
-            )
-            .unwrap();
+            let key = ServiceKey::quant(model, "nf4", bs);
             b.bench_with_elements(
                 &format!("score/{model}/nf4-B{bs} (tokens)"),
                 Some(tokens),
-                || svc.score(ids.clone(), ids.clone()).unwrap(),
+                || router.score_batch(&key, ids.clone(), ids.clone()).unwrap(),
             );
-            svc.release();
+            router.release(&key);
         }
     }
 

@@ -1,13 +1,16 @@
-//! Bench: end-to-end serving — dynamic-batcher throughput/latency vs
-//! offered concurrency, and batching-policy ablation (deadline sweep).
-//! This regenerates the serving-shape table for EXPERIMENTS.md §Perf.
+//! Bench: multi-tenant serving — N (code × block-size) services behind ONE
+//! router/engine thread, hit by concurrent clients, reporting per-config
+//! p50/p99 and throughput (plus a batching-deadline ablation in full
+//! mode). This regenerates the serving-shape table for EXPERIMENTS.md
+//! §Perf and demonstrates the acceptance scenario: ≥3 configs served
+//! concurrently from one process.
 //!
 //! Needs `make artifacts`. Run: `cargo bench --bench serving`
+//! Quick mode (CI): `AFQ_BENCH_QUICK=1 cargo bench --bench serving`
 
-use afq::coordinator::{Batcher, EngineHandle, ModelService, QuantSpec};
+use afq::coordinator::{Router, RouterConfig, ScoreRequest, ServiceKey};
 use afq::model::{generate_corpus, BatchSampler, ParamSet};
 use afq::util::json::Json;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -16,76 +19,127 @@ fn main() {
         return;
     }
     let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
-    let (eng, _th) = EngineHandle::spawn("artifacts").expect("engine");
     let model = "tiny";
-    let meta = eng.manifest().config(model).unwrap().clone();
-    let params = ParamSet::init(&meta, 3);
-    let corpus = generate_corpus("english", 200_000, 11).unwrap();
-    let seq = meta.seq_len;
-
-    println!(
-        "{:>8} {:>10} {:>10} {:>12} {:>12} {:>10}",
-        "clients", "wait(ms)", "req/s", "p50", "p99", "batch-eff"
-    );
-    let client_counts: &[usize] = if quick { &[1, 8] } else { &[1, 4, 8, 16, 32] };
+    let configs: Vec<ServiceKey> = vec![
+        ServiceKey::quant(model, "nf4", 64),
+        ServiceKey::quant(model, "af4", 64),
+        ServiceKey::quant(model, "af4", 4096),
+    ];
     let waits_ms: &[u64] = if quick { &[10] } else { &[2, 10, 40] };
+    let clients_per_config = if quick { 2 } else { 8 };
+    let reqs_per_client = if quick { 4 } else { 12 };
+
+    let corpus = generate_corpus("english", 200_000, 11).unwrap();
     let mut rows = Vec::new();
+    let mut last_snapshot = Json::obj();
     for &wait in waits_ms {
-        for &clients in client_counts {
-            let service = Arc::new(
-                ModelService::prepare(
-                    &eng,
-                    model,
-                    &params,
-                    QuantSpec { family: "nf4".into(), block_size: 64 },
-                )
-                .unwrap(),
-            );
-            let (handle, mut batcher) =
-                Batcher::spawn(Arc::clone(&service), Duration::from_millis(wait), 4096);
-            let reqs_per_client = if quick { 4 } else { 12 };
-            let t0 = Instant::now();
-            let mut joins = Vec::new();
-            for c in 0..clients {
-                let h = handle.clone();
-                let corpus = corpus.clone();
-                joins.push(std::thread::spawn(move || {
-                    let mut s = BatchSampler::new(corpus, seq, 1, c as u64);
+        let router = Router::with_config(
+            "artifacts",
+            RouterConfig { max_wait: Duration::from_millis(wait), ..Default::default() },
+        )
+        .expect("router");
+        let meta = router.manifest().config(model).unwrap().clone();
+        router.register_model(model, ParamSet::init(&meta, 3)).unwrap();
+        let seq = meta.seq_len;
+
+        // Warm every service up front so the rows time steady-state serving
+        // (prepare itself is the lazy path — report its cost separately).
+        for key in &configs {
+            let t = Instant::now();
+            router.prepare(key).expect("prepare");
+            println!("prepared {key} in {:.2?}", t.elapsed());
+        }
+
+        // All configs under load AT THE SAME TIME, through one engine.
+        let t0 = Instant::now();
+        let per_config: Vec<(Vec<Duration>, Duration)> = std::thread::scope(|s| {
+            let joins: Vec<_> = configs
+                .iter()
+                .map(|key| {
+                    let client_joins: Vec<_> = (0..clients_per_config)
+                        .map(|c| {
+                            let router = &router;
+                            let corpus = corpus.clone();
+                            let key = key.clone();
+                            s.spawn(move || {
+                                let mut sampler =
+                                    BatchSampler::new(corpus, seq, 1, c as u64 + 1);
+                                let mut lat = Vec::with_capacity(reqs_per_client);
+                                for _ in 0..reqs_per_client {
+                                    let (ids, tgt) = sampler.sample();
+                                    let t = Instant::now();
+                                    router
+                                        .score(ScoreRequest::new(&key, ids, tgt))
+                                        .expect("scored");
+                                    lat.push(t.elapsed());
+                                }
+                                (lat, Instant::now())
+                            })
+                        })
+                        .collect();
+                    client_joins
+                })
+                .collect();
+            joins
+                .into_iter()
+                .map(|client_joins| {
                     let mut lat = Vec::new();
-                    for _ in 0..reqs_per_client {
-                        let (ids, tgt) = s.sample();
-                        let t = Instant::now();
-                        h.score(ids, tgt).expect("scored");
-                        lat.push(t.elapsed());
+                    let mut finished = t0;
+                    for j in client_joins {
+                        let (l, fin) = j.join().unwrap();
+                        lat.extend(l);
+                        finished = finished.max(fin);
                     }
-                    lat
-                }));
-            }
-            let mut lat: Vec<Duration> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
-            let wall = t0.elapsed().as_secs_f64();
-            lat.sort();
-            let total = clients * reqs_per_client;
-            let eff = service.counters.batch_efficiency();
+                    lat.sort();
+                    (lat, finished - t0)
+                })
+                .collect()
+        });
+
+        println!(
+            "\n{:>16} {:>8} {:>10} {:>10} {:>12} {:>12} {:>10}",
+            "config", "clients", "wait(ms)", "req/s", "p50", "p99", "batch-eff"
+        );
+        let snap = router.snapshot();
+        for (key, (lat, wall)) in configs.iter().zip(&per_config) {
+            let total = clients_per_config * reqs_per_client;
+            let p50 = lat[lat.len() / 2];
+            let p99 = lat[lat.len() * 99 / 100];
+            let eff = snap
+                .get(key)
+                .map(|s| s.batch_efficiency)
+                .unwrap_or(f64::NAN);
+            let rps = total as f64 / wall.as_secs_f64();
             println!(
-                "{clients:>8} {wait:>10} {:>10.1} {:>12.2?} {:>12.2?} {:>9.1}%",
-                total as f64 / wall,
-                lat[lat.len() / 2],
-                lat[lat.len() * 99 / 100],
+                "{:>16} {clients_per_config:>8} {wait:>10} {rps:>10.1} {p50:>12.2?} {p99:>12.2?} {:>9.1}%",
+                key.spec.label(),
                 eff * 100.0
             );
             let mut row = Json::obj();
-            row.set("clients", Json::Num(clients as f64))
+            row.set("config", Json::Str(key.spec.label()))
+                .set("model", Json::Str(model.into()))
+                .set("clients", Json::Num(clients_per_config as f64))
                 .set("wait_ms", Json::Num(wait as f64))
-                .set("rps", Json::Num(total as f64 / wall))
-                .set("p50_us", Json::Num(lat[lat.len() / 2].as_micros() as f64))
-                .set("p99_us", Json::Num(lat[lat.len() * 99 / 100].as_micros() as f64))
+                .set("requests", Json::Num(total as f64))
+                .set("rps", Json::Num(rps))
+                .set("p50_us", Json::Num(p50.as_micros() as f64))
+                .set("p99_us", Json::Num(p99.as_micros() as f64))
                 .set("batch_eff", Json::Num(eff));
             rows.push(row);
-            batcher.stop();
         }
+        println!("\n{snap}");
+        assert_eq!(
+            snap.services.len(),
+            configs.len(),
+            "all configs must be resident in one router"
+        );
+        last_snapshot = snap.to_json();
+        router.shutdown();
     }
-    match afq::util::bench::save_bench_doc("serving", Json::Arr(rows)) {
-        Ok(path) => println!("\nsaved {path}"),
-        Err(e) => eprintln!("\ncould not save bench results: {e}"),
+    let mut doc = Json::obj();
+    doc.set("rows", Json::Arr(rows)).set("router_snapshot", last_snapshot);
+    match afq::util::bench::save_bench_doc("serving", doc) {
+        Ok(path) => println!("saved {path}"),
+        Err(e) => eprintln!("could not save bench results: {e}"),
     }
 }

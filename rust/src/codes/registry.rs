@@ -12,9 +12,13 @@
 //! - `normal-l1`        — pinned L1 code on the NF4-implied scaled normal
 //! - `fp`               — sentinel for "no quantization" (not a Code)
 //!
-//! Construction of AF4 codes is cached per (kind, B) behind a mutex since it
-//! involves quadrature-heavy root finding (~10 ms) and experiments request
-//! the same codes repeatedly.
+//! Codes are built **at most once per spec** and shared as `Arc<Code>`:
+//! AF4 construction is quadrature-heavy root finding (~10 ms) and the
+//! router prepares many (model × code × B) services concurrently, so the
+//! cache is a per-spec [`OnceLock`] slot — two threads racing on the same
+//! unseen spec block on one construction instead of both computing it,
+//! while different specs construct in parallel. Callers share the cached
+//! `Arc` (no per-request heap clone of the table).
 
 use crate::codes::af4::{af4, kmedians_unpinned, l1_pinned_code};
 use crate::codes::balanced::{balanced, balanced_with_endpoints};
@@ -22,9 +26,20 @@ use crate::codes::code::Code;
 use crate::codes::nf4::{nf4, nf4_avg_quantiles};
 use crate::dist::{ApproxBlockDist, BlockScaledDist, ScaledNormal};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
-static CACHE: Mutex<Option<HashMap<String, Code>>> = Mutex::new(None);
+/// One cache slot per spec. The map lock is held only to fetch/insert the
+/// slot; construction itself runs under the slot's `OnceLock`, so a slow
+/// build of one spec never serializes builds of other specs.
+type Slot = Arc<OnceLock<Option<Arc<Code>>>>;
+
+static CACHE: Mutex<Option<HashMap<String, Slot>>> = Mutex::new(None);
+
+/// Per-spec construction tally (how many times `construct` actually ran).
+/// Test-only instrumentation for asserting the at-most-once contract under
+/// contention; compiled out of production builds.
+#[cfg(test)]
+static BUILT: Mutex<Option<HashMap<String, usize>>> = Mutex::new(None);
 
 /// Is this spec the "no quantization" sentinel?
 pub fn is_fp(spec: &str) -> bool {
@@ -32,23 +47,40 @@ pub fn is_fp(spec: &str) -> bool {
 }
 
 /// Build (or fetch from cache) the code named by `spec`. Returns None for
-/// unknown specs and for the `fp` sentinel.
-pub fn build(spec: &str) -> Option<Code> {
+/// unknown specs and for the `fp` sentinel. Construction happens at most
+/// once per spec across all threads; the returned `Arc` is shared with
+/// every other caller of the same spec.
+pub fn build(spec: &str) -> Option<Arc<Code>> {
     if is_fp(spec) {
         return None;
     }
-    {
-        let guard = CACHE.lock().unwrap();
-        if let Some(map) = guard.as_ref() {
-            if let Some(c) = map.get(spec) {
-                return Some(c.clone());
+    let slot: Slot = {
+        let mut guard = CACHE.lock().unwrap();
+        let map = guard.get_or_insert_with(HashMap::new);
+        Arc::clone(map.entry(spec.to_string()).or_insert_with(|| Arc::new(OnceLock::new())))
+    };
+    slot.get_or_init(|| {
+        let code = construct(spec);
+        #[cfg(test)]
+        {
+            if code.is_some() {
+                let mut guard = BUILT.lock().unwrap();
+                *guard
+                    .get_or_insert_with(HashMap::new)
+                    .entry(spec.to_string())
+                    .or_insert(0) += 1;
             }
         }
-    }
-    let code = construct(spec)?;
-    let mut guard = CACHE.lock().unwrap();
-    guard.get_or_insert_with(HashMap::new).insert(spec.to_string(), code.clone());
-    Some(code)
+        code.map(Arc::new)
+    })
+    .clone()
+}
+
+/// How many times `spec` has actually been constructed (not cache hits).
+/// The at-most-once contract means this never exceeds 1 per process.
+#[cfg(test)]
+pub(crate) fn construction_count(spec: &str) -> usize {
+    BUILT.lock().unwrap().as_ref().and_then(|m| m.get(spec).copied()).unwrap_or(0)
 }
 
 fn parse_block(spec: &str, prefix: &str) -> Option<usize> {
@@ -88,7 +120,7 @@ fn construct(spec: &str) -> Option<Code> {
 /// Resolve the code to use for quantizing at block size `b` given a family
 /// name: `af4` → `af4-<b>` (block-size-adaptive, the paper's point), others
 /// are block-size-independent.
-pub fn for_block_size(family: &str, b: usize) -> Option<Code> {
+pub fn for_block_size(family: &str, b: usize) -> Option<Arc<Code>> {
     match family {
         "af4" => build(&format!("af4-{b}")),
         "af4x" => build(&format!("af4x-{b}")),
@@ -129,10 +161,28 @@ mod tests {
     }
 
     #[test]
-    fn cache_returns_equal_code() {
+    fn cache_returns_shared_arc() {
         let a = build("af4-128").unwrap();
         let b = build("af4-128").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second build must be the cached Arc");
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_builds_construct_at_most_once() {
+        // af4-96 is quadrature-heavy and used by no other test, so the
+        // per-spec tally below is deterministic even with the test harness
+        // running modules in parallel.
+        let spec = "af4-96";
+        let codes: Vec<Arc<Code>> = std::thread::scope(|s| {
+            let joins: Vec<_> =
+                (0..8).map(|_| s.spawn(|| build(spec).expect("af4-96 builds"))).collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(construction_count(spec), 1, "racing builds must construct once");
+        for c in &codes[1..] {
+            assert!(Arc::ptr_eq(&codes[0], c), "all racers share one allocation");
+        }
     }
 
     #[test]

@@ -1,23 +1,45 @@
 //! Dynamic batcher: collects single-sequence scoring requests into
 //! fixed-shape [batch, seq] executions (size-or-deadline policy), pads the
-//! tail, and fans results back out — the serving-side contribution of the
-//! three-layer stack (vLLM-router shape, sized for a CPU scoring service).
+//! tail, and fans results back out. One batcher runs per routed service;
+//! the [`crate::coordinator::router`] owns the fleet.
 //!
-//! Backpressure: the request channel is bounded via a semaphore-ish
-//! counter; `submit` fails fast when the queue exceeds `max_queue`.
+//! Admission control: `BatcherHandle::score` fails fast (never queues) when
+//! the request shape is wrong, the per-service queue is at its quota, or
+//! the router-wide queue (a counter shared by every service's handle) is at
+//! the global quota.
+//!
+//! Shutdown contract: after [`Batcher::stop`] no new request is admitted,
+//! the in-flight batch finishes, and everything already queued is **drained
+//! through the backend** (graceful stop) or failed with an explicit
+//! "shutting down" error ([`Batcher::abort`]) — queued requests are never
+//! silently dropped.
 
-use crate::coordinator::service::ModelService;
+use crate::coordinator::metrics::Counters;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// One scoring request: a single sequence (seq tokens) + targets.
-pub struct ScoreRequest {
-    pub ids: Vec<i32>,
-    pub targets: Vec<i32>,
-    pub reply: Sender<Result<ScoreResponse, String>>,
-    pub enqueued: Instant,
+/// What a batcher needs from the thing that executes assembled batches.
+/// [`crate::coordinator::ModelService`] is the real backend; tests use
+/// in-memory mocks so the batching/drain/quota logic runs artifact-free.
+pub trait ScoreBackend: Send + Sync {
+    /// Rows per execution (the fixed batch dimension).
+    fn batch(&self) -> usize;
+    /// Tokens per row (the fixed sequence dimension).
+    fn seq(&self) -> usize;
+    /// Per-service counters the batcher tallies requests/padding/errors on.
+    fn counters(&self) -> &Counters;
+    /// Execute one assembled [batch, seq] batch.
+    fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String>;
+}
+
+/// One queued single-sequence request (internal to the batcher).
+struct Pending {
+    ids: Vec<i32>,
+    targets: Vec<i32>,
+    reply: Sender<Result<ScoreResponse, String>>,
+    enqueued: Instant,
 }
 
 /// Per-sequence result.
@@ -28,53 +50,174 @@ pub struct ScoreResponse {
     pub queue_delay: Duration,
 }
 
-/// Handle used by request threads.
+/// Batcher policy + quotas. `global_queued`/`max_global_queue` implement the
+/// router-wide admission control: the router hands every service's batcher
+/// the same counter, so one saturated service cannot starve the process of
+/// memory by queueing unboundedly while others idle.
 #[derive(Clone)]
-pub struct BatcherHandle {
-    tx: Sender<ScoreRequest>,
-    queued: Arc<AtomicUsize>,
-    max_queue: usize,
+pub struct BatcherConfig {
+    /// How long a partially-filled batch waits for more requests.
+    pub max_wait: Duration,
+    /// Per-service queue quota (requests queued but not yet batched).
+    pub max_queue: usize,
+    /// Router-wide queued-request counter shared across services.
+    pub global_queued: Arc<AtomicUsize>,
+    /// Router-wide queue quota.
+    pub max_global_queue: usize,
 }
 
-impl BatcherHandle {
-    /// Submit a sequence for scoring; blocks until the result arrives.
-    pub fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<ScoreResponse, String> {
-        if self.queued.load(Ordering::Relaxed) >= self.max_queue {
-            return Err("backpressure: queue full".into());
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(20),
+            max_queue: 256,
+            global_queued: Arc::new(AtomicUsize::new(0)),
+            max_global_queue: usize::MAX,
         }
-        let (rtx, rrx) = channel();
-        self.queued.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(ScoreRequest { ids, targets, reply: rtx, enqueued: Instant::now() })
-            .map_err(|_| "batcher stopped")?;
-        rrx.recv().map_err(|_| "batcher dropped request")?
     }
 }
 
-/// The batcher thread + its config.
+/// Handle used by request threads.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: Sender<Pending>,
+    queued: Arc<AtomicUsize>,
+    global_queued: Arc<AtomicUsize>,
+    /// Submitters currently inside the admit-then-send window (see
+    /// [`score`](Self::score)); the drain loop exits only once this is 0,
+    /// so an admitted request can never be stranded in a dropped channel.
+    submitting: Arc<AtomicUsize>,
+    max_queue: usize,
+    max_global_queue: usize,
+    seq: usize,
+    stopping: Arc<AtomicBool>,
+}
+
+impl BatcherHandle {
+    /// Submit one sequence for scoring; blocks until the result arrives.
+    /// Fails fast (without queueing) on bad shape, shutdown, or when a
+    /// queue quota — per-service or router-wide — is exhausted.
+    pub fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<ScoreResponse, String> {
+        if ids.len() != self.seq || targets.len() != self.seq {
+            return Err(format!(
+                "request must be exactly seq={} tokens (got ids={}, targets={})",
+                self.seq,
+                ids.len(),
+                targets.len()
+            ));
+        }
+        // Enter the admit-then-send window BEFORE reading the stop flag:
+        // the drain loop only exits once `submitting` is 0, so any request
+        // that passes the flag check below is guaranteed to be received by
+        // the drain, never dropped with the channel.
+        self.submitting.fetch_add(1, Ordering::SeqCst);
+        let admitted = self.admit(ids, targets);
+        self.submitting.fetch_sub(1, Ordering::SeqCst);
+        admitted?.recv().map_err(|_| "batcher dropped request".to_string())?
+    }
+
+    /// Admission control + enqueue. Quotas are reserved with atomic
+    /// add-then-check (rolled back on rejection), so a concurrent burst
+    /// cannot overshoot `max_queue`/`max_global_queue`.
+    fn admit(
+        &self,
+        ids: Vec<i32>,
+        targets: Vec<i32>,
+    ) -> Result<std::sync::mpsc::Receiver<Result<ScoreResponse, String>>, String> {
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err("batcher shutting down".into());
+        }
+        if self.queued.fetch_add(1, Ordering::Relaxed) >= self.max_queue {
+            self.queued.fetch_sub(1, Ordering::Relaxed);
+            return Err("backpressure: service queue full".into());
+        }
+        if self.global_queued.fetch_add(1, Ordering::Relaxed) >= self.max_global_queue {
+            self.queued.fetch_sub(1, Ordering::Relaxed);
+            self.global_queued.fetch_sub(1, Ordering::Relaxed);
+            return Err("backpressure: router queue full".into());
+        }
+        let (rtx, rrx) = channel();
+        if self
+            .tx
+            .send(Pending { ids, targets, reply: rtx, enqueued: Instant::now() })
+            .is_err()
+        {
+            self.queued.fetch_sub(1, Ordering::Relaxed);
+            self.global_queued.fetch_sub(1, Ordering::Relaxed);
+            return Err("batcher stopped".into());
+        }
+        Ok(rrx)
+    }
+
+    /// Requests queued on this service right now.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+}
+
+/// The batcher thread; [`Drop`] performs a graceful (draining) stop.
 pub struct Batcher {
-    pub max_wait: Duration,
     stop: Arc<AtomicBool>,
+    abort: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
-    /// Spawn a batching loop over a prepared service.
-    pub fn spawn(service: Arc<ModelService>, max_wait: Duration, max_queue: usize) -> (BatcherHandle, Batcher) {
-        let (tx, rx) = channel::<ScoreRequest>();
+    /// Spawn a batching loop over a backend.
+    pub fn spawn(backend: Arc<dyn ScoreBackend>, cfg: BatcherConfig) -> (BatcherHandle, Batcher) {
+        let (tx, rx) = channel::<Pending>();
         let stop = Arc::new(AtomicBool::new(false));
+        let abort = Arc::new(AtomicBool::new(false));
         let queued = Arc::new(AtomicUsize::new(0));
-        let handle =
-            BatcherHandle { tx, queued: Arc::clone(&queued), max_queue };
+        let submitting = Arc::new(AtomicUsize::new(0));
+        let handle = BatcherHandle {
+            tx,
+            queued: Arc::clone(&queued),
+            global_queued: Arc::clone(&cfg.global_queued),
+            submitting: Arc::clone(&submitting),
+            max_queue: cfg.max_queue,
+            max_global_queue: cfg.max_global_queue,
+            seq: backend.seq(),
+            stopping: Arc::clone(&stop),
+        };
         let stop2 = Arc::clone(&stop);
+        let abort2 = Arc::clone(&abort);
         let join = std::thread::Builder::new()
             .name("afq-batcher".into())
-            .spawn(move || batch_loop(service, rx, stop2, queued, max_wait))
+            .spawn(move || {
+                batch_loop(
+                    backend,
+                    rx,
+                    stop2,
+                    abort2,
+                    queued,
+                    cfg.global_queued,
+                    submitting,
+                    cfg.max_wait,
+                )
+            })
             .expect("spawn batcher");
-        (handle, Batcher { max_wait, stop, join: Some(join) })
+        (handle, Batcher { stop, abort, join: Some(join) })
     }
 
+    /// Graceful stop: reject new requests, flush the in-flight batch, then
+    /// drain everything already queued through the backend. Blocks until
+    /// the batcher thread has exited.
     pub fn stop(&mut self) {
+        self.finish(false);
+    }
+
+    /// Hard stop: like [`stop`](Self::stop) but queued-not-yet-executing
+    /// requests are failed with an explicit "shutting down" error instead
+    /// of being executed. The in-flight batch still completes.
+    pub fn abort(&mut self) {
+        self.finish(true);
+    }
+
+    fn finish(&mut self, abort: bool) {
+        if abort {
+            self.abort.store(true, Ordering::SeqCst);
+        }
         self.stop.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
             let _ = j.join();
@@ -88,89 +231,135 @@ impl Drop for Batcher {
     }
 }
 
+/// Assemble, execute, and fan out one batch. `pending` is 1..=batch rows of
+/// exactly `seq` tokens each (validated at submit time); the tail is padded
+/// by broadcasting the first row.
+fn run_batch(backend: &Arc<dyn ScoreBackend>, pending: Vec<Pending>) {
+    let batch = backend.batch();
+    let seq = backend.seq();
+    let n = pending.len();
+    debug_assert!(n >= 1 && n <= batch);
+    let mut ids = Vec::with_capacity(batch * seq);
+    let mut tgt = Vec::with_capacity(batch * seq);
+    for r in &pending {
+        ids.extend_from_slice(&r.ids);
+        tgt.extend_from_slice(&r.targets);
+    }
+    for _ in n..batch {
+        ids.extend_from_slice(&pending[0].ids);
+        tgt.extend_from_slice(&pending[0].targets);
+    }
+    let c = backend.counters();
+    c.inc(&c.requests, n as u64);
+    c.inc(&c.padded_slots, (batch - n) as u64);
+    // Queue delay ends when the batch is assembled — execution time is the
+    // backend's latency histogram's job, not this field's.
+    let delays: Vec<Duration> = pending.iter().map(|r| r.enqueued.elapsed()).collect();
+    match backend.score(ids, tgt) {
+        Ok((nll, correct)) => {
+            for (i, r) in pending.into_iter().enumerate() {
+                let resp = ScoreResponse {
+                    nll: nll[i * seq..(i + 1) * seq].to_vec(),
+                    correct: correct[i * seq..(i + 1) * seq].to_vec(),
+                    queue_delay: delays[i],
+                };
+                let _ = r.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            c.inc(&c.errors, 1);
+            for r in pending {
+                let _ = r.reply.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+fn dec_queued(queued: &AtomicUsize, global_queued: &AtomicUsize, by: usize) {
+    queued.fetch_sub(by, Ordering::Relaxed);
+    global_queued.fetch_sub(by, Ordering::Relaxed);
+}
+
+#[allow(clippy::too_many_arguments)]
 fn batch_loop(
-    service: Arc<ModelService>,
-    rx: Receiver<ScoreRequest>,
+    backend: Arc<dyn ScoreBackend>,
+    rx: Receiver<Pending>,
     stop: Arc<AtomicBool>,
+    abort: Arc<AtomicBool>,
     queued: Arc<AtomicUsize>,
+    global_queued: Arc<AtomicUsize>,
+    submitting: Arc<AtomicUsize>,
     max_wait: Duration,
 ) {
-    let batch = service.batch();
-    let seq = service.seq();
+    let batch = backend.batch().max(1);
     loop {
         if stop.load(Ordering::SeqCst) {
-            return;
+            break;
         }
         // Block for the first request (with timeout so `stop` is honoured).
         let first = match rx.recv_timeout(Duration::from_millis(20)) {
             Ok(r) => r,
             Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => return,
+            Err(RecvTimeoutError::Disconnected) => break,
         };
         let mut pending = vec![first];
         let deadline = Instant::now() + max_wait;
-        // Fill the batch until full or deadline.
-        while pending.len() < batch {
+        // Fill the batch until full, deadline, or stop (short waits so a
+        // stop during a long deadline is noticed promptly).
+        while pending.len() < batch && !stop.load(Ordering::SeqCst) {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            let step = (deadline - now).min(Duration::from_millis(20));
+            match rx.recv_timeout(step) {
                 Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        queued.fetch_sub(pending.len(), Ordering::Relaxed);
-        // Assemble [batch, seq]; pad tail rows with the first request.
-        let n = pending.len();
-        let mut ids = Vec::with_capacity(batch * seq);
-        let mut tgt = Vec::with_capacity(batch * seq);
-        let mut bad_shape = false;
-        for r in &pending {
-            if r.ids.len() != seq || r.targets.len() != seq {
-                bad_shape = true;
+        dec_queued(&queued, &global_queued, pending.len());
+        run_batch(&backend, pending);
+    }
+    // Shutdown: the stop flag rejects new submitters, so the channel holds
+    // a bounded backlog. Graceful stop executes it in full batches without
+    // deadline waits; abort fails each request explicitly. Either way no
+    // queued request is silently dropped: the loop only exits after a
+    // sweep that (a) found the channel empty and (b) started after
+    // `submitting` was observed at 0 — i.e. after every racing submitter
+    // had either sent (SeqCst-ordered before its decrement, hence visible
+    // to that sweep) or been rejected by the stop flag.
+    let hard = abort.load(Ordering::SeqCst);
+    let mut confirmed_idle = false;
+    loop {
+        let mut pending = Vec::new();
+        while pending.len() < batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
             }
         }
-        if bad_shape {
-            for r in pending {
-                let _ = r.reply.send(Err(format!(
-                    "request must be exactly seq={seq} tokens"
-                )));
+        if pending.is_empty() {
+            if confirmed_idle {
+                break;
+            }
+            if submitting.load(Ordering::SeqCst) == 0 {
+                confirmed_idle = true; // one more sweep, then exit
+            } else {
+                std::thread::sleep(Duration::from_micros(200));
             }
             continue;
         }
-        for r in &pending {
-            ids.extend_from_slice(&r.ids);
-            tgt.extend_from_slice(&r.targets);
-        }
-        for _ in n..batch {
-            ids.extend_from_slice(&pending[0].ids);
-            tgt.extend_from_slice(&pending[0].targets);
-        }
-        service
-            .counters
-            .inc(&service.counters.requests, n as u64);
-        service
-            .counters
-            .inc(&service.counters.padded_slots, (batch - n) as u64);
-        match service.score(ids, tgt) {
-            Ok((nll, correct)) => {
-                for (i, r) in pending.into_iter().enumerate() {
-                    let resp = ScoreResponse {
-                        nll: nll[i * seq..(i + 1) * seq].to_vec(),
-                        correct: correct[i * seq..(i + 1) * seq].to_vec(),
-                        queue_delay: r.enqueued.elapsed(),
-                    };
-                    let _ = r.reply.send(Ok(resp));
-                }
+        confirmed_idle = false;
+        dec_queued(&queued, &global_queued, pending.len());
+        if hard {
+            for r in pending {
+                let _ = r
+                    .reply
+                    .send(Err("batcher shutting down: request not executed".to_string()));
             }
-            Err(e) => {
-                service.counters.inc(&service.counters.errors, 1);
-                for r in pending {
-                    let _ = r.reply.send(Err(e.clone()));
-                }
-            }
+        } else {
+            run_batch(&backend, pending);
         }
     }
 }
@@ -178,77 +367,293 @@ fn batch_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine_thread::EngineHandle;
-    use crate::coordinator::service::QuantSpec;
-    use crate::model::{corpus, ParamSet};
+    use std::sync::atomic::AtomicU64;
+
+    /// Deterministic in-memory backend: nll[i] = ids[i] * 0.5, correct[i] =
+    /// targets[i]. Each row's result is a pure function of that row, so any
+    /// cross-request interleaving inside the batcher shows up as a value
+    /// mismatch. `delay` simulates engine latency.
+    struct MockBackend {
+        batch: usize,
+        seq: usize,
+        delay: Duration,
+        counters: Counters,
+        /// Batches that have *entered* score() (possibly still sleeping).
+        entered: AtomicU64,
+        fail: AtomicBool,
+    }
+
+    impl MockBackend {
+        fn new(batch: usize, seq: usize, delay_ms: u64) -> Arc<MockBackend> {
+            Arc::new(MockBackend {
+                batch,
+                seq,
+                delay: Duration::from_millis(delay_ms),
+                counters: Counters::default(),
+                entered: AtomicU64::new(0),
+                fail: AtomicBool::new(false),
+            })
+        }
+    }
+
+    impl ScoreBackend for MockBackend {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn seq(&self) -> usize {
+            self.seq
+        }
+
+        fn counters(&self) -> &Counters {
+            &self.counters
+        }
+
+        fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
+            assert_eq!(ids.len(), self.batch * self.seq, "batcher must pad to full shape");
+            assert_eq!(targets.len(), self.batch * self.seq);
+            self.entered.fetch_add(1, Ordering::SeqCst);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            if self.fail.load(Ordering::Relaxed) {
+                return Err("mock backend failure".into());
+            }
+            let nll = ids.iter().map(|&v| v as f32 * 0.5).collect();
+            Ok((nll, targets))
+        }
+    }
+
+    /// Spin until `cond` holds (bounded; panics on timeout).
+    fn wait_for(cond: impl Fn() -> bool, what: &str) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn row(start: i32, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let ids: Vec<i32> = (start..start + seq as i32).collect();
+        let tgt: Vec<i32> = ids.iter().map(|v| v + 1).collect();
+        (ids, tgt)
+    }
+
+    fn check_response(ids: &[i32], tgt: &[i32], resp: &ScoreResponse) {
+        assert_eq!(resp.nll.len(), ids.len());
+        for (a, &b) in resp.nll.iter().zip(ids) {
+            assert_eq!(*a, b as f32 * 0.5, "row got another request's result");
+        }
+        assert_eq!(resp.correct, tgt);
+    }
 
     #[test]
-    fn batched_results_match_direct_scoring() {
-        if !crate::util::artifacts_available("artifacts") {
-            return;
-        }
-        let (eng, _th) = EngineHandle::spawn("artifacts").expect("spawn");
-        let meta = eng.manifest().config("tiny").unwrap().clone();
-        let params = ParamSet::init(&meta, 21);
-        let service = Arc::new(
-            ModelService::prepare(
-                &eng,
-                "tiny",
-                &params,
-                QuantSpec { family: "nf4".into(), block_size: 64 },
-            )
-            .unwrap(),
+    fn batched_results_are_per_request() {
+        let backend = MockBackend::new(4, 8, 0);
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_millis(10), ..Default::default() },
         );
-        let (handle, mut batcher) =
-            Batcher::spawn(Arc::clone(&service), Duration::from_millis(30), 64);
-
-        let data = corpus::english(30_000, 5);
-        let seq = meta.seq_len;
-        // 5 concurrent single-sequence requests (one partial batch + pads)
-        let mut joins = Vec::new();
-        for r in 0..5usize {
-            let h = handle.clone();
-            let ids: Vec<i32> = data[r * 200..r * 200 + seq].iter().map(|&c| c as i32).collect();
-            let tgt: Vec<i32> =
-                data[r * 200 + 1..r * 200 + seq + 1].iter().map(|&c| c as i32).collect();
-            joins.push(std::thread::spawn(move || {
-                (ids.clone(), tgt.clone(), h.score(ids, tgt).expect("scored"))
-            }));
-        }
+        let joins: Vec<_> = (0..10)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let (ids, tgt) = row(i * 100, 8);
+                    let resp = h.score(ids.clone(), tgt.clone()).expect("scored");
+                    check_response(&ids, &tgt, &resp);
+                })
+            })
+            .collect();
         for j in joins {
-            let (ids, tgt, resp) = j.join().unwrap();
-            assert_eq!(resp.nll.len(), seq);
-            // Cross-check against a direct full-batch score with this row
-            // broadcast into all slots.
-            let mut bids = Vec::new();
-            let mut btgt = Vec::new();
-            for _ in 0..meta.batch {
-                bids.extend_from_slice(&ids);
-                btgt.extend_from_slice(&tgt);
-            }
-            let (nll, _) = service.score(bids, btgt).unwrap();
-            for (a, b) in resp.nll.iter().zip(&nll[..seq]) {
-                assert!((a - b).abs() < 1e-4, "batched vs direct: {a} vs {b}");
-            }
+            j.join().unwrap();
         }
-        assert!(service.counters.batch_efficiency() <= 1.0);
+        batcher.stop();
+        let c = backend.counters.snapshot();
+        assert_eq!(c.requests, 10);
+        assert!(backend.counters.batch_efficiency() <= 1.0);
+    }
+
+    #[test]
+    fn wrong_length_request_rejected_without_queueing() {
+        let backend = MockBackend::new(2, 8, 0);
+        let (handle, mut batcher) =
+            Batcher::spawn(backend as Arc<dyn ScoreBackend>, BatcherConfig::default());
+        let r = handle.score(vec![1, 2, 3], vec![2, 3, 4]);
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("seq=8"));
+        assert_eq!(handle.queued(), 0);
         batcher.stop();
     }
 
     #[test]
-    fn wrong_length_request_rejected() {
-        if !crate::util::artifacts_available("artifacts") {
-            return;
-        }
-        let (eng, _th) = EngineHandle::spawn("artifacts").expect("spawn");
-        let meta = eng.manifest().config("tiny").unwrap().clone();
-        let params = ParamSet::init(&meta, 22);
-        let service =
-            Arc::new(ModelService::prepare(&eng, "tiny", &params, QuantSpec::fp()).unwrap());
-        let (handle, mut batcher) =
-            Batcher::spawn(service, Duration::from_millis(5), 8);
-        let r = handle.score(vec![1, 2, 3], vec![2, 3, 4]);
-        assert!(r.is_err());
+    fn stop_drains_queued_requests() {
+        // Batch of 16 never fills from 10 requests, and the deadline is
+        // far away — so at stop() time most requests sit in the queue. The
+        // drain contract says every one of them still gets a real result.
+        let backend = MockBackend::new(16, 4, 5);
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_secs(5), ..Default::default() },
+        );
+        let started = Arc::new(AtomicUsize::new(0));
+        let joins: Vec<_> = (0..10)
+            .map(|i| {
+                let h = handle.clone();
+                let started = Arc::clone(&started);
+                std::thread::spawn(move || {
+                    let (ids, tgt) = row(i * 10, 4);
+                    started.fetch_add(1, Ordering::SeqCst);
+                    (ids.clone(), tgt.clone(), h.score(ids, tgt))
+                })
+            })
+            .collect();
+        // Stop once all clients are submitting — well before the 5s
+        // deadline, so the requests are still queued, not batched.
+        wait_for(|| started.load(Ordering::SeqCst) == 10, "clients to submit");
+        std::thread::sleep(Duration::from_millis(50));
         batcher.stop();
+        // Every admitted request must be drained to a real result; a client
+        // preempted between `started` and admission may instead get the
+        // explicit shutdown rejection — but never a silent drop.
+        let mut ok = 0;
+        let mut rejected = 0;
+        for j in joins {
+            let (ids, tgt, resp) = j.join().unwrap();
+            match resp {
+                Ok(resp) => {
+                    check_response(&ids, &tgt, &resp);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(e.contains("shutting down"), "unexpected error: {e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!(ok + rejected, 10, "no request may be silently dropped");
+        assert!(ok >= 1, "at least the queued requests must drain to results");
+        assert_eq!(backend.counters.snapshot().requests, ok as u64);
+        // New submissions after stop fail fast.
+        let (ids, tgt) = row(0, 4);
+        assert!(handle.score(ids, tgt).is_err());
+    }
+
+    #[test]
+    fn abort_fails_queued_with_explicit_error() {
+        // batch=1 + slow backend: one request is in flight, the rest queue
+        // behind it. abort() must flush the in-flight batch but fail the
+        // queued ones with a "shutting down" error.
+        let backend = MockBackend::new(1, 4, 80);
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let joins: Vec<_> = (0..6)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let (ids, tgt) = row(i * 10, 4);
+                    h.score(ids, tgt)
+                })
+            })
+            .collect();
+        // Abort the moment the first batch is provably in flight (the mock
+        // sleeps 80 ms inside score, so the abort lands mid-execution).
+        wait_for(|| backend.entered.load(Ordering::SeqCst) >= 1, "first batch in flight");
+        batcher.abort();
+        let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let ok = results.iter().filter(|r| r.is_ok()).count();
+        // A racing submitter can also hit the sender-side "batcher stopped"
+        // error; both are explicit, so both satisfy the no-silent-drop
+        // contract.
+        let shut = results
+            .iter()
+            .filter(
+                |r| matches!(r, Err(e) if e.contains("shutting down") || e.contains("batcher stopped")),
+            )
+            .count();
+        assert!(ok >= 1, "the in-flight batch must complete");
+        assert!(shut >= 1, "queued requests must fail with an explicit error");
+        assert_eq!(ok + shut, 6, "no request may be silently dropped: {results:?}");
+    }
+
+    #[test]
+    fn service_queue_quota_rejects_excess() {
+        let backend = MockBackend::new(1, 4, 100);
+        let (handle, mut batcher) = Batcher::spawn(
+            backend as Arc<dyn ScoreBackend>,
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                max_queue: 2,
+                ..Default::default()
+            },
+        );
+        let joins: Vec<_> = (0..8)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let (ids, tgt) = row(i * 10, 4);
+                    h.score(ids, tgt)
+                })
+            })
+            .collect();
+        let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let ok = results.iter().filter(|r| r.is_ok()).count();
+        let rejected = results
+            .iter()
+            .filter(|r| matches!(r, Err(e) if e.contains("service queue full")))
+            .count();
+        assert!(ok >= 1);
+        assert!(rejected >= 1, "quota of 2 must reject some of 8 bursty requests");
+        assert_eq!(ok + rejected, 8, "{results:?}");
+        batcher.stop();
+    }
+
+    #[test]
+    fn global_quota_spans_services() {
+        // Two services share one global queued counter: when it is at the
+        // router-wide quota — regardless of which service's queue holds the
+        // requests — both handles must reject, even though each service's
+        // own quota (100) is untouched.
+        let global = Arc::new(AtomicUsize::new(0));
+        let cfg = |g: &Arc<AtomicUsize>| BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            max_queue: 100,
+            global_queued: Arc::clone(g),
+            max_global_queue: 8,
+        };
+        let b1 = MockBackend::new(1, 4, 0);
+        let b2 = MockBackend::new(1, 4, 0);
+        let (h1, mut batcher1) = Batcher::spawn(b1 as Arc<dyn ScoreBackend>, cfg(&global));
+        let (h2, mut batcher2) = Batcher::spawn(b2 as Arc<dyn ScoreBackend>, cfg(&global));
+        let (ids, tgt) = row(0, 4);
+        // Simulate 8 requests queued elsewhere in the router.
+        global.store(8, Ordering::SeqCst);
+        for h in [&h1, &h2] {
+            let r = h.score(ids.clone(), tgt.clone());
+            assert!(matches!(&r, Err(e) if e.contains("router queue full")), "{r:?}");
+        }
+        global.store(0, Ordering::SeqCst);
+        for h in [&h1, &h2] {
+            h.score(ids.clone(), tgt.clone()).expect("admitted once the router drains");
+        }
+        batcher1.stop();
+        batcher2.stop();
+        assert_eq!(global.load(Ordering::SeqCst), 0, "served requests must return permits");
+    }
+
+    #[test]
+    fn backend_error_fans_out_to_all_requests() {
+        let backend = MockBackend::new(4, 4, 0);
+        backend.fail.store(true, Ordering::Relaxed);
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() },
+        );
+        let (ids, tgt) = row(7, 4);
+        let r = handle.score(ids, tgt);
+        assert!(matches!(r, Err(e) if e.contains("mock backend failure")));
+        batcher.stop();
+        assert_eq!(backend.counters.snapshot().errors, 1);
     }
 }

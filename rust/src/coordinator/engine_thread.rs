@@ -13,6 +13,15 @@ pub enum OwnedArg {
     Cached(String),
 }
 
+/// Device-residency stats (what the router snapshot reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Named device-resident buffers (weights, code tables).
+    pub cached_buffers: usize,
+    /// Compiled executables held by the engine.
+    pub executables: usize,
+}
+
 enum Request {
     Upload {
         key: String,
@@ -32,6 +41,9 @@ enum Request {
     Evict {
         prefix: String,
         reply: Sender<()>,
+    },
+    Stats {
+        reply: Sender<EngineStats>,
     },
     Shutdown,
 }
@@ -85,6 +97,12 @@ impl EngineHandle {
                         Request::Evict { prefix, reply } => {
                             engine.evict(&prefix);
                             let _ = reply.send(());
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send(EngineStats {
+                                cached_buffers: engine.cached_keys(),
+                                executables: engine.loaded_count(),
+                            });
                         }
                         Request::Shutdown => break,
                     }
@@ -142,6 +160,17 @@ impl EngineHandle {
         if self.tx.send(Request::Evict { prefix: prefix.into(), reply: rtx }).is_ok() {
             let _ = rrx.recv();
         }
+    }
+
+    /// Device-residency stats; zeros if the engine thread is gone.
+    pub fn stats(&self) -> EngineStats {
+        let (rtx, rrx) = channel();
+        if self.tx.send(Request::Stats { reply: rtx }).is_ok() {
+            if let Ok(s) = rrx.recv() {
+                return s;
+            }
+        }
+        EngineStats::default()
     }
 
     fn shutdown(&self) {

@@ -84,9 +84,32 @@ pub struct Counters {
     pub errors: AtomicU64,
 }
 
+/// A point-in-time copy of [`Counters`] (what the router snapshot reports).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+    pub padded_slots: u64,
+    pub errors: u64,
+}
+
 impl Counters {
     pub fn inc(&self, c: &AtomicU64, by: u64) {
         c.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough copy for reporting (individual Relaxed loads; the
+    /// counters are monotone so a snapshot is never ahead of reality by
+    /// more than the in-flight batch).
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            tokens: self.tokens.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+        }
     }
 
     pub fn batch_efficiency(&self) -> f64 {
@@ -148,5 +171,20 @@ mod tests {
         c.inc(&c.requests, 6);
         c.inc(&c.padded_slots, 2);
         assert!((c.batch_efficiency() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_snapshot_copies_all_fields() {
+        let c = Counters::default();
+        c.inc(&c.requests, 3);
+        c.inc(&c.batches, 2);
+        c.inc(&c.tokens, 512);
+        c.inc(&c.padded_slots, 1);
+        c.inc(&c.errors, 4);
+        let s = c.snapshot();
+        assert_eq!(
+            s,
+            CounterSnapshot { requests: 3, batches: 2, tokens: 512, padded_slots: 1, errors: 4 }
+        );
     }
 }

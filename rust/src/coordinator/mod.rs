@@ -1,26 +1,49 @@
-//! L3 coordinator: engine thread, model services, dynamic batcher,
-//! training driver, and metrics.
+//! L3 coordinator: the multi-tenant serving stack — router, per-service
+//! dynamic batchers, model services, engine thread — plus the training
+//! driver and metrics.
 //!
 //! Architecture (vLLM-router shape, CPU-scale):
 //!
 //! ```text
-//! request threads ──► BatcherHandle ──► Batcher (size/deadline policy)
-//!                                          │ [batch, seq]
-//!                                          ▼
-//!                    ModelService (device-resident quantized weights)
-//!                                          │ channel
-//!                                          ▼
-//!                    EngineHandle ──► engine thread (owns PJRT client)
+//! request threads ──► Router::score(ScoreRequest{key: model×code×B, …})
+//!                        │ admission control (global + per-service quotas)
+//!                        ▼
+//!                per-service BatcherHandle ──► Batcher (size/deadline)
+//!                        │ [batch, seq]
+//!                        ▼
+//!                ModelService (device-resident quantized weights)
+//!                        │ channel
+//!                        ▼
+//!                EngineHandle ──► ONE engine thread (owns the PJRT client)
 //! ```
+//!
+//! The [`Router`] keys prepared [`ModelService`]s by [`ServiceKey`]
+//! (model × [`QuantSpec`]) and prepares them lazily on first request, so
+//! many (code × block-size) configurations stay device-resident behind a
+//! single engine thread and can be A/B-served concurrently — the serving
+//! shape the paper's NF4-vs-AF4-vs-balanced comparisons need.
+//!
+//! Contracts:
+//! - **Admission**: `Router::score` fails fast — never queues — when the
+//!   per-service queue or the router-wide queue is at quota (see
+//!   [`RouterConfig`]); quotas are counted in queued requests.
+//! - **Drain**: stopping a service (release, re-registration, or router
+//!   shutdown) first stops its batcher, which flushes the in-flight batch
+//!   and drains everything queued through the engine (or fails it with an
+//!   explicit error on abort) — queued requests are never silently
+//!   dropped. The engine thread stops only after all batchers have
+//!   drained.
 
 pub mod batcher;
 pub mod engine_thread;
 pub mod metrics;
+pub mod router;
 pub mod service;
 pub mod trainer;
 
-pub use batcher::{Batcher, BatcherHandle, ScoreResponse};
-pub use engine_thread::{EngineHandle, EngineThread, OwnedArg};
-pub use metrics::{Counters, LatencyHistogram};
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
+pub use engine_thread::{EngineHandle, EngineStats, EngineThread, OwnedArg};
+pub use metrics::{CounterSnapshot, Counters, LatencyHistogram};
+pub use router::{Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey, ServiceStat};
 pub use service::{ModelService, QuantSpec};
 pub use trainer::{ensure_checkpoint, train, TrainConfig, TrainResult};

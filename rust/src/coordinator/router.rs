@@ -1,0 +1,687 @@
+//! Router: the multi-tenant serving front-end — one engine thread, many
+//! (model × code × block-size) services.
+//!
+//! ```text
+//! request threads ──► Router::score(ScoreRequest{key, …})
+//!                        │ admission control (global + per-service quotas)
+//!                        ▼
+//!                per-service BatcherHandle ──► Batcher (size/deadline)
+//!                        │ [batch, seq]
+//!                        ▼
+//!                ModelService (device-resident quantized weights)
+//!                        │ channel
+//!                        ▼
+//!                EngineHandle ──► one engine thread (owns the PJRT client)
+//! ```
+//!
+//! The router owns the engine thread and a registry of services keyed by
+//! [`ServiceKey`] (model name + [`QuantSpec`]). Services are prepared
+//! **lazily on first request**: the first `score`/`score_batch` for an
+//! unseen key quantizes the registered checkpoint, uploads the weights
+//! once (device-resident under a per-service key prefix), and compiles the
+//! scoring executable — concurrent first requests for the same key block
+//! on a single preparation, and the artifact/code caches are shared, so
+//! e.g. `nf4@64` and `af4@64` reuse one compiled `score_q64_*` executable.
+//!
+//! Shutdown contract: [`Router::shutdown`] (or drop) first stops every
+//! batcher — each one flushes its in-flight batch and drains its queue
+//! through the engine — and only then stops the engine thread, so draining
+//! work never races device teardown.
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
+use crate::coordinator::engine_thread::{EngineHandle, EngineThread};
+use crate::coordinator::service::{ModelService, QuantSpec};
+use crate::model::ParamSet;
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Identifies one served configuration: which model, quantized how.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ServiceKey {
+    pub model: String,
+    pub spec: QuantSpec,
+}
+
+impl ServiceKey {
+    pub fn new(model: &str, spec: QuantSpec) -> ServiceKey {
+        ServiceKey { model: model.to_string(), spec }
+    }
+
+    /// Unquantized reference service for `model`.
+    pub fn fp(model: &str) -> ServiceKey {
+        Self::new(model, QuantSpec::fp())
+    }
+
+    /// Quantized service: `model` served as `family@block_size`.
+    pub fn quant(model: &str, family: &str, block_size: usize) -> ServiceKey {
+        Self::new(model, QuantSpec { family: family.to_string(), block_size })
+    }
+}
+
+impl std::fmt::Display for ServiceKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.model, self.spec.label())
+    }
+}
+
+/// A routed request: the key names the service, the payload is one
+/// sequence of exactly `seq` tokens (plus next-token targets).
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    pub key: ServiceKey,
+    pub ids: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+impl ScoreRequest {
+    pub fn new(key: &ServiceKey, ids: Vec<i32>, targets: Vec<i32>) -> ScoreRequest {
+        ScoreRequest { key: key.clone(), ids, targets }
+    }
+}
+
+/// Router-wide serving policy.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Dynamic-batching deadline per service.
+    pub max_wait: Duration,
+    /// Per-service queue quota.
+    pub service_queue: usize,
+    /// Router-wide queue quota (sum of queued requests across services).
+    pub global_queue: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { max_wait: Duration::from_millis(20), service_queue: 256, global_queue: 2048 }
+    }
+}
+
+/// One prepared service: the device-resident model plus its batcher.
+struct ServiceEntry {
+    service: Arc<ModelService>,
+    handle: BatcherHandle,
+    batcher: Mutex<Batcher>,
+}
+
+impl Drop for ServiceEntry {
+    /// Safety net for entries orphaned by a racing release/re-registration
+    /// (their slot was removed while preparation was still in flight, so
+    /// explicit teardown never saw them): drain the batcher and evict this
+    /// instance's generation-tagged buffers. Idempotent with the explicit
+    /// teardown path; eviction on a stopped engine is a no-op.
+    fn drop(&mut self) {
+        self.batcher.lock().unwrap().stop();
+        self.service.release();
+    }
+}
+
+/// A lazily-prepared registry slot. The map lock is held only to fetch or
+/// insert the slot; the (slow) preparation runs under the slot's
+/// `OnceLock`, so preparing one service never blocks traffic to others,
+/// and two threads racing on the same cold key prepare it exactly once.
+type Slot = Arc<OnceLock<Result<Arc<ServiceEntry>, String>>>;
+
+pub struct Router {
+    eng: EngineHandle,
+    engine_thread: Mutex<Option<EngineThread>>,
+    cfg: RouterConfig,
+    models: Mutex<HashMap<String, Arc<ParamSet>>>,
+    services: Mutex<HashMap<ServiceKey, Slot>>,
+    global_queued: Arc<AtomicUsize>,
+}
+
+impl Router {
+    /// Spawn the engine thread over `artifacts_dir` with default policy.
+    pub fn new(artifacts_dir: &str) -> Result<Router, String> {
+        Self::with_config(artifacts_dir, RouterConfig::default())
+    }
+
+    pub fn with_config(artifacts_dir: &str, cfg: RouterConfig) -> Result<Router, String> {
+        let (eng, thread) = EngineHandle::spawn(artifacts_dir)?;
+        Ok(Router {
+            eng,
+            engine_thread: Mutex::new(Some(thread)),
+            cfg,
+            models: Mutex::new(HashMap::new()),
+            services: Mutex::new(HashMap::new()),
+            global_queued: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    /// The shared engine handle (training and raw artifact execution go
+    /// straight to the engine; only scoring is routed).
+    pub fn engine(&self) -> &EngineHandle {
+        &self.eng
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.eng.manifest()
+    }
+
+    /// Register (or replace) the parameters served for `model`. Replacing
+    /// releases every service already prepared for the model — their
+    /// batchers drain first, then their device weights are evicted — so
+    /// later requests lazily re-prepare against the new checkpoint.
+    /// Requests racing a re-registration may still complete against the
+    /// old weights. Returns the shared params for callers that keep using
+    /// them host-side.
+    pub fn register_model(&self, model: &str, params: ParamSet) -> Result<Arc<ParamSet>, String> {
+        let meta = self.eng.manifest().config(model)?;
+        params.validate(meta)?;
+        let params = Arc::new(params);
+        self.models.lock().unwrap().insert(model.to_string(), Arc::clone(&params));
+        let stale: Vec<Slot> = {
+            let mut services = self.services.lock().unwrap();
+            let keys: Vec<ServiceKey> =
+                services.keys().filter(|k| k.model == model).cloned().collect();
+            keys.iter().filter_map(|k| services.remove(k)).collect()
+        };
+        for slot in stale {
+            Self::teardown_slot(&slot);
+        }
+        Ok(params)
+    }
+
+    /// Models currently registered (sorted).
+    pub fn registered_models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Score one sequence through the keyed service's dynamic batcher.
+    /// Lazily prepares the service on first use; fails fast under
+    /// backpressure (global or per-service queue quota).
+    pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, String> {
+        let entry = self.entry(&req.key)?;
+        entry.handle.score(req.ids, req.targets)
+    }
+
+    /// Full-batch fast path: score one pre-assembled [batch, seq] batch
+    /// directly on the keyed service (no dynamic batching; still serialized
+    /// through the shared engine thread). The eval/exp flows use this.
+    pub fn score_batch(
+        &self,
+        key: &ServiceKey,
+        ids: Vec<i32>,
+        targets: Vec<i32>,
+    ) -> Result<(Vec<f32>, Vec<i32>), String> {
+        self.entry(key)?.service.score(ids, targets)
+    }
+
+    /// Mean NLL/token of the keyed service over pre-assembled eval batches.
+    pub fn mean_nll(&self, key: &ServiceKey, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<f64, String> {
+        self.entry(key)?.service.mean_nll(batches)
+    }
+
+    /// Eagerly prepare a service (optional warmup; `score` does it lazily).
+    pub fn prepare(&self, key: &ServiceKey) -> Result<(), String> {
+        self.entry(key).map(|_| ())
+    }
+
+    /// Batch/seq shape of the keyed service's model (prepares it if cold).
+    pub fn shape(&self, key: &ServiceKey) -> Result<(usize, usize), String> {
+        let e = self.entry(key)?;
+        Ok((e.service.batch(), e.service.seq()))
+    }
+
+    /// Drain and evict one service. Returns true if it had been prepared.
+    pub fn release(&self, key: &ServiceKey) -> bool {
+        let slot = self.services.lock().unwrap().remove(key);
+        match slot {
+            Some(slot) => {
+                let had = matches!(slot.get(), Some(Ok(_)));
+                Self::teardown_slot(&slot);
+                had
+            }
+            None => false,
+        }
+    }
+
+    /// Number of currently prepared (device-resident) services.
+    pub fn service_count(&self) -> usize {
+        self.services
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s.get(), Some(Ok(_))))
+            .count()
+    }
+
+    /// Requests queued across all services right now.
+    pub fn queued(&self) -> usize {
+        self.global_queued.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time report over every prepared service plus engine
+    /// residency stats.
+    pub fn snapshot(&self) -> RouterSnapshot {
+        let entries: Vec<(ServiceKey, Arc<ServiceEntry>)> = {
+            let services = self.services.lock().unwrap();
+            services
+                .iter()
+                .filter_map(|(k, s)| {
+                    s.get().and_then(|r| r.as_ref().ok()).map(|e| (k.clone(), Arc::clone(e)))
+                })
+                .collect()
+        };
+        let mut stats: Vec<ServiceStat> = entries
+            .iter()
+            .map(|(key, e)| {
+                let c = e.service.counters.snapshot();
+                let lat = &e.service.latency;
+                ServiceStat {
+                    key: key.to_string(),
+                    requests: c.requests,
+                    batches: c.batches,
+                    tokens: c.tokens,
+                    errors: c.errors,
+                    padded_slots: c.padded_slots,
+                    batch_efficiency: e.service.counters.batch_efficiency(),
+                    queued: e.handle.queued(),
+                    p50_us: lat.quantile(0.50).as_micros() as u64,
+                    p99_us: lat.quantile(0.99).as_micros() as u64,
+                    mean_us: lat.mean().as_micros() as u64,
+                }
+            })
+            .collect();
+        stats.sort_by(|a, b| a.key.cmp(&b.key));
+        let estats = self.eng.stats();
+        RouterSnapshot {
+            services: stats,
+            queued: self.queued(),
+            device_buffers: estats.cached_buffers,
+            executables: estats.executables,
+            models: self.registered_models(),
+        }
+    }
+
+    /// Graceful shutdown: drain every service's batcher through the engine
+    /// (flushing in-flight batches), then stop the engine thread. Dropping
+    /// the router does the same.
+    pub fn shutdown(self) {
+        self.shutdown_inner();
+    }
+
+    fn entry(&self, key: &ServiceKey) -> Result<Arc<ServiceEntry>, String> {
+        let slot: Slot = {
+            let mut map = self.services.lock().unwrap();
+            Arc::clone(map.entry(key.clone()).or_insert_with(|| Arc::new(OnceLock::new())))
+        };
+        let res = slot.get_or_init(|| self.prepare_entry(key));
+        match res {
+            Ok(entry) => Ok(Arc::clone(entry)),
+            Err(e) => {
+                // Don't cache failures: drop the slot (if it is still ours)
+                // so a later request can retry — e.g. after the model gets
+                // registered.
+                let mut map = self.services.lock().unwrap();
+                if let Some(cur) = map.get(key) {
+                    if Arc::ptr_eq(cur, &slot) {
+                        map.remove(key);
+                    }
+                }
+                Err(e.clone())
+            }
+        }
+    }
+
+    fn prepare_entry(&self, key: &ServiceKey) -> Result<Arc<ServiceEntry>, String> {
+        // NB: take the params clone in its own statement so the `models`
+        // guard is dropped before the error path calls
+        // `registered_models()` (which locks `models` again).
+        let params = self.models.lock().unwrap().get(&key.model).cloned();
+        let params = params.ok_or_else(|| {
+            format!(
+                "model {:?} not registered with the router (registered: {:?})",
+                key.model,
+                self.registered_models()
+            )
+        })?;
+        crate::log_info!("router: preparing service {key}");
+        let service =
+            Arc::new(ModelService::prepare(&self.eng, &key.model, &params, key.spec.clone())?);
+        let cfg = BatcherConfig {
+            max_wait: self.cfg.max_wait,
+            max_queue: self.cfg.service_queue,
+            global_queued: Arc::clone(&self.global_queued),
+            max_global_queue: self.cfg.global_queue,
+        };
+        let (handle, batcher) =
+            Batcher::spawn(Arc::clone(&service) as Arc<dyn ScoreBackend>, cfg);
+        Ok(Arc::new(ServiceEntry { service, handle, batcher: Mutex::new(batcher) }))
+    }
+
+    /// Stop a removed slot's batcher (graceful drain) and evict its
+    /// weights. No-op for slots whose preparation failed or never ran.
+    fn teardown_slot(slot: &Slot) {
+        if let Some(Ok(entry)) = slot.get() {
+            entry.batcher.lock().unwrap().stop();
+            entry.service.release();
+        }
+    }
+
+    fn shutdown_inner(&self) {
+        let slots: Vec<Slot> = self.services.lock().unwrap().drain().map(|(_, s)| s).collect();
+        for slot in &slots {
+            Self::teardown_slot(slot);
+        }
+        // Only after every batcher has drained may the engine thread stop.
+        if let Some(mut th) = self.engine_thread.lock().unwrap().take() {
+            th.stop(&self.eng);
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Per-service row of a [`RouterSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ServiceStat {
+    /// Display form of the service key (`model/family@B` or `model/fp`).
+    pub key: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+    pub errors: u64,
+    pub padded_slots: u64,
+    pub batch_efficiency: f64,
+    pub queued: usize,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: u64,
+}
+
+impl ServiceStat {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("key", Json::Str(self.key.clone()))
+            .set("requests", Json::Num(self.requests as f64))
+            .set("batches", Json::Num(self.batches as f64))
+            .set("tokens", Json::Num(self.tokens as f64))
+            .set("errors", Json::Num(self.errors as f64))
+            .set("padded_slots", Json::Num(self.padded_slots as f64))
+            .set("batch_efficiency", Json::Num(self.batch_efficiency))
+            .set("queued", Json::Num(self.queued as f64))
+            .set("p50_us", Json::Num(self.p50_us as f64))
+            .set("p99_us", Json::Num(self.p99_us as f64))
+            .set("mean_us", Json::Num(self.mean_us as f64));
+        o
+    }
+}
+
+impl std::fmt::Display for ServiceStat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<24} req {:>6}  batches {:>5}  err {:>3}  eff {:>5.1}%  queued {:>4}  p50≤{:>7}µs  p99≤{:>7}µs",
+            self.key,
+            self.requests,
+            self.batches,
+            self.errors,
+            self.batch_efficiency * 100.0,
+            self.queued,
+            self.p50_us,
+            self.p99_us,
+        )
+    }
+}
+
+/// Point-in-time view of the whole router.
+#[derive(Clone, Debug)]
+pub struct RouterSnapshot {
+    /// One row per prepared service, sorted by key.
+    pub services: Vec<ServiceStat>,
+    /// Requests queued across all services.
+    pub queued: usize,
+    /// Named device-resident buffers held by the engine.
+    pub device_buffers: usize,
+    /// Compiled executables held by the engine.
+    pub executables: usize,
+    /// Registered model names.
+    pub models: Vec<String>,
+}
+
+impl RouterSnapshot {
+    /// Row for one service key, if prepared.
+    pub fn get(&self, key: &ServiceKey) -> Option<&ServiceStat> {
+        let k = key.to_string();
+        self.services.iter().find(|s| s.key == k)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("services", Json::Arr(self.services.iter().map(|s| s.to_json()).collect()))
+            .set("queued", Json::Num(self.queued as f64))
+            .set("device_buffers", Json::Num(self.device_buffers as f64))
+            .set("executables", Json::Num(self.executables as f64))
+            .set(
+                "models",
+                Json::from_strs(&self.models.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+            );
+        o
+    }
+}
+
+impl std::fmt::Display for RouterSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "router: {} service(s), {} model(s), {} queued, {} device buffers, {} executables",
+            self.services.len(),
+            self.models.len(),
+            self.queued,
+            self.device_buffers,
+            self.executables
+        )?;
+        for s in &self.services {
+            writeln!(f, "  {s}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{corpus, BatchSampler, ParamSet};
+
+    fn router() -> Option<Router> {
+        if !crate::util::artifacts_available("artifacts") {
+            return None;
+        }
+        Some(Router::new("artifacts").expect("router"))
+    }
+
+    fn registered_router(seed: u64) -> Option<(Router, crate::runtime::ModelMeta)> {
+        let r = router()?;
+        let meta = r.manifest().config("tiny").unwrap().clone();
+        r.register_model("tiny", ParamSet::init(&meta, seed)).unwrap();
+        Some((r, meta))
+    }
+
+    #[test]
+    fn service_key_display_and_hash() {
+        let a = ServiceKey::quant("tiny", "nf4", 64);
+        let b = ServiceKey::quant("tiny", "nf4", 4096);
+        let c = ServiceKey::fp("tiny");
+        assert_eq!(a.to_string(), "tiny/nf4@64");
+        assert_eq!(c.to_string(), "tiny/fp");
+        let mut m = std::collections::HashMap::new();
+        m.insert(a.clone(), 1);
+        m.insert(b, 2);
+        m.insert(c, 3);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[&a], 1);
+    }
+
+    #[test]
+    fn unregistered_model_errors_and_is_retryable() {
+        let Some(r) = router() else { return };
+        let key = ServiceKey::quant("tiny", "nf4", 64);
+        let e = r.prepare(&key).unwrap_err();
+        assert!(e.contains("not registered"), "{e}");
+        assert_eq!(r.service_count(), 0);
+        // Registering afterwards heals the path (no cached failure).
+        let meta = r.manifest().config("tiny").unwrap().clone();
+        r.register_model("tiny", ParamSet::init(&meta, 1)).unwrap();
+        r.prepare(&key).expect("prepare after registration");
+        assert_eq!(r.service_count(), 1);
+    }
+
+    /// The acceptance scenario: ≥3 (code × B) configs device-resident
+    /// behind one engine thread, hit by concurrent clients, each request's
+    /// result exactly matching that service's direct full-batch scoring —
+    /// and the per-service counters tallying the submitted request counts.
+    #[test]
+    fn concurrent_multi_service_routing_is_correct_and_counted() {
+        let Some((r, meta)) = registered_router(21) else { return };
+        let keys = [
+            ServiceKey::quant("tiny", "nf4", 64),
+            ServiceKey::quant("tiny", "af4", 64),
+            ServiceKey::quant("tiny", "af4", 4096),
+        ];
+        let data = corpus::english(60_000, 5);
+        let seq = meta.seq_len;
+        let clients_per_service = 2usize;
+        let reqs_per_client = 2usize;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for (ki, key) in keys.iter().enumerate() {
+                for c in 0..clients_per_service {
+                    let r = &r;
+                    let data = &data;
+                    let key = key.clone();
+                    joins.push(s.spawn(move || {
+                        let mut out = Vec::new();
+                        for q in 0..reqs_per_client {
+                            let off = (ki * 31 + c * 7 + q) * 400;
+                            let ids: Vec<i32> =
+                                data[off..off + seq].iter().map(|&b| b as i32).collect();
+                            let tgt: Vec<i32> =
+                                data[off + 1..off + seq + 1].iter().map(|&b| b as i32).collect();
+                            let resp = r
+                                .score(ScoreRequest::new(&key, ids.clone(), tgt.clone()))
+                                .expect("routed score");
+                            assert_eq!(resp.nll.len(), seq);
+                            out.push((key.clone(), ids, tgt, resp));
+                        }
+                        out
+                    }));
+                }
+            }
+            for j in joins {
+                for (key, ids, tgt, resp) in j.join().unwrap() {
+                    // Reference: broadcast the row into a full direct batch
+                    // on the same service; the routed answer must match.
+                    let mut bids = Vec::new();
+                    let mut btgt = Vec::new();
+                    for _ in 0..meta.batch {
+                        bids.extend_from_slice(&ids);
+                        btgt.extend_from_slice(&tgt);
+                    }
+                    let (nll, _) = r.score_batch(&key, bids, btgt).unwrap();
+                    for (a, b) in resp.nll.iter().zip(&nll[..seq]) {
+                        assert!(
+                            (a - b).abs() < 1e-4,
+                            "{key}: routed vs direct: {a} vs {b} (cross-service interleaving?)"
+                        );
+                    }
+                }
+            }
+        });
+        // All three services live behind the one engine thread.
+        assert_eq!(r.service_count(), 3);
+        let snap = r.snapshot();
+        assert_eq!(snap.services.len(), 3);
+        let expected = (clients_per_service * reqs_per_client) as u64;
+        for key in &keys {
+            let stat = snap.get(key).expect("stat row");
+            assert_eq!(
+                stat.requests, expected,
+                "{key}: counters must tally exactly the submitted requests"
+            );
+            assert!(stat.batches >= 1);
+            assert!(stat.errors == 0);
+            assert!(stat.p99_us >= stat.p50_us);
+        }
+        assert_eq!(snap.queued, 0);
+        assert!(snap.device_buffers > 0);
+        // nf4@64 and af4@64 share the score_q64 executable; af4@4096 adds
+        // score_q4096 (+ the direct-score reference adds nothing new).
+        assert!(snap.executables >= 2);
+        r.shutdown();
+    }
+
+    #[test]
+    fn lazy_prepare_release_and_reregistration() {
+        let Some((r, meta)) = registered_router(31) else { return };
+        assert_eq!(r.service_count(), 0, "registration must not prepare eagerly");
+        let key = ServiceKey::quant("tiny", "nf4", 256);
+        let ids: Vec<i32> = vec![1; meta.batch * meta.seq_len];
+        let (nll_a, _) = r.score_batch(&key, ids.clone(), ids.clone()).unwrap();
+        assert_eq!(r.service_count(), 1, "first request prepares lazily");
+        r.score_batch(&key, ids.clone(), ids.clone()).unwrap();
+        assert_eq!(r.service_count(), 1, "second request reuses the service");
+        assert!(r.release(&key));
+        assert_eq!(r.service_count(), 0);
+        assert!(!r.release(&key), "double release is a no-op");
+        // Re-register with different params: the same key must now serve
+        // the new weights (fresh lazy prepare), not a stale cache.
+        r.register_model("tiny", ParamSet::init(&meta, 77)).unwrap();
+        let (nll_b, _) = r.score_batch(&key, ids.clone(), ids).unwrap();
+        assert_eq!(r.service_count(), 1);
+        let da: f64 = nll_a.iter().map(|&x| x as f64).sum();
+        let db: f64 = nll_b.iter().map(|&x| x as f64).sum();
+        assert!((da - db).abs() > 1e-9, "different checkpoints must score differently");
+    }
+
+    #[test]
+    fn reregistration_releases_prepared_services() {
+        let Some((r, meta)) = registered_router(41) else { return };
+        let k1 = ServiceKey::quant("tiny", "nf4", 64);
+        let k2 = ServiceKey::fp("tiny");
+        r.prepare(&k1).unwrap();
+        r.prepare(&k2).unwrap();
+        assert_eq!(r.service_count(), 2);
+        r.register_model("tiny", ParamSet::init(&meta, 42)).unwrap();
+        assert_eq!(r.service_count(), 0, "stale services must be torn down");
+    }
+
+    #[test]
+    fn mean_nll_via_router_matches_expectation() {
+        let Some((r, meta)) = registered_router(11) else { return };
+        let data = corpus::english(40_000, 1);
+        let sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 0);
+        let batches = sampler.eval_batches(2);
+        let nll_fp = r.mean_nll(&ServiceKey::fp("tiny"), &batches).unwrap();
+        let nll_q = r.mean_nll(&ServiceKey::quant("tiny", "nf4", 64), &batches).unwrap();
+        assert!((nll_fp - (256f64).ln()).abs() < 0.5, "fp nll {nll_fp}");
+        assert!((nll_q - nll_fp).abs() < 0.1, "q {nll_q} vs fp {nll_fp}");
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let Some((r, meta)) = registered_router(51) else { return };
+        let key = ServiceKey::quant("tiny", "nf4", 64);
+        let ids: Vec<i32> = vec![2; meta.batch * meta.seq_len];
+        r.score_batch(&key, ids.clone(), ids).unwrap();
+        let j = r.snapshot().to_json();
+        let services = j.get("services").unwrap().as_arr().unwrap();
+        assert_eq!(services.len(), 1);
+        assert_eq!(services[0].get("key").unwrap().as_str().unwrap(), "tiny/nf4@64");
+        assert!(j.get("device_buffers").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("models").unwrap().as_arr().unwrap()[0].as_str().unwrap(),
+            "tiny"
+        );
+    }
+}

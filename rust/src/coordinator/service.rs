@@ -5,6 +5,16 @@
 //! calls), and pre-compiles the scoring executable. Scoring then only
 //! moves (ids, targets) per call — the serving hot path.
 //!
+//! Services are owned by the [`crate::coordinator::Router`]: preparation
+//! and release are crate-internal, and external callers reach a service
+//! only through its [`crate::coordinator::ServiceKey`]. Several services
+//! can share one engine — their artifact executables are memoized per
+//! (kind, B, model) and their weight buffers live under disjoint
+//! generation-tagged `w/<model>/<family>/<B>/g<n>/` key prefixes (unique
+//! per prepared instance), which is what makes the multi-tenant router
+//! possible and keeps racing prepare/release cycles from ever touching
+//! each other's buffers.
+//!
 //! The weight path is the parallel quantizer (`quantize_par`, bit-identical
 //! to serial; see [`crate::quant::fused`]), and with `AFQ_HOST_PARITY=1`
 //! every matrix is cross-checked on the host — fused `qgemm` vs
@@ -12,15 +22,25 @@
 //! [`crate::model::quantized_weight_args`]).
 
 use crate::codes::registry;
+use crate::coordinator::batcher::ScoreBackend;
 use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
 use crate::coordinator::metrics::{Counters, LatencyHistogram};
 use crate::model::{fp_weight_args, quantized_weight_args, ParamSet};
 use crate::runtime::{ModelMeta, TensorData};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Monotone per-process preparation counter. Every prepared service gets a
+/// unique generation-tagged buffer prefix (`w/<model>/<family>/<B>/g<n>`),
+/// so a stale preparation racing a re-registration can never overwrite a
+/// fresh service's device buffers, and releasing one service instance can
+/// never evict another's.
+static PREPARE_SEQ: AtomicU64 = AtomicU64::new(0);
+
 /// What to quantize with: `fp` or a code-family spec (see codes::registry).
-#[derive(Clone, Debug)]
+/// Hashable so it can key the router's service registry.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct QuantSpec {
     pub family: String,
     pub block_size: usize,
@@ -31,8 +51,43 @@ impl QuantSpec {
         Self { family: "fp".into(), block_size: 0 }
     }
 
+    /// From separate CLI-ish arguments: `fp`/`fp32`/`none` ignore `block`.
+    pub fn parse(code: &str, block: usize) -> Self {
+        if registry::is_fp(code) {
+            Self::fp()
+        } else {
+            Self { family: code.to_string(), block_size: block }
+        }
+    }
+
+    /// Parse the compact `family@B` form (`nf4@64`, `af4@4096`) or `fp`.
+    pub fn parse_label(s: &str) -> Result<QuantSpec, String> {
+        if registry::is_fp(s) {
+            return Ok(Self::fp());
+        }
+        let (family, b) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad code spec {s:?} (want family@B or fp)"))?;
+        let block_size: usize =
+            b.parse().map_err(|_| format!("bad block size in code spec {s:?}"))?;
+        if family.is_empty() || block_size == 0 {
+            return Err(format!("bad code spec {s:?} (want family@B or fp)"));
+        }
+        Ok(QuantSpec { family: family.to_string(), block_size })
+    }
+
     pub fn is_fp(&self) -> bool {
         registry::is_fp(&self.family)
+    }
+
+    /// Compact display form: `fp` or `family@B` (parseable by
+    /// [`parse_label`](Self::parse_label)).
+    pub fn label(&self) -> String {
+        if self.is_fp() {
+            "fp".to_string()
+        } else {
+            format!("{}@{}", self.family, self.block_size)
+        }
     }
 
     pub fn artifact_name(&self, model: &str) -> String {
@@ -48,11 +103,19 @@ impl QuantSpec {
     }
 }
 
+impl std::fmt::Display for QuantSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 pub struct ModelService {
     eng: EngineHandle,
     pub meta: ModelMeta,
     pub spec: QuantSpec,
     artifact: String,
+    /// This instance's unique device-buffer prefix (generation-tagged).
+    prefix: String,
     keys: Vec<String>,
     pub latency: Arc<LatencyHistogram>,
     pub counters: Arc<Counters>,
@@ -62,7 +125,8 @@ impl ModelService {
     /// Quantize (parallel, bit-identical to serial) + upload weights and
     /// compile the scoring executable. `AFQ_HOST_PARITY=1` adds a fused
     /// qgemm vs dequant+matmul cross-check per matrix before upload.
-    pub fn prepare(
+    /// Crate-internal: services are prepared lazily by the router.
+    pub(crate) fn prepare(
         eng: &EngineHandle,
         model: &str,
         params: &ParamSet,
@@ -72,7 +136,8 @@ impl ModelService {
         params.validate(&meta)?;
         let artifact = spec.artifact_name(model);
         eng.manifest().artifact(&artifact)?; // fail fast if missing
-        let prefix = spec.key_prefix(model);
+        let generation = PREPARE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let prefix = format!("{}/g{generation}", spec.key_prefix(model));
         let weight_args = if spec.is_fp() {
             fp_weight_args(&meta, params, &prefix)
         } else {
@@ -91,6 +156,7 @@ impl ModelService {
             meta,
             spec,
             artifact,
+            prefix,
             keys,
             latency: Arc::new(LatencyHistogram::new()),
             counters: Arc::new(Counters::default()),
@@ -127,9 +193,11 @@ impl ModelService {
         Ok(total / n.max(1) as f64)
     }
 
-    /// Free this service's device-resident weights.
-    pub fn release(self) {
-        self.eng.evict(&self.spec.key_prefix(&self.meta.name));
+    /// Free this service's device-resident weights. Crate-internal: the
+    /// router evicts a service only after its batcher has drained. The
+    /// trailing `/` keeps `…/g3` from also matching `…/g30`.
+    pub(crate) fn release(&self) {
+        self.eng.evict(&format!("{}/", self.prefix));
     }
 
     pub fn batch(&self) -> usize {
@@ -141,11 +209,66 @@ impl ModelService {
     }
 }
 
+/// The real batcher backend: [`ModelService::score`] already tallies batch
+/// latency and token counters, so the trait impl is a straight delegation.
+impl ScoreBackend for ModelService {
+    fn batch(&self) -> usize {
+        ModelService::batch(self)
+    }
+
+    fn seq(&self) -> usize {
+        ModelService::seq(self)
+    }
+
+    fn counters(&self) -> &Counters {
+        self.counters.as_ref()
+    }
+
+    fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
+        ModelService::score(self, ids, targets)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::engine_thread::EngineHandle;
     use crate::model::{corpus, BatchSampler, ParamSet};
+
+    #[test]
+    fn quant_spec_labels_round_trip() {
+        for (spec, label) in [
+            (QuantSpec::fp(), "fp"),
+            (QuantSpec { family: "nf4".into(), block_size: 64 }, "nf4@64"),
+            (QuantSpec { family: "af4".into(), block_size: 4096 }, "af4@4096"),
+            (QuantSpec { family: "balanced-ep".into(), block_size: 256 }, "balanced-ep@256"),
+        ] {
+            assert_eq!(spec.label(), label);
+            assert_eq!(QuantSpec::parse_label(label).unwrap(), spec);
+        }
+        assert_eq!(QuantSpec::parse_label("fp32").unwrap(), QuantSpec::fp());
+        assert!(QuantSpec::parse_label("nf4").is_err());
+        assert!(QuantSpec::parse_label("nf4@").is_err());
+        assert!(QuantSpec::parse_label("@64").is_err());
+        assert!(QuantSpec::parse_label("nf4@zero").is_err());
+        assert_eq!(QuantSpec::parse("fp32", 64), QuantSpec::fp());
+        assert_eq!(
+            QuantSpec::parse("af4", 64),
+            QuantSpec { family: "af4".into(), block_size: 64 }
+        );
+    }
+
+    #[test]
+    fn quant_spec_hashes_as_key() {
+        use std::collections::HashMap;
+        let mut m: HashMap<QuantSpec, i32> = HashMap::new();
+        m.insert(QuantSpec { family: "nf4".into(), block_size: 64 }, 1);
+        m.insert(QuantSpec { family: "nf4".into(), block_size: 4096 }, 2);
+        m.insert(QuantSpec::fp(), 3);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[&QuantSpec { family: "nf4".into(), block_size: 64 }], 1);
+        assert_eq!(m[&QuantSpec::fp()], 3);
+    }
 
     fn setup() -> Option<(EngineHandle, crate::coordinator::engine_thread::EngineThread)> {
         if !crate::util::artifacts_available("artifacts") {
@@ -177,6 +300,7 @@ mod tests {
         assert!((nll_q - nll_fp).abs() < 0.1, "q {nll_q} vs fp {nll_fp}");
         assert!(fp.latency.count() >= 2);
         q.release();
+        th.stop(&eng);
     }
 
     #[test]

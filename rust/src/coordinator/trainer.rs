@@ -2,9 +2,14 @@
 //!
 //! Python lowered `train_<model>` once at build time; this module owns the
 //! optimizer state, the data order, LR schedule, and checkpointing — the
-//! whole loop is Rust + PJRT.
+//! whole loop is Rust + PJRT. Training runs on the router's shared engine
+//! thread (training steps and serving batches interleave on one device
+//! owner), so the usual flow is: train/`ensure_checkpoint` →
+//! [`Router::register_model`](crate::coordinator::Router::register_model)
+//! → routed scoring.
 
-use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
+use crate::coordinator::engine_thread::OwnedArg;
+use crate::coordinator::router::Router;
 use crate::model::{BatchSampler, ParamSet};
 use crate::runtime::TensorData;
 
@@ -39,15 +44,16 @@ pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
     cfg.lr * (0.1 + 0.9 * cos)
 }
 
-/// Train `model` from `params` on `sampler` batches; returns updated params
-/// and the loss curve.
+/// Train `model` from `params` on `sampler` batches via the router's
+/// engine; returns updated params and the loss curve.
 pub fn train(
-    eng: &EngineHandle,
+    router: &Router,
     model: &str,
     mut params: ParamSet,
     sampler: &mut BatchSampler,
     cfg: &TrainConfig,
 ) -> Result<TrainResult, String> {
+    let eng = router.engine();
     let artifact = format!("train_{model}");
     let meta = eng.manifest().config(model)?.clone();
     params.validate(&meta)?;
@@ -107,7 +113,7 @@ pub fn train(
 
 /// Train-or-load: reuse a checkpoint if present, otherwise train and save.
 pub fn ensure_checkpoint(
-    eng: &EngineHandle,
+    router: &Router,
     model: &str,
     corpus_name: &str,
     steps: usize,
@@ -115,19 +121,19 @@ pub fn ensure_checkpoint(
 ) -> Result<ParamSet, String> {
     let path = format!("{dir}/{model}_{corpus_name}_{steps}.ckpt");
     if let Ok(p) = ParamSet::load(&path) {
-        let meta = eng.manifest().config(model)?;
+        let meta = router.manifest().config(model)?;
         if p.validate(meta).is_ok() {
             crate::log_info!("loaded checkpoint {path}");
             return Ok(p);
         }
     }
-    let meta = eng.manifest().config(model)?.clone();
+    let meta = router.manifest().config(model)?.clone();
     let data = crate::model::generate_corpus(corpus_name, 400_000, 1234)?;
     let mut sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 7);
     let params = ParamSet::init(&meta, 42);
     let cfg = TrainConfig { steps, ..Default::default() };
     crate::log_info!("training {model} on {corpus_name} for {steps} steps…");
-    let result = train(eng, model, params, &mut sampler, &cfg)?;
+    let result = train(router, model, params, &mut sampler, &cfg)?;
     crate::log_info!(
         "trained {model}: loss {:.3} → {:.3} in {:.1}s",
         result.losses.first().map(|x| x.1).unwrap_or(f64::NAN),
@@ -156,14 +162,13 @@ mod tests {
         if !crate::util::artifacts_available("artifacts") {
             return;
         }
-        let (eng, _th) =
-            crate::coordinator::engine_thread::EngineHandle::spawn("artifacts").unwrap();
-        let meta = eng.manifest().config("tiny").unwrap().clone();
+        let router = Router::new("artifacts").unwrap();
+        let meta = router.manifest().config("tiny").unwrap().clone();
         let data = crate::model::corpus::english(120_000, 8);
         let mut sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 3);
         let params = ParamSet::init(&meta, 5);
         let cfg = TrainConfig { steps: 30, lr: 3e-3, warmup: 5, log_every: 5, seed: 0 };
-        let r = train(&eng, "tiny", params, &mut sampler, &cfg).expect("train");
+        let r = train(&router, "tiny", params, &mut sampler, &cfg).expect("train");
         let first = r.losses.first().unwrap().1;
         let last = r.losses.last().unwrap().1;
         assert!(

@@ -9,7 +9,7 @@
 //! B=4096, ≈tie at B=64, balanced-ep collapsing at large B.
 
 use crate::codes;
-use crate::coordinator::{ensure_checkpoint, EngineHandle, ModelService, QuantSpec};
+use crate::coordinator::{ensure_checkpoint, Router, ServiceKey};
 use crate::exp::Report;
 use crate::model::{bytes_per_word, generate_corpus, BatchSampler, ClozeSuite};
 use crate::quant::usage_from_quantized;
@@ -39,11 +39,11 @@ impl Default for LmOpts {
 }
 
 /// Fig. 4(b) — NF4 code-value usage on *trained model weights* at B = 64.
-pub fn fig04b(eng: &EngineHandle, opts: &LmOpts) -> Result<Report, String> {
+pub fn fig04b(router: &Router, opts: &LmOpts) -> Result<Report, String> {
     let mut rep = Report::new("fig04b", "NF4 code usage on trained weights (paper Fig. 4b)");
     let model = opts.models.first().cloned().unwrap_or_else(|| "small".into());
-    let params = ensure_checkpoint(eng, &model, "english", opts.train_steps, &opts.ckpt_dir)?;
-    let meta = eng.manifest().config(&model)?.clone();
+    let params = ensure_checkpoint(router, &model, "english", opts.train_steps, &opts.ckpt_dir)?;
+    let meta = router.manifest().config(&model)?.clone();
     let code = codes::nf4();
     let mut counts = vec![0f64; 16];
     let mut total = 0f64;
@@ -71,7 +71,7 @@ pub fn fig04b(eng: &EngineHandle, opts: &LmOpts) -> Result<Report, String> {
 /// (the `base` rows). Also the machinery for Fig. 13 when `families`
 /// includes `balanced-ep`.
 pub fn ppl_grid(
-    eng: &EngineHandle,
+    router: &Router,
     opts: &LmOpts,
     corpus_name: &str,
     families: &[&str],
@@ -86,14 +86,15 @@ pub fn ppl_grid(
     rep.json.set("corpus", Json::Str(corpus_name.into()));
     rep.json.set("bytes_per_word", Json::Num(bpw));
     for model in &opts.models {
-        let params = ensure_checkpoint(eng, model, corpus_name, opts.train_steps, &opts.ckpt_dir)?;
-        let meta = eng.manifest().config(model)?.clone();
+        let params = ensure_checkpoint(router, model, corpus_name, opts.train_steps, &opts.ckpt_dir)?;
+        router.register_model(model, params)?;
+        let meta = router.manifest().config(model)?.clone();
         let sampler = BatchSampler::new(val.clone(), meta.seq_len, meta.batch, 0);
         let batches = sampler.eval_batches(opts.eval_batches);
         let n_tok = batches.len() * meta.batch * meta.seq_len;
 
-        let fp = ModelService::prepare(eng, model, &params, QuantSpec::fp())?;
-        let nll_fp = fp.mean_nll(&batches)?;
+        let fp_key = ServiceKey::fp(model);
+        let nll_fp = router.mean_nll(&fp_key, &batches)?;
         let ppl_fp = crate::model::word_ppl(nll_fp * n_tok as f64, n_tok, bpw);
         rep.println(&format!("{model:>6} fp32        : nll/tok {nll_fp:.4}  word-ppl {ppl_fp:10.2}"));
         let mut row = Json::obj();
@@ -106,13 +107,8 @@ pub fn ppl_grid(
 
         for family in families {
             for &b in &opts.blocks {
-                let svc = ModelService::prepare(
-                    eng,
-                    model,
-                    &params,
-                    QuantSpec { family: family.to_string(), block_size: b },
-                )?;
-                let nll = svc.mean_nll(&batches)?;
+                let key = ServiceKey::quant(model, family, b);
+                let nll = router.mean_nll(&key, &batches)?;
                 let ppl = crate::model::word_ppl(nll * n_tok as f64, n_tok, bpw);
                 rep.println(&format!(
                     "{model:>6} {family:>11} B={b:<5}: nll/tok {nll:.4}  word-ppl {ppl:10.2}  (Δnll {:+.4})",
@@ -125,10 +121,10 @@ pub fn ppl_grid(
                     .set("nll", Json::Num(nll))
                     .set("word_ppl", Json::Num(ppl));
                 rep.json_push("rows", row);
-                svc.release();
+                router.release(&key); // bound device memory over the grid
             }
         }
-        fp.release();
+        router.release(&fp_key);
     }
     shape_checks(&mut rep, families);
     Ok(rep)
@@ -249,7 +245,7 @@ fn shape_checks(rep: &mut Report, families: &[&str]) {
 
 /// Cloze accuracy grid — Figures 8/9.
 pub fn cloze_grid(
-    eng: &EngineHandle,
+    router: &Router,
     opts: &LmOpts,
     corpus_name: &str,
     families: &[&str],
@@ -258,20 +254,21 @@ pub fn cloze_grid(
     let mut rep = Report::new(fig_id, &format!("cloze accuracy on {corpus_name} (paper Figs. 8/9)"));
     let val = generate_corpus(corpus_name, 300_000, VAL_SEED)?;
     for model in &opts.models {
-        let params = ensure_checkpoint(eng, model, corpus_name, opts.train_steps, &opts.ckpt_dir)?;
-        let meta = eng.manifest().config(model)?.clone();
+        let params = ensure_checkpoint(router, model, corpus_name, opts.train_steps, &opts.ckpt_dir)?;
+        router.register_model(model, params)?;
+        let meta = router.manifest().config(model)?.clone();
         let n_items = opts.eval_batches * meta.batch;
         let suite = ClozeSuite::build(&val, meta.seq_len, n_items, 17);
-        let run = |svc: &ModelService| -> Result<f64, String> {
+        let run = |key: &ServiceKey| -> Result<f64, String> {
             let mut corrects = Vec::new();
             for (ids, tgt, _) in suite.batches(meta.batch) {
-                let (_, c) = svc.score(ids, tgt)?;
+                let (_, c) = router.score_batch(key, ids, tgt)?;
                 corrects.push(c);
             }
             Ok(suite.accuracy(meta.batch, &corrects))
         };
-        let fp = ModelService::prepare(eng, model, &params, QuantSpec::fp())?;
-        let acc_fp = run(&fp)?;
+        let fp_key = ServiceKey::fp(model);
+        let acc_fp = run(&fp_key)?;
         rep.println(&format!("{model:>6} fp32        : acc {acc_fp:.4}"));
         let mut row = Json::obj();
         row.set("model", Json::Str(model.clone()))
@@ -279,16 +276,11 @@ pub fn cloze_grid(
             .set("B", Json::Num(0.0))
             .set("acc", Json::Num(acc_fp));
         rep.json_push("rows", row);
-        fp.release();
+        router.release(&fp_key);
         for family in families {
             for &b in &opts.blocks {
-                let svc = ModelService::prepare(
-                    eng,
-                    model,
-                    &params,
-                    QuantSpec { family: family.to_string(), block_size: b },
-                )?;
-                let acc = run(&svc)?;
+                let key = ServiceKey::quant(model, family, b);
+                let acc = run(&key)?;
                 rep.println(&format!("{model:>6} {family:>11} B={b:<5}: acc {acc:.4}"));
                 let mut row = Json::obj();
                 row.set("model", Json::Str(model.clone()))
@@ -296,7 +288,7 @@ pub fn cloze_grid(
                     .set("B", Json::Num(b as f64))
                     .set("acc", Json::Num(acc));
                 rep.json_push("rows", row);
-                svc.release();
+                router.release(&key);
             }
         }
     }
@@ -320,11 +312,11 @@ pub fn cloze_grid(
 mod tests {
     use super::*;
 
-    fn engine() -> Option<(EngineHandle, crate::coordinator::EngineThread)> {
+    fn router() -> Option<Router> {
         if !crate::util::artifacts_available("artifacts") {
             return None;
         }
-        Some(EngineHandle::spawn("artifacts").expect("spawn"))
+        Some(Router::new("artifacts").expect("router"))
     }
 
     fn quick_opts() -> LmOpts {
@@ -339,9 +331,9 @@ mod tests {
 
     #[test]
     fn ppl_grid_tiny_smoke() {
-        let Some((eng, _th)) = engine() else { return };
+        let Some(r) = router() else { return };
         let opts = quick_opts();
-        let rep = ppl_grid(&eng, &opts, "english", &["nf4", "af4"], "fig05-test").unwrap();
+        let rep = ppl_grid(&r, &opts, "english", &["nf4", "af4"], "fig05-test").unwrap();
         // Don't demand every shape check at 40 training steps, but the
         // degradation-ordering ones must hold.
         let rows = rep.json.get("rows").unwrap().as_arr().unwrap();
@@ -353,9 +345,9 @@ mod tests {
 
     #[test]
     fn cloze_grid_tiny_smoke() {
-        let Some((eng, _th)) = engine() else { return };
+        let Some(r) = router() else { return };
         let opts = quick_opts();
-        let rep = cloze_grid(&eng, &opts, "english", &["nf4"], "fig08-test").unwrap();
+        let rep = cloze_grid(&r, &opts, "english", &["nf4"], "fig08-test").unwrap();
         assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
     }
 }

@@ -35,15 +35,33 @@
 //!   `quantize_par`/`qgemm_par` variants are **bit-identical** to their
 //!   serial counterparts for any worker count, and golden-vector parity
 //!   with the Pallas kernel is pinned by `rust/tests/fused_parity.rs`.
-//! - [`model`] / [`runtime`] / [`coordinator`] — the LM substrate, PJRT
-//!   engine, and serving/eval loop; weight preparation quantizes in
-//!   parallel and can cross-check fused-vs-reference on the host
-//!   (`AFQ_HOST_PARITY=1`).
-//! - [`exp`] — the figure-by-figure experiment harness.
+//! - [`model`] / [`runtime`] — the LM substrate and the PJRT engine
+//!   (device-resident named buffers, memoized executables); weight
+//!   preparation quantizes in parallel and can cross-check
+//!   fused-vs-reference on the host (`AFQ_HOST_PARITY=1`).
+//! - [`coordinator`] — the **multi-tenant serving stack**. A
+//!   [`coordinator::Router`] owns the single engine thread and a registry
+//!   of [`coordinator::ModelService`]s keyed by
+//!   [`coordinator::ServiceKey`] (model × code × block-size). Requests
+//!   flow: request thread → `Router::score` (admission control: global +
+//!   per-service queue quotas, fail-fast) → that service's dynamic
+//!   [`coordinator::Batcher`] (size-or-deadline assembly into [batch,
+//!   seq]) → the shared engine thread. Services prepare lazily on first
+//!   request — weights are quantized, uploaded once, and stay
+//!   device-resident under per-service key prefixes, while artifact
+//!   executables and code tables are shared across services — so NF4,
+//!   AF4, and balanced configs A/B-serve concurrently from one process.
+//!   Shutdown drains: batchers flush in-flight batches and either execute
+//!   or explicitly fail queued requests (never a silent drop), and the
+//!   engine thread stops last. `coordinator::trainer` drives the AOT
+//!   train step on the same engine.
+//! - [`exp`] — the figure-by-figure experiment harness, running its
+//!   model × code × B grids as routed services.
 //!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
 //! and [`quant`] (the mechanism). `examples/quickstart.rs` shows the
-//! end-to-end flow.
+//! pure-Rust flow; `examples/serve.rs` shows the multi-tenant router
+//! serving several quantization configs under concurrent load.
 
 pub mod codes;
 pub mod coordinator;

@@ -11,7 +11,7 @@
 //! Run `afq <cmd> --help` for options.
 
 use afq::codes::registry;
-use afq::coordinator::{ensure_checkpoint, EngineHandle, ModelService, QuantSpec};
+use afq::coordinator::{ensure_checkpoint, QuantSpec, Router, ServiceKey};
 use afq::exp;
 use afq::model::{bytes_per_word, generate_corpus, BatchSampler};
 use afq::util::cli::Command;
@@ -115,9 +115,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         .opt("artifacts", "artifacts dir", Some("artifacts"))
         .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"));
     let args = cmd.parse(argv)?;
-    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
+    let router = Router::new(args.get_or("artifacts", "artifacts"))?;
     let params = ensure_checkpoint(
-        &eng,
+        &router,
         args.get_or("model", "small"),
         args.get_or("corpus", "english"),
         args.usize("steps", 200),
@@ -140,38 +140,34 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
     let args = cmd.parse(argv)?;
     let model = args.get_or("model", "small");
     let corpus = args.get_or("corpus", "english");
-    let (eng, _th) = EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?;
+    let router = Router::new(args.get_or("artifacts", "artifacts"))?;
     let params = ensure_checkpoint(
-        &eng,
+        &router,
         model,
         corpus,
         args.usize("steps", 200),
         args.get_or("ckpt-dir", "checkpoints"),
     )?;
-    let meta = eng.manifest().config(model)?.clone();
-    let spec = if registry::is_fp(args.get_or("code", "nf4")) {
-        QuantSpec::fp()
-    } else {
-        QuantSpec {
-            family: args.get_or("code", "nf4").to_string(),
-            block_size: args.usize("block", 64),
-        }
-    };
-    let svc = ModelService::prepare(&eng, model, &params, spec)?;
+    router.register_model(model, params)?;
+    let meta = router.manifest().config(model)?.clone();
+    let spec = QuantSpec::parse(args.get_or("code", "nf4"), args.usize("block", 64));
+    let key = ServiceKey::new(model, spec);
     let val = generate_corpus(corpus, 300_000, exp::lm::VAL_SEED)?;
     let bpw = bytes_per_word(&val);
     let sampler = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
     let batches = sampler.eval_batches(args.usize("eval-batches", 6));
     let n_tok = batches.len() * meta.batch * meta.seq_len;
-    let nll = svc.mean_nll(&batches)?;
+    let nll = router.mean_nll(&key, &batches)?;
+    let snap = router.snapshot();
     println!(
-        "model={model} corpus={corpus} code={} B={}  nll/token={nll:.4}  word-ppl={:.2}  ({} tokens; latency {})",
-        svc.spec.family,
-        svc.spec.block_size,
+        "service={key}  corpus={corpus}  nll/token={nll:.4}  word-ppl={:.2}  ({} tokens)",
         afq::model::word_ppl(nll * n_tok as f64, n_tok, bpw),
         n_tok,
-        svc.latency.summary(),
     );
+    if let Some(stat) = snap.get(&key) {
+        println!("engine: {stat}");
+    }
+    router.shutdown();
     Ok(())
 }
 
@@ -203,12 +199,12 @@ fn cmd_exp(argv: &[String]) -> Result<(), String> {
         id.as_str(),
         "fig04" | "fig05" | "fig06" | "fig07" | "fig08" | "fig09" | "fig13" | "all-lm"
     );
-    let eng = if needs_engine {
-        Some(EngineHandle::spawn(args.get_or("artifacts", "artifacts"))?)
+    let router = if needs_engine {
+        Some(Router::new(args.get_or("artifacts", "artifacts"))?)
     } else {
         None
     };
-    let e = eng.as_ref().map(|(h, _)| h);
+    let e = router.as_ref();
     let fig_blocks_big = vec![16usize, 32, 64, 128, 256, 512, 1024, 2048, 4096];
 
     let mut reports = Vec::new();
@@ -286,6 +282,10 @@ fn cmd_exp(argv: &[String]) -> Result<(), String> {
             }
             other => return Err(format!("unknown experiment {other:?}")),
         }
+    }
+    if let Some(r) = &router {
+        // Engine-backed runs: show what the multi-tenant router served.
+        print!("\n{}", r.snapshot());
     }
     let mut failures = Vec::new();
     for rep in &reports {

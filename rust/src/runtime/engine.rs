@@ -77,6 +77,11 @@ impl Engine {
         self.cache.len()
     }
 
+    /// Number of compiled executables currently memoized.
+    pub fn loaded_count(&self) -> usize {
+        self.exes.len()
+    }
+
     /// Execute an artifact. `args` must match the manifest's input order;
     /// host args are validated against the specs.
     pub fn execute(&mut self, name: &str, args: &[Arg]) -> Result<Vec<TensorData>, String> {
@@ -234,6 +239,7 @@ mod tests {
             .expect("second execute");
         assert_eq!(a[0], b[0]);
         assert_eq!(eng.cached_keys(), 1);
+        assert!(eng.loaded_count() >= 1, "executed artifact must be memoized");
         eng.evict("code/");
         assert_eq!(eng.cached_keys(), 0);
     }

@@ -184,7 +184,14 @@ impl Manifest {
     }
 
     pub fn config(&self, name: &str) -> Result<&ModelMeta, String> {
-        self.configs.get(name).ok_or_else(|| format!("model config {name:?} not in manifest"))
+        self.configs.get(name).ok_or_else(|| {
+            format!("model config {name:?} not in manifest (have: {:?})", self.models())
+        })
+    }
+
+    /// Names of all model configs in the manifest (sorted — BTreeMap order).
+    pub fn models(&self) -> Vec<String> {
+        self.configs.keys().cloned().collect()
     }
 
     pub fn hlo_path(&self, name: &str) -> Result<String, String> {
@@ -233,6 +240,7 @@ mod tests {
         assert_eq!(cfg.n_params(), 256 * 128 + 128 * 128);
         assert_eq!(cfg.n_vectors(), 1);
         assert_eq!(cfg.param_index("l0.wq"), Some(1));
+        assert_eq!(m.models(), vec!["tiny".to_string()]);
     }
 
     #[test]

@@ -1,32 +1,35 @@
 //! Cross-module integration tests: the full three-layer loop at small
-//! scale. These need `make artifacts`; each test skips (with a message)
-//! when artifacts are absent so `cargo test` stays green pre-build.
+//! scale, running through the multi-tenant [`Router`]. These need
+//! `make artifacts`; each test skips (with a message) when artifacts are
+//! absent so `cargo test` stays green pre-build.
 //! `AFQ_REQUIRE_ARTIFACTS=1` turns those skips into failures (CI jobs
 //! that build artifacts must not pass on a silent no-op suite).
 
 use afq::codes::registry;
-use afq::coordinator::{train, EngineHandle, ModelService, QuantSpec, TrainConfig};
+use afq::coordinator::{train, Router, ServiceKey, TrainConfig};
 use afq::model::{generate_corpus, BatchSampler, ClozeSuite, ParamSet};
 use afq::quant::{dequantize, quantize};
 
-fn engine() -> Option<(EngineHandle, afq::coordinator::EngineThread)> {
+fn router() -> Option<Router> {
     if !afq::util::artifacts_available("artifacts") {
         return None;
     }
-    Some(EngineHandle::spawn("artifacts").expect("engine"))
+    Some(Router::new("artifacts").expect("router"))
 }
 
 /// Rust quantizer → PJRT dequant kernel → Rust dequant: all three
-/// implementations agree on the same buffers.
+/// implementations agree on the same buffers. (Raw artifact execution goes
+/// straight to the router's engine handle — only scoring is routed.)
 #[test]
 fn quantizer_parity_rust_vs_pallas() {
-    let Some((eng, _th)) = engine() else { return };
+    let Some(r) = router() else { return };
     let code = registry::build("af4-64").unwrap();
     let mut rng = afq::util::rng::Rng::new(99);
     let x: Vec<f32> = (0..65536).map(|_| rng.normal() as f32 * 0.03).collect();
     let q = quantize(&x, 64, &code);
     let host = dequantize(&q, &code);
-    let out = eng
+    let out = r
+        .engine()
         .execute(
             "kernel_dequantize_b64",
             vec![
@@ -42,59 +45,53 @@ fn quantizer_parity_rust_vs_pallas() {
     }
 }
 
-/// Mini end-to-end: train tiny for a few steps, quantize, score, and check
-/// the quantized model tracks the fp model.
+/// Mini end-to-end: train tiny for a few steps on the router's engine,
+/// register the result, and check the quantized services track the fp
+/// service — three configs resident at once behind the one engine thread.
 #[test]
 fn e2e_train_quantize_score() {
-    let Some((eng, _th)) = engine() else { return };
-    let meta = eng.manifest().config("tiny").unwrap().clone();
+    let Some(r) = router() else { return };
+    let meta = r.manifest().config("tiny").unwrap().clone();
     let data = generate_corpus("english", 120_000, 31).unwrap();
     let mut sampler = BatchSampler::new(data.clone(), meta.seq_len, meta.batch, 1);
     let cfg = TrainConfig { steps: 25, lr: 3e-3, warmup: 5, seed: 0, log_every: 25 };
-    let result = train(&eng, "tiny", ParamSet::init(&meta, 17), &mut sampler, &cfg).unwrap();
+    let result = train(&r, "tiny", ParamSet::init(&meta, 17), &mut sampler, &cfg).unwrap();
     assert!(result.losses.last().unwrap().1 < result.losses.first().unwrap().1);
+    r.register_model("tiny", result.params).unwrap();
 
     let val = generate_corpus("english", 60_000, 32).unwrap();
     let vs = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
     let batches = vs.eval_batches(2);
-    let fp = ModelService::prepare(&eng, "tiny", &result.params, QuantSpec::fp()).unwrap();
-    let nll_fp = fp.mean_nll(&batches).unwrap();
+    let nll_fp = r.mean_nll(&ServiceKey::fp("tiny"), &batches).unwrap();
     for family in ["nf4", "af4"] {
-        let svc = ModelService::prepare(
-            &eng,
-            "tiny",
-            &result.params,
-            QuantSpec { family: family.into(), block_size: 64 },
-        )
-        .unwrap();
-        let nll_q = svc.mean_nll(&batches).unwrap();
+        let nll_q = r.mean_nll(&ServiceKey::quant("tiny", family, 64), &batches).unwrap();
         assert!(
             (nll_q - nll_fp).abs() < 0.25,
             "{family}@64 should track fp on a lightly-trained model: {nll_q} vs {nll_fp}"
         );
-        svc.release();
     }
+    assert_eq!(r.service_count(), 3, "fp + nf4@64 + af4@64 all resident");
+    r.shutdown();
 }
 
 /// Cloze pipeline over the scoring artifact: accuracy is computable and in
 /// range for every code family.
 #[test]
 fn cloze_pipeline_runs() {
-    let Some((eng, _th)) = engine() else { return };
-    let meta = eng.manifest().config("tiny").unwrap().clone();
-    let params = ParamSet::init(&meta, 3);
+    let Some(r) = router() else { return };
+    let meta = r.manifest().config("tiny").unwrap().clone();
+    r.register_model("tiny", ParamSet::init(&meta, 3)).unwrap();
     let data = generate_corpus("english", 80_000, 41).unwrap();
     let suite = ClozeSuite::build(&data, meta.seq_len, 2 * meta.batch, 5);
-    for spec in [QuantSpec::fp(), QuantSpec { family: "nf4".into(), block_size: 256 }] {
-        let svc = ModelService::prepare(&eng, "tiny", &params, spec).unwrap();
+    for key in [ServiceKey::fp("tiny"), ServiceKey::quant("tiny", "nf4", 256)] {
         let mut corrects = Vec::new();
         for (ids, tgt, _) in suite.batches(meta.batch) {
-            let (_, c) = svc.score(ids, tgt).unwrap();
+            let (_, c) = r.score_batch(&key, ids, tgt).unwrap();
             corrects.push(c);
         }
         let acc = suite.accuracy(meta.batch, &corrects);
         assert!((0.0..=1.0).contains(&acc));
-        svc.release();
+        r.release(&key);
     }
 }
 
@@ -102,8 +99,8 @@ fn cloze_pipeline_runs() {
 /// match what the weight marshaller produces.
 #[test]
 fn every_score_artifact_matches_marshaller() {
-    let Some((eng, _th)) = engine() else { return };
-    let manifest = eng.manifest().clone();
+    let Some(r) = router() else { return };
+    let manifest = r.manifest().clone();
     for (name, spec) in &manifest.artifacts {
         if spec.kind != "score_quant" {
             continue;
