@@ -24,12 +24,14 @@ artifacts/manifest.json: $(PY_SOURCES)
 bench:
 	cargo bench --bench dist_codes
 	cargo bench --bench quant
+	cargo bench --bench plan
 	cargo bench --bench engine
 	cargo bench --bench serving
 
 bench-quick:
 	AFQ_BENCH_QUICK=1 cargo bench --bench dist_codes
 	AFQ_BENCH_QUICK=1 cargo bench --bench quant
+	AFQ_BENCH_QUICK=1 cargo bench --bench plan
 	AFQ_BENCH_QUICK=1 cargo bench --bench serving
 
 clean:

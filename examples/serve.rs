@@ -1,17 +1,20 @@
-//! Serving demo: ONE router serving MANY (code × block-size) configs of a
-//! quantized model concurrently — per-service dynamic batchers over a
-//! single engine thread, device-resident weights, lazy prepare-on-first-
-//! request, and a per-config latency/throughput report (the
-//! paper-comparison-as-a-service scenario: A/B-serve NF4 vs AF4 vs
-//! balanced under load).
+//! Serving demo: ONE router serving MANY configs of a quantized model
+//! concurrently — uniform (code × block-size) specs and budgeted
+//! per-tensor `QuantPlan`s side by side — per-service dynamic batchers
+//! over a single engine thread, device-resident weights, lazy
+//! prepare-on-first-request, and a per-config latency/throughput report
+//! (the paper-comparison-as-a-service scenario: A/B-serve NF4 vs AF4 vs
+//! balanced vs a planner output under load).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve -- \
-//!     [--codes nf4@64,af4@64,af4@4096] [--clients 16] [--requests 16]
+//!     [--codes nf4@64,af4@64,af4@4096] [--plan 4.25] \
+//!     [--clients 16] [--requests 16]
 //! ```
 
 use afq::coordinator::{QuantSpec, Router, RouterConfig, ScoreRequest, ServiceKey};
 use afq::model::{generate_corpus, BatchSampler, ParamSet};
+use afq::plan::{plan_for_params, ErrorModel, PlannerOpts};
 use afq::util::cli::Command;
 use std::time::{Duration, Instant};
 
@@ -31,20 +34,18 @@ fn run() -> Result<(), String> {
             "comma-separated service configs (family@B or fp)",
             Some("nf4@64,af4@64,af4@4096"),
         )
+        .opt("plan", "also serve a planned per-tensor config at this bits-per-param budget", None)
         .opt("clients", "concurrent client threads (round-robin over configs)", Some("16"))
         .opt("requests", "requests per client", Some("16"))
         .opt("max-wait-ms", "batcher deadline", Some("20"))
         .opt("artifacts", "artifacts dir", Some("artifacts"));
     let args = cmd.parse(&argv)?;
     let model = args.get_or("model", "tiny");
-    let keys: Vec<ServiceKey> = args
+    let mut keys: Vec<ServiceKey> = args
         .str_list("codes", &[])
         .iter()
         .map(|s| QuantSpec::parse_label(s).map(|spec| ServiceKey::new(model, spec)))
         .collect::<Result<_, _>>()?;
-    if keys.is_empty() {
-        return Err("need at least one --codes entry".into());
-    }
 
     let router = Router::with_config(
         args.get_or("artifacts", "artifacts"),
@@ -56,7 +57,24 @@ fn run() -> Result<(), String> {
     let meta = router.manifest().config(model)?.clone();
     // Serve from random-init weights (the service doesn't care; swap in a
     // checkpoint via `afq train` for a real model).
-    router.register_model(model, ParamSet::init(&meta, 3))?;
+    let params = router.register_model(model, ParamSet::init(&meta, 3))?;
+    if let Some(budget) = args.get("plan") {
+        let budget: f64 = budget.parse().map_err(|_| format!("bad --plan budget {budget:?}"))?;
+        let plan = plan_for_params(
+            &meta,
+            &params,
+            &PlannerOpts {
+                budget_bits: budget,
+                grid: PlannerOpts::default_grid(&["nf4", "af4"], &[64, 256, 1024, 4096]),
+                error_model: ErrorModel::Predicted,
+            },
+        )?;
+        print!("{}", plan.summary());
+        keys.push(router.register_plan(plan));
+    }
+    if keys.is_empty() {
+        return Err("need at least one --codes entry (or --plan)".into());
+    }
     println!(
         "serving {model} ({:.2}M params) as {} config(s) behind one engine thread:",
         meta.n_params() as f64 / 1e6,

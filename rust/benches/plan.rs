@@ -1,0 +1,125 @@
+//! Bench: the quantization planner — allocator cost across grid/tensor
+//! scales, full plan_for_params cost in both error modes (predict table
+//! hot), and planned-vs-uniform predicted quality across a budget sweep.
+//! Artifact-free by construction (the planner needs weights, not an
+//! engine); quality rows ride along in `results/BENCH_plan.json` next to
+//! the timing rows. (harness = false; uses afq::util::bench.)
+//!
+//! Run: `cargo bench --bench plan [-- <filter>]`
+//! Quick mode: AFQ_BENCH_QUICK=1
+
+use afq::exp::planner::{best_uniform, synth_meta};
+use afq::model::ParamSet;
+use afq::plan::{
+    allocate, plan_for_params, tensor_costs, Candidate, ErrorModel, PlannerOpts, TensorCosts,
+};
+use afq::quant::QuantSpec;
+use afq::util::bench::{save_bench_doc, Bencher};
+use afq::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
+    let mut b = Bencher::new();
+    let blocks: Vec<usize> =
+        if quick { vec![64, 1024, 4096] } else { vec![32, 64, 128, 256, 512, 1024, 2048, 4096] };
+    let grid = PlannerOpts::default_grid(&["nf4", "af4"], &blocks);
+    // The ablation's transformer-shaped model, scaled up for bench load.
+    let (layers, d) = if quick { (2usize, 64usize) } else { (4, 128) };
+    let meta = synth_meta("synth", layers, d, 256);
+    let params = ParamSet::init(&meta, 0);
+    let n_params: usize = meta.matrix_order.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    println!(
+        "-- planner ({} tensors, {:.2}M params, {} candidates) --",
+        meta.matrix_order.len(),
+        n_params as f64 / 1e6,
+        grid.len()
+    );
+
+    // Warm the predicted-error table: first touch pays code construction +
+    // quadrature; the bench rows below measure the steady state the
+    // planner actually runs in (table hot, per-plan work = stats + allocate).
+    let opts = |budget: f64, mode: ErrorModel| PlannerOpts {
+        budget_bits: budget,
+        grid: grid.clone(),
+        error_model: mode,
+    };
+    let t0 = std::time::Instant::now();
+    let warm = plan_for_params(&meta, &params, &opts(4.2, ErrorModel::Predicted)).expect("plan");
+    println!(
+        "cold first plan (table misses): {:.1} ms → {}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        warm
+    );
+
+    b.bench_with_elements("plan/predicted/full", Some(n_params as f64), || {
+        plan_for_params(&meta, &params, &opts(4.2, ErrorModel::Predicted)).unwrap()
+    });
+    b.bench_with_elements("plan/empirical/full", Some(n_params as f64), || {
+        plan_for_params(&meta, &params, &opts(4.2, ErrorModel::Empirical)).unwrap()
+    });
+
+    // Pure allocator cost (no weight scans, no quadrature): synthetic cost
+    // matrices at growing tensor × candidate scales.
+    for (nt, nc) in [(16usize, 8usize), (64, 16), (256, 32)] {
+        let cands: Vec<Candidate> = (0..nc)
+            .map(|i| {
+                let spec = QuantSpec { family: "nf4".into(), block_size: 16 << (i % 9) };
+                if i % 2 == 0 { Candidate::new(spec) } else { Candidate::with_dq(spec, 256) }
+            })
+            .collect();
+        let tensors: Vec<TensorCosts> = (0..nt)
+            .map(|t| TensorCosts {
+                name: format!("t{t}"),
+                n: 1000 + 37 * t,
+                err: (0..nc).map(|c| 0.01 * (1.0 + ((t * 7 + c * 13) % 10) as f64)).collect(),
+            })
+            .collect();
+        b.bench_with_elements(
+            &format!("plan/allocate/T={nt}/C={nc}"),
+            Some((nt * nc) as f64),
+            || allocate("synth", &tensors, &cands, 4.2).unwrap(),
+        );
+    }
+
+    // Quality rows: planned vs best-uniform predicted error across budgets
+    // (the planner ablation's comparison, recorded per run for the perf
+    // trajectory). One cost matrix prices the whole sweep — no per-budget
+    // or per-candidate weight rescans.
+    let budgets: Vec<f64> =
+        if quick { vec![4.05, 4.2, 4.5] } else { vec![4.02, 4.05, 4.1, 4.2, 4.35, 4.5] };
+    let costs = tensor_costs(&meta, &params, &grid, ErrorModel::Predicted).expect("costs");
+    let mut rows = match b.to_json() {
+        Json::Arr(v) => v,
+        other => vec![other],
+    };
+    println!("\n-- planned vs best uniform (predicted L1/param) --");
+    for &budget in &budgets {
+        let plan = allocate(&meta.name, &costs, &grid, budget).unwrap();
+        let (uc, ue) = best_uniform(&grid, &costs, budget).expect("a uniform candidate fits");
+        let uniform = (grid[uc].label(), ue);
+        let ratio = plan.predicted_l1_per_param() / uniform.1;
+        println!(
+            "budget {budget:>5.2}: planned {:.4e} vs uniform {:.4e} ({}) — ratio {ratio:.4}, {} config(s)",
+            plan.predicted_l1_per_param(),
+            uniform.1,
+            uniform.0,
+            plan.n_distinct_configs()
+        );
+        let mut row = Json::obj();
+        row.set("name", Json::Str(format!("plan/quality/budget={budget}")))
+            .set("budget", Json::Num(budget))
+            .set("planned_l1", Json::Num(plan.predicted_l1_per_param()))
+            .set("uniform_l1", Json::Num(uniform.1))
+            .set("uniform", Json::Str(uniform.0))
+            .set("ratio", Json::Num(ratio))
+            .set("plan_bits", Json::Num(plan.avg_bits_per_param()))
+            .set("n_configs", Json::Num(plan.n_distinct_configs() as f64))
+            .set("digest", Json::Str(plan.digest().to_string()));
+        rows.push(row);
+    }
+
+    match save_bench_doc("plan", Json::Arr(rows)) {
+        Ok(path) => println!("\nsaved {path}"),
+        Err(e) => eprintln!("\ncould not save bench results: {e}"),
+    }
+}

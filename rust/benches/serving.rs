@@ -112,11 +112,11 @@ fn main() {
             let rps = total as f64 / wall.as_secs_f64();
             println!(
                 "{:>16} {clients_per_config:>8} {wait:>10} {rps:>10.1} {p50:>12.2?} {p99:>12.2?} {:>9.1}%",
-                key.spec.label(),
+                key.config_label(),
                 eff * 100.0
             );
             let mut row = Json::obj();
-            row.set("config", Json::Str(key.spec.label()))
+            row.set("config", Json::Str(key.config_label()))
                 .set("model", Json::Str(model.into()))
                 .set("clients", Json::Num(clients_per_config as f64))
                 .set("wait_ms", Json::Num(wait as f64))

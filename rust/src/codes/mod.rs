@@ -1,11 +1,14 @@
 //! Quantization codes: NF4 (§2), AF4 (§4.2/§5), balanced/uniform-usage
-//! codes (§4.1, Appendix B), and expected-error functionals.
+//! codes (§4.1, Appendix B), expected-error functionals, and the memoized
+//! per-`(code, B)` predicted-error table ([`predict`]) that the
+//! quantization planner ([`crate::plan`]) minimizes over.
 
 pub mod af4;
 pub mod balanced;
 pub mod code;
 pub mod error;
 pub mod nf4;
+pub mod predict;
 pub mod registry;
 
 pub use af4::{af4, kmedians_unpinned, l1_pinned_code};
@@ -13,3 +16,4 @@ pub use balanced::{balanced, balanced_with_endpoints, equal_mass_boundaries};
 pub use code::Code;
 pub use error::{expected_l1, expected_l2};
 pub use nf4::{nf4, nf4_avg_quantiles, NF4_REFERENCE};
+pub use predict::{predicted_errors, predicted_l1};

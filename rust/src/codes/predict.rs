@@ -1,0 +1,175 @@
+//! Memoized predicted reconstruction error per `(code, block size)` —
+//! the quantity the planner ([`crate::plan`]) minimizes.
+//!
+//! `expected_l1(code, BlockScaledDist::new(b))` is quadrature over a
+//! distribution whose own memo table is quadrature to build: a single cold
+//! evaluation costs milliseconds. The planner evaluates the *same*
+//! `(code, B)` pairs across every tensor of a model (and again for every
+//! budget in a sweep), so results are cached process-wide, keyed by
+//! `(code name, B)` — the dist parameter is exactly `B`, so that pair
+//! fully determines both functionals. Both L1 and L2 are computed on one
+//! miss (they share the dist construction, the expensive part).
+//!
+//! Same slot pattern as [`crate::codes::registry`]: the map lock is held
+//! only to fetch/insert a slot; the quadrature runs under the slot's
+//! `OnceLock`, so two threads racing on one cold pair compute it once
+//! while different pairs evaluate in parallel.
+//!
+//! [`cache_counts_for`] exposes per-key (hits, misses) so tests can assert
+//! the at-most-once contract without racing other tests' queries;
+//! [`cache_counts`] sums them. The tallies are a tiny map update under the
+//! same lock the slot fetch already takes, and stay compiled in.
+
+use crate::codes::error::{expected_l1, expected_l2};
+use crate::codes::registry;
+use crate::dist::BlockScaledDist;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+type Slot = Arc<OnceLock<(f64, f64)>>;
+
+static CACHE: Mutex<Option<HashMap<(String, usize), Slot>>> = Mutex::new(None);
+/// Per-key (hits, misses) tallies. A hit = the slot already existed when
+/// queried (quadrature skipped).
+static STATS: Mutex<Option<HashMap<(String, usize), (u64, u64)>>> = Mutex::new(None);
+
+fn bump(key: &(String, usize), hit: bool) {
+    let mut guard = STATS.lock().unwrap();
+    let entry = guard.get_or_insert_with(HashMap::new).entry(key.clone()).or_insert((0, 0));
+    if hit {
+        entry.0 += 1;
+    } else {
+        entry.1 += 1;
+    }
+}
+
+/// Predicted (E|err|, E err²) of quantizing `F_X(·; B)` with the code the
+/// registry resolves for `(family, b)` — memoized per `(code name, b)`.
+///
+/// Returns `Some((0, 0))` for the `fp` sentinel (no quantization, no
+/// error) and `None` for unknown families or degenerate block sizes.
+pub fn predicted_errors(family: &str, b: usize) -> Option<(f64, f64)> {
+    if registry::is_fp(family) {
+        return Some((0.0, 0.0));
+    }
+    if b < 2 {
+        return None;
+    }
+    // Resolve the code first: block-size-adaptive families (`af4`) map to
+    // different codes per B, fixed codes (`nf4`) to one — the cache key is
+    // the *resolved* code name plus the dist parameter B, so `af4@64` and
+    // a literal `af4-64@64` share one entry.
+    let code = registry::for_block_size(family, b)?;
+    let key = (code.name.clone(), b);
+    let (slot, pre_existing): (Slot, bool) = {
+        let mut guard = CACHE.lock().unwrap();
+        let map = guard.get_or_insert_with(HashMap::new);
+        match map.get(&key) {
+            Some(s) => (Arc::clone(s), true),
+            None => {
+                let s: Slot = Arc::new(OnceLock::new());
+                map.insert(key, Arc::clone(&s));
+                (s, false)
+            }
+        }
+    };
+    if pre_existing {
+        bump(&key, true);
+    }
+    let (l1, l2) = *slot.get_or_init(|| {
+        bump(&key, false);
+        let dist = BlockScaledDist::new(b);
+        (expected_l1(&code, &dist), expected_l2(&code, &dist))
+    });
+    Some((l1, l2))
+}
+
+/// Predicted per-element L1 error for `(family, b)` — the planner's
+/// objective term. See [`predicted_errors`].
+pub fn predicted_l1(family: &str, b: usize) -> Option<f64> {
+    predicted_errors(family, b).map(|(l1, _)| l1)
+}
+
+/// (hits, misses) for one `(code name, B)` key — the cache key is the
+/// *resolved* code name (`af4-64`, not `af4`) plus the block size.
+pub fn cache_counts_for(code_name: &str, b: usize) -> (u64, u64) {
+    STATS
+        .lock()
+        .unwrap()
+        .as_ref()
+        .and_then(|m| m.get(&(code_name.to_string(), b)).copied())
+        .unwrap_or((0, 0))
+}
+
+/// Cumulative (hits, misses) across the whole process-wide table.
+pub fn cache_counts() -> (u64, u64) {
+    STATS
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|m| {
+            m.values().fold((0, 0), |(h, mi), &(kh, km)| (h + kh, mi + km))
+        })
+        .unwrap_or((0, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_queries_hit_the_cache() {
+        // (nf4-avgq, 48) is used by no other test; per-key tallies make
+        // the assertions immune to parallel tests hitting other keys.
+        let first = predicted_errors("nf4-avgq", 48).expect("builds");
+        assert_eq!(cache_counts_for("nf4-avgq", 48), (0, 1), "first query computes");
+        for _ in 0..5 {
+            assert_eq!(predicted_errors("nf4-avgq", 48).unwrap(), first);
+        }
+        assert_eq!(
+            cache_counts_for("nf4-avgq", 48),
+            (5, 1),
+            "repeats must hit, never recompute"
+        );
+        let (h, m) = cache_counts();
+        assert!(h >= 5 && m >= 1, "global tallies fold the per-key counts");
+        // Concurrent cold queries on one fresh key construct at most once.
+        std::thread::scope(|s| {
+            let joins: Vec<_> = (0..6)
+                .map(|_| s.spawn(|| predicted_errors("nf4-avgq", 56).unwrap()))
+                .collect();
+            let vals: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+            assert!(vals.windows(2).all(|w| w[0] == w[1]));
+        });
+        let (_, m56) = cache_counts_for("nf4-avgq", 56);
+        assert_eq!(m56, 1, "racing cold queries compute once");
+    }
+
+    #[test]
+    fn matches_uncached_functionals() {
+        let (l1, l2) = predicted_errors("nf4", 32).unwrap();
+        let dist = BlockScaledDist::new(32);
+        let code = registry::build("nf4").unwrap();
+        assert_eq!(l1, expected_l1(&code, &dist));
+        assert_eq!(l2, expected_l2(&code, &dist));
+        assert!(l1 > 0.0 && l2 > 0.0 && l2 < l1, "4-bit code on [-1,1]: {l1} {l2}");
+    }
+
+    #[test]
+    fn fp_and_invalid_specs() {
+        assert_eq!(predicted_errors("fp", 64), Some((0.0, 0.0)));
+        assert_eq!(predicted_errors("fp32", 0), Some((0.0, 0.0)));
+        assert_eq!(predicted_errors("bogus", 64), None);
+        assert_eq!(predicted_errors("nf4", 1), None);
+        assert_eq!(predicted_l1("nf4", 0), None);
+    }
+
+    #[test]
+    fn adaptive_family_tracks_block_size() {
+        // The paper's point, through the table: AF4 adapts to B and beats
+        // NF4 at large block sizes.
+        let nf4 = predicted_l1("nf4", 4096).unwrap();
+        let af4 = predicted_l1("af4", 4096).unwrap();
+        assert!(af4 < nf4, "af4 {af4} vs nf4 {nf4} at B=4096");
+    }
+}

@@ -87,6 +87,46 @@ fn parse_block(spec: &str, prefix: &str) -> Option<usize> {
     spec.strip_prefix(prefix)?.parse().ok()
 }
 
+/// Block-scaled constructions need B ≥ 2 — `F_X(·; B)` is undefined below
+/// that, and `BlockScaledDist::new` panics. Reject degenerate specs like
+/// `af4-0` or `balanced-ep-1` here, at parse time, with a loud warning
+/// instead of handing the dist layer a B it will assert on.
+fn valid_block(spec: &str, b: usize) -> Option<usize> {
+    if b >= 2 {
+        Some(b)
+    } else {
+        crate::log_warn!("code spec {spec:?} rejected: block size {b} < 2");
+        None
+    }
+}
+
+/// Is this one of the family names [`for_block_size`] resolves (not a
+/// literal spec like `af4-64`, which resolves through `build` directly)?
+fn known_family(family: &str) -> bool {
+    matches!(
+        family,
+        "nf4" | "nf4-avgq" | "normal-l1" | "af4" | "af4x" | "balanced" | "balanced-ep"
+            | "kmedians"
+    )
+}
+
+/// A clear message for why `(family, b)` cannot be built — distinguishes a
+/// degenerate block size on a KNOWN family from a genuinely unknown
+/// family (blaming the block size on a family that doesn't exist sends
+/// the user fixing the wrong thing). Used by the service/planner layers
+/// when `build`/`for_block_size` return None.
+pub fn describe_build_failure(family: &str, b: usize) -> String {
+    if known_family(family) && b < 2 && !is_fp(family) {
+        format!(
+            "invalid block size {b} for code family {family:?}: block-scaled codes need B ≥ 2"
+        )
+    } else if b < 2 && !is_fp(family) {
+        format!("unknown code family {family:?} (block size {b} is also invalid: need B ≥ 2)")
+    } else {
+        format!("unknown code family {family:?}")
+    }
+}
+
 fn construct(spec: &str) -> Option<Code> {
     match spec {
         "nf4" => Some(nf4()),
@@ -97,18 +137,18 @@ fn construct(spec: &str) -> Option<Code> {
         }
         _ => {
             if let Some(b) = parse_block(spec, "af4-") {
-                Some(af4(b))
+                Some(af4(valid_block(spec, b)?))
             } else if let Some(b) = parse_block(spec, "af4x-") {
-                let d = ApproxBlockDist::new(b);
+                let d = ApproxBlockDist::new(valid_block(spec, b)?);
                 Some(l1_pinned_code(&d, spec))
             } else if let Some(b) = parse_block(spec, "balanced-ep-") {
-                let d = BlockScaledDist::new(b);
+                let d = BlockScaledDist::new(valid_block(spec, b)?);
                 Some(balanced_with_endpoints(&d, 16, spec))
             } else if let Some(b) = parse_block(spec, "balanced-") {
-                let d = BlockScaledDist::new(b);
+                let d = BlockScaledDist::new(valid_block(spec, b)?);
                 Some(balanced(&d, 16, spec))
             } else if let Some(b) = parse_block(spec, "kmedians-") {
-                let d = BlockScaledDist::new(b);
+                let d = BlockScaledDist::new(valid_block(spec, b)?);
                 Some(kmedians_unpinned(&d, 16, spec))
             } else {
                 None
@@ -158,6 +198,22 @@ mod tests {
         assert!(is_fp("fp32"));
         assert!(build("bogus-123").is_none());
         assert!(build("af4-").is_none());
+    }
+
+    #[test]
+    fn degenerate_block_sizes_rejected() {
+        // B < 2 used to parse and panic inside BlockScaledDist::new; now
+        // every block-scaled family rejects it at spec-parse time.
+        for spec in ["af4-0", "af4-1", "af4x-1", "balanced-ep-0", "balanced-1", "kmedians-0"] {
+            assert!(build(spec).is_none(), "{spec} must not build");
+        }
+        let msg = describe_build_failure("af4", 0);
+        assert!(msg.contains("B ≥ 2"), "{msg}");
+        assert!(describe_build_failure("bogus", 64).contains("unknown"));
+        // An unknown family is diagnosed as unknown even with a bad B —
+        // never as a block-size problem on a family that doesn't exist.
+        let both = describe_build_failure("bogus", 0);
+        assert!(both.contains("unknown") && both.contains("B ≥ 2"), "{both}");
     }
 
     #[test]

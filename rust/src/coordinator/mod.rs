@@ -18,10 +18,15 @@
 //! ```
 //!
 //! The [`Router`] keys prepared [`ModelService`]s by [`ServiceKey`]
-//! (model × [`QuantSpec`]) and prepares them lazily on first request, so
-//! many (code × block-size) configurations stay device-resident behind a
-//! single engine thread and can be A/B-served concurrently — the serving
-//! shape the paper's NF4-vs-AF4-vs-balanced comparisons need.
+//! (model × [`router::PlanRef`]) and prepares them lazily on first
+//! request. A uniform [`QuantSpec`] is the degenerate one-entry plan;
+//! full per-tensor [`crate::plan::QuantPlan`]s are registered via
+//! [`Router::register_plan`] and keyed by their stable content digest —
+//! so many (code × block-size) configurations *and* many budgeted plans
+//! of one model stay device-resident behind a single engine thread and
+//! A/B-serve concurrently — the serving shape the paper's
+//! NF4-vs-AF4-vs-balanced comparisons (and the planner's
+//! planned-vs-uniform comparisons) need.
 //!
 //! Contracts:
 //! - **Admission**: `Router::score` fails fast — never queues — when the
@@ -44,6 +49,6 @@ pub mod trainer;
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
 pub use engine_thread::{EngineHandle, EngineStats, EngineThread, OwnedArg};
 pub use metrics::{CounterSnapshot, Counters, LatencyHistogram};
-pub use router::{Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey, ServiceStat};
-pub use service::{ModelService, QuantSpec};
+pub use router::{PlanRef, Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey, ServiceStat};
+pub use service::{ModelService, QuantSpec, ServePlan};
 pub use trainer::{ensure_checkpoint, train, TrainConfig, TrainResult};

@@ -1,5 +1,5 @@
 //! Router: the multi-tenant serving front-end — one engine thread, many
-//! (model × code × block-size) services.
+//! (model × plan) services.
 //!
 //! ```text
 //! request threads ──► Router::score(ScoreRequest{key, …})
@@ -15,13 +15,17 @@
 //! ```
 //!
 //! The router owns the engine thread and a registry of services keyed by
-//! [`ServiceKey`] (model name + [`QuantSpec`]). Services are prepared
-//! **lazily on first request**: the first `score`/`score_batch` for an
-//! unseen key quantizes the registered checkpoint, uploads the weights
-//! once (device-resident under a per-service key prefix), and compiles the
-//! scoring executable — concurrent first requests for the same key block
-//! on a single preparation, and the artifact/code caches are shared, so
-//! e.g. `nf4@64` and `af4@64` reuse one compiled `score_q64_*` executable.
+//! [`ServiceKey`] (model name + [`PlanRef`]): a uniform [`QuantSpec`] is
+//! the degenerate one-entry plan, and full per-tensor [`QuantPlan`]s are
+//! keyed by their stable content digest ([`Router::register_plan`]), so
+//! two plans of one model serve side by side behind the one engine.
+//! Services are prepared **lazily on first request**: the first
+//! `score`/`score_batch` for an unseen key quantizes the registered
+//! checkpoint per its plan, uploads the weights once (device-resident
+//! under a per-service key prefix), and compiles the scoring executable —
+//! concurrent first requests for the same key block on a single
+//! preparation, and the artifact/code caches are shared, so e.g. `nf4@64`
+//! and `af4@64` reuse one compiled `score_q64_*` executable.
 //!
 //! Shutdown contract: [`Router::shutdown`] (or drop) first stops every
 //! batcher — each one flushes its in-flight batch and drains its queue
@@ -30,8 +34,9 @@
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
 use crate::coordinator::engine_thread::{EngineHandle, EngineThread};
-use crate::coordinator::service::{ModelService, QuantSpec};
+use crate::coordinator::service::{ModelService, QuantSpec, ServePlan};
 use crate::model::ParamSet;
+use crate::plan::QuantPlan;
 use crate::runtime::Manifest;
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -39,16 +44,40 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
-/// Identifies one served configuration: which model, quantized how.
+/// How a service key names its quantization configuration. Uniform specs
+/// are the degenerate one-entry plan; full [`QuantPlan`]s are identified
+/// by their **stable content digest** (see [`QuantPlan::digest`]), so two
+/// distinct plans of one model are distinct tenants and re-registering an
+/// identical plan lands on the same key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum PlanRef {
+    /// One spec for every tensor.
+    Uniform(QuantSpec),
+    /// A registered [`QuantPlan`], by content digest.
+    Digest(String),
+}
+
+impl PlanRef {
+    /// Display form: the spec label or `plan:<digest>`.
+    pub fn label(&self) -> String {
+        match self {
+            PlanRef::Uniform(spec) => spec.label(),
+            PlanRef::Digest(d) => format!("plan:{d}"),
+        }
+    }
+}
+
+/// Identifies one served configuration: which model, quantized per which
+/// plan.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ServiceKey {
     pub model: String,
-    pub spec: QuantSpec,
+    pub plan: PlanRef,
 }
 
 impl ServiceKey {
     pub fn new(model: &str, spec: QuantSpec) -> ServiceKey {
-        ServiceKey { model: model.to_string(), spec }
+        ServiceKey { model: model.to_string(), plan: PlanRef::Uniform(spec) }
     }
 
     /// Unquantized reference service for `model`.
@@ -60,11 +89,22 @@ impl ServiceKey {
     pub fn quant(model: &str, family: &str, block_size: usize) -> ServiceKey {
         Self::new(model, QuantSpec { family: family.to_string(), block_size })
     }
+
+    /// Service for a per-tensor plan (register it via
+    /// [`Router::register_plan`] — this only names the key).
+    pub fn planned(plan: &QuantPlan) -> ServiceKey {
+        ServiceKey { model: plan.model.clone(), plan: PlanRef::Digest(plan.digest().to_string()) }
+    }
+
+    /// The configuration half of the key (`nf4@64`, `fp`, `plan:<digest>`).
+    pub fn config_label(&self) -> String {
+        self.plan.label()
+    }
 }
 
 impl std::fmt::Display for ServiceKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}/{}", self.model, self.spec.label())
+        write!(f, "{}/{}", self.model, self.plan.label())
     }
 }
 
@@ -130,6 +170,10 @@ pub struct Router {
     engine_thread: Mutex<Option<EngineThread>>,
     cfg: RouterConfig,
     models: Mutex<HashMap<String, Arc<ParamSet>>>,
+    /// Content-addressed plan registry: digest → plan. Plans are pure
+    /// content (no device state), so they survive model re-registration;
+    /// their *services* are torn down like any other.
+    plans: Mutex<HashMap<String, Arc<QuantPlan>>>,
     services: Mutex<HashMap<ServiceKey, Slot>>,
     global_queued: Arc<AtomicUsize>,
 }
@@ -147,6 +191,7 @@ impl Router {
             engine_thread: Mutex::new(Some(thread)),
             cfg,
             models: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
             services: Mutex::new(HashMap::new()),
             global_queued: Arc::new(AtomicUsize::new(0)),
         })
@@ -189,6 +234,24 @@ impl Router {
     /// Models currently registered (sorted).
     pub fn registered_models(&self) -> Vec<String> {
         let mut v: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Register a per-tensor [`QuantPlan`] and return the [`ServiceKey`]
+    /// that serves it. Content-addressed: identical plans map to one key
+    /// (idempotent re-registration), distinct plans of the same model get
+    /// distinct keys and serve side by side behind the one engine. The
+    /// service itself is prepared lazily on first request, like any other.
+    pub fn register_plan(&self, plan: QuantPlan) -> ServiceKey {
+        let key = ServiceKey::planned(&plan);
+        self.plans.lock().unwrap().insert(plan.digest().to_string(), Arc::new(plan));
+        key
+    }
+
+    /// Digests of currently registered plans (sorted).
+    pub fn registered_plans(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.plans.lock().unwrap().keys().cloned().collect();
         v.sort();
         v
     }
@@ -342,9 +405,18 @@ impl Router {
                 self.registered_models()
             )
         })?;
+        let serve_plan = match &key.plan {
+            PlanRef::Uniform(spec) => ServePlan::Uniform(spec.clone()),
+            PlanRef::Digest(d) => {
+                let plan = self.plans.lock().unwrap().get(d).cloned();
+                ServePlan::Planned(plan.ok_or_else(|| {
+                    format!("plan {d:?} not registered with the router (see register_plan)")
+                })?)
+            }
+        };
         crate::log_info!("router: preparing service {key}");
         let service =
-            Arc::new(ModelService::prepare(&self.eng, &key.model, &params, key.spec.clone())?);
+            Arc::new(ModelService::prepare(&self.eng, &key.model, &params, serve_plan)?);
         let cfg = BatcherConfig {
             max_wait: self.cfg.max_wait,
             max_queue: self.cfg.service_queue,
@@ -508,6 +580,24 @@ mod tests {
         Some((r, meta))
     }
 
+    fn toy_plan(model: &str, labels: &[(&str, &str)]) -> crate::plan::QuantPlan {
+        use crate::plan::Assignment;
+        crate::plan::QuantPlan::new(
+            model,
+            labels
+                .iter()
+                .map(|(tensor, label)| Assignment {
+                    tensor: tensor.to_string(),
+                    n_params: 16,
+                    spec: QuantSpec::parse_label(label).unwrap(),
+                    dq: None,
+                    bits_per_param: 0.0,
+                    predicted_l1: 0.0,
+                })
+                .collect(),
+        )
+    }
+
     #[test]
     fn service_key_display_and_hash() {
         let a = ServiceKey::quant("tiny", "nf4", 64);
@@ -515,12 +605,44 @@ mod tests {
         let c = ServiceKey::fp("tiny");
         assert_eq!(a.to_string(), "tiny/nf4@64");
         assert_eq!(c.to_string(), "tiny/fp");
+        assert_eq!(a.config_label(), "nf4@64");
+        let p1 = toy_plan("tiny", &[("w", "nf4@64")]);
+        let p2 = toy_plan("tiny", &[("w", "af4@64")]);
+        let kp1 = ServiceKey::planned(&p1);
+        let kp2 = ServiceKey::planned(&p2);
+        assert_eq!(kp1.to_string(), format!("tiny/plan:{}", p1.digest()));
+        assert_ne!(kp1, kp2, "distinct plans are distinct tenants");
+        assert_eq!(kp1, ServiceKey::planned(&toy_plan("tiny", &[("w", "nf4@64")])));
         let mut m = std::collections::HashMap::new();
         m.insert(a.clone(), 1);
         m.insert(b, 2);
         m.insert(c, 3);
-        assert_eq!(m.len(), 3);
+        m.insert(kp1, 4);
+        m.insert(kp2, 5);
+        assert_eq!(m.len(), 5);
         assert_eq!(m[&a], 1);
+    }
+
+    #[test]
+    fn plan_registry_is_content_addressed() {
+        let Some(r) = router() else { return };
+        let k1 = r.register_plan(toy_plan("tiny", &[("w", "nf4@64")]));
+        let k1b = r.register_plan(toy_plan("tiny", &[("w", "nf4@64")]));
+        let k2 = r.register_plan(toy_plan("tiny", &[("w", "af4@64")]));
+        assert_eq!(k1, k1b, "identical plans land on one key");
+        assert_ne!(k1, k2);
+        assert_eq!(r.registered_plans().len(), 2);
+        // Scoring an unregistered plan digest fails with a clear error and
+        // stays retryable (no cached failure).
+        let meta = r.manifest().config("tiny").unwrap().clone();
+        r.register_model("tiny", ParamSet::init(&meta, 9)).unwrap();
+        let ghost = ServiceKey {
+            model: "tiny".into(),
+            plan: PlanRef::Digest("deadbeefdeadbeef".into()),
+        };
+        let e = r.prepare(&ghost).unwrap_err();
+        assert!(e.contains("not registered"), "{e}");
+        assert_eq!(r.service_count(), 0);
     }
 
     #[test]
@@ -618,6 +740,107 @@ mod tests {
         // nf4@64 and af4@64 share the score_q64 executable; af4@4096 adds
         // score_q4096 (+ the direct-score reference adds nothing new).
         assert!(snap.executables >= 2);
+        r.shutdown();
+    }
+
+    /// The planner acceptance scenario: two DISTINCT QuantPlans of the
+    /// same model (built by the real allocator at different budgets),
+    /// device-resident side by side behind one engine thread, hit by
+    /// concurrent clients — every routed result matching that service's
+    /// direct scoring, and per-service counters tallying exactly the
+    /// submitted request counts.
+    #[test]
+    fn two_plans_of_one_model_serve_concurrently() {
+        use crate::plan::{plan_for_params, Candidate, ErrorModel, PlannerOpts};
+        let Some((r, meta)) = registered_router(71) else { return };
+        let params = ParamSet::init(&meta, 71); // same seed = same registered weights
+        let grid: Vec<Candidate> = [64usize, 1024, 4096]
+            .iter()
+            .flat_map(|&b| {
+                ["nf4", "af4"].iter().map(move |f| {
+                    Candidate::new(QuantSpec { family: f.to_string(), block_size: b })
+                })
+            })
+            .collect();
+        let mk_plan = |budget: f64| {
+            plan_for_params(
+                &meta,
+                &params,
+                &PlannerOpts {
+                    budget_bits: budget,
+                    grid: grid.clone(),
+                    error_model: ErrorModel::Predicted,
+                },
+            )
+            .expect("plan builds")
+        };
+        let plan_lo = mk_plan(4.05); // B=64 (4.5 bits) infeasible here
+        let plan_hi = mk_plan(4.60);
+        assert_ne!(plan_lo.digest(), plan_hi.digest(), "budgets must yield distinct plans");
+        assert!(plan_lo.avg_bits_per_param() <= 4.05 + 1e-6);
+        let keys = [r.register_plan(plan_lo), r.register_plan(plan_hi)];
+        assert_eq!(r.registered_plans().len(), 2);
+
+        let data = corpus::english(60_000, 7);
+        let seq = meta.seq_len;
+        let clients_per_plan = 2usize;
+        let reqs_per_client = 2usize;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for (ki, key) in keys.iter().enumerate() {
+                for c in 0..clients_per_plan {
+                    let r = &r;
+                    let data = &data;
+                    let key = key.clone();
+                    joins.push(s.spawn(move || {
+                        let mut out = Vec::new();
+                        for q in 0..reqs_per_client {
+                            let off = (ki * 37 + c * 11 + q) * 300;
+                            let ids: Vec<i32> =
+                                data[off..off + seq].iter().map(|&b| b as i32).collect();
+                            let tgt: Vec<i32> =
+                                data[off + 1..off + seq + 1].iter().map(|&b| b as i32).collect();
+                            let resp = r
+                                .score(ScoreRequest::new(&key, ids.clone(), tgt.clone()))
+                                .expect("routed score");
+                            assert_eq!(resp.nll.len(), seq);
+                            out.push((key.clone(), ids, tgt, resp));
+                        }
+                        out
+                    }));
+                }
+            }
+            for j in joins {
+                for (key, ids, tgt, resp) in j.join().unwrap() {
+                    let mut bids = Vec::new();
+                    let mut btgt = Vec::new();
+                    for _ in 0..meta.batch {
+                        bids.extend_from_slice(&ids);
+                        btgt.extend_from_slice(&tgt);
+                    }
+                    let (nll, _) = r.score_batch(&key, bids, btgt).unwrap();
+                    for (a, b) in resp.nll.iter().zip(&nll[..seq]) {
+                        assert!(
+                            (a - b).abs() < 1e-4,
+                            "{key}: routed vs direct: {a} vs {b} (cross-plan interleaving?)"
+                        );
+                    }
+                }
+            }
+        });
+        assert_eq!(r.service_count(), 2, "both plans live behind the one engine");
+        let snap = r.snapshot();
+        let expected = (clients_per_plan * reqs_per_client) as u64;
+        for key in &keys {
+            let stat = snap.get(key).expect("stat row for planned service");
+            assert!(stat.key.contains("plan:"), "planned keys are digest-labelled: {}", stat.key);
+            assert_eq!(
+                stat.requests, expected,
+                "{key}: counters must tally exactly the submitted requests"
+            );
+            assert_eq!(stat.errors, 0);
+        }
+        assert_eq!(snap.queued, 0);
         r.shutdown();
     }
 

@@ -1,23 +1,37 @@
-//! ModelService: a prepared (model × code × block-size) evaluation target.
+//! ModelService: a prepared (model × plan) evaluation target.
 //!
-//! Preparing a service quantizes the checkpoint with the requested code,
+//! Preparing a service quantizes the checkpoint per its [`ServePlan`],
 //! uploads all weights to the device **once** (device-resident across
 //! calls), and pre-compiles the scoring executable. Scoring then only
 //! moves (ids, targets) per call — the serving hot path.
+//!
+//! What a service serves is a **plan**, not a spec:
+//!
+//! - [`ServePlan::Uniform`] — the degenerate one-entry plan (one
+//!   [`QuantSpec`] for every tensor). `fp` serves the raw checkpoint
+//!   through `score_fp_<model>`; a code spec serves packed nibbles +
+//!   scales through the fused `score_q<B>_<model>` executable.
+//! - [`ServePlan::Planned`] — a [`QuantPlan`] with per-tensor specs. A
+//!   plan that degenerates to one spec (no DQ) is routed to the fused
+//!   executable; a genuinely heterogeneous plan serves its per-tensor
+//!   quantize→dequantize **reconstruction** through the fp executable
+//!   (the AOT artifacts bake in a single `(code, B)` pair, and serving
+//!   the reconstruction is mathematically identical to
+//!   dequantize-then-matmul). Buffers live under the plan's stable
+//!   content digest, so two plans of one model are distinct tenants.
 //!
 //! Services are owned by the [`crate::coordinator::Router`]: preparation
 //! and release are crate-internal, and external callers reach a service
 //! only through its [`crate::coordinator::ServiceKey`]. Several services
 //! can share one engine — their artifact executables are memoized per
 //! (kind, B, model) and their weight buffers live under disjoint
-//! generation-tagged `w/<model>/<family>/<B>/g<n>/` key prefixes (unique
-//! per prepared instance), which is what makes the multi-tenant router
-//! possible and keeps racing prepare/release cycles from ever touching
-//! each other's buffers.
+//! generation-tagged key prefixes (unique per prepared instance), which
+//! is what makes the multi-tenant router possible and keeps racing
+//! prepare/release cycles from ever touching each other's buffers.
 //!
 //! The weight path is the parallel quantizer (`quantize_par`, bit-identical
 //! to serial; see [`crate::quant::fused`]), and with `AFQ_HOST_PARITY=1`
-//! every matrix is cross-checked on the host — fused `qgemm` vs
+//! every fused-path matrix is cross-checked on the host — fused `qgemm` vs
 //! dequantize-then-matmul — before upload (see
 //! [`crate::model::quantized_weight_args`]).
 
@@ -25,94 +39,80 @@ use crate::codes::registry;
 use crate::coordinator::batcher::ScoreBackend;
 use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
 use crate::coordinator::metrics::{Counters, LatencyHistogram};
-use crate::model::{fp_weight_args, quantized_weight_args, ParamSet};
+use crate::model::{fp_weight_args, planned_weight_args, quantized_weight_args, ParamSet};
+use crate::plan::QuantPlan;
 use crate::runtime::{ModelMeta, TensorData};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+pub use crate::quant::QuantSpec;
+
 /// Monotone per-process preparation counter. Every prepared service gets a
-/// unique generation-tagged buffer prefix (`w/<model>/<family>/<B>/g<n>`),
-/// so a stale preparation racing a re-registration can never overwrite a
-/// fresh service's device buffers, and releasing one service instance can
-/// never evict another's.
+/// unique generation-tagged buffer prefix (`…/g<n>`), so a stale
+/// preparation racing a re-registration can never overwrite a fresh
+/// service's device buffers, and releasing one service instance can never
+/// evict another's.
 static PREPARE_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// What to quantize with: `fp` or a code-family spec (see codes::registry).
-/// Hashable so it can key the router's service registry.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
-pub struct QuantSpec {
-    pub family: String,
-    pub block_size: usize,
+/// What a [`ModelService`] serves: the degenerate one-spec plan, or a
+/// full per-tensor [`QuantPlan`].
+#[derive(Clone, Debug)]
+pub enum ServePlan {
+    /// One spec for every tensor (the pre-planner serving model).
+    Uniform(QuantSpec),
+    /// A per-tensor plan, shared with the router's plan registry.
+    Planned(Arc<QuantPlan>),
 }
 
-impl QuantSpec {
-    pub fn fp() -> Self {
-        Self { family: "fp".into(), block_size: 0 }
-    }
-
-    /// From separate CLI-ish arguments: `fp`/`fp32`/`none` ignore `block`.
-    pub fn parse(code: &str, block: usize) -> Self {
-        if registry::is_fp(code) {
-            Self::fp()
-        } else {
-            Self { family: code.to_string(), block_size: block }
-        }
-    }
-
-    /// Parse the compact `family@B` form (`nf4@64`, `af4@4096`) or `fp`.
-    pub fn parse_label(s: &str) -> Result<QuantSpec, String> {
-        if registry::is_fp(s) {
-            return Ok(Self::fp());
-        }
-        let (family, b) = s
-            .split_once('@')
-            .ok_or_else(|| format!("bad code spec {s:?} (want family@B or fp)"))?;
-        let block_size: usize =
-            b.parse().map_err(|_| format!("bad block size in code spec {s:?}"))?;
-        if family.is_empty() || block_size == 0 {
-            return Err(format!("bad code spec {s:?} (want family@B or fp)"));
-        }
-        Ok(QuantSpec { family: family.to_string(), block_size })
-    }
-
-    pub fn is_fp(&self) -> bool {
-        registry::is_fp(&self.family)
-    }
-
-    /// Compact display form: `fp` or `family@B` (parseable by
-    /// [`parse_label`](Self::parse_label)).
+impl ServePlan {
+    /// Display form: the spec label (`nf4@64`, `fp`) or `plan:<digest>`.
     pub fn label(&self) -> String {
-        if self.is_fp() {
-            "fp".to_string()
-        } else {
-            format!("{}@{}", self.family, self.block_size)
+        match self {
+            ServePlan::Uniform(spec) => spec.label(),
+            ServePlan::Planned(p) => format!("plan:{}", p.digest()),
         }
     }
 
-    pub fn artifact_name(&self, model: &str) -> String {
-        if self.is_fp() {
-            format!("score_fp_{model}")
-        } else {
-            format!("score_q{}_{model}", self.block_size)
+    /// The scoring executable this plan runs on (see the module docs for
+    /// why heterogeneous plans use the fp graph).
+    fn artifact_name(&self, model: &str) -> String {
+        match self {
+            ServePlan::Uniform(spec) => spec.artifact_name(model),
+            ServePlan::Planned(p) => match p.uniform_spec() {
+                Some(spec) => spec.artifact_name(model),
+                None => format!("score_fp_{model}"),
+            },
         }
     }
 
-    pub fn key_prefix(&self, model: &str) -> String {
-        format!("w/{model}/{}/{}", self.family, self.block_size)
+    /// Device-buffer namespace (pre-generation-tag). Planned services are
+    /// keyed by content digest: identical plans re-prepared later reuse
+    /// the same namespace family, distinct plans can never collide.
+    fn key_prefix(&self, model: &str) -> String {
+        match self {
+            ServePlan::Uniform(spec) => spec.key_prefix(model),
+            ServePlan::Planned(p) => format!("w/{model}/plan/{}", p.digest()),
+        }
     }
 }
 
-impl std::fmt::Display for QuantSpec {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(&self.label())
+impl From<QuantSpec> for ServePlan {
+    fn from(spec: QuantSpec) -> ServePlan {
+        ServePlan::Uniform(spec)
+    }
+}
+
+impl From<Arc<QuantPlan>> for ServePlan {
+    fn from(plan: Arc<QuantPlan>) -> ServePlan {
+        ServePlan::Planned(plan)
     }
 }
 
 pub struct ModelService {
     eng: EngineHandle,
     pub meta: ModelMeta,
-    pub spec: QuantSpec,
+    pub plan: ServePlan,
     artifact: String,
     /// This instance's unique device-buffer prefix (generation-tagged).
     prefix: String,
@@ -124,27 +124,42 @@ pub struct ModelService {
 impl ModelService {
     /// Quantize (parallel, bit-identical to serial) + upload weights and
     /// compile the scoring executable. `AFQ_HOST_PARITY=1` adds a fused
-    /// qgemm vs dequant+matmul cross-check per matrix before upload.
-    /// Crate-internal: services are prepared lazily by the router.
+    /// qgemm vs dequant+matmul cross-check per matrix before upload on the
+    /// fused path. Crate-internal: services are prepared lazily by the
+    /// router.
     pub(crate) fn prepare(
         eng: &EngineHandle,
         model: &str,
         params: &ParamSet,
-        spec: QuantSpec,
+        plan: impl Into<ServePlan>,
     ) -> Result<ModelService, String> {
+        let plan: ServePlan = plan.into();
         let meta = eng.manifest().config(model)?.clone();
         params.validate(&meta)?;
-        let artifact = spec.artifact_name(model);
+        match &plan {
+            ServePlan::Planned(p) => {
+                if p.model != model {
+                    return Err(format!(
+                        "plan {} was built for model {:?}, cannot serve {model:?}",
+                        p.digest(),
+                        p.model
+                    ));
+                }
+            }
+            ServePlan::Uniform(spec) => {
+                // Validate before the artifact lookup so a degenerate B
+                // reports the clear registry message, not a missing
+                // `score_q0` artifact.
+                if !spec.is_fp() && spec.block_size < 2 {
+                    return Err(registry::describe_build_failure(&spec.family, spec.block_size));
+                }
+            }
+        }
+        let artifact = plan.artifact_name(model);
         eng.manifest().artifact(&artifact)?; // fail fast if missing
         let generation = PREPARE_SEQ.fetch_add(1, Ordering::Relaxed);
-        let prefix = format!("{}/g{generation}", spec.key_prefix(model));
-        let weight_args = if spec.is_fp() {
-            fp_weight_args(&meta, params, &prefix)
-        } else {
-            let code = registry::for_block_size(&spec.family, spec.block_size)
-                .ok_or_else(|| format!("unknown code family {:?}", spec.family))?;
-            quantized_weight_args(&meta, params, &code, spec.block_size, &prefix)
-        };
+        let prefix = format!("{}/g{generation}", plan.key_prefix(model));
+        let weight_args = Self::weight_args(&plan, &meta, params, &prefix)?;
         let mut keys = Vec::with_capacity(weight_args.len());
         for (key, shape, data) in weight_args {
             eng.upload(&key, &shape, data)?;
@@ -154,13 +169,47 @@ impl ModelService {
         Ok(ModelService {
             eng: eng.clone(),
             meta,
-            spec,
+            plan,
             artifact,
             prefix,
             keys,
             latency: Arc::new(LatencyHistogram::new()),
             counters: Arc::new(Counters::default()),
         })
+    }
+
+    /// Resolve the weight upload list for a plan: fp params, fused packed
+    /// nibbles for a (degenerate-)uniform spec, or per-tensor
+    /// reconstructions for a heterogeneous plan.
+    fn weight_args(
+        plan: &ServePlan,
+        meta: &ModelMeta,
+        params: &ParamSet,
+        prefix: &str,
+    ) -> Result<Vec<(String, Vec<usize>, TensorData)>, String> {
+        let fused_spec = match plan {
+            ServePlan::Uniform(spec) => Some(spec),
+            ServePlan::Planned(p) => {
+                // Stale-plan check on BOTH branches: the heterogeneous
+                // path validates inside quantize_matrices_planned, but a
+                // degenerate-uniform plan would otherwise route straight
+                // to the fused path and serve while its digest describes
+                // tensors that no longer exist.
+                p.validate_matrices(meta)?;
+                match p.uniform_spec() {
+                    Some(spec) => Some(spec),
+                    None => return planned_weight_args(meta, params, p, prefix),
+                }
+            }
+        };
+        let spec = fused_spec.expect("heterogeneous case returned above");
+        if spec.is_fp() {
+            Ok(fp_weight_args(meta, params, prefix))
+        } else {
+            let code = registry::for_block_size(&spec.family, spec.block_size)
+                .ok_or_else(|| registry::describe_build_failure(&spec.family, spec.block_size))?;
+            Ok(quantized_weight_args(meta, params, &code, spec.block_size, prefix))
+        }
     }
 
     /// Score one [batch, seq] batch: returns (nll f32[b*s], correct i32[b*s]).
@@ -234,40 +283,39 @@ mod tests {
     use super::*;
     use crate::coordinator::engine_thread::EngineHandle;
     use crate::model::{corpus, BatchSampler, ParamSet};
+    use crate::plan::Assignment;
 
     #[test]
-    fn quant_spec_labels_round_trip() {
-        for (spec, label) in [
-            (QuantSpec::fp(), "fp"),
-            (QuantSpec { family: "nf4".into(), block_size: 64 }, "nf4@64"),
-            (QuantSpec { family: "af4".into(), block_size: 4096 }, "af4@4096"),
-            (QuantSpec { family: "balanced-ep".into(), block_size: 256 }, "balanced-ep@256"),
-        ] {
-            assert_eq!(spec.label(), label);
-            assert_eq!(QuantSpec::parse_label(label).unwrap(), spec);
-        }
-        assert_eq!(QuantSpec::parse_label("fp32").unwrap(), QuantSpec::fp());
-        assert!(QuantSpec::parse_label("nf4").is_err());
-        assert!(QuantSpec::parse_label("nf4@").is_err());
-        assert!(QuantSpec::parse_label("@64").is_err());
-        assert!(QuantSpec::parse_label("nf4@zero").is_err());
-        assert_eq!(QuantSpec::parse("fp32", 64), QuantSpec::fp());
-        assert_eq!(
-            QuantSpec::parse("af4", 64),
-            QuantSpec { family: "af4".into(), block_size: 64 }
-        );
-    }
+    fn serve_plan_labels_and_artifacts() {
+        let uni = ServePlan::Uniform(QuantSpec { family: "nf4".into(), block_size: 64 });
+        assert_eq!(uni.label(), "nf4@64");
+        assert_eq!(uni.artifact_name("tiny"), "score_q64_tiny");
+        let fp = ServePlan::Uniform(QuantSpec::fp());
+        assert_eq!(fp.artifact_name("tiny"), "score_fp_tiny");
 
-    #[test]
-    fn quant_spec_hashes_as_key() {
-        use std::collections::HashMap;
-        let mut m: HashMap<QuantSpec, i32> = HashMap::new();
-        m.insert(QuantSpec { family: "nf4".into(), block_size: 64 }, 1);
-        m.insert(QuantSpec { family: "nf4".into(), block_size: 4096 }, 2);
-        m.insert(QuantSpec::fp(), 3);
-        assert_eq!(m.len(), 3);
-        assert_eq!(m[&QuantSpec { family: "nf4".into(), block_size: 64 }], 1);
-        assert_eq!(m[&QuantSpec::fp()], 3);
+        let asg = |tensor: &str, label: &str| Assignment {
+            tensor: tensor.into(),
+            n_params: 1,
+            spec: QuantSpec::parse_label(label).unwrap(),
+            dq: None,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        };
+        // Heterogeneous plan → fp executable, digest-keyed buffers.
+        let het = Arc::new(QuantPlan::new(
+            "tiny",
+            vec![asg("a", "nf4@64"), asg("b", "af4@4096")],
+        ));
+        let sp = ServePlan::Planned(Arc::clone(&het));
+        assert_eq!(sp.label(), format!("plan:{}", het.digest()));
+        assert_eq!(sp.artifact_name("tiny"), "score_fp_tiny");
+        assert!(sp.key_prefix("tiny").contains(het.digest()));
+        // Degenerate uniform plan → fused executable.
+        let uni_plan = Arc::new(QuantPlan::new(
+            "tiny",
+            vec![asg("a", "nf4@64"), asg("b", "nf4@64")],
+        ));
+        assert_eq!(ServePlan::Planned(uni_plan).artifact_name("tiny"), "score_q64_tiny");
     }
 
     fn setup() -> Option<(EngineHandle, crate::coordinator::engine_thread::EngineThread)> {
@@ -300,6 +348,64 @@ mod tests {
         assert!((nll_q - nll_fp).abs() < 0.1, "q {nll_q} vs fp {nll_fp}");
         assert!(fp.latency.count() >= 2);
         q.release();
+        th.stop(&eng);
+    }
+
+    #[test]
+    fn planned_service_matches_uniform_reconstruction() {
+        // A degenerate uniform plan and a heterogeneous plan both prepare
+        // and score; the heterogeneous one runs the fp graph over
+        // reconstructed weights, so a plan assigning nf4@64 everywhere
+        // (forced heterogeneous via one differing tensor spec of the SAME
+        // family) must score close to the fused nf4@64 service.
+        let Some((eng, mut th)) = setup() else { return };
+        let meta = eng.manifest().config("tiny").unwrap().clone();
+        let params = ParamSet::init(&meta, 19);
+        let mk = |label: &str, name: &str, n: usize| Assignment {
+            tensor: name.into(),
+            n_params: n,
+            spec: QuantSpec::parse_label(label).unwrap(),
+            dq: None,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        };
+        let assignments: Vec<Assignment> = meta
+            .matrix_order
+            .iter()
+            .enumerate()
+            .map(|(i, (name, shape))| {
+                let label = if i == 0 { "nf4@256" } else { "nf4@64" };
+                mk(label, name, shape.iter().product())
+            })
+            .collect();
+        let plan = Arc::new(QuantPlan::new("tiny", assignments));
+        assert!(plan.uniform_spec().is_none(), "must exercise the reconstruction path");
+        let planned = ModelService::prepare(&eng, "tiny", &params, Arc::clone(&plan)).unwrap();
+        let fused = ModelService::prepare(
+            &eng,
+            "tiny",
+            &params,
+            QuantSpec { family: "nf4".into(), block_size: 64 },
+        )
+        .unwrap();
+        let data = corpus::english(40_000, 3);
+        let sampler = BatchSampler::new(data, meta.seq_len, meta.batch, 0);
+        let batches = sampler.eval_batches(2);
+        let nll_p = planned.mean_nll(&batches).unwrap();
+        let nll_f = fused.mean_nll(&batches).unwrap();
+        assert!(
+            (nll_p - nll_f).abs() < 0.1,
+            "planned {nll_p} vs fused {nll_f} (reconstruction path must be faithful)"
+        );
+        // Model-mismatch plans are rejected up front.
+        let err = ModelService::prepare(&eng, "tiny", &params, {
+            let other = QuantPlan::new("other", vec![mk("nf4@64", "x", 1)]);
+            Arc::new(other)
+        })
+        .unwrap_err();
+        assert!(err.contains("built for model"), "{err}");
+        planned.release();
+        fused.release();
         th.stop(&eng);
     }
 
@@ -344,5 +450,14 @@ mod tests {
             QuantSpec { family: "bogus".into(), block_size: 64 }
         )
         .is_err());
+        // Degenerate block sizes get the clear registry message.
+        let e = ModelService::prepare(
+            &eng,
+            "tiny",
+            &params,
+            QuantSpec { family: "af4".into(), block_size: 0 },
+        )
+        .unwrap_err();
+        assert!(e.contains("B ≥ 2"), "{e}");
     }
 }

@@ -8,6 +8,7 @@
 
 pub mod ablation;
 pub mod lm;
+pub mod planner;
 pub mod theory;
 
 use crate::util::json::Json;

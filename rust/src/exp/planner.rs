@@ -1,0 +1,319 @@
+//! Planner ablation: planned vs uniform quantization at equal average
+//! bits-per-param, sweeping budgets (engine-free).
+//!
+//! The claim under test is the serving-scale version of the paper's
+//! thesis: because the optimal `(code, B)` depends on the tensor (size,
+//! scale) and the budget couples tensors, a per-tensor plan at budget β
+//! never loses — and at budgets between the uniform grid points strictly
+//! wins — against the best uniform spec with bits ≤ β. "Predicted" error
+//! is the size-weighted `expected_l1(code, F_X(·;B))` objective the
+//! planner minimizes; "measured" is the actual reconstruction L1 of
+//! applying the plan to the bundled model's weights.
+
+use crate::exp::Report;
+use crate::model::ParamSet;
+use crate::plan::{
+    allocate, plan_for_params, tensor_costs, Candidate, ErrorModel, PlannerOpts, QuantPlan,
+    TensorCosts,
+};
+use crate::quant::recon_error;
+use crate::runtime::ModelMeta;
+use crate::util::json::Json;
+
+/// A transformer-shaped engine-free ModelMeta: `layers` blocks of six
+/// matrices plus embed/head, vectors first (`ParamSet::init`-compatible).
+/// GPT-2-style init gives two σ groups (residual projections ~quieter),
+/// which is exactly the heterogeneity the planner exploits. Shared with
+/// `benches/plan.rs`, which scales it up.
+pub fn synth_meta(name: &str, layers: usize, d: usize, vocab: usize) -> ModelMeta {
+    let ff = 4 * d;
+    let mut param_order: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut matrix_order: Vec<(String, Vec<usize>)> = Vec::new();
+    for l in 0..layers {
+        param_order.push((format!("l{l}.ln1_g"), vec![d]));
+        param_order.push((format!("l{l}.ln1_b"), vec![d]));
+    }
+    matrix_order.push(("embed".to_string(), vec![vocab, d]));
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            matrix_order.push((format!("l{l}.{w}"), vec![d, d]));
+        }
+        matrix_order.push((format!("l{l}.w1"), vec![d, ff]));
+        matrix_order.push((format!("l{l}.w2"), vec![ff, d]));
+    }
+    matrix_order.push(("head".to_string(), vec![d, vocab]));
+    param_order.extend(matrix_order.iter().cloned());
+    ModelMeta {
+        name: name.to_string(),
+        n_layer: layers,
+        d_model: d,
+        n_head: 4,
+        d_ff: ff,
+        seq_len: 32,
+        batch: 4,
+        vocab,
+        param_order,
+        matrix_order,
+    }
+}
+
+/// The ablation's bundled model: small enough to quantize in-test, shaped
+/// enough to plan over.
+pub fn bundled_meta() -> ModelMeta {
+    synth_meta("bundle", 2, 48, 256)
+}
+
+/// Measured per-param reconstruction L1 of applying `plan` to `params`.
+fn measured_l1(meta: &ModelMeta, params: &ParamSet, plan: &QuantPlan) -> f64 {
+    let planned = params.quantize_matrices_planned(meta, plan).expect("plan applies");
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (name, q) in planned {
+        let (_, _, data) = params.get(&name).expect("tensor present");
+        match q {
+            None => n += data.len(), // fp: zero error
+            Some(q) => {
+                let a = plan.get(&name).expect("assignment");
+                let code = crate::codes::registry::for_block_size(
+                    &a.spec.family,
+                    a.spec.block_size,
+                )
+                .expect("code builds");
+                let back = crate::quant::dequantize(&q, &code);
+                let e = recon_error(data, &back);
+                total += e.l1 * data.len() as f64;
+                n += data.len();
+            }
+        }
+    }
+    total / n.max(1) as f64
+}
+
+/// Best uniform candidate with bits ≤ budget, priced straight off the
+/// precomputed cost matrix (no extra weight scans): returns
+/// `(grid index, size-weighted err/param)`. Pub(lic) because
+/// `benches/plan.rs` records the same planned-vs-uniform ratios — one
+/// pricing rule, not two drifting copies.
+pub fn best_uniform(
+    grid: &[Candidate],
+    costs: &[TensorCosts],
+    budget: f64,
+) -> Option<(usize, f64)> {
+    let total_n: f64 = costs.iter().map(|t| t.n as f64).sum();
+    (0..grid.len())
+        .filter(|&c| grid[c].bits_per_param() <= budget + 1e-9)
+        .map(|c| {
+            let e: f64 = costs.iter().map(|t| t.n as f64 * t.err[c]).sum::<f64>() / total_n;
+            (c, e)
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+/// The ablation: for each budget, plan (predicted mode) and compare
+/// against the best single uniform candidate with bits ≤ budget, on both
+/// the predicted objective and the measured reconstruction error; then
+/// cross-check the empirical error mode at the tightest feasible budget.
+/// Infeasible budgets (below the cheapest grid candidate) are reported
+/// and skipped, never panicked on — they are reachable from the CLI.
+pub fn planner_ablation(budgets: &[f64], blocks: &[usize], seed: u64) -> Report {
+    let budgets: &[f64] = if budgets.is_empty() { &[4.1, 4.5] } else { budgets };
+    let blocks: &[usize] = if blocks.is_empty() { &[64, 1024, 4096] } else { blocks };
+    let mut rep = Report::new(
+        "ablation-planner",
+        "planned vs uniform quantization at equal avg bits/param (budget sweep)",
+    );
+    let meta = bundled_meta();
+    let params = ParamSet::init(&meta, seed);
+    let grid = PlannerOpts::default_grid(&["nf4", "af4"], blocks);
+    rep.println(&format!(
+        "bundled model: {} matrices, {} params; grid: {} candidate(s)",
+        meta.matrix_order.len(),
+        meta.matrix_order.iter().map(|(_, s)| s.iter().product::<usize>()).sum::<usize>(),
+        grid.len()
+    ));
+    // ONE set of weight scans prices every budget and every uniform
+    // baseline below.
+    let costs = match tensor_costs(&meta, &params, &grid, ErrorModel::Predicted) {
+        Ok(c) => c,
+        Err(e) => {
+            rep.check(&format!("cost matrix builds ({e})"), false);
+            return rep;
+        }
+    };
+    // Uniform plan object (for measured error) from the same cost matrix:
+    // project the chosen candidate's column into a single-candidate grid.
+    let uniform_plan = |c: usize| -> QuantPlan {
+        let projected: Vec<TensorCosts> = costs
+            .iter()
+            .map(|t| TensorCosts { name: t.name.clone(), n: t.n, err: vec![t.err[c]] })
+            .collect();
+        allocate(&meta.name, &projected, &grid[c..=c], grid[c].bits_per_param())
+            .expect("exact-budget uniform plan is feasible by construction")
+    };
+    rep.println(&format!(
+        "{:>7} {:>10} {:>9} {:>13} {:>13} {:>13} {:>16}",
+        "budget", "plan-bits", "configs", "pred planned", "pred uniform", "meas planned", "best uniform"
+    ));
+
+    let mut all_planned_le_uniform = true;
+    let mut measured_ok = true;
+    let mut feasible_budgets: Vec<f64> = Vec::new();
+    for &budget in budgets {
+        let plan = match allocate(&meta.name, &costs, &grid, budget) {
+            Ok(p) => p,
+            Err(e) => {
+                rep.println(&format!("{budget:>7.3} skipped: {e}"));
+                continue;
+            }
+        };
+        let (uc, pu) = best_uniform(&grid, &costs, budget)
+            .expect("a feasible budget admits at least the cheapest uniform candidate");
+        let uni = uniform_plan(uc);
+        let uni_label = grid[uc].label();
+        feasible_budgets.push(budget);
+        let pp = plan.predicted_l1_per_param();
+        let (mp, mu) = (measured_l1(&meta, &params, &plan), measured_l1(&meta, &params, &uni));
+        all_planned_le_uniform &= pp <= pu + 1e-12;
+        // Measured errors track predicted closely on (near-)normal
+        // weights; allow small model error but never a real regression.
+        measured_ok &= mp <= mu * 1.02;
+        rep.println(&format!(
+            "{budget:>7.3} {:>10.4} {:>9} {pp:>13.4e} {pu:>13.4e} {mp:>13.4e} {:>10.4e} {uni_label}",
+            plan.avg_bits_per_param(),
+            plan.n_distinct_configs(),
+            mu,
+        ));
+        let mut row = Json::obj();
+        row.set("budget", Json::Num(budget))
+            .set("plan_bits", Json::Num(plan.avg_bits_per_param()))
+            .set("plan_digest", Json::Str(plan.digest().to_string()))
+            .set("n_configs", Json::Num(plan.n_distinct_configs() as f64))
+            .set("predicted_planned", Json::Num(pp))
+            .set("predicted_uniform", Json::Num(pu))
+            .set("measured_planned", Json::Num(mp))
+            .set("measured_uniform", Json::Num(mu))
+            .set("uniform", Json::Str(uni_label));
+        rep.json_push("rows", row);
+    }
+    rep.check(
+        "at least one requested budget is feasible for the grid",
+        !feasible_budgets.is_empty(),
+    );
+    if feasible_budgets.is_empty() {
+        return rep;
+    }
+    rep.check(
+        "planned ≤ best uniform on size-weighted expected L1 at every budget",
+        all_planned_le_uniform,
+    );
+    rep.check("measured L1 of planned ≤ uniform (2% model slack)", measured_ok);
+
+    // Strict-win probe. User budgets may all be loose (planned == uniform
+    // is then the CORRECT answer, not a failure), so the strictness check
+    // runs at a grid-derived witness budget: halfway between the globally
+    // error-minimal candidate's bits and the best cheaper uniform's bits.
+    // There a mixed plan provably wins whenever the model has ≥ 2 tensors
+    // (half the budget gap buys the better spec for any tensor holding
+    // ≤ 50% of the params, strictly lowering the factorized objective).
+    let total_n: f64 = costs.iter().map(|t| t.n as f64).sum();
+    let err_per_param =
+        |c: usize| costs.iter().map(|t| t.n as f64 * t.err[c]).sum::<f64>() / total_n;
+    let c_star = (0..grid.len())
+        .min_by(|&a, &b| err_per_param(a).partial_cmp(&err_per_param(b)).unwrap())
+        .expect("non-empty grid");
+    let cheaper_best = (0..grid.len())
+        .filter(|&c| grid[c].bits_per_param() < grid[c_star].bits_per_param() - 1e-9)
+        .min_by(|&a, &b| err_per_param(a).partial_cmp(&err_per_param(b)).unwrap());
+    match cheaper_best {
+        Some(u) if costs.len() >= 2 => {
+            let witness = 0.5 * (grid[c_star].bits_per_param() + grid[u].bits_per_param());
+            let plan_w = allocate(&meta.name, &costs, &grid, witness)
+                .expect("witness budget is above a feasible candidate");
+            let (_, pu_w) = best_uniform(&grid, &costs, witness).expect("witness is feasible");
+            rep.println(&format!(
+                "witness budget {witness:.4} (between {} and {}): planned {:.4e} vs uniform {:.4e}",
+                grid[u].label(),
+                grid[c_star].label(),
+                plan_w.predicted_l1_per_param(),
+                pu_w
+            ));
+            rep.check(
+                "planned strictly beats best uniform at the witness budget (heterogeneity pays)",
+                plan_w.predicted_l1_per_param() < pu_w * 0.999,
+            );
+        }
+        _ => rep.println(
+            "(single-config grid or single-tensor model: no strict-win witness exists; skipped)",
+        ),
+    }
+
+    // Digest stability: re-planning identical inputs (through the full
+    // pipeline, weight scans included) reproduces the digest.
+    let b0 = feasible_budgets[0];
+    let opts = |mode: ErrorModel| PlannerOpts {
+        budget_bits: b0,
+        grid: grid.clone(),
+        error_model: mode,
+    };
+    let again = plan_for_params(&meta, &params, &opts(ErrorModel::Predicted)).expect("replan");
+    rep.check(
+        "plan digest stable across runs",
+        again.digest() == plan_for_params(&meta, &params, &opts(ErrorModel::Predicted))
+            .expect("replan")
+            .digest(),
+    );
+
+    // Empirical mode: measured block-absmax stats replace the σ·E[M]
+    // model; on this (normal-init) model both modes should land close on
+    // measured error.
+    let plan_e = plan_for_params(&meta, &params, &opts(ErrorModel::Empirical)).expect("replan");
+    let me = measured_l1(&meta, &params, &plan_e);
+    let mu0 = best_uniform(&grid, &costs, b0)
+        .map(|(c, _)| measured_l1(&meta, &params, &uniform_plan(c)))
+        .expect("feasible budget has a uniform baseline");
+    rep.println(&format!(
+        "empirical mode @ {b0:.3}: measured L1 {me:.4e} (uniform {mu0:.4e}), digest {}",
+        plan_e.digest()
+    ));
+    rep.check("empirical-mode plan also ≤ uniform on measured L1 (2% slack)", me <= mu0 * 1.02);
+    rep.json.set("empirical_measured", Json::Num(me));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planner_ablation_checks() {
+        // Budgets chosen to exercise both a tight region (B=64 infeasible)
+        // and a loose one; blocks kept small to bound code-construction
+        // time (the predict table is shared with other tests).
+        let rep = planner_ablation(&[4.1, 4.5], &[64, 1024, 4096], 0);
+        assert!(rep.all_checks_pass(), "{:?}", rep.failed_checks());
+    }
+
+    #[test]
+    fn infeasible_budgets_are_skipped_not_panicked() {
+        // 3.9 bits/param is below every 4-bit candidate; the report must
+        // record the failure as a check, not crash the process (these
+        // budgets are reachable from `afq exp ablation-planner --budgets`).
+        let rep = planner_ablation(&[3.9], &[64], 1);
+        assert!(!rep.all_checks_pass());
+        assert!(rep
+            .failed_checks()
+            .iter()
+            .any(|c| c.contains("at least one requested budget")));
+    }
+
+    #[test]
+    fn bundled_meta_is_init_compatible() {
+        let meta = bundled_meta();
+        let params = ParamSet::init(&meta, 1);
+        params.validate(&meta).unwrap();
+        // Residual projections are quieter than the rest — the σ spread
+        // the planner exploits.
+        let sig = |name: &str| crate::plan::stats::sigma(&params.get(name).unwrap().2);
+        assert!(sig("l0.wo") < sig("l0.wq") * 0.8);
+    }
+}

@@ -27,41 +27,62 @@
 //!   inverses to ~1e-15.
 //! - [`codes`] — the paper's contribution: NF4, the AF4-B family built by
 //!   shooting on `dist`, balanced codes, expected-error functionals
-//!   (Stieltjes by parts, atom-exact).
-//! - [`quant`] / [`tensor`] — blockwise quantization of real buffers, and
+//!   (Stieltjes by parts, atom-exact), and the memoized per-`(code, B)`
+//!   predicted-error table ([`codes::predict`]) the planner minimizes.
+//! - [`quant`] / [`tensor`] — blockwise quantization of real buffers: the
+//!   [`quant::QuantSpec`] naming layer (`family@B` labels, parsed and
+//!   validated — block sizes < 2 are rejected with a clear error), and
 //!   the fused serving path ([`quant::fused`]): `qgemm` multiplies through
 //!   packed nibbles + per-block scales directly (no dequantized
 //!   intermediate), mirroring the L1 Pallas `qmatmul` kernel; the
 //!   `quantize_par`/`qgemm_par` variants are **bit-identical** to their
 //!   serial counterparts for any worker count, and golden-vector parity
 //!   with the Pallas kernel is pinned by `rust/tests/fused_parity.rs`.
+//! - [`plan`] — the **quantization planner**: given a model's weights, a
+//!   candidate grid (families × block sizes, ± double-quantized scales)
+//!   and a bits-per-parameter budget, assign each tensor its own spec by
+//!   minimizing total size-weighted predicted L1 error (Lagrangian sweep
+//!   + greedy refinement, never worse than the best uniform spec at equal
+//!   budget). Error comes in two modes — *predicted* (i.i.d.-normal model
+//!   σ̂·E[M_B]·`expected_l1`) and *empirical* (measured block-absmax
+//!   stats per tensor). The result is a [`plan::QuantPlan`] whose
+//!   **stable content digest** (FNV-1a over the ordered per-tensor
+//!   assignments, independent of error estimates/mode/process) is what
+//!   the serving layer keys by.
 //! - [`model`] / [`runtime`] — the LM substrate and the PJRT engine
 //!   (device-resident named buffers, memoized executables); weight
-//!   preparation quantizes in parallel and can cross-check
+//!   preparation quantizes in parallel — one code per model
+//!   (`quantize_matrices`) or heterogeneous per-tensor specs from a plan
+//!   (`quantize_matrices_planned`) — and can cross-check
 //!   fused-vs-reference on the host (`AFQ_HOST_PARITY=1`).
 //! - [`coordinator`] — the **multi-tenant serving stack**. A
 //!   [`coordinator::Router`] owns the single engine thread and a registry
 //!   of [`coordinator::ModelService`]s keyed by
-//!   [`coordinator::ServiceKey`] (model × code × block-size). Requests
-//!   flow: request thread → `Router::score` (admission control: global +
+//!   [`coordinator::ServiceKey`] (model × plan): a uniform spec is the
+//!   degenerate one-entry plan served through the fused `score_q<B>`
+//!   executable, and registered [`plan::QuantPlan`]s are keyed by content
+//!   digest — heterogeneous plans serve their per-tensor
+//!   quantize→dequantize reconstruction through the fp executable (the
+//!   AOT artifacts bake in a single `(code, B)`), so two plans of one
+//!   model A/B-serve side by side behind one engine. Requests flow:
+//!   request thread → `Router::score` (admission control: global +
 //!   per-service queue quotas, fail-fast) → that service's dynamic
 //!   [`coordinator::Batcher`] (size-or-deadline assembly into [batch,
 //!   seq]) → the shared engine thread. Services prepare lazily on first
-//!   request — weights are quantized, uploaded once, and stay
-//!   device-resident under per-service key prefixes, while artifact
-//!   executables and code tables are shared across services — so NF4,
-//!   AF4, and balanced configs A/B-serve concurrently from one process.
-//!   Shutdown drains: batchers flush in-flight batches and either execute
-//!   or explicitly fail queued requests (never a silent drop), and the
-//!   engine thread stops last. `coordinator::trainer` drives the AOT
-//!   train step on the same engine.
+//!   request; shutdown drains batchers before the engine stops (never a
+//!   silent drop). `coordinator::trainer` drives the AOT train step on
+//!   the same engine.
 //! - [`exp`] — the figure-by-figure experiment harness, running its
-//!   model × code × B grids as routed services.
+//!   model × code × B grids as routed services, plus the planner ablation
+//!   (`afq exp ablation-planner`: planned vs best-uniform at equal
+//!   average bits across a budget sweep).
 //!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
-//! and [`quant`] (the mechanism). `examples/quickstart.rs` shows the
-//! pure-Rust flow; `examples/serve.rs` shows the multi-tenant router
-//! serving several quantization configs under concurrent load.
+//! [`quant`] (the mechanism), and [`plan`] (the budgeted per-tensor
+//! allocator on top). `examples/quickstart.rs` shows the pure-Rust flow;
+//! `examples/serve.rs` shows the multi-tenant router serving several
+//! quantization configs — including a budgeted `--plan` — under
+//! concurrent load.
 
 pub mod codes;
 pub mod coordinator;
@@ -69,6 +90,7 @@ pub mod dist;
 pub mod exp;
 pub mod model;
 pub mod numerics;
+pub mod plan;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

@@ -13,8 +13,9 @@
 use afq::codes::registry;
 use afq::coordinator::{ensure_checkpoint, QuantSpec, Router, ServiceKey};
 use afq::exp;
-use afq::model::{bytes_per_word, generate_corpus, BatchSampler};
-use afq::util::cli::Command;
+use afq::model::{bytes_per_word, generate_corpus, BatchSampler, ParamSet};
+use afq::plan::{plan_for_params, Candidate, ErrorModel, PlannerOpts};
+use afq::util::cli::{Args, Command};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -28,6 +29,7 @@ fn main() {
     let result = match cmd {
         "codes" => cmd_codes(&rest),
         "quantize" => cmd_quantize(&rest),
+        "plan" => cmd_plan(&rest),
         "train" => cmd_train(&rest),
         "eval" => cmd_eval(&rest),
         "exp" => cmd_exp(&rest),
@@ -52,8 +54,10 @@ fn usage() -> String {
      commands:\n\
        codes      print code tables (nf4, af4-<B>, balanced-<B>, …)\n\
        quantize   quantize synthetic weights, report reconstruction error\n\
+       plan       build a budgeted per-tensor quantization plan for a model\n\
        train      train a model from Rust via the AOT train step\n\
        eval       perplexity eval of a model × code × block-size config\n\
+                  (or a planned config via --plan <bits-budget>)\n\
        exp        regenerate paper figures (fig01..fig13, sec3, ablation-*)\n\
        info       artifact manifest summary"
         .to_string()
@@ -92,7 +96,7 @@ fn cmd_quantize(argv: &[String]) -> Result<(), String> {
     println!("{:>6} {:>10} {:>12} {:>12} {:>12}", "B", "bits", "L1", "L2", "max");
     for b in args.usize_list("blocks", &[64, 256, 1024, 4096]) {
         let code = registry::for_block_size(family, b)
-            .ok_or_else(|| format!("unknown code family {family:?}"))?;
+            .ok_or_else(|| registry::describe_build_failure(family, b))?;
         let q = afq::quant::quantize(&w, b, &code);
         let back = afq::quant::dequantize(&q, &code);
         let err = afq::quant::recon_error(&w, &back);
@@ -104,6 +108,66 @@ fn cmd_quantize(argv: &[String]) -> Result<(), String> {
             err.max
         );
     }
+    Ok(())
+}
+
+/// Shared `--grid`/`--empirical` parsing for the planner entry points:
+/// an explicit comma list of candidate labels (`nf4@64,af4@4096+dq256`),
+/// or the default families × blocks grid (each ± DQ-256 scales).
+fn planner_opts_from(args: &Args, budget: f64) -> Result<PlannerOpts, String> {
+    let grid_arg = args.get_or("grid", "");
+    let grid: Vec<Candidate> = if grid_arg.is_empty() {
+        PlannerOpts::default_grid(
+            &["nf4", "af4"],
+            &args.usize_list("blocks", &[64, 256, 1024, 4096]),
+        )
+    } else {
+        args.str_list("grid", &[])
+            .iter()
+            .map(|s| Candidate::parse_label(s))
+            .collect::<Result<_, _>>()?
+    };
+    let error_model =
+        if args.flag("empirical") { ErrorModel::Empirical } else { ErrorModel::Predicted };
+    Ok(PlannerOpts { budget_bits: budget, grid, error_model })
+}
+
+fn cmd_plan(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("plan", "build a budgeted per-tensor quantization plan")
+        .opt("model", "tiny|small|base", Some("small"))
+        .opt("budget", "average bits-per-param ceiling", Some("4.25"))
+        .opt("grid", "candidate labels (family@B[+dqG], fp); empty = families × blocks", None)
+        .opt("blocks", "block sizes for the default grid", Some("64,256,1024,4096"))
+        .opt("ckpt", "checkpoint path (default: random-init weights)", None)
+        .opt("seed", "rng seed for random-init weights", Some("0"))
+        .opt("artifacts", "artifacts dir (manifest only; no engine)", Some("artifacts"))
+        .opt("results", "results output dir", Some("results"))
+        .flag("empirical", "use measured block-absmax stats instead of the normal model");
+    let args = cmd.parse(argv)?;
+    let model = args.get_or("model", "small");
+    let manifest = afq::runtime::Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    let meta = manifest.config(model)?;
+    let params = match args.get("ckpt") {
+        Some(path) => ParamSet::load(path)?,
+        None => {
+            println!("no --ckpt given: planning over random-init weights (seed {})", args.u64("seed", 0));
+            ParamSet::init(meta, args.u64("seed", 0))
+        }
+    };
+    let opts = planner_opts_from(&args, args.f64("budget", 4.25))?;
+    let plan = plan_for_params(meta, &params, &opts)?;
+    print!("{}", plan.summary());
+    println!(
+        "avg bits/param {:.4} (budget {:.4}), predicted L1/param {:.4e}, {} distinct config(s)",
+        plan.avg_bits_per_param(),
+        opts.budget_bits,
+        plan.predicted_l1_per_param(),
+        plan.n_distinct_configs()
+    );
+    let path = format!("{}/plan_{model}_{}.json", args.get_or("results", "results"), plan.digest());
+    afq::util::write_file(&path, &plan.to_json().to_string_pretty())
+        .map_err(|e| format!("save plan: {e}"))?;
+    println!("saved {path}");
     Ok(())
 }
 
@@ -133,10 +197,14 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
         .opt("corpus", "english|markov", Some("english"))
         .opt("code", "fp|nf4|af4|balanced-ep|…", Some("nf4"))
         .opt("block", "block size", Some("64"))
+        .opt("plan", "bits-per-param budget: eval a planned per-tensor config instead of --code/--block", None)
+        .opt("grid", "planner candidate labels; empty = families × blocks", None)
+        .opt("blocks", "block sizes for the default planner grid", Some("64,256,1024,4096"))
         .opt("steps", "train steps for checkpoint", Some("200"))
         .opt("eval-batches", "number of eval batches", Some("6"))
         .opt("artifacts", "artifacts dir", Some("artifacts"))
-        .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"));
+        .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"))
+        .flag("empirical", "planner: use measured block-absmax stats");
     let args = cmd.parse(argv)?;
     let model = args.get_or("model", "small");
     let corpus = args.get_or("corpus", "english");
@@ -148,10 +216,22 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
         args.usize("steps", 200),
         args.get_or("ckpt-dir", "checkpoints"),
     )?;
-    router.register_model(model, params)?;
+    let params = router.register_model(model, params)?;
     let meta = router.manifest().config(model)?.clone();
-    let spec = QuantSpec::parse(args.get_or("code", "nf4"), args.usize("block", 64));
-    let key = ServiceKey::new(model, spec);
+    let key = match args.get("plan") {
+        Some(budget) => {
+            let budget: f64 =
+                budget.parse().map_err(|_| format!("bad --plan budget {budget:?}"))?;
+            let opts = planner_opts_from(&args, budget)?;
+            let plan = plan_for_params(&meta, &params, &opts)?;
+            print!("{}", plan.summary());
+            router.register_plan(plan)
+        }
+        None => {
+            let spec = QuantSpec::parse(args.get_or("code", "nf4"), args.usize("block", 64))?;
+            ServiceKey::new(model, spec)
+        }
+    };
     let val = generate_corpus(corpus, 300_000, exp::lm::VAL_SEED)?;
     let bpw = bytes_per_word(&val);
     let sampler = BatchSampler::new(val, meta.seq_len, meta.batch, 0);
@@ -180,11 +260,17 @@ fn cmd_exp(argv: &[String]) -> Result<(), String> {
         .opt("artifacts", "artifacts dir", Some("artifacts"))
         .opt("ckpt-dir", "checkpoint dir", Some("checkpoints"))
         .opt("results", "results output dir", Some("results"))
+        .opt("budgets", "bits-per-param budgets for ablation-planner", Some("4.05,4.15,4.3,4.5"))
         .opt("seed", "rng seed", Some("0"));
     let args = cmd.parse(argv)?;
     let id = args.positional.first().cloned().ok_or(
-        "usage: afq exp <fig01..fig13|sec3|ablation-codes|ablation-objective|ablation-dq|all-theory|all-lm>",
+        "usage: afq exp <fig01..fig13|sec3|ablation-codes|ablation-objective|ablation-dq|ablation-planner|all-theory|all-lm>",
     )?;
+    let budgets: Vec<f64> = args
+        .str_list("budgets", &["4.05", "4.15", "4.3", "4.5"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| format!("bad budget {s:?}")))
+        .collect::<Result<_, _>>()?;
     let blocks = args.usize_list("blocks", &[64, 256, 1024, 4096]);
     let seed = args.u64("seed", 0);
     let results_dir = args.get_or("results", "results").to_string();
@@ -252,6 +338,7 @@ fn cmd_exp(argv: &[String]) -> Result<(), String> {
             "ablation-codes" => run(exp::ablation::code_error_table(&blocks)),
             "ablation-objective" => run(exp::ablation::l1_vs_l2_objective(64)),
             "ablation-dq" => run(exp::ablation::double_quant_tradeoff(seed)),
+            "ablation-planner" => run(exp::planner::planner_ablation(&budgets, &blocks, seed)),
             "all-theory" => {
                 run(exp::theory::fig01(&fig_blocks_big));
                 run(exp::theory::fig02(&[16, 64, 256, 1024, 4096], 20, seed));
@@ -264,6 +351,7 @@ fn cmd_exp(argv: &[String]) -> Result<(), String> {
                 run(exp::ablation::code_error_table(&blocks));
                 run(exp::ablation::l1_vs_l2_objective(64));
                 run(exp::ablation::double_quant_tradeoff(seed));
+                run(exp::planner::planner_ablation(&budgets, &blocks, seed));
             }
             "all-lm" => {
                 let e = e.unwrap();

@@ -122,6 +122,45 @@ fn host_parity_check(name: &str, q: &crate::quant::Quantized, shape: &[usize], c
     );
 }
 
+/// The arguments a `score_fp_<model>` artifact expects when serving a
+/// heterogeneous [`crate::plan::QuantPlan`]: every param in manifest
+/// order, with each planned matrix replaced by its **reconstruction**
+/// (quantize with the tensor's assigned code/block size, then dequantize).
+///
+/// The AOT artifacts bake in a single `(code table, B)` pair, so a plan
+/// mixing block sizes cannot ride the fused `score_q<B>` executable;
+/// serving the dequantized reconstruction through the fp graph is
+/// mathematically identical to dequantize-then-matmul and keeps the
+/// per-tensor quantization error exactly. Degenerate uniform plans are
+/// routed to the fused path by the service layer instead and never reach
+/// this function.
+pub fn planned_weight_args(
+    meta: &ModelMeta,
+    params: &ParamSet,
+    plan: &crate::plan::QuantPlan,
+    key_prefix: &str,
+) -> Result<Vec<(String, Vec<usize>, TensorData)>, String> {
+    use crate::codes::registry;
+    let planned = params.quantize_matrices_planned(meta, plan)?;
+    let mut recon: std::collections::HashMap<String, Vec<f32>> = std::collections::HashMap::new();
+    for (name, q) in planned {
+        if let Some(q) = q {
+            let a = plan.get(&name).expect("planned tensor has an assignment");
+            let code = registry::for_block_size(&a.spec.family, a.spec.block_size)
+                .expect("assignment built a code during quantization");
+            recon.insert(name, crate::quant::dequantize(&q, &code));
+        }
+    }
+    Ok(params
+        .tensors
+        .iter()
+        .map(|(n, s, d)| {
+            let data = recon.remove(n).unwrap_or_else(|| d.clone());
+            (format!("{key_prefix}/{n}"), s.clone(), TensorData::F32(data))
+        })
+        .collect())
+}
+
 /// The arguments a `score_fp_<model>` artifact expects after (ids, targets):
 /// every fp32 param in order.
 pub fn fp_weight_args(
@@ -169,6 +208,51 @@ mod tests {
         let code = crate::codes::nf4();
         let q = crate::quant::quantize(&vec![0.5f32; 64], 64, &code);
         host_parity_check("w.bad", &q, &[9, 9], &code);
+    }
+
+    #[test]
+    fn planned_args_reconstruct_per_tensor() {
+        use crate::plan::{Assignment, QuantPlan};
+        use crate::quant::QuantSpec;
+        let meta = ModelMeta {
+            name: "t".into(),
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq_len: 4,
+            batch: 2,
+            vocab: 64,
+            param_order: vec![
+                ("ln_g".into(), vec![8]),
+                ("wq".into(), vec![8, 8]),
+                ("wk".into(), vec![8, 8]),
+            ],
+            matrix_order: vec![("wq".into(), vec![8, 8]), ("wk".into(), vec![8, 8])],
+        };
+        let params = ParamSet::init(&meta, 5);
+        let asg = |tensor: &str, label: &str| Assignment {
+            tensor: tensor.into(),
+            n_params: 64,
+            spec: QuantSpec::parse_label(label).unwrap(),
+            dq: None,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        };
+        let plan = QuantPlan::new("t", vec![asg("wq", "nf4@16"), asg("wk", "fp")]);
+        let args = planned_weight_args(&meta, &params, &plan, "w/t/plan/x").unwrap();
+        // Every param in order, under the prefix.
+        assert_eq!(args.len(), 3);
+        for (arg, (name, _)) in args.iter().zip(&meta.param_order) {
+            assert_eq!(arg.0, format!("w/t/plan/x/{name}"));
+        }
+        // The planned matrix is its quantize→dequantize reconstruction…
+        let code = crate::codes::nf4();
+        let want = crate::quant::roundtrip(&params.get("wq").unwrap().2, 16, &code);
+        assert_eq!(args[1].2.as_f32().unwrap(), &want[..]);
+        // …while fp-assigned and vector tensors pass through untouched.
+        assert_eq!(args[2].2.as_f32().unwrap(), &params.get("wk").unwrap().2[..]);
+        assert_eq!(args[0].2.as_f32().unwrap(), &params.get("ln_g").unwrap().2[..]);
     }
 
     #[test]

@@ -125,10 +125,12 @@ impl ParamSet {
     /// Quantize every W^T matrix with `code` at `block_size` (flat blocking,
     /// matching the L2 layout). Returns (name, Quantized) in matrix order.
     ///
-    /// Blocks are sharded over [`crate::util::threadpool::scope_map`]
-    /// (`quantize_par`), which is bit-identical to the serial quantizer —
-    /// this is the `ModelService::prepare` weight path, where serial
-    /// scalar quantization used to dominate service start-up.
+    /// The degenerate uniform case of [`Self::quantize_matrices_planned`]
+    /// — one code for every matrix. Blocks are sharded over
+    /// [`crate::util::threadpool::scope_map`] (`quantize_par`), which is
+    /// bit-identical to the serial quantizer — this is the
+    /// `ModelService::prepare` weight path, where serial scalar
+    /// quantization used to dominate service start-up.
     pub fn quantize_matrices(
         &self,
         meta: &ModelMeta,
@@ -141,6 +143,60 @@ impl ParamSet {
             .map(|(name, _)| {
                 let (_, _, data) = self.get(name).expect("matrix in param set");
                 (name.clone(), quantize_par(data, block_size, code, workers))
+            })
+            .collect()
+    }
+
+    /// Apply a heterogeneous [`crate::plan::QuantPlan`]: each matrix is
+    /// quantized with **its own** assigned code and block size (flat
+    /// blocking, parallel, bit-identical to serial). `None` marks a
+    /// tensor the plan keeps at full precision. Double-quantized
+    /// assignments get their scales round-tripped through
+    /// [`crate::quant::double::DqScales`], so the returned scales reflect
+    /// the true DQ storage cost.
+    ///
+    /// Fails (never panics) on plans that miss a matrix, name an unknown
+    /// family, or carry a degenerate block size.
+    pub fn quantize_matrices_planned(
+        &self,
+        meta: &ModelMeta,
+        plan: &crate::plan::QuantPlan,
+    ) -> Result<Vec<(String, Option<Quantized>)>, String> {
+        use crate::codes::registry;
+        let workers = crate::util::threadpool::default_workers();
+        // A stale plan (same model name, different tensor set/sizes — e.g.
+        // after an artifact rebuild) or a hand-built degenerate one (B < 2,
+        // dq group 0) must fail loudly here, not drop assignments or panic
+        // inside the quantizer.
+        plan.validate_matrices(meta)?;
+        meta.matrix_order
+            .iter()
+            .map(|(name, _)| {
+                let a = plan.get(name).expect("validated: every matrix has an assignment");
+                let (_, _, data) = self
+                    .get(name)
+                    .ok_or_else(|| format!("tensor {name:?} missing from param set"))?;
+                if a.n_params != data.len() {
+                    return Err(format!(
+                        "plan {} sized tensor {name:?} at {} params but the checkpoint has {} — stale plan?",
+                        plan.digest(),
+                        a.n_params,
+                        data.len()
+                    ));
+                }
+                if a.spec.is_fp() {
+                    return Ok((name.clone(), None));
+                }
+                let code = registry::for_block_size(&a.spec.family, a.spec.block_size)
+                    .ok_or_else(|| {
+                        registry::describe_build_failure(&a.spec.family, a.spec.block_size)
+                    })?;
+                let mut q = quantize_par(data, a.spec.block_size, &code, workers);
+                if let Some(group) = a.dq {
+                    let dq = crate::quant::double::DqScales::quantize(&q.scales, group);
+                    q.scales = dq.dequantize_all();
+                }
+                Ok((name.clone(), Some(q)))
             })
             .collect()
     }
@@ -253,6 +309,87 @@ mod tests {
         let mut p = ParamSet::init(&m, 1);
         p.tensors[0].0 = "wrong".into();
         assert!(p.validate(&m).is_err());
+    }
+
+    #[test]
+    fn quantize_matrices_planned_is_per_tensor() {
+        use crate::plan::{Assignment, QuantPlan};
+        use crate::quant::QuantSpec;
+        let mut m = meta();
+        m.param_order.push(("l0.wk".into(), vec![8, 8]));
+        m.matrix_order.push(("l0.wk".into(), vec![8, 8]));
+        let p = ParamSet::init(&m, 7);
+        let asg = |tensor: &str, label: &str, dq: Option<usize>| Assignment {
+            tensor: tensor.into(),
+            n_params: 64,
+            spec: QuantSpec::parse_label(label).unwrap(),
+            dq,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        };
+        // Heterogeneous: wq at nf4@16, wk kept fp.
+        let plan =
+            QuantPlan::new("t", vec![asg("l0.wq", "nf4@16", None), asg("l0.wk", "fp", None)]);
+        let qs = p.quantize_matrices_planned(&m, &plan).unwrap();
+        assert_eq!(qs.len(), 2);
+        let (_, wq) = &qs[0];
+        let direct = quantize(&p.get("l0.wq").unwrap().2, 16, &crate::codes::nf4());
+        assert_eq!(wq.as_ref().unwrap().packed, direct.packed);
+        assert_eq!(wq.as_ref().unwrap().scales, direct.scales);
+        assert!(qs[1].1.is_none(), "fp assignment stays unquantized");
+        // DQ round-trips the scales (reconstructed values, not the raw absmax).
+        let plan_dq =
+            QuantPlan::new("t", vec![asg("l0.wq", "nf4@16", Some(4)), asg("l0.wk", "fp", None)]);
+        let qs_dq = p.quantize_matrices_planned(&m, &plan_dq).unwrap();
+        let dq_scales = &qs_dq[0].1.as_ref().unwrap().scales;
+        assert_eq!(dq_scales.len(), direct.scales.len());
+        assert_ne!(dq_scales, &direct.scales, "DQ must round-trip the scales");
+        // Error paths: stale coverage, wrong tensor set, wrong sizing,
+        // unknown family.
+        let partial = QuantPlan::new("t", vec![asg("l0.wq", "nf4@16", None)]);
+        assert!(p.quantize_matrices_planned(&m, &partial).unwrap_err().contains("stale plan"));
+        let wrong_name = QuantPlan::new(
+            "t",
+            vec![asg("l0.wq", "nf4@16", None), asg("l0.nope", "nf4@16", None)],
+        );
+        assert!(p
+            .quantize_matrices_planned(&m, &wrong_name)
+            .unwrap_err()
+            .contains("no assignment"));
+        let wrong_size = QuantPlan::new("t", {
+            let mut a = asg("l0.wq", "nf4@16", None);
+            a.n_params = 63;
+            vec![a, asg("l0.wk", "fp", None)]
+        });
+        assert!(p
+            .quantize_matrices_planned(&m, &wrong_size)
+            .unwrap_err()
+            .contains("63 params"));
+        let bogus = QuantPlan::new(
+            "t",
+            vec![asg("l0.wq", "nf4@16", None), {
+                let mut a = asg("l0.wk", "nf4@16", None);
+                a.spec = QuantSpec { family: "bogus".into(), block_size: 16 };
+                a
+            }],
+        );
+        assert!(p.quantize_matrices_planned(&m, &bogus).is_err());
+        // Degenerate assignments error loudly instead of panicking in the
+        // quantizer: B < 2 (fixed families ignore B in the registry, so
+        // this must be caught at the plan level) and dq group 0.
+        let tiny_b = QuantPlan::new("t", {
+            let mut a = asg("l0.wq", "nf4@16", None);
+            a.spec.block_size = 1;
+            vec![a, asg("l0.wk", "fp", None)]
+        });
+        let e = p.quantize_matrices_planned(&m, &tiny_b).unwrap_err();
+        assert!(e.contains("B ≥ 2"), "{e}");
+        let dq0 = QuantPlan::new(
+            "t",
+            vec![asg("l0.wq", "nf4@16", Some(0)), asg("l0.wk", "fp", None)],
+        );
+        let e = p.quantize_matrices_planned(&m, &dq0).unwrap_err();
+        assert!(e.contains("dq group 0"), "{e}");
     }
 
     #[test]

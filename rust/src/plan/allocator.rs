@@ -1,0 +1,636 @@
+//! The budgeted allocator: minimize total predicted L1 error subject to an
+//! average bits-per-parameter ceiling.
+//!
+//! The problem is a discrete knapsack-like assignment: each tensor t picks
+//! one candidate c from a grid, paying `n_t · bits_c` toward the budget
+//! and contributing `n_t · err_{t,c}` to the objective. The solver:
+//!
+//! 1. **Lagrangian sweep** — for a multiplier λ ≥ 0 each tensor
+//!    independently picks `argmin_c (err_{t,c} + λ · bits_c)`; bits are
+//!    monotone non-increasing in λ, so bisection finds the smallest λ whose
+//!    selection fits the budget. Ties break toward fewer bits, then lower
+//!    candidate index — fully deterministic, which the digest stability
+//!    contract relies on.
+//! 2. **Greedy-swap refinement** — single-tensor moves that strictly
+//!    reduce total error while staying within budget (the discrete
+//!    Lagrangian frontier can leave slack worth spending).
+//! 3. **Uniform safety net** — if any single candidate, applied uniformly,
+//!    fits the budget and beats the assembled plan, return that uniform
+//!    plan instead. This guarantees the planner never loses to the best
+//!    uniform spec at equal budget, which is the planner ablation's
+//!    acceptance bar.
+
+use crate::model::ParamSet;
+use crate::plan::{stats, Assignment, QuantPlan};
+use crate::quant::double::effective_bits;
+use crate::quant::QuantSpec;
+use crate::runtime::ModelMeta;
+
+/// Relative L1 inflation charged to double-quantized scales in the
+/// predicted cost model. Measured by `exp::ablation::double_quant_tradeoff`
+/// (DQ at group 256 adds a few percent L1 at B=64); charging 5% keeps DQ
+/// from dominating for free while letting it win where it should (the
+/// paper's §6.2 point: B=64+DQ beats B=4096 plain at similar bits).
+const DQ_L1_INFLATION: f64 = 0.05;
+
+/// Slack tolerance on the budget comparison, in total bits relative to the
+/// model size — admits budgets that are *exactly* a candidate's
+/// bits-per-param despite float arithmetic.
+const BUDGET_EPS_BITS_PER_PARAM: f64 = 1e-9;
+
+/// One candidate configuration a tensor may be assigned: a spec plus an
+/// optional double-quantization of its scales.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub spec: QuantSpec,
+    pub dq: Option<usize>,
+}
+
+impl Candidate {
+    pub fn new(spec: QuantSpec) -> Candidate {
+        Candidate { spec, dq: None }
+    }
+
+    /// A dq group on the `fp` sentinel is meaningless (there are no scales
+    /// to double-quantize) and is normalized away, so `fp` candidates are
+    /// always canonical.
+    pub fn with_dq(spec: QuantSpec, group: usize) -> Candidate {
+        let dq = if spec.is_fp() { None } else { Some(group) };
+        Candidate { spec, dq }
+    }
+
+    /// Modeled storage cost: 32 for fp, `4 + scale overhead` otherwise
+    /// (see [`effective_bits`]).
+    pub fn bits_per_param(&self) -> f64 {
+        if self.spec.is_fp() {
+            32.0
+        } else {
+            effective_bits(self.spec.block_size, self.dq)
+        }
+    }
+
+    /// `family@B`, `family@B+dq<G>`, or `fp` — the same single-sourced
+    /// grammar as [`Assignment::label`](crate::plan::Assignment::label)
+    /// and the plan digest (see [`crate::plan::config_label`]).
+    pub fn label(&self) -> String {
+        crate::plan::config_label(&self.spec, self.dq)
+    }
+
+    /// Inverse of [`label`](Self::label), for CLI candidate grids.
+    /// Rejects `fp+dq<G>` — fp has no scales to double-quantize, and
+    /// silently accepting it would create a non-canonical candidate.
+    pub fn parse_label(s: &str) -> Result<Candidate, String> {
+        match s.split_once("+dq") {
+            Some((spec, g)) => {
+                let group: usize =
+                    g.parse().map_err(|_| format!("bad dq group in candidate {s:?}"))?;
+                if group == 0 {
+                    return Err(format!("bad dq group in candidate {s:?}: must be ≥ 1"));
+                }
+                let spec = QuantSpec::parse_label(spec)?;
+                if spec.is_fp() {
+                    return Err(format!(
+                        "bad candidate {s:?}: fp has no scales to double-quantize"
+                    ));
+                }
+                Ok(Candidate { spec, dq: Some(group) })
+            }
+            None => Ok(Candidate::new(QuantSpec::parse_label(s)?)),
+        }
+    }
+}
+
+/// Which per-tensor error weight the planner uses — see the
+/// [module docs](crate::plan) for the two models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorModel {
+    /// i.i.d.-normal model: `σ̂ · E[M_B] · expected_l1(code, B)`.
+    Predicted,
+    /// Measured mean block absmax: `mean_absmax(tensor, B) · expected_l1`.
+    Empirical,
+}
+
+/// Planner configuration.
+#[derive(Clone, Debug)]
+pub struct PlannerOpts {
+    /// Average bits-per-parameter ceiling over the plan's tensors.
+    pub budget_bits: f64,
+    /// Candidate grid; every tensor picks exactly one entry.
+    pub grid: Vec<Candidate>,
+    pub error_model: ErrorModel,
+}
+
+impl PlannerOpts {
+    /// The default grid: `families × blocks`, each with and without
+    /// double-quantized scales (group 256, the QLoRA setting).
+    pub fn default_grid(families: &[&str], blocks: &[usize]) -> Vec<Candidate> {
+        let mut grid = Vec::new();
+        for &family in families {
+            for &b in blocks {
+                let spec = QuantSpec { family: family.to_string(), block_size: b };
+                grid.push(Candidate::new(spec.clone()));
+                grid.push(Candidate::with_dq(spec, 256));
+            }
+        }
+        grid
+    }
+}
+
+/// Precomputed per-tensor costs over a candidate grid — the pure-allocator
+/// entry point ([`allocate`]) works on these, so tests and benches can
+/// drive it without touching quadrature.
+#[derive(Clone, Debug)]
+pub struct TensorCosts {
+    pub name: String,
+    pub n: usize,
+    /// Predicted per-element L1 for each grid candidate (grid order).
+    pub err: Vec<f64>,
+}
+
+/// Plan a model's matrices from their actual weights: builds the
+/// per-(tensor, candidate) cost matrix under `opts.error_model`
+/// ([`tensor_costs`]), then calls [`allocate`]. Fails on unknown
+/// candidates, degenerate block sizes, tensors missing from the param
+/// set, and infeasible budgets.
+pub fn plan_for_params(
+    meta: &ModelMeta,
+    params: &ParamSet,
+    opts: &PlannerOpts,
+) -> Result<QuantPlan, String> {
+    let tensors = tensor_costs(meta, params, &opts.grid, opts.error_model)?;
+    allocate(&meta.name, &tensors, &opts.grid, opts.budget_bits)
+}
+
+/// The per-(tensor, candidate) cost matrix for a model's matrices under
+/// one error model — the data half of [`plan_for_params`], exposed so
+/// budget sweeps (the planner ablation, the plan bench) can price uniform
+/// baselines and many budgets from ONE set of weight scans instead of
+/// re-running the pipeline per candidate.
+pub fn tensor_costs(
+    meta: &ModelMeta,
+    params: &ParamSet,
+    grid: &[Candidate],
+    error_model: ErrorModel,
+) -> Result<Vec<TensorCosts>, String> {
+    if grid.is_empty() {
+        return Err("planner needs a non-empty candidate grid".into());
+    }
+    // Resolve every candidate's predicted scaled-domain error once.
+    let mut base_err = Vec::with_capacity(grid.len());
+    for c in grid {
+        if c.dq.map_or(false, |g| g == 0) {
+            return Err(format!("candidate {}: dq group must be ≥ 1", c.label()));
+        }
+        let e = crate::codes::predict::predicted_l1(&c.spec.family, c.spec.block_size)
+            .ok_or_else(|| {
+                crate::codes::registry::describe_build_failure(
+                    &c.spec.family,
+                    c.spec.block_size,
+                )
+            })?;
+        let dq_penalty = if c.dq.is_some() && !c.spec.is_fp() { 1.0 + DQ_L1_INFLATION } else { 1.0 };
+        base_err.push(e * dq_penalty);
+    }
+    let mut tensors = Vec::with_capacity(meta.matrix_order.len());
+    for (name, shape) in &meta.matrix_order {
+        let (_, _, data) = params
+            .get(name)
+            .ok_or_else(|| format!("tensor {name:?} missing from param set"))?;
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(format!(
+                "tensor {name:?}: manifest shape {shape:?} vs {} checkpoint elements",
+                data.len()
+            ));
+        }
+        // One data pass per *distinct block size*, not per candidate: the
+        // grid typically holds each B several times (families × dq
+        // toggles), and in empirical mode each weight is a full tensor
+        // scan. Sigma (predicted mode only) is one further pass.
+        let sig = match error_model {
+            ErrorModel::Predicted => stats::sigma(data),
+            ErrorModel::Empirical => 0.0,
+        };
+        let mut weight_by_block: std::collections::HashMap<usize, f64> =
+            std::collections::HashMap::new();
+        let err = grid
+            .iter()
+            .zip(&base_err)
+            .map(|(c, &e)| {
+                if c.spec.is_fp() {
+                    return 0.0;
+                }
+                let weight =
+                    *weight_by_block.entry(c.spec.block_size).or_insert_with(|| {
+                        match error_model {
+                            ErrorModel::Predicted => {
+                                sig * stats::expected_block_absmax(c.spec.block_size)
+                            }
+                            ErrorModel::Empirical => {
+                                stats::mean_block_absmax(data, c.spec.block_size)
+                            }
+                        }
+                    });
+                weight * e
+            })
+            .collect();
+        tensors.push(TensorCosts { name: name.clone(), n, err });
+    }
+    Ok(tensors)
+}
+
+/// The budgeted assignment solver over a precomputed cost matrix. See the
+/// module docs for the algorithm; deterministic for fixed inputs.
+pub fn allocate(
+    model: &str,
+    tensors: &[TensorCosts],
+    grid: &[Candidate],
+    budget_bits: f64,
+) -> Result<QuantPlan, String> {
+    if grid.is_empty() {
+        return Err("planner needs a non-empty candidate grid".into());
+    }
+    if tensors.is_empty() {
+        return Err("planner needs at least one tensor".into());
+    }
+    let bits: Vec<f64> = grid.iter().map(|c| c.bits_per_param()).collect();
+    let total_n: f64 = tensors.iter().map(|t| t.n as f64).sum();
+    for t in tensors {
+        if t.n == 0 {
+            return Err(format!("tensor {:?} has zero parameters", t.name));
+        }
+        if t.err.len() != grid.len() {
+            return Err(format!(
+                "tensor {:?}: {} cost entries for a {}-candidate grid",
+                t.name,
+                t.err.len(),
+                grid.len()
+            ));
+        }
+        if t.err.iter().any(|e| !e.is_finite() || *e < 0.0) {
+            return Err(format!("tensor {:?} has a non-finite/negative cost", t.name));
+        }
+    }
+    let budget_total = budget_bits * total_n + BUDGET_EPS_BITS_PER_PARAM * total_n;
+    let spent =
+        |sel: &[usize]| -> f64 { sel.iter().zip(tensors).map(|(&c, t)| t.n as f64 * bits[c]).sum() };
+    let total_err =
+        |sel: &[usize]| -> f64 { sel.iter().zip(tensors).map(|(&c, t)| t.n as f64 * t.err[c]).sum() };
+
+    // Feasibility floor: every tensor on the cheapest candidate.
+    let cheapest = (0..grid.len())
+        .min_by(|&a, &b| bits[a].partial_cmp(&bits[b]).unwrap())
+        .unwrap();
+    if bits[cheapest] * total_n > budget_total {
+        return Err(format!(
+            "budget {budget_bits:.4} bits/param infeasible: cheapest candidate {} needs {:.4}",
+            grid[cheapest].label(),
+            bits[cheapest]
+        ));
+    }
+
+    // Lagrangian selection: per tensor, argmin err + λ·bits (ties → fewer
+    // bits, then lower index).
+    let pick = |lambda: f64| -> Vec<usize> {
+        tensors
+            .iter()
+            .map(|t| {
+                let mut best = 0usize;
+                for c in 1..grid.len() {
+                    let sc = t.err[c] + lambda * bits[c];
+                    let sb = t.err[best] + lambda * bits[best];
+                    if sc < sb || (sc == sb && (bits[c], c) < (bits[best], best)) {
+                        best = c;
+                    }
+                }
+                best
+            })
+            .collect()
+    };
+
+    let mut sel = pick(0.0);
+    if spent(&sel) > budget_total {
+        // Find a feasible upper multiplier, then bisect toward the budget.
+        let mut hi = 1e-9;
+        while spent(&pick(hi)) > budget_total && hi < 1e12 {
+            hi *= 8.0;
+        }
+        let mut hi_sel = if hi < 1e12 { pick(hi) } else { vec![cheapest; tensors.len()] };
+        let mut lo = 0.0f64;
+        for _ in 0..96 {
+            let mid = 0.5 * (lo + hi);
+            let s = pick(mid);
+            if spent(&s) <= budget_total {
+                hi = mid;
+                hi_sel = s;
+            } else {
+                lo = mid;
+            }
+        }
+        sel = hi_sel;
+    }
+    debug_assert!(spent(&sel) <= budget_total);
+
+    // Greedy refinement: spend remaining slack on the strictest error
+    // reductions. Each move strictly decreases total error, so this
+    // terminates; cap the passes defensively anyway.
+    let max_moves = tensors.len() * grid.len() * 4;
+    for _ in 0..max_moves {
+        let slack = budget_total - spent(&sel);
+        let mut best_move: Option<(usize, usize, f64)> = None;
+        for (t, tc) in tensors.iter().enumerate() {
+            let cur = sel[t];
+            for c in 0..grid.len() {
+                if c == cur {
+                    continue;
+                }
+                let dbits = tc.n as f64 * (bits[c] - bits[cur]);
+                let derr = tc.n as f64 * (tc.err[c] - tc.err[cur]);
+                if dbits <= slack && derr < -1e-18 {
+                    let better = match best_move {
+                        None => true,
+                        Some((_, _, be)) => derr < be,
+                    };
+                    if better {
+                        best_move = Some((t, c, derr));
+                    }
+                }
+            }
+        }
+        match best_move {
+            Some((t, c, _)) => sel[t] = c,
+            None => break,
+        }
+    }
+
+    // Uniform safety net: never lose to the best single-spec plan that
+    // fits the budget.
+    let mut best = (total_err(&sel), sel);
+    for c in 0..grid.len() {
+        if bits[c] * total_n <= budget_total {
+            let uni = vec![c; tensors.len()];
+            let e = total_err(&uni);
+            if e < best.0 - 1e-18 {
+                best = (e, uni);
+            }
+        }
+    }
+    let sel = best.1;
+
+    let assignments = sel
+        .iter()
+        .zip(tensors)
+        .map(|(&c, t)| Assignment {
+            tensor: t.name.clone(),
+            n_params: t.n,
+            spec: grid[c].spec.clone(),
+            dq: grid[c].dq,
+            bits_per_param: bits[c],
+            predicted_l1: t.err[c],
+        })
+        .collect();
+    Ok(QuantPlan::new(model, assignments))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn spec(label: &str) -> QuantSpec {
+        QuantSpec::parse_label(label).unwrap()
+    }
+
+    #[test]
+    fn candidate_bits_and_labels() {
+        let plain = Candidate::new(spec("nf4@64"));
+        assert!((plain.bits_per_param() - 4.5).abs() < 1e-12);
+        assert_eq!(plain.label(), "nf4@64");
+        let dq = Candidate::with_dq(spec("nf4@64"), 256);
+        assert!((dq.bits_per_param() - 4.129).abs() < 0.01);
+        assert_eq!(dq.label(), "nf4@64+dq256");
+        let fp = Candidate::new(QuantSpec::fp());
+        assert_eq!(fp.bits_per_param(), 32.0);
+        assert_eq!(fp.label(), "fp");
+        for l in ["nf4@64", "nf4@64+dq256", "fp", "af4@4096"] {
+            assert_eq!(Candidate::parse_label(l).unwrap().label(), l, "{l}");
+        }
+        assert!(Candidate::parse_label("nf4@64+dq0").is_err());
+        assert!(Candidate::parse_label("nf4@1+dq256").is_err());
+        assert!(Candidate::parse_label("nf4").is_err());
+        // fp has no scales: explicit labels are rejected, programmatic
+        // construction normalizes to the canonical dq-free candidate.
+        assert!(Candidate::parse_label("fp+dq256").is_err());
+        assert_eq!(Candidate::with_dq(QuantSpec::fp(), 256), fp);
+    }
+
+    fn costs(name: &str, n: usize, err: &[f64]) -> TensorCosts {
+        TensorCosts { name: name.into(), n, err: err.to_vec() }
+    }
+
+    #[test]
+    fn error_minimal_when_budget_is_loose() {
+        // Budget admits the most expensive candidate everywhere → pure
+        // error minimization.
+        let grid = vec![Candidate::new(spec("nf4@64")), Candidate::new(spec("nf4@4096"))];
+        let tensors =
+            vec![costs("a", 100, &[0.010, 0.013]), costs("b", 50, &[0.020, 0.026])];
+        let plan = allocate("m", &tensors, &grid, 8.0).unwrap();
+        assert_eq!(plan.uniform_spec().unwrap().label(), "nf4@64");
+        assert!((plan.avg_bits_per_param() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tight_budget_spends_bits_where_error_is() {
+        // Tensor "hot" loses much more error at the cheap candidate than
+        // "cold"; at a budget that affords exactly one of them the fat
+        // spec, the planner must give it to "hot".
+        let grid = vec![Candidate::new(spec("nf4@64")), Candidate::new(spec("nf4@4096"))];
+        let b64 = grid[0].bits_per_param(); // 4.5
+        let b4096 = grid[1].bits_per_param(); // ~4.008
+        let tensors =
+            vec![costs("hot", 1000, &[0.010, 0.030]), costs("cold", 1000, &[0.010, 0.011])];
+        let budget = (b64 + b4096) / 2.0; // room for one tensor at B=64
+        let plan = allocate("m", &tensors, &grid, budget).unwrap();
+        assert_eq!(plan.get("hot").unwrap().spec.label(), "nf4@64");
+        assert_eq!(plan.get("cold").unwrap().spec.label(), "nf4@4096");
+        assert!(plan.avg_bits_per_param() <= budget + 1e-9);
+        assert_eq!(plan.n_distinct_configs(), 2);
+    }
+
+    #[test]
+    fn infeasible_budget_and_bad_inputs_error() {
+        let grid = vec![Candidate::new(spec("nf4@64"))];
+        let tensors = vec![costs("a", 10, &[0.01])];
+        let e = allocate("m", &tensors, &grid, 4.0).unwrap_err();
+        assert!(e.contains("infeasible"), "{e}");
+        assert!(allocate("m", &tensors, &[], 8.0).is_err());
+        assert!(allocate("m", &[], &grid, 8.0).is_err());
+        assert!(allocate("m", &[costs("a", 10, &[0.1, 0.2])], &grid, 8.0).is_err());
+        assert!(allocate("m", &[costs("a", 10, &[f64::NAN])], &grid, 8.0).is_err());
+        assert!(allocate("m", &[costs("a", 0, &[0.1])], &grid, 8.0).is_err());
+    }
+
+    #[test]
+    fn never_loses_to_best_feasible_uniform() {
+        // Adversarial costs where per-tensor Lagrangian picks could strand
+        // budget; the safety net guarantees planned ≤ best uniform.
+        let grid = vec![
+            Candidate::new(spec("nf4@64")),
+            Candidate::new(spec("nf4@256")),
+            Candidate::new(spec("nf4@4096")),
+        ];
+        let tensors = vec![
+            costs("a", 977, &[0.010, 0.017, 0.031]),
+            costs("b", 3001, &[0.009, 0.012, 0.040]),
+            costs("c", 64, &[0.002, 0.0021, 0.0022]),
+        ];
+        for budget in [4.01, 4.1, 4.2, 4.4, 4.6] {
+            let plan = allocate("m", &tensors, &grid, budget).unwrap();
+            assert!(plan.avg_bits_per_param() <= budget + 1e-6, "budget {budget}");
+            for (c, cand) in grid.iter().enumerate() {
+                if cand.bits_per_param() <= budget + 1e-9 {
+                    let uni: f64 = tensors
+                        .iter()
+                        .map(|t| t.n as f64 * t.err[c])
+                        .sum::<f64>()
+                        / tensors.iter().map(|t| t.n as f64).sum::<f64>();
+                    assert!(
+                        plan.predicted_l1_per_param() <= uni + 1e-12,
+                        "budget {budget}: plan {} vs uniform {} ({})",
+                        plan.predicted_l1_per_param(),
+                        uni,
+                        cand.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_exact_budget_single_candidate_returns_uniform_with_stable_digest() {
+        // Satellite: with a budget exactly equal to a uniform spec's
+        // bits-per-param and a single-candidate grid, the planner returns
+        // that uniform plan, and its digest is stable across runs.
+        let labels = ["nf4@64", "af4@256", "balanced-ep@1024", "nf4@4096+dq256", "kmedians@32"];
+        prop::check(64, |g| {
+            let cand = Candidate::parse_label(g.pick(&labels)).unwrap();
+            let grid = vec![cand.clone()];
+            let n_tensors = g.usize_in(1, 6);
+            let tensors: Vec<TensorCosts> = (0..n_tensors)
+                .map(|i| costs(&format!("w{i}"), g.usize_in(1, 100_000), &[g.f64_in(0.0, 0.1)]))
+                .collect();
+            let budget = cand.bits_per_param(); // exactly the uniform cost
+            let plan = allocate("m", &tensors, &grid, budget)
+                .map_err(|e| format!("exact budget must be feasible: {e}"))?;
+            for a in plan.assignments() {
+                if a.spec != cand.spec || a.dq != cand.dq {
+                    return Err(format!("non-uniform assignment {a:?} for grid {cand:?}"));
+                }
+            }
+            if cand.dq.is_none() && plan.uniform_spec() != Some(&cand.spec) {
+                return Err("uniform_spec must detect the degenerate plan".into());
+            }
+            let again = allocate("m", &tensors, &grid, budget).unwrap();
+            if again.digest() != plan.digest() {
+                return Err(format!("digest unstable: {} vs {}", plan.digest(), again.digest()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_for_params_assigns_more_bits_to_higher_sigma_tensors() {
+        // Two equal-size tensors, one with 4× the scale: under a budget
+        // that affords one of them the small-block spec, the louder tensor
+        // must get it. Exercises the full predicted-mode path (sigma →
+        // E[M_B] → predicted_l1 table).
+        use crate::model::ParamSet;
+        use crate::runtime::ModelMeta;
+        use crate::util::rng::Rng;
+        let meta = ModelMeta {
+            name: "toy".into(),
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq_len: 4,
+            batch: 2,
+            vocab: 16,
+            param_order: vec![
+                ("loud".into(), vec![64, 64]),
+                ("quiet".into(), vec![64, 64]),
+            ],
+            matrix_order: vec![
+                ("loud".into(), vec![64, 64]),
+                ("quiet".into(), vec![64, 64]),
+            ],
+        };
+        let mut rng = Rng::new(3);
+        let loud: Vec<f32> = (0..4096).map(|_| (rng.normal() * 0.08) as f32).collect();
+        let quiet: Vec<f32> = (0..4096).map(|_| (rng.normal() * 0.02) as f32).collect();
+        let params = ParamSet {
+            model: "toy".into(),
+            tensors: vec![
+                ("loud".into(), vec![64, 64], loud),
+                ("quiet".into(), vec![64, 64], quiet),
+            ],
+        };
+        let grid = vec![
+            Candidate::new(spec("nf4@64")),
+            Candidate::new(spec("nf4@4096")),
+        ];
+        let budget = (grid[0].bits_per_param() + grid[1].bits_per_param()) / 2.0;
+        for mode in [ErrorModel::Predicted, ErrorModel::Empirical] {
+            let plan = plan_for_params(
+                &meta,
+                &params,
+                &PlannerOpts { budget_bits: budget, grid: grid.clone(), error_model: mode },
+            )
+            .unwrap();
+            assert_eq!(
+                plan.get("loud").unwrap().spec.label(),
+                "nf4@64",
+                "{mode:?}: high-σ tensor gets the fine blocks\n{}",
+                plan.summary()
+            );
+            assert_eq!(plan.get("quiet").unwrap().spec.label(), "nf4@4096", "{mode:?}");
+            assert!(plan.avg_bits_per_param() <= budget + 1e-9);
+        }
+    }
+
+    #[test]
+    fn plan_for_params_rejects_bad_grids() {
+        use crate::model::ParamSet;
+        use crate::runtime::ModelMeta;
+        let meta = ModelMeta {
+            name: "toy".into(),
+            n_layer: 1,
+            d_model: 4,
+            n_head: 1,
+            d_ff: 4,
+            seq_len: 4,
+            batch: 1,
+            vocab: 4,
+            param_order: vec![("w".into(), vec![8, 8])],
+            matrix_order: vec![("w".into(), vec![8, 8])],
+        };
+        let params = ParamSet::init(&meta, 0);
+        let bad = PlannerOpts {
+            budget_bits: 8.0,
+            grid: vec![Candidate::new(QuantSpec { family: "bogus".into(), block_size: 64 })],
+            error_model: ErrorModel::Predicted,
+        };
+        assert!(plan_for_params(&meta, &params, &bad).unwrap_err().contains("unknown"));
+        let degenerate = PlannerOpts {
+            budget_bits: 8.0,
+            grid: vec![Candidate::new(QuantSpec { family: "nf4".into(), block_size: 1 })],
+            error_model: ErrorModel::Predicted,
+        };
+        let e = plan_for_params(&meta, &params, &degenerate).unwrap_err();
+        assert!(e.contains("B ≥ 2"), "{e}");
+        let empty =
+            PlannerOpts { budget_bits: 8.0, grid: vec![], error_model: ErrorModel::Predicted };
+        assert!(plan_for_params(&meta, &params, &empty).is_err());
+    }
+}

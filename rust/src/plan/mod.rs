@@ -1,0 +1,412 @@
+//! The quantization planner: per-tensor `(code, B)` assignment under a
+//! bits-per-parameter budget.
+//!
+//! The paper's central point is that the distribution of values hitting a
+//! 4-bit code — and therefore the L1-optimal code — depends on the block
+//! size. One model-wide `QuantSpec` is therefore never right for every
+//! weight tensor: tensors differ in size (scale overhead amortizes
+//! differently), in scale σ (error is worth different amounts of loss),
+//! and the budget couples them. This module owns the objective the rest of
+//! the stack already computes — `expected_l1(code, F_X(·; B))`, memoized
+//! in [`crate::codes::predict`] — and turns it into an allocator:
+//!
+//! - [`allocator::plan_for_params`] assigns each matrix of a model its own
+//!   [`QuantSpec`] (+ optional double-quantized scales) by minimizing the
+//!   total size-weighted predicted L1 reconstruction error subject to
+//!   `avg bits/param ≤ budget`, via a Lagrangian sweep plus greedy-swap
+//!   refinement (see [`allocator`]).
+//! - The result is a [`QuantPlan`]: ordered per-tensor [`Assignment`]s
+//!   plus a **stable content digest** that the serving layer keys
+//!   services by.
+//!
+//! ## Error modes
+//!
+//! [`allocator::ErrorModel::Predicted`] costs a tensor as i.i.d.
+//! `N(0, σ̂²)`: per-element error `σ̂ · E[M_B] · expected_l1(code, B)`
+//! with σ̂ the tensor RMS and `E[M_B]` the standard-normal block-max mean
+//! ([`stats::expected_block_absmax`]). [`allocator::ErrorModel::Empirical`]
+//! replaces `σ̂·E[M_B]` by the tensor's **measured** mean block absmax at
+//! each candidate B ([`stats::mean_block_absmax`]) — one scan per
+//! (tensor, B), correcting for non-normal weights and partial blocks.
+//!
+//! ## Digest stability contract
+//!
+//! [`QuantPlan::digest`] is FNV-1a-64 over the model name and the ordered
+//! `(tensor, n_params, config label)` triples — nothing else, where the
+//! config label (`family@B[+dq<G>]` / `fp`, single-sourced in
+//! [`config_label`]) collapses the behaviorally meaningless fp+dq
+//! combination to `fp`. It is independent of predicted-error values, the
+//! error mode that produced the plan, the process, and the run: two plans
+//! that assign the same configurations to the same-sized tensors in the
+//! same order always share a digest, and any behavioral change to an
+//! assignment — spec, dq, tensor name, or size — changes it (modulo
+//! 64-bit collision). The router keys planned services by this digest, so
+//! re-registering an identical plan is idempotent and distinct plans of
+//! one model serve side by side.
+
+pub mod allocator;
+pub mod stats;
+
+pub use allocator::{
+    allocate, plan_for_params, tensor_costs, Candidate, ErrorModel, PlannerOpts, TensorCosts,
+};
+
+use crate::quant::QuantSpec;
+use crate::util::json::Json;
+
+/// The single owner of the `family@B[+dq<G>]` / `fp` configuration-label
+/// grammar — used by [`Assignment::label`], `Candidate::label`, **and**
+/// the digest, so the three can never drift apart. A DQ group on the `fp`
+/// sentinel is behaviorally meaningless (there are no scales to
+/// double-quantize) and collapses to plain `fp`, which keeps the digest
+/// content-addressed on behavior rather than representation.
+pub(crate) fn config_label(spec: &QuantSpec, dq: Option<usize>) -> String {
+    match dq {
+        Some(g) if !spec.is_fp() => format!("{}+dq{g}", spec.label()),
+        _ => spec.label(),
+    }
+}
+
+/// One tensor's slot in a [`QuantPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub tensor: String,
+    pub n_params: usize,
+    /// The spec this tensor is quantized with (`fp` = kept full precision).
+    pub spec: QuantSpec,
+    /// Double-quantize the scales with this group size (None = f32 scales).
+    pub dq: Option<usize>,
+    /// Modeled storage cost of this assignment in bits/param.
+    pub bits_per_param: f64,
+    /// Predicted per-element L1 reconstruction error (weight units) under
+    /// the error model the planner ran with. Informational: NOT part of
+    /// the digest.
+    pub predicted_l1: f64,
+}
+
+impl Assignment {
+    /// `family@B`, `family@B+dq<G>`, or `fp` (see [`config_label`]).
+    pub fn label(&self) -> String {
+        config_label(&self.spec, self.dq)
+    }
+}
+
+/// A per-tensor quantization plan for one model: ordered assignments (in
+/// the model's matrix order) plus the stable content digest described in
+/// the [module docs](self). Construct via [`QuantPlan::new`] or the
+/// [`allocator`]; the fields are read-only so the digest can never drift
+/// from the assignments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPlan {
+    pub model: String,
+    assignments: Vec<Assignment>,
+    digest: String,
+}
+
+impl QuantPlan {
+    pub fn new(model: &str, assignments: Vec<Assignment>) -> QuantPlan {
+        let digest = Self::compute_digest(model, &assignments);
+        QuantPlan { model: model.to_string(), assignments, digest }
+    }
+
+    /// FNV-1a-64 over the canonical content serialization: the model name
+    /// plus each `tensor|n_params|config-label` triple in order. The
+    /// config label ([`config_label`]) already encodes spec AND dq (and
+    /// collapses the meaningless fp+dq combination), so hashing it keeps
+    /// the digest in lockstep with the displayed grammar; n_params is
+    /// content too — the same tensor names at different sizes (an
+    /// artifact rebuild) are behaviorally different plans and must not
+    /// collide in the router's content-addressed registry. See the
+    /// stability contract in the module docs.
+    fn compute_digest(model: &str, assignments: &[Assignment]) -> String {
+        let mut h = Fnv1a::new();
+        h.update(model.as_bytes());
+        h.update(b"\n");
+        for a in assignments {
+            h.update(a.tensor.as_bytes());
+            h.update(b"|");
+            h.update(a.n_params.to_string().as_bytes());
+            h.update(b"|");
+            h.update(a.label().as_bytes());
+            h.update(b"\n");
+        }
+        format!("{:016x}", h.finish())
+    }
+
+    /// The stable content digest (16 lowercase hex chars).
+    pub fn digest(&self) -> &str {
+        &self.digest
+    }
+
+    /// Check this plan covers `meta`'s matrices **exactly** — same tensor
+    /// set, same sizes — and that every assignment is applicable (block
+    /// size ≥ 2 for non-fp specs, dq group ≥ 1). Plans are content
+    /// (constructed infallibly, surviving model re-registration), so the
+    /// serving and apply layers call this to make a stale or hand-built
+    /// degenerate plan fail loudly instead of silently dropping
+    /// assignments or panicking deep in the quantizer.
+    pub fn validate_matrices(&self, meta: &crate::runtime::ModelMeta) -> Result<(), String> {
+        if self.assignments.len() != meta.matrix_order.len() {
+            return Err(format!(
+                "plan {} covers {} tensor(s) but model {:?} has {} matrices — stale plan?",
+                self.digest,
+                self.assignments.len(),
+                meta.name,
+                meta.matrix_order.len()
+            ));
+        }
+        for (name, shape) in &meta.matrix_order {
+            let a = self.get(name).ok_or_else(|| {
+                format!("plan {} has no assignment for tensor {name:?}", self.digest)
+            })?;
+            let n: usize = shape.iter().product();
+            if a.n_params != n {
+                return Err(format!(
+                    "plan {} sized tensor {name:?} at {} params but the model has {n} — stale plan?",
+                    self.digest, a.n_params
+                ));
+            }
+            if !a.spec.is_fp() && a.spec.block_size < 2 {
+                return Err(crate::codes::registry::describe_build_failure(
+                    &a.spec.family,
+                    a.spec.block_size,
+                ));
+            }
+            if a.dq.map_or(false, |g| g == 0) {
+                return Err(format!(
+                    "plan {}: tensor {name:?} has dq group 0 (must be ≥ 1)",
+                    self.digest
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn assignments(&self) -> &[Assignment] {
+        &self.assignments
+    }
+
+    pub fn get(&self, tensor: &str) -> Option<&Assignment> {
+        self.assignments.iter().find(|a| a.tensor == tensor)
+    }
+
+    /// Total parameters covered by the plan.
+    pub fn n_params(&self) -> usize {
+        self.assignments.iter().map(|a| a.n_params).sum()
+    }
+
+    /// Size-weighted average modeled bits/param.
+    pub fn avg_bits_per_param(&self) -> f64 {
+        let n = self.n_params();
+        if n == 0 {
+            return 0.0;
+        }
+        self.assignments.iter().map(|a| a.n_params as f64 * a.bits_per_param).sum::<f64>()
+            / n as f64
+    }
+
+    /// Size-weighted predicted L1 error per parameter (weight units).
+    pub fn predicted_l1_per_param(&self) -> f64 {
+        let n = self.n_params();
+        if n == 0 {
+            return 0.0;
+        }
+        self.assignments.iter().map(|a| a.n_params as f64 * a.predicted_l1).sum::<f64>()
+            / n as f64
+    }
+
+    /// `Some(spec)` when every tensor shares one spec with no double
+    /// quantization — the degenerate one-entry plan, which the serving
+    /// layer can run through the fused single-`(code, B)` artifact instead
+    /// of reconstructing weights. A dq group on an fp assignment is
+    /// meaningless (no scales exist) and does not break degeneracy.
+    pub fn uniform_spec(&self) -> Option<&QuantSpec> {
+        let first = self.assignments.first()?;
+        if self
+            .assignments
+            .iter()
+            .all(|a| a.spec == first.spec && (a.dq.is_none() || a.spec.is_fp()))
+        {
+            Some(&first.spec)
+        } else {
+            None
+        }
+    }
+
+    /// Number of distinct `(spec, dq)` configurations in the plan.
+    pub fn n_distinct_configs(&self) -> usize {
+        let mut labels: Vec<String> = self.assignments.iter().map(|a| a.label()).collect();
+        labels.sort();
+        labels.dedup();
+        labels.len()
+    }
+
+    /// Printable per-tensor table (one line per assignment plus a summary).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plan {} for {} ({} tensor(s), {:.4} bits/param, predicted L1/param {:.3e}):\n",
+            self.digest,
+            self.model,
+            self.assignments.len(),
+            self.avg_bits_per_param(),
+            self.predicted_l1_per_param(),
+        ));
+        for a in &self.assignments {
+            out.push_str(&format!(
+                "  {:<16} {:>9} params  {:<16} {:>7.4} bits  pred L1 {:.3e}\n",
+                a.tensor,
+                a.n_params,
+                a.label(),
+                a.bits_per_param,
+                a.predicted_l1,
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", Json::Str(self.model.clone()))
+            .set("digest", Json::Str(self.digest.clone()))
+            .set("avg_bits_per_param", Json::Num(self.avg_bits_per_param()))
+            .set("predicted_l1_per_param", Json::Num(self.predicted_l1_per_param()))
+            .set(
+                "assignments",
+                Json::Arr(
+                    self.assignments
+                        .iter()
+                        .map(|a| {
+                            let mut r = Json::obj();
+                            r.set("tensor", Json::Str(a.tensor.clone()))
+                                .set("n_params", Json::Num(a.n_params as f64))
+                                .set("spec", Json::Str(a.label()))
+                                .set("bits_per_param", Json::Num(a.bits_per_param))
+                                .set("predicted_l1", Json::Num(a.predicted_l1));
+                            r
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+}
+
+impl std::fmt::Display for QuantPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "plan:{} ({}, {:.3} bits/param, {} config(s))",
+            self.digest,
+            self.model,
+            self.avg_bits_per_param(),
+            self.n_distinct_configs()
+        )
+    }
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and stable across platforms,
+/// which is all the content digest needs (it is an identity key, not a
+/// cryptographic commitment).
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asg(tensor: &str, n: usize, label: &str, dq: Option<usize>) -> Assignment {
+        Assignment {
+            tensor: tensor.into(),
+            n_params: n,
+            spec: QuantSpec::parse_label(label).unwrap(),
+            dq,
+            bits_per_param: 4.5,
+            predicted_l1: 0.01,
+        }
+    }
+
+    #[test]
+    fn digest_is_content_addressed() {
+        let a = QuantPlan::new("m", vec![asg("w1", 10, "nf4@64", None), asg("w2", 20, "af4@256", None)]);
+        let b = QuantPlan::new("m", vec![asg("w1", 10, "nf4@64", None), asg("w2", 20, "af4@256", None)]);
+        assert_eq!(a.digest(), b.digest(), "same content, same digest");
+        assert_eq!(a.digest().len(), 16);
+        // Any content change moves the digest: spec, dq, tensor name,
+        // tensor size, order, model.
+        let variants = [
+            QuantPlan::new("m", vec![asg("w1", 10, "nf4@64", None), asg("w2", 20, "af4@64", None)]),
+            QuantPlan::new("m", vec![asg("w1", 10, "nf4@64", Some(256)), asg("w2", 20, "af4@256", None)]),
+            QuantPlan::new("m", vec![asg("w2", 20, "af4@256", None), asg("w1", 10, "nf4@64", None)]),
+            QuantPlan::new("other", vec![asg("w1", 10, "nf4@64", None), asg("w2", 20, "af4@256", None)]),
+            QuantPlan::new("m", vec![asg("w1", 11, "nf4@64", None), asg("w2", 20, "af4@256", None)]),
+        ];
+        for v in &variants {
+            assert_ne!(a.digest(), v.digest(), "{v}");
+        }
+    }
+
+    #[test]
+    fn digest_ignores_derived_fields() {
+        // Error estimates and modeled bits are informational; two planner
+        // modes that land on the same assignments share a digest.
+        let mut x = asg("w1", 10, "nf4@64", None);
+        x.predicted_l1 = 0.5;
+        x.bits_per_param = 9.9;
+        let a = QuantPlan::new("m", vec![x]);
+        let b = QuantPlan::new("m", vec![asg("w1", 10, "nf4@64", None)]);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn uniform_detection_and_aggregates() {
+        let u = QuantPlan::new("m", vec![asg("a", 100, "nf4@64", None), asg("b", 300, "nf4@64", None)]);
+        assert_eq!(u.uniform_spec().unwrap().label(), "nf4@64");
+        assert_eq!(u.n_distinct_configs(), 1);
+        assert_eq!(u.n_params(), 400);
+        assert!((u.avg_bits_per_param() - 4.5).abs() < 1e-12);
+        assert!((u.predicted_l1_per_param() - 0.01).abs() < 1e-12);
+
+        let het = QuantPlan::new("m", vec![asg("a", 100, "nf4@64", None), asg("b", 300, "af4@64", None)]);
+        assert!(het.uniform_spec().is_none());
+        assert_eq!(het.n_distinct_configs(), 2);
+        // DQ on a uniform spec is NOT the degenerate plan (the fused
+        // artifact path has no DQ scales).
+        let dq = QuantPlan::new("m", vec![asg("a", 100, "nf4@64", Some(256))]);
+        assert!(dq.uniform_spec().is_none());
+        assert_eq!(dq.assignments()[0].label(), "nf4@64+dq256");
+        // …but a dq group on fp is meaningless: it collapses in the label
+        // AND the digest, and does not break degeneracy.
+        let fp_dq = QuantPlan::new("m", vec![asg("a", 100, "fp", Some(256))]);
+        let fp_plain = QuantPlan::new("m", vec![asg("a", 100, "fp", None)]);
+        assert_eq!(fp_dq.assignments()[0].label(), "fp");
+        assert_eq!(fp_dq.digest(), fp_plain.digest());
+        assert!(fp_dq.uniform_spec().unwrap().is_fp());
+    }
+
+    #[test]
+    fn json_and_summary_shape() {
+        let p = QuantPlan::new("m", vec![asg("a", 100, "nf4@64", None)]);
+        let j = p.to_json();
+        assert_eq!(j.get("digest").unwrap().as_str().unwrap(), p.digest());
+        assert_eq!(j.get("assignments").unwrap().as_arr().unwrap().len(), 1);
+        assert!(p.summary().contains("nf4@64"));
+        assert!(p.to_string().contains(p.digest()));
+    }
+}

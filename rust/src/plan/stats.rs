@@ -1,0 +1,153 @@
+//! Per-tensor weight statistics behind the planner's two error modes.
+//!
+//! The per-element L1 error of absmax-blockwise quantization decomposes as
+//! `E[M_block] · expected_l1(code, F_X(·; B))`: the code sees absmax-scaled
+//! values, and the raw-unit error is the scaled error times the block's
+//! absmax. The two modes differ only in how `E[M_block]` is estimated:
+//!
+//! - **Predicted** (no data pass per candidate): model the tensor as i.i.d.
+//!   `N(0, σ̂²)` with σ̂ the tensor's RMS, so
+//!   `E[M] = σ̂ · E[max_i |Z_i|]` with [`expected_block_absmax`] the
+//!   standard-normal block-max mean (quadrature, memoized per B).
+//! - **Empirical** ([`mean_block_absmax`]): measure the mean block absmax
+//!   of the actual tensor at each candidate B — one cheap scan per
+//!   (tensor, B), no quantization. This corrects for non-normal tails and
+//!   partial blocks.
+
+use crate::numerics::quad::adaptive_simpson;
+use crate::numerics::special::halfnorm_cdf;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+static ABSMAX_MEMO: Mutex<Option<HashMap<usize, f64>>> = Mutex::new(None);
+
+/// `E[max_{i≤B} |Z_i|]` for i.i.d. standard normals: the mean block absmax
+/// at block size B under the planner's weight model. Computed as
+/// `∫₀^∞ (1 − Þ(m)^B) dm` (survival-function integral of the max of B
+/// half-normals) and memoized per B — the planner queries the same handful
+/// of block sizes for every tensor.
+pub fn expected_block_absmax(b: usize) -> f64 {
+    assert!(b >= 1, "block size must be positive");
+    // The lock is held across the quadrature: a cold B is computed exactly
+    // once even under races. Unlike codes::predict (slot-per-key so
+    // expensive pairs build in parallel), a single evaluation here is
+    // ~µs-scale and the planner queries a handful of Bs, so serializing
+    // the rare concurrent miss is simpler than a slot table.
+    let mut guard = ABSMAX_MEMO.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(&v) = map.get(&b) {
+        return v;
+    }
+    let bf = b as f64;
+    // Beyond m_hi the integrand 1 − Þ(m)^B ≤ B·(1 − Þ(m)) is < 1e-16.
+    let m_hi = (2.0 * (bf * 1e18).ln()).sqrt();
+    let f = |m: f64| 1.0 - halfnorm_cdf(m).powf(bf);
+    let v = adaptive_simpson(&f, 0.0, m_hi, 1e-10);
+    map.insert(b, v);
+    v
+}
+
+/// RMS of the finite entries (the σ̂ of the predicted mode; weights are
+/// zero-mean by construction). 0 for empty/all-non-finite tensors.
+pub fn sigma(data: &[f32]) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for &v in data {
+        if v.is_finite() {
+            sum += (v as f64) * (v as f64);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64).sqrt()
+    }
+}
+
+/// Mean block absmax of `data` at block size `b` (flat blocking, matching
+/// [`crate::quant::quantize`]'s layout; the final block may be partial).
+/// Non-finite entries are ignored by the absmax fold, mirroring the
+/// quantizer's saturating contract.
+pub fn mean_block_absmax(data: &[f32], b: usize) -> f64 {
+    assert!(b >= 1, "block size must be positive");
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    let mut blocks = 0usize;
+    for chunk in data.chunks(b) {
+        let m = chunk
+            .iter()
+            .fold(0.0f32, |a, &v| if v.is_finite() { a.max(v.abs()) } else { a });
+        total += m as f64;
+        blocks += 1;
+    }
+    total / blocks as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn block_absmax_closed_forms_and_monotonicity() {
+        // B=1: E|Z| = sqrt(2/π).
+        let e1 = expected_block_absmax(1);
+        assert!((e1 - (2.0 / std::f64::consts::PI).sqrt()).abs() < 1e-9, "{e1}");
+        let mut prev = 0.0;
+        for b in [1usize, 2, 16, 64, 1024, 4096] {
+            let e = expected_block_absmax(b);
+            assert!(e > prev, "E[M] must grow with B: {e} at {b}");
+            prev = e;
+        }
+        // B=4096: the max of 4096 half-normals concentrates near its median
+        // Þ⁻¹(2^{-1/B}) ≈ 3.76.
+        assert!((prev - 3.76).abs() < 0.15, "E[M_4096] ≈ 3.76, got {prev}");
+    }
+
+    #[test]
+    fn block_absmax_matches_monte_carlo() {
+        let b = 64usize;
+        let exact = expected_block_absmax(b);
+        let mut rng = Rng::new(7);
+        let trials = 4000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mut m = 0.0f64;
+            for _ in 0..b {
+                m = m.max(rng.normal().abs());
+            }
+            acc += m;
+        }
+        let mc = acc / trials as f64;
+        assert!((exact - mc).abs() / exact < 0.02, "exact {exact} vs MC {mc}");
+    }
+
+    #[test]
+    fn sigma_and_measured_absmax_agree_with_model_on_normal_data() {
+        let mut rng = Rng::new(11);
+        let sd = 0.02f64;
+        let data: Vec<f32> = (0..64 * 512).map(|_| (rng.normal() * sd) as f32).collect();
+        let s = sigma(&data);
+        assert!((s - sd).abs() / sd < 0.03, "sigma {s}");
+        let measured = mean_block_absmax(&data, 64);
+        let modeled = s * expected_block_absmax(64);
+        assert!(
+            (measured - modeled).abs() / modeled < 0.03,
+            "measured {measured} vs modeled {modeled}"
+        );
+    }
+
+    #[test]
+    fn non_finite_and_edge_cases() {
+        assert_eq!(sigma(&[]), 0.0);
+        assert_eq!(mean_block_absmax(&[], 8), 0.0);
+        let data = [f32::NAN, 1.5, f32::INFINITY, -0.5];
+        assert!((sigma(&data) - ((1.5f64 * 1.5 + 0.25) / 2.0).sqrt()).abs() < 1e-9);
+        assert_eq!(mean_block_absmax(&data, 4), 1.5);
+        // Partial final block counts as its own block.
+        assert_eq!(mean_block_absmax(&[1.0, -2.0, 0.5], 2), (2.0 + 0.5) / 2.0);
+    }
+}

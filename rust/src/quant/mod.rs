@@ -12,19 +12,22 @@
 //! never emits NaN/inf on dequant and never lets one weight poison its
 //! block's scale.
 //!
-//! Submodules: [`double`] (double quantization of the scales, the QLoRA
-//! §"DQ" extension), [`matrix`] (row/col blocking), and [`fused`] — the
-//! serving path: fused nibble-domain `qgemm` plus `quantize_par`/
-//! `qgemm_par`, whose parallel variants are bit-identical to their serial
-//! counterparts for any worker count (the determinism contract lives on
-//! [`fused`]'s module docs).
+//! Submodules: [`spec`] (the `family@B` [`QuantSpec`] naming layer used
+//! by the planner and the serving registry), [`double`] (double
+//! quantization of the scales, the QLoRA §"DQ" extension), [`matrix`]
+//! (row/col blocking), and [`fused`] — the serving path: fused
+//! nibble-domain `qgemm` plus `quantize_par`/`qgemm_par`, whose parallel
+//! variants are bit-identical to their serial counterparts for any worker
+//! count (the determinism contract lives on [`fused`]'s module docs).
 
 pub mod double;
 pub mod fused;
 pub mod matrix;
+pub mod spec;
 
 pub use fused::{qgemm, qgemm_par, quantize_par};
 pub use matrix::{MatrixQuant, QuantAxis};
+pub use spec::QuantSpec;
 
 use crate::codes::Code;
 

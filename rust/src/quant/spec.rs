@@ -1,0 +1,189 @@
+//! [`QuantSpec`] — the name of one quantization configuration: a code
+//! family plus a block size (or the `fp` sentinel).
+//!
+//! This used to live in the coordinator, but the spec is not a serving
+//! concept: the planner ([`crate::plan`]) assigns one spec **per tensor**,
+//! the predicted-error table ([`crate::codes::predict`]) is keyed by spec,
+//! and the quantizer applies specs to buffers — all below the serving
+//! layer. The coordinator re-exports it for compatibility.
+//!
+//! The canonical display form is the `family@B` label (`nf4@64`,
+//! `af4@4096`) or bare `fp`; [`QuantSpec::parse_label`] is its exact
+//! inverse (round-trip pinned by a property test below). Block sizes below
+//! 2 are rejected at parse time with a clear error — the block-scaled
+//! distribution `F_X(·; B)` is undefined for B < 2, and historically such
+//! specs slipped through and panicked deep inside the dist layer.
+
+use crate::codes::registry;
+
+/// What to quantize with: `fp` or a code-family spec (see codes::registry).
+/// Hashable so it can key the router's service registry and the planner's
+/// candidate grid.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct QuantSpec {
+    pub family: String,
+    pub block_size: usize,
+}
+
+impl QuantSpec {
+    pub fn fp() -> Self {
+        Self { family: "fp".into(), block_size: 0 }
+    }
+
+    /// From separate CLI-ish arguments: `fp`/`fp32`/`none` ignore `block`;
+    /// block sizes < 2 are rejected like [`parse_label`](Self::parse_label)
+    /// rejects them — no constructor hands a degenerate B downstream.
+    pub fn parse(code: &str, block: usize) -> Result<QuantSpec, String> {
+        if registry::is_fp(code) {
+            Ok(Self::fp())
+        } else if block < 2 {
+            Err(format!(
+                "invalid block size {block} for code {code:?}: block-scaled codes need B ≥ 2"
+            ))
+        } else {
+            Ok(Self { family: code.to_string(), block_size: block })
+        }
+    }
+
+    /// Parse the compact `family@B` form (`nf4@64`, `af4@4096`) or `fp`.
+    /// Rejects block sizes < 2 — block-scaled codes are undefined there.
+    pub fn parse_label(s: &str) -> Result<QuantSpec, String> {
+        if registry::is_fp(s) {
+            return Ok(Self::fp());
+        }
+        let (family, b) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad code spec {s:?} (want family@B or fp)"))?;
+        let block_size: usize =
+            b.parse().map_err(|_| format!("bad block size in code spec {s:?}"))?;
+        if family.is_empty() {
+            return Err(format!("bad code spec {s:?} (want family@B or fp)"));
+        }
+        if block_size < 2 {
+            return Err(format!(
+                "bad code spec {s:?}: block-scaled codes need B ≥ 2, got {block_size}"
+            ));
+        }
+        Ok(QuantSpec { family: family.to_string(), block_size })
+    }
+
+    pub fn is_fp(&self) -> bool {
+        registry::is_fp(&self.family)
+    }
+
+    /// Compact display form: `fp` or `family@B` (parseable by
+    /// [`parse_label`](Self::parse_label)).
+    pub fn label(&self) -> String {
+        if self.is_fp() {
+            "fp".to_string()
+        } else {
+            format!("{}@{}", self.family, self.block_size)
+        }
+    }
+
+    pub fn artifact_name(&self, model: &str) -> String {
+        if self.is_fp() {
+            format!("score_fp_{model}")
+        } else {
+            format!("score_q{}_{model}", self.block_size)
+        }
+    }
+
+    pub fn key_prefix(&self, model: &str) -> String {
+        format!("w/{model}/{}/{}", self.family, self.block_size)
+    }
+}
+
+impl std::fmt::Display for QuantSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn quant_spec_labels_round_trip() {
+        for (spec, label) in [
+            (QuantSpec::fp(), "fp"),
+            (QuantSpec { family: "nf4".into(), block_size: 64 }, "nf4@64"),
+            (QuantSpec { family: "af4".into(), block_size: 4096 }, "af4@4096"),
+            (QuantSpec { family: "balanced-ep".into(), block_size: 256 }, "balanced-ep@256"),
+        ] {
+            assert_eq!(spec.label(), label);
+            assert_eq!(QuantSpec::parse_label(label).unwrap(), spec);
+        }
+        assert_eq!(QuantSpec::parse_label("fp32").unwrap(), QuantSpec::fp());
+        assert!(QuantSpec::parse_label("nf4").is_err());
+        assert!(QuantSpec::parse_label("nf4@").is_err());
+        assert!(QuantSpec::parse_label("@64").is_err());
+        assert!(QuantSpec::parse_label("nf4@zero").is_err());
+        assert_eq!(QuantSpec::parse("fp32", 64).unwrap(), QuantSpec::fp());
+        assert_eq!(
+            QuantSpec::parse("af4", 64).unwrap(),
+            QuantSpec { family: "af4".into(), block_size: 64 }
+        );
+        assert_eq!(QuantSpec::parse("fp", 0).unwrap(), QuantSpec::fp());
+        assert!(QuantSpec::parse("nf4", 0).unwrap_err().contains("B ≥ 2"));
+        assert!(QuantSpec::parse("nf4", 1).is_err());
+    }
+
+    #[test]
+    fn degenerate_block_sizes_rejected_with_clear_error() {
+        for label in ["nf4@0", "af4@1", "balanced-ep@0"] {
+            let e = QuantSpec::parse_label(label).unwrap_err();
+            assert!(e.contains("B ≥ 2"), "{label}: {e}");
+        }
+    }
+
+    #[test]
+    fn prop_label_parse_round_trip() {
+        // Satellite: the canonical `family@B` label and `parse_label` are
+        // exact mutual inverses over the whole spec space.
+        let families = [
+            "nf4",
+            "nf4-avgq",
+            "af4",
+            "af4x",
+            "balanced",
+            "balanced-ep",
+            "kmedians",
+            "normal-l1",
+        ];
+        prop::check(256, |g| {
+            let spec = if g.bool(0.1) {
+                QuantSpec::fp()
+            } else {
+                QuantSpec {
+                    family: g.pick(&families).to_string(),
+                    block_size: g.usize_in(2, 16384),
+                }
+            };
+            let label = spec.label();
+            let back = QuantSpec::parse_label(&label)
+                .map_err(|e| format!("label {label:?} failed to parse: {e}"))?;
+            if back != spec {
+                return Err(format!("round trip {spec:?} -> {label} -> {back:?}"));
+            }
+            if back.label() != label {
+                return Err(format!("label not canonical: {label} vs {}", back.label()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_spec_hashes_as_key() {
+        use std::collections::HashMap;
+        let mut m: HashMap<QuantSpec, i32> = HashMap::new();
+        m.insert(QuantSpec { family: "nf4".into(), block_size: 64 }, 1);
+        m.insert(QuantSpec { family: "nf4".into(), block_size: 4096 }, 2);
+        m.insert(QuantSpec::fp(), 3);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[&QuantSpec { family: "nf4".into(), block_size: 64 }], 1);
+        assert_eq!(m[&QuantSpec::fp()], 3);
+    }
+}
