@@ -4,17 +4,23 @@
 #                    (needs the python/ toolchain; no-op while sources are
 #                    older than the manifest)
 #   make verify      tier-1 gate: release build + full test suite
+#   make parity      the fused-serving parity batteries (Pallas golden
+#                    vectors + the heterogeneous-plan battery); artifact-
+#                    free, escalates skips under AFQ_REQUIRE_ARTIFACTS=1
 #   make bench       run every bench target (engine/serving skip gracefully
 #                    without artifacts); JSON lands in results/BENCH_*.json
 #   make bench-quick same, with short measurement windows
 
 PY_SOURCES := $(shell find python/compile -name '*.py' 2>/dev/null)
 
-.PHONY: verify bench bench-quick artifacts clean
+.PHONY: verify parity bench bench-quick artifacts clean
 
 verify:
 	cargo build --release
 	cargo test -q
+
+parity:
+	cargo test --test fused_parity --test plan_parity
 
 artifacts: artifacts/manifest.json
 

@@ -70,7 +70,7 @@ fn run() -> Result<(), String> {
             },
         )?;
         print!("{}", plan.summary());
-        keys.push(router.register_plan(plan));
+        keys.push(router.register_plan(plan)?);
     }
     if keys.is_empty() {
         return Err("need at least one --codes entry (or --plan)".into());

@@ -15,6 +15,17 @@ Artifacts produced:
   kernel_qmatmul_b64         fused dequant-matmul, 8×512 @ 512×512
   score_fp_<model>           fp32 scoring graph  (nll, correct)
   score_q<B>_<model>         quantized scoring graph for each block size
+  score_plan_<digest>_<model>  per-tensor-plan scoring graph: each matrix
+                             arrives as its OWN (code LUT, idx, scales)
+                             triple (or raw f32 for fp assignments); the
+                             block sizes are baked into the input shapes
+                             and named by the plan's **shape digest**
+                             (``plan_shape_digest`` — the exact mirror of
+                             Rust's ``QuantPlan::shape_digest``). One
+                             canonical mixed-block artifact is emitted
+                             per model (``CANONICAL_PLAN_BLOCKS``);
+                             ``--plans a.json,b.json`` adds artifacts for
+                             tuned plans saved by ``afq plan``.
   train_<model>              AdamW train step (tiny, small)
 """
 
@@ -35,6 +46,43 @@ from compile.kernels.quantize import quantize_blockwise
 
 DEFAULT_BLOCKS = [64, 256, 1024, 4096]
 TRAIN_MODELS = ["tiny", "small", "base"]
+
+# Mirrored constant: rust/src/plan/mod.rs::CANONICAL_PLAN_BLOCKS. Matrix i
+# of every model gets CANONICAL_PLAN_BLOCKS[i % 2] in the canonical mixed
+# plan artifact, so Rust's plan::canonical_mixed_plan always has a baked
+# score_plan executable regardless of code families.
+CANONICAL_PLAN_BLOCKS = [64, 1024]
+
+
+def fnv1a64(h, data: bytes) -> int:
+    """One FNV-1a-64 update step — the exact mirror of the Rust hasher in
+    rust/src/plan/mod.rs (struct Fnv1a); the two must move together."""
+    for b in data:
+        h ^= b
+        h = (h * 0x0000_0100_0000_01B3) & 0xFFFF_FFFF_FFFF_FFFF
+    return h
+
+
+def plan_shape_digest(model_name, named_blocks):
+    """Shape digest of a per-tensor plan: FNV-1a-64 over the model name
+    and the ``tensor|n_params|q<B>`` (or ``…|fp``) lines hashed in
+    **sorted-by-tensor-name order** (tensor names are unique per model),
+    so a plan listing the same blocks in any order names the same graph.
+    Code families and DQ grouping are deliberately excluded — the LUT is
+    a runtime input and DQ scales are reconstructed host-side — so any
+    plan with this block signature shares the compiled graph.
+    Byte-for-byte mirror of ``QuantPlan::shape_digest``
+    (rust/src/plan/mod.rs), which sorts the same way.
+
+    ``named_blocks``: list of (tensor_name, n_params, block_size_or_None).
+    """
+    h = 0xCBF2_9CE4_8422_2325
+    h = fnv1a64(h, model_name.encode())
+    h = fnv1a64(h, b"\n")
+    for name, n, b in sorted(named_blocks, key=lambda t: t[0]):
+        token = "fp" if b is None else f"q{b}"
+        h = fnv1a64(h, f"{name}|{n}|{token}\n".encode())
+    return f"{h:016x}"
 
 
 def to_hlo_text(lowered) -> str:
@@ -107,6 +155,106 @@ def build_score_quant(cfg, block_size):
         return (nll, correct)
 
     return fn, quant_input_specs(cfg, block_size)
+
+
+def plan_input_specs(cfg, blocks):
+    """(name, spec) list for a score_plan artifact, in call order:
+    (ids, targets), vectors, then per matrix either the raw f32 tensor
+    (block None = fp) or its (code, idx, scales) triple."""
+    ins = [
+        ("ids", i32(cfg.batch, cfg.seq_len)),
+        ("targets", i32(cfg.batch, cfg.seq_len)),
+    ]
+    for name, shape in M.vector_specs(cfg):
+        ins.append((name, f32(*shape)))
+    for (name, (out, inn)), b in zip(M.matrix_specs(cfg), blocks):
+        if b is None:
+            ins.append((name, f32(out, inn)))
+        else:
+            n = out * inn
+            # The Pallas dequantize kernel needs whole blocks; plans with
+            # non-divisible block sizes fall back to reconstructed-fp
+            # serving on the Rust side rather than compiling here.
+            assert n % b == 0, (name, n, b)
+            ins.append((f"{name}.code", f32(16)))
+            ins.append((f"{name}.idx", i32(n)))
+            ins.append((f"{name}.scales", f32(n // b)))
+    return ins
+
+
+def build_score_plan(cfg, blocks):
+    nv = len(M.vector_specs(cfg))
+
+    def fn(ids, targets, *rest):
+        vectors = list(rest[:nv])
+        flat = rest[nv:]
+        entries = []
+        i = 0
+        for b in blocks:
+            if b is None:
+                entries.append(("fp", flat[i]))
+                i += 1
+            else:
+                entries.append(("q", flat[i], flat[i + 1], flat[i + 2], b))
+                i += 3
+        nll, correct = M.score_plan(cfg, vectors, entries, ids, targets)
+        return (nll, correct)
+
+    return fn, plan_input_specs(cfg, blocks)
+
+
+def named_blocks_for(cfg, blocks):
+    """(tensor, n_params, block) triples for plan_shape_digest."""
+    return [
+        (name, out * inn, b)
+        for (name, (out, inn)), b in zip(M.matrix_specs(cfg), blocks)
+    ]
+
+
+def canonical_plan_blocks(cfg):
+    """The canonical mixed-block signature every model's baked score_plan
+    artifact uses (mirror: rust plan::canonical_mixed_plan)."""
+    return [
+        CANONICAL_PLAN_BLOCKS[i % len(CANONICAL_PLAN_BLOCKS)]
+        for i in range(len(M.matrix_specs(cfg)))
+    ]
+
+
+def blocks_from_plan_json(cfg, doc):
+    """Per-tensor block list (in the model's matrix order) from an
+    ``afq plan`` JSON document. Assignments are looked up **by tensor
+    name** — like the Rust serving side — so a valid plan whose
+    assignments are listed in a different order still compiles; specs are
+    the ``family@B[+dq<G>]`` / ``fp`` labels (only B matters for the
+    graph)."""
+    assignments = doc["assignments"]
+    specs = M.matrix_specs(cfg)
+    if len(assignments) != len(specs):
+        raise ValueError(
+            f"plan covers {len(assignments)} tensor(s), model has {len(specs)}"
+        )
+    by_name = {a["tensor"]: a for a in assignments}
+    blocks = []
+    for name, (out, inn) in specs:
+        a = by_name.get(name)
+        if a is None:
+            raise ValueError(f"plan has no assignment for model tensor {name!r}")
+        if int(a["n_params"]) != out * inn:
+            raise ValueError(f"plan sizes {name} at {a['n_params']}, model has {out * inn}")
+        label = a["spec"]
+        if label in ("fp", "fp32", "none"):
+            blocks.append(None)
+        else:
+            b = int(label.split("@")[1].split("+")[0])
+            if (out * inn) % b != 0:
+                # The Pallas dequantize kernel consumes whole blocks only.
+                raise ValueError(
+                    f"tensor {name}: block size {b} does not divide {out * inn} params — "
+                    f"this plan cannot compile and will serve via the "
+                    f"reconstructed-fp fallback"
+                )
+            blocks.append(b)
+    return blocks
 
 
 def build_score_fp(cfg):
@@ -223,12 +371,63 @@ def main():
     ap.add_argument("--blocks", default=",".join(str(b) for b in DEFAULT_BLOCKS))
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--skip-train", action="store_true")
+    ap.add_argument("--skip-plan", action="store_true",
+                    help="skip the canonical score_plan artifacts")
+    ap.add_argument("--plans", default="",
+                    help="comma-separated `afq plan` JSON files to compile "
+                         "score_plan artifacts for (in addition to the "
+                         "canonical mixed-block plan per model)")
     args = ap.parse_args()
 
     out_dir = args.out_dir
     os.makedirs(out_dir, exist_ok=True)
     models = [m for m in args.models.split(",") if m]
     blocks = [int(b) for b in args.blocks.split(",") if b]
+
+    # Per-model plan signatures to compile: the canonical mixed-block plan
+    # (so Rust's plan::canonical_mixed_plan always has a fused executable)
+    # plus any tuned plans passed via --plans. Deduped by shape digest —
+    # plans differing only in code family or DQ share one graph.
+    plan_signatures = {}  # model -> {digest: blocks}
+    if not args.skip_plan:
+        for mname in models:
+            cfg = M.CONFIGS[mname]
+            pblocks = canonical_plan_blocks(cfg)
+            # A model whose matrices the canonical blocks don't divide
+            # simply gets no canonical plan artifact (its heterogeneous
+            # plans serve via the reconstructed-fp fallback) — it must
+            # not abort the build for every other artifact kind.
+            bad = [
+                (name, n, b)
+                for (name, n, b) in named_blocks_for(cfg, pblocks)
+                if b is not None and n % b != 0
+            ]
+            if bad:
+                name, n, b = bad[0]
+                print(f"  skipping canonical plan for {mname}: "
+                      f"{name} has {n} params, not divisible by B={b}")
+                continue
+            digest = plan_shape_digest(mname, named_blocks_for(cfg, pblocks))
+            plan_signatures.setdefault(mname, {})[digest] = pblocks
+    for path in [p for p in args.plans.split(",") if p]:
+        # One bad tuned plan — unreadable, malformed JSON, missing keys,
+        # bad spec labels, non-dividing blocks — must not take down the
+        # whole artifact build; it just keeps its reconstructed-fp
+        # fallback. (json.JSONDecodeError is a ValueError subclass.)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            mname = doc["model"]
+            if mname not in models:
+                print(f"  skipping plan {path}: model {mname!r} not in --models")
+                continue
+            cfg = M.CONFIGS[mname]
+            pblocks = blocks_from_plan_json(cfg, doc)
+        except (OSError, ValueError, KeyError, IndexError, TypeError) as e:
+            print(f"  skipping plan {path}: {e!r}")
+            continue
+        digest = plan_shape_digest(mname, named_blocks_for(cfg, pblocks))
+        plan_signatures.setdefault(mname, {})[digest] = pblocks
 
     entries = []
     if not args.skip_kernels:
@@ -248,6 +447,15 @@ def main():
             entries.append(
                 lower_artifact(fn, ins, out_dir, f"score_q{b}_{mname}",
                                {"kind": "score_quant", "model": mname, "block_size": b})
+            )
+        for digest, pblocks in sorted(plan_signatures.get(mname, {}).items()):
+            fn, ins = build_score_plan(cfg, pblocks)
+            entries.append(
+                lower_artifact(
+                    fn, ins, out_dir, f"score_plan_{digest}_{mname}",
+                    {"kind": "score_plan", "model": mname, "shape_digest": digest,
+                     "tensor_blocks": [b if b is not None else 0 for b in pblocks]},
+                )
             )
         if mname in TRAIN_MODELS and not args.skip_train:
             fn, ins = build_train(cfg)

@@ -177,6 +177,35 @@ def forward_quant(cfg: Config, vectors, qpairs, code, ids, block_size):
     return forward_fp(cfg, vectors, mats, ids)
 
 
+def dequant_matrices_plan(cfg: Config, entries):
+    """Reconstruct the ordered W^T matrices for a **per-tensor plan**.
+
+    ``entries`` aligns with ``matrix_specs``; each entry is either
+    ``("fp", wt)`` — the raw f32 matrix passes through — or
+    ``("q", code, idx, scales, block_size)`` with that tensor's OWN
+    16-entry code table and block size. Unlike ``dequant_matrices`` there
+    is no graph-wide ``(code, B)``: every tensor dequantizes through the
+    Pallas kernel with its own pair, which is what lets one compiled
+    graph serve any mix of code families (the LUTs are runtime inputs)
+    while the block sizes are baked into the input shapes.
+    """
+    mats = []
+    for (name, (out, inn)), e in zip(matrix_specs(cfg), entries):
+        if e[0] == "fp":
+            mats.append(e[1])
+        else:
+            _, code, idx, scales, block_size = e
+            flat = dequantize_blockwise(idx, scales, code, block_size)
+            mats.append(flat.reshape(out, inn))
+    return mats
+
+
+def forward_plan(cfg: Config, vectors, entries, ids):
+    """Forward pass with per-tensor quantized matrices (heterogeneous
+    plans' request-path graph)."""
+    return forward_fp(cfg, vectors, dequant_matrices_plan(cfg, entries), ids)
+
+
 def score(logits, targets):
     """Per-token NLL (natural log) and argmax-correctness.
 
@@ -195,6 +224,10 @@ def score_fp(cfg: Config, vectors, matrices, ids, targets):
 
 def score_quant(cfg: Config, vectors, qpairs, code, ids, targets, block_size):
     return score(forward_quant(cfg, vectors, qpairs, code, ids, block_size), targets)
+
+
+def score_plan(cfg: Config, vectors, entries, ids, targets):
+    return score(forward_plan(cfg, vectors, entries, ids), targets)
 
 
 # ---------------------------------------------------------------------------

@@ -3,24 +3,55 @@
 //! p50/p99 and throughput (plus a batching-deadline ablation in full
 //! mode). This regenerates the serving-shape table for EXPERIMENTS.md
 //! §Perf and demonstrates the acceptance scenario: ≥3 configs served
-//! concurrently from one process.
+//! concurrently from one process — now including a **heterogeneous
+//! per-tensor plan in both serving modes**: the fused nibble-domain
+//! `score_plan` path (canonical baked artifact) next to the
+//! reconstructed-fp fallback (a block signature with no artifact), so the
+//! fused-vs-reconstructed cost shows up as two adjacent rows.
 //!
 //! Needs `make artifacts`. Run: `cargo bench --bench serving`
 //! Quick mode (CI): `AFQ_BENCH_QUICK=1 cargo bench --bench serving`
 
 use afq::coordinator::{Router, RouterConfig, ScoreRequest, ServiceKey};
 use afq::model::{generate_corpus, BatchSampler, ParamSet};
+use afq::plan::{canonical_mixed_plan, Assignment, QuantPlan};
+use afq::quant::QuantSpec;
 use afq::util::json::Json;
 use std::time::{Duration, Instant};
 
+/// A heterogeneous plan whose block signature is deliberately NOT the
+/// canonical baked one (256/4096 alternating), so it must serve through
+/// the reconstructed-fp fallback — the comparison row for the fused path.
+fn uncompiled_mixed_plan(meta: &afq::runtime::ModelMeta) -> QuantPlan {
+    let assignments = meta
+        .matrix_order
+        .iter()
+        .enumerate()
+        .map(|(i, (name, shape))| Assignment {
+            tensor: name.clone(),
+            n_params: shape.iter().product(),
+            spec: QuantSpec {
+                family: if i % 2 == 0 { "nf4".into() } else { "af4".into() },
+                block_size: if i % 2 == 0 { 256 } else { 4096 },
+            },
+            dq: None,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        })
+        .collect();
+    QuantPlan::new(&meta.name, assignments)
+}
+
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    // The resolver handles the repo-root vs rust/ cwd difference (cargo
+    // runs bench binaries from the package root).
+    if afq::util::resolve_artifacts_dir("artifacts").is_none() {
         eprintln!("skipping serving bench: run `make artifacts` first");
         return;
     }
     let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
     let model = "tiny";
-    let configs: Vec<ServiceKey> = vec![
+    let uniform_configs: Vec<ServiceKey> = vec![
         ServiceKey::quant(model, "nf4", 64),
         ServiceKey::quant(model, "af4", 64),
         ServiceKey::quant(model, "af4", 4096),
@@ -41,6 +72,22 @@ fn main() {
         let meta = router.manifest().config(model).unwrap().clone();
         router.register_model(model, ParamSet::init(&meta, 3)).unwrap();
         let seq = meta.seq_len;
+        // Uniform specs + the same model under two heterogeneous plans:
+        // one on the fused nibble-domain path (canonical baked artifact),
+        // one forced onto the reconstructed-fp fallback.
+        let mut configs = uniform_configs.clone();
+        let fused_plan = canonical_mixed_plan(&meta, &["nf4", "af4"]);
+        if !router.manifest().artifacts.contains_key(&fused_plan.fused_artifact_name()) {
+            eprintln!(
+                "note: {} not in the manifest — the plan row below will fall back to \
+                 reconstructed-fp (re-run `make artifacts`)",
+                fused_plan.fused_artifact_name()
+            );
+        }
+        configs.push(router.register_plan(fused_plan).expect("register fused plan"));
+        configs.push(
+            router.register_plan(uncompiled_mixed_plan(&meta)).expect("register fallback plan"),
+        );
 
         // Warm every service up front so the rows time steady-state serving
         // (prepare itself is the lazy path — report its cost separately).
@@ -109,15 +156,29 @@ fn main() {
                 .get(key)
                 .map(|s| s.batch_efficiency)
                 .unwrap_or(f64::NAN);
+            let artifact =
+                snap.get(key).map(|s| s.artifact.clone()).unwrap_or_default();
+            // Which serving path this config ran on — the fused-vs-
+            // reconstructed comparison the two plan rows exist for.
+            let path = if artifact.starts_with("score_plan_") {
+                "plan-fused"
+            } else if artifact.starts_with("score_fp_") && key.config_label().starts_with("plan:")
+            {
+                "plan-reconstructed-fp"
+            } else {
+                "uniform-fused"
+            };
             let rps = total as f64 / wall.as_secs_f64();
             println!(
-                "{:>16} {clients_per_config:>8} {wait:>10} {rps:>10.1} {p50:>12.2?} {p99:>12.2?} {:>9.1}%",
+                "{:>16} {clients_per_config:>8} {wait:>10} {rps:>10.1} {p50:>12.2?} {p99:>12.2?} {:>9.1}%  [{path}]",
                 key.config_label(),
                 eff * 100.0
             );
             let mut row = Json::obj();
             row.set("config", Json::Str(key.config_label()))
                 .set("model", Json::Str(model.into()))
+                .set("serving_path", Json::Str(path.into()))
+                .set("artifact", Json::Str(artifact))
                 .set("clients", Json::Num(clients_per_config as f64))
                 .set("wait_ms", Json::Num(wait as f64))
                 .set("requests", Json::Num(total as f64))

@@ -21,12 +21,24 @@
 //! (model × [`router::PlanRef`]) and prepares them lazily on first
 //! request. A uniform [`QuantSpec`] is the degenerate one-entry plan;
 //! full per-tensor [`crate::plan::QuantPlan`]s are registered via
-//! [`Router::register_plan`] and keyed by their stable content digest —
-//! so many (code × block-size) configurations *and* many budgeted plans
-//! of one model stay device-resident behind a single engine thread and
-//! A/B-serve concurrently — the serving shape the paper's
-//! NF4-vs-AF4-vs-balanced comparisons (and the planner's
+//! [`Router::register_plan`] (which rejects degenerate content — empty
+//! plans, zero-param tensors — at the registry door) and keyed by their
+//! stable content digest — so many (code × block-size) configurations
+//! *and* many budgeted plans of one model stay device-resident behind a
+//! single engine thread and A/B-serve concurrently — the serving shape
+//! the paper's NF4-vs-AF4-vs-balanced comparisons (and the planner's
 //! planned-vs-uniform comparisons) need.
+//!
+//! Heterogeneous plans serve **fused**: the
+//! `score_plan_<shape_digest>_<model>` executable takes per-tensor
+//! `(code LUT, packed nibbles, scales)` inputs — block sizes baked into
+//! the graph shapes, code tables free at runtime — so a plan mixing
+//! codes and block sizes keeps the same nibble-domain path uniform specs
+//! get. Plans whose block signature has no compiled artifact fall back
+//! to serving their quantize→dequantize reconstruction through the fp
+//! executable (identical math, 8× the upload bytes); the per-service
+//! `artifact` field in [`RouterSnapshot`] shows which path each tenant
+//! landed on.
 //!
 //! Contracts:
 //! - **Admission**: `Router::score` fails fast — never queues — when the

@@ -243,10 +243,17 @@ impl Router {
     /// (idempotent re-registration), distinct plans of the same model get
     /// distinct keys and serve side by side behind the one engine. The
     /// service itself is prepared lazily on first request, like any other.
-    pub fn register_plan(&self, plan: QuantPlan) -> ServiceKey {
+    ///
+    /// Degenerate content — an empty plan, a zero-param tensor, B < 2, a
+    /// dq-0 group — is rejected **here**, before the plan ever enters the
+    /// registry ([`QuantPlan::validate_content`]); an empty plan used to
+    /// register cleanly and only fail (or worse, serve nothing) at
+    /// prepare time.
+    pub fn register_plan(&self, plan: QuantPlan) -> Result<ServiceKey, String> {
+        plan.validate_content()?;
         let key = ServiceKey::planned(&plan);
         self.plans.lock().unwrap().insert(plan.digest().to_string(), Arc::new(plan));
-        key
+        Ok(key)
     }
 
     /// Digests of currently registered plans (sorted).
@@ -339,6 +346,7 @@ impl Router {
                 let lat = &e.service.latency;
                 ServiceStat {
                     key: key.to_string(),
+                    artifact: e.service.artifact().to_string(),
                     requests: c.requests,
                     batches: c.batches,
                     tokens: c.tokens,
@@ -460,6 +468,10 @@ impl Drop for Router {
 pub struct ServiceStat {
     /// Display form of the service key (`model/family@B` or `model/fp`).
     pub key: String,
+    /// The executable this service scores on (`score_q<B>_…`,
+    /// `score_plan_<shape_digest>_…`, `score_fp_…`) — shows which serving
+    /// path a planned service landed on (fused vs reconstructed-fp).
+    pub artifact: String,
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
@@ -476,6 +488,7 @@ impl ServiceStat {
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("key", Json::Str(self.key.clone()))
+            .set("artifact", Json::Str(self.artifact.clone()))
             .set("requests", Json::Num(self.requests as f64))
             .set("batches", Json::Num(self.batches as f64))
             .set("tokens", Json::Num(self.tokens as f64))
@@ -626,9 +639,9 @@ mod tests {
     #[test]
     fn plan_registry_is_content_addressed() {
         let Some(r) = router() else { return };
-        let k1 = r.register_plan(toy_plan("tiny", &[("w", "nf4@64")]));
-        let k1b = r.register_plan(toy_plan("tiny", &[("w", "nf4@64")]));
-        let k2 = r.register_plan(toy_plan("tiny", &[("w", "af4@64")]));
+        let k1 = r.register_plan(toy_plan("tiny", &[("w", "nf4@64")])).unwrap();
+        let k1b = r.register_plan(toy_plan("tiny", &[("w", "nf4@64")])).unwrap();
+        let k2 = r.register_plan(toy_plan("tiny", &[("w", "af4@64")])).unwrap();
         assert_eq!(k1, k1b, "identical plans land on one key");
         assert_ne!(k1, k2);
         assert_eq!(r.registered_plans().len(), 2);
@@ -643,6 +656,31 @@ mod tests {
         let e = r.prepare(&ghost).unwrap_err();
         assert!(e.contains("not registered"), "{e}");
         assert_eq!(r.service_count(), 0);
+    }
+
+    /// Regression (satellite): an empty plan — or one with a zero-param
+    /// tensor — used to pass validation and register cleanly; now the
+    /// router rejects it at the registry door with a clear error.
+    #[test]
+    fn register_plan_rejects_empty_and_zero_param_plans() {
+        let Some(r) = router() else { return };
+        let empty = crate::plan::QuantPlan::new("tiny", vec![]);
+        let e = r.register_plan(empty).unwrap_err();
+        assert!(e.contains("no tensor assignments"), "{e}");
+        let zero = crate::plan::QuantPlan::new(
+            "tiny",
+            vec![crate::plan::Assignment {
+                tensor: "w".into(),
+                n_params: 0,
+                spec: QuantSpec::parse_label("nf4@64").unwrap(),
+                dq: None,
+                bits_per_param: 0.0,
+                predicted_l1: 0.0,
+            }],
+        );
+        let e = r.register_plan(zero).unwrap_err();
+        assert!(e.contains("n_params == 0"), "{e}");
+        assert!(r.registered_plans().is_empty(), "rejected plans must not enter the registry");
     }
 
     #[test]
@@ -778,7 +816,7 @@ mod tests {
         let plan_hi = mk_plan(4.60);
         assert_ne!(plan_lo.digest(), plan_hi.digest(), "budgets must yield distinct plans");
         assert!(plan_lo.avg_bits_per_param() <= 4.05 + 1e-6);
-        let keys = [r.register_plan(plan_lo), r.register_plan(plan_hi)];
+        let keys = [r.register_plan(plan_lo).unwrap(), r.register_plan(plan_hi).unwrap()];
         assert_eq!(r.registered_plans().len(), 2);
 
         let data = corpus::english(60_000, 7);
@@ -841,6 +879,116 @@ mod tests {
             assert_eq!(stat.errors, 0);
         }
         assert_eq!(snap.queued, 0);
+        r.shutdown();
+    }
+
+    /// A/B extension (satellite): ONE model served simultaneously as (a) a
+    /// uniform spec, (b) the degenerate one-entry plan of that same spec,
+    /// and (c) a genuinely heterogeneous plan — three tenants behind one
+    /// engine. (a) and (b) must produce **identical** outputs (same
+    /// executable, same quantized bytes, distinct device buffers), the
+    /// heterogeneous plan must land on its fused `score_plan` executable
+    /// whenever the manifest carries one (fp fallback otherwise), and
+    /// per-service counters must tally exactly the submitted requests.
+    #[test]
+    fn uniform_degenerate_and_heterogeneous_serve_concurrently() {
+        use crate::plan::{canonical_mixed_plan, Assignment};
+        let Some((r, meta)) = registered_router(61) else { return };
+        let spec = QuantSpec { family: "nf4".into(), block_size: 64 };
+        let uniform_key = ServiceKey::new("tiny", spec.clone());
+        let degenerate = crate::plan::QuantPlan::new(
+            "tiny",
+            meta.matrix_order
+                .iter()
+                .map(|(name, shape)| Assignment {
+                    tensor: name.clone(),
+                    n_params: shape.iter().product(),
+                    spec: spec.clone(),
+                    dq: None,
+                    bits_per_param: 0.0,
+                    predicted_l1: 0.0,
+                })
+                .collect(),
+        );
+        assert!(degenerate.uniform_spec().is_some());
+        let degenerate_key = r.register_plan(degenerate).unwrap();
+        let het = canonical_mixed_plan(&meta, &["nf4", "af4"]);
+        assert!(het.uniform_spec().is_none());
+        let het_fused_artifact = het.fused_artifact_name();
+        let het_key = r.register_plan(het).unwrap();
+        let keys = [uniform_key.clone(), degenerate_key.clone(), het_key.clone()];
+
+        let data = corpus::english(60_000, 9);
+        let seq = meta.seq_len;
+        let clients_per_service = 2usize;
+        let reqs_per_client = 2usize;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for (ki, key) in keys.iter().enumerate() {
+                for c in 0..clients_per_service {
+                    let r = &r;
+                    let data = &data;
+                    let key = key.clone();
+                    joins.push(s.spawn(move || {
+                        for q in 0..reqs_per_client {
+                            let off = (ki * 29 + c * 13 + q) * 350;
+                            let ids: Vec<i32> =
+                                data[off..off + seq].iter().map(|&b| b as i32).collect();
+                            let tgt: Vec<i32> =
+                                data[off + 1..off + seq + 1].iter().map(|&b| b as i32).collect();
+                            let resp =
+                                r.score(ScoreRequest::new(&key, ids, tgt)).expect("routed score");
+                            assert_eq!(resp.nll.len(), seq);
+                        }
+                    }));
+                }
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        assert_eq!(r.service_count(), 3, "all three tenants behind one engine");
+
+        // (a) vs (b): identical full-batch outputs — the degenerate plan
+        // routes through the same fused executable over the same
+        // quantized bytes, so there is no tolerance to allow.
+        let ids: Vec<i32> = data[..seq].iter().map(|&b| b as i32).collect();
+        let tgt: Vec<i32> = data[1..seq + 1].iter().map(|&b| b as i32).collect();
+        let mut bids = Vec::new();
+        let mut btgt = Vec::new();
+        for _ in 0..meta.batch {
+            bids.extend_from_slice(&ids);
+            btgt.extend_from_slice(&tgt);
+        }
+        let (nll_u, cor_u) = r.score_batch(&uniform_key, bids.clone(), btgt.clone()).unwrap();
+        let (nll_d, cor_d) = r.score_batch(&degenerate_key, bids.clone(), btgt.clone()).unwrap();
+        assert_eq!(nll_u, nll_d, "degenerate plan must be bitwise the uniform service");
+        assert_eq!(cor_u, cor_d);
+        // (c) serves and is numerically sane (random-init logits ≈ ln V).
+        let (nll_h, _) = r.score_batch(&het_key, bids, btgt).unwrap();
+        let mean_h = nll_h.iter().map(|&x| x as f64).sum::<f64>() / nll_h.len() as f64;
+        assert!((mean_h - (256f64).ln()).abs() < 0.5, "het plan nll {mean_h}");
+
+        let snap = r.snapshot();
+        let expected = (clients_per_service * reqs_per_client) as u64;
+        for key in &keys {
+            let stat = snap.get(key).expect("stat row");
+            assert_eq!(
+                stat.requests, expected,
+                "{key}: counters must tally exactly the submitted requests"
+            );
+            assert_eq!(stat.errors, 0, "{key}");
+        }
+        // Observable serving paths: the uniform pair shares score_q64, the
+        // heterogeneous plan runs fused when its artifact is baked.
+        assert_eq!(snap.get(&uniform_key).unwrap().artifact, "score_q64_tiny");
+        assert_eq!(snap.get(&degenerate_key).unwrap().artifact, "score_q64_tiny");
+        let het_artifact = &snap.get(&het_key).unwrap().artifact;
+        if r.manifest().artifacts.contains_key(&het_fused_artifact) {
+            assert_eq!(het_artifact, &het_fused_artifact, "must serve in the nibble domain");
+        } else {
+            assert_eq!(het_artifact, "score_fp_tiny", "fallback without a baked artifact");
+        }
         r.shutdown();
     }
 

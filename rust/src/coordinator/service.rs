@@ -13,12 +13,19 @@
 //!   scales through the fused `score_q<B>_<model>` executable.
 //! - [`ServePlan::Planned`] — a [`QuantPlan`] with per-tensor specs. A
 //!   plan that degenerates to one spec (no DQ) is routed to the fused
-//!   executable; a genuinely heterogeneous plan serves its per-tensor
-//!   quantize→dequantize **reconstruction** through the fp executable
-//!   (the AOT artifacts bake in a single `(code, B)` pair, and serving
-//!   the reconstruction is mathematically identical to
-//!   dequantize-then-matmul). Buffers live under the plan's stable
-//!   content digest, so two plans of one model are distinct tenants.
+//!   `score_q<B>` executable. A genuinely heterogeneous plan serves **in
+//!   the nibble domain** through the `score_plan_<shape_digest>_<model>`
+//!   executable when the manifest has one for the plan's block-size
+//!   signature ([`QuantPlan::shape_digest`]): every tensor uploads its
+//!   own `(code LUT, packed nibbles, scales)` triple and dequantizes
+//!   in-graph with its own `(code, B)` — the same fused path uniform
+//!   specs get. Only when no such artifact exists (a plan whose block
+//!   signature was never compiled — run `make artifacts` with
+//!   `--plans <plan.json>`) does the service fall back to serving the
+//!   per-tensor quantize→dequantize **reconstruction** through the fp
+//!   executable, which is mathematically identical but moves 8× the
+//!   bytes. Buffers live under the plan's stable content digest either
+//!   way, so two plans of one model are distinct tenants.
 //!
 //! Services are owned by the [`crate::coordinator::Router`]: preparation
 //! and release are crate-internal, and external callers reach a service
@@ -31,15 +38,20 @@
 //!
 //! The weight path is the parallel quantizer (`quantize_par`, bit-identical
 //! to serial; see [`crate::quant::fused`]), and with `AFQ_HOST_PARITY=1`
-//! every fused-path matrix is cross-checked on the host — fused `qgemm` vs
+//! every fused-path matrix — uniform **and** planned — is cross-checked on
+//! the host with its own `(code, B)` — fused `qgemm` vs
 //! dequantize-then-matmul — before upload (see
-//! [`crate::model::quantized_weight_args`]).
+//! [`crate::model::quantized_weight_args`] and
+//! [`crate::model::planned_fused_weight_args`]).
 
 use crate::codes::registry;
 use crate::coordinator::batcher::ScoreBackend;
 use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
 use crate::coordinator::metrics::{Counters, LatencyHistogram};
-use crate::model::{fp_weight_args, planned_weight_args, quantized_weight_args, ParamSet};
+use crate::model::{
+    fp_weight_args, planned_fused_weight_args, planned_weight_args, quantized_weight_args,
+    ParamSet,
+};
 use crate::plan::QuantPlan;
 use crate::runtime::{ModelMeta, TensorData};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -74,14 +86,18 @@ impl ServePlan {
         }
     }
 
-    /// The scoring executable this plan runs on (see the module docs for
-    /// why heterogeneous plans use the fp graph).
+    /// The scoring executable this plan **prefers**: the fused
+    /// `score_q<B>`/`score_fp` executable for (degenerate-)uniform
+    /// configurations, and the per-tensor `score_plan_<shape_digest>`
+    /// executable for heterogeneous plans. [`ModelService::prepare`]
+    /// falls back from the latter to `score_fp` + reconstruction when
+    /// the manifest has no artifact for the plan's block signature.
     fn artifact_name(&self, model: &str) -> String {
         match self {
             ServePlan::Uniform(spec) => spec.artifact_name(model),
             ServePlan::Planned(p) => match p.uniform_spec() {
                 Some(spec) => spec.artifact_name(model),
-                None => format!("score_fp_{model}"),
+                None => p.fused_artifact_name(),
             },
         }
     }
@@ -155,11 +171,30 @@ impl ModelService {
                 }
             }
         }
-        let artifact = plan.artifact_name(model);
+        let mut artifact = plan.artifact_name(model);
+        let mut fused_planned = false;
+        if let ServePlan::Planned(p) = &plan {
+            if p.uniform_spec().is_none() {
+                // Heterogeneous: prefer the per-tensor nibble-domain
+                // executable; fall back to fp + reconstruction when this
+                // block signature was never compiled.
+                if eng.manifest().artifacts.contains_key(&artifact) {
+                    fused_planned = true;
+                } else {
+                    crate::log_warn!(
+                        "plan {}: no {artifact} in the manifest — serving the \
+                         reconstructed-fp fallback (bake the fused executable with \
+                         `make artifacts` / aot.py --plans)",
+                        p.digest()
+                    );
+                    artifact = format!("score_fp_{model}");
+                }
+            }
+        }
         eng.manifest().artifact(&artifact)?; // fail fast if missing
         let generation = PREPARE_SEQ.fetch_add(1, Ordering::Relaxed);
         let prefix = format!("{}/g{generation}", plan.key_prefix(model));
-        let weight_args = Self::weight_args(&plan, &meta, params, &prefix)?;
+        let weight_args = Self::weight_args(&plan, &meta, params, &prefix, fused_planned)?;
         let mut keys = Vec::with_capacity(weight_args.len());
         for (key, shape, data) in weight_args {
             eng.upload(&key, &shape, data)?;
@@ -179,25 +214,31 @@ impl ModelService {
     }
 
     /// Resolve the weight upload list for a plan: fp params, fused packed
-    /// nibbles for a (degenerate-)uniform spec, or per-tensor
-    /// reconstructions for a heterogeneous plan.
+    /// nibbles for a (degenerate-)uniform spec, per-tensor
+    /// `(code, idx, scales)` triples for a heterogeneous plan with a
+    /// compiled `score_plan` artifact (`fused_planned`), or per-tensor
+    /// reconstructions for the fp fallback.
     fn weight_args(
         plan: &ServePlan,
         meta: &ModelMeta,
         params: &ParamSet,
         prefix: &str,
+        fused_planned: bool,
     ) -> Result<Vec<(String, Vec<usize>, TensorData)>, String> {
         let fused_spec = match plan {
             ServePlan::Uniform(spec) => Some(spec),
             ServePlan::Planned(p) => {
                 // Stale-plan check on BOTH branches: the heterogeneous
-                // path validates inside quantize_matrices_planned, but a
+                // paths validate inside quantize_matrices_planned, but a
                 // degenerate-uniform plan would otherwise route straight
                 // to the fused path and serve while its digest describes
                 // tensors that no longer exist.
                 p.validate_matrices(meta)?;
                 match p.uniform_spec() {
                     Some(spec) => Some(spec),
+                    None if fused_planned => {
+                        return planned_fused_weight_args(meta, params, p, prefix)
+                    }
                     None => return planned_weight_args(meta, params, p, prefix),
                 }
             }
@@ -256,6 +297,14 @@ impl ModelService {
     pub fn seq(&self) -> usize {
         self.meta.seq_len
     }
+
+    /// Name of the scoring executable this service runs on — observable
+    /// proof of which serving path a plan landed on (`score_q<B>_…`,
+    /// `score_plan_<shape_digest>_…`, or the `score_fp_…` fallback).
+    /// Surfaced per service in the router snapshot.
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
 }
 
 /// The real batcher backend: [`ModelService::score`] already tallies batch
@@ -301,14 +350,19 @@ mod tests {
             bits_per_param: 0.0,
             predicted_l1: 0.0,
         };
-        // Heterogeneous plan → fp executable, digest-keyed buffers.
+        // Heterogeneous plan → the per-tensor score_plan executable
+        // (named by SHAPE digest, keyed by CONTENT digest); prepare falls
+        // back to score_fp only when the manifest lacks the artifact.
         let het = Arc::new(QuantPlan::new(
             "tiny",
             vec![asg("a", "nf4@64"), asg("b", "af4@4096")],
         ));
         let sp = ServePlan::Planned(Arc::clone(&het));
         assert_eq!(sp.label(), format!("plan:{}", het.digest()));
-        assert_eq!(sp.artifact_name("tiny"), "score_fp_tiny");
+        assert_eq!(
+            sp.artifact_name("tiny"),
+            format!("score_plan_{}_tiny", het.shape_digest())
+        );
         assert!(sp.key_prefix("tiny").contains(het.digest()));
         // Degenerate uniform plan → fused executable.
         let uni_plan = Arc::new(QuantPlan::new(
@@ -381,6 +435,11 @@ mod tests {
         let plan = Arc::new(QuantPlan::new("tiny", assignments));
         assert!(plan.uniform_spec().is_none(), "must exercise the reconstruction path");
         let planned = ModelService::prepare(&eng, "tiny", &params, Arc::clone(&plan)).unwrap();
+        // This block signature (256/64 mix) is deliberately not the
+        // canonical baked one, so the service must land on the fp
+        // fallback — the fused score_plan path is covered by the parity
+        // battery (tests/plan_parity.rs) with the canonical plan.
+        assert_eq!(planned.artifact(), "score_fp_tiny");
         let fused = ModelService::prepare(
             &eng,
             "tiny",

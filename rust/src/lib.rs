@@ -61,10 +61,15 @@
 //!   [`coordinator::ServiceKey`] (model × plan): a uniform spec is the
 //!   degenerate one-entry plan served through the fused `score_q<B>`
 //!   executable, and registered [`plan::QuantPlan`]s are keyed by content
-//!   digest — heterogeneous plans serve their per-tensor
-//!   quantize→dequantize reconstruction through the fp executable (the
-//!   AOT artifacts bake in a single `(code, B)`), so two plans of one
-//!   model A/B-serve side by side behind one engine. Requests flow:
+//!   digest — heterogeneous plans serve **in the nibble domain** through
+//!   the `score_plan_<shape_digest>` executable (each tensor uploads its
+//!   own `(code LUT, packed nibbles, scales)` and dequantizes in-graph
+//!   with its own `(code, B)`; `plan::QuantPlan::shape_digest` names the
+//!   graph, mirrored by the AOT compiler), falling back to the fp
+//!   reconstruction only for block signatures that were never compiled —
+//!   so two plans of one model A/B-serve side by side behind one engine.
+//!   The per-tensor path is pinned bitwise to the fused host kernel by
+//!   the parity battery in `rust/tests/plan_parity.rs`. Requests flow:
 //!   request thread → `Router::score` (admission control: global +
 //!   per-service queue quotas, fail-fast) → that service's dynamic
 //!   [`coordinator::Batcher`] (size-or-deadline assembly into [batch,

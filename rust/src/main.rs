@@ -55,6 +55,7 @@ fn usage() -> String {
        codes      print code tables (nf4, af4-<B>, balanced-<B>, …)\n\
        quantize   quantize synthetic weights, report reconstruction error\n\
        plan       build a budgeted per-tensor quantization plan for a model\n\
+                  (or reload/validate a saved one via --load <plan.json>)\n\
        train      train a model from Rust via the AOT train step\n\
        eval       perplexity eval of a model × code × block-size config\n\
                   (or a planned config via --plan <bits-budget>)\n\
@@ -133,19 +134,42 @@ fn planner_opts_from(args: &Args, budget: f64) -> Result<PlannerOpts, String> {
 }
 
 fn cmd_plan(argv: &[String]) -> Result<(), String> {
-    let cmd = Command::new("plan", "build a budgeted per-tensor quantization plan")
+    let cmd = Command::new("plan", "build (or load) a budgeted per-tensor quantization plan")
         .opt("model", "tiny|small|base", Some("small"))
         .opt("budget", "average bits-per-param ceiling", Some("4.25"))
         .opt("grid", "candidate labels (family@B[+dqG], fp); empty = families × blocks", None)
         .opt("blocks", "block sizes for the default grid", Some("64,256,1024,4096"))
+        .opt("load", "load a previously saved plan JSON instead of planning", None)
         .opt("ckpt", "checkpoint path (default: random-init weights)", None)
         .opt("seed", "rng seed for random-init weights", Some("0"))
         .opt("artifacts", "artifacts dir (manifest only; no engine)", Some("artifacts"))
         .opt("results", "results output dir", Some("results"))
         .flag("empirical", "use measured block-absmax stats instead of the normal model");
     let args = cmd.parse(argv)?;
-    let model = args.get_or("model", "small");
     let manifest = afq::runtime::Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    if let Some(path) = args.get("load") {
+        // Cross-process reuse: rebuild the plan from its saved JSON (the
+        // digest is recomputed and cross-checked), then validate it
+        // against the CURRENT manifest so a stale plan fails loudly here
+        // rather than at serve time.
+        let plan = afq::plan::QuantPlan::load(path)?;
+        let meta = manifest.config(&plan.model)?;
+        plan.validate_matrices(meta)?;
+        print!("{}", plan.summary());
+        let fused = plan.fused_artifact_name();
+        if manifest.artifacts.contains_key(&fused) {
+            println!("loaded {path}: valid for {:?}; fused artifact {fused} is baked", plan.model);
+        } else {
+            println!(
+                "loaded {path}: valid for {:?}; no {fused} in the manifest — \
+                 heterogeneous serving will use the reconstructed-fp fallback \
+                 (bake it with aot.py --plans {path})",
+                plan.model
+            );
+        }
+        return Ok(());
+    }
+    let model = args.get_or("model", "small");
     let meta = manifest.config(model)?;
     let params = match args.get("ckpt") {
         Some(path) => ParamSet::load(path)?,
@@ -167,7 +191,7 @@ fn cmd_plan(argv: &[String]) -> Result<(), String> {
     let path = format!("{}/plan_{model}_{}.json", args.get_or("results", "results"), plan.digest());
     afq::util::write_file(&path, &plan.to_json().to_string_pretty())
         .map_err(|e| format!("save plan: {e}"))?;
-    println!("saved {path}");
+    println!("saved {path} (reusable via `afq plan --load {path}` / `aot.py --plans {path}`)");
     Ok(())
 }
 
@@ -225,7 +249,7 @@ fn cmd_eval(argv: &[String]) -> Result<(), String> {
             let opts = planner_opts_from(&args, budget)?;
             let plan = plan_for_params(&meta, &params, &opts)?;
             print!("{}", plan.summary());
-            router.register_plan(plan)
+            router.register_plan(plan)?
         }
         None => {
             let spec = QuantSpec::parse(args.get_or("code", "nf4"), args.usize("block", 64))?;

@@ -93,22 +93,14 @@ pub fn quantized_weight_args(
 /// nibble-domain path and dequantize-then-matmul, and panics when they
 /// disagree beyond f32 accumulation-order noise.
 fn host_parity_check(name: &str, q: &crate::quant::Quantized, shape: &[usize], code: &Code) {
-    use crate::quant::{MatrixQuant, QuantAxis};
+    use crate::quant::MatrixQuant;
     use crate::tensor::Matrix;
     let rows = shape[0];
     let cols: usize = shape[1..].iter().product();
     if rows * cols != q.len {
         panic!("host parity: {name} shape {shape:?} does not match {} quantized elements", q.len);
     }
-    let view = MatrixQuant {
-        rows,
-        cols,
-        axis: QuantAxis::Row,
-        q: q.clone(),
-        dq: None,
-        code_name: code.name.clone(),
-        per_line: None,
-    };
+    let view = MatrixQuant::from_flat(rows, cols, q.clone(), &code.name);
     let mut rng = crate::util::rng::Rng::new(0xA11CE);
     let probe = Matrix::randn(2, rows, 1.0, &mut rng);
     let fused = view.qgemm(&probe, code);
@@ -122,18 +114,88 @@ fn host_parity_check(name: &str, q: &crate::quant::Quantized, shape: &[usize], c
     );
 }
 
-/// The arguments a `score_fp_<model>` artifact expects when serving a
-/// heterogeneous [`crate::plan::QuantPlan`]: every param in manifest
-/// order, with each planned matrix replaced by its **reconstruction**
-/// (quantize with the tensor's assigned code/block size, then dequantize).
+/// The arguments a `score_plan_<shape_digest>_<model>` artifact expects
+/// after (ids, targets) when serving a heterogeneous
+/// [`crate::plan::QuantPlan`] **in the nibble domain**: every vector
+/// param in manifest order, then per matrix — in matrix order — either
+/// the plain f32 tensor (fp assignment) or the triple
+/// `(<name>.code f32[16], <name>.idx i32[n], <name>.scales f32[n/B])`
+/// with that tensor's own code LUT and block size. DQ assignments upload
+/// their *reconstructed* f32 scales (exactly like the fused uniform
+/// path), so the graph never sees DQ structure and the shape digest is
+/// DQ-independent.
 ///
-/// The AOT artifacts bake in a single `(code table, B)` pair, so a plan
-/// mixing block sizes cannot ride the fused `score_q<B>` executable;
-/// serving the dequantized reconstruction through the fp graph is
-/// mathematically identical to dequantize-then-matmul and keeps the
-/// per-tensor quantization error exactly. Degenerate uniform plans are
-/// routed to the fused path by the service layer instead and never reach
-/// this function.
+/// With `AFQ_HOST_PARITY=1`, every quantized matrix is cross-checked on
+/// the host before upload — fused `qgemm` with the tensor's **own**
+/// `(code, B)` vs dequantize-then-matmul — extending the uniform-path
+/// prepare-time guardrail to planned services. Panics on mismatch
+/// (corrupt weights must never serve).
+pub fn planned_fused_weight_args(
+    meta: &ModelMeta,
+    params: &ParamSet,
+    plan: &crate::plan::QuantPlan,
+    key_prefix: &str,
+) -> Result<Vec<(String, Vec<usize>, TensorData)>, String> {
+    use crate::codes::registry;
+    let host_parity = std::env::var("AFQ_HOST_PARITY").map(|v| v == "1").unwrap_or(false);
+    let planned = params.quantize_matrices_planned(meta, plan)?;
+    let mut out = Vec::new();
+    for (name, shape, t) in params.vector_tensors(meta) {
+        out.push((format!("{key_prefix}/{name}"), shape, t));
+    }
+    for ((name, q), (_, shape)) in planned.into_iter().zip(&meta.matrix_order) {
+        match q {
+            None => {
+                // fp assignment: the raw tensor passes straight through.
+                let (_, _, data) = params.get(&name).expect("validated: tensor exists");
+                out.push((format!("{key_prefix}/{name}"), shape.clone(), TensorData::F32(data.clone())));
+            }
+            Some(q) => {
+                // Resolve the LUT by NAME, like the quantizer does — a
+                // valid plan may order its assignments differently from
+                // matrix_order, and a positional zip would pair tensor i
+                // with assignment i's code.
+                let a = plan.get(&name).expect("validated: every matrix has an assignment");
+                let code = registry::for_block_size(&a.spec.family, a.spec.block_size)
+                    .ok_or_else(|| {
+                        registry::describe_build_failure(&a.spec.family, a.spec.block_size)
+                    })?;
+                let code = code.as_ref();
+                if host_parity {
+                    host_parity_check(&name, &q, shape, code);
+                }
+                let n = q.len;
+                out.push((
+                    format!("{key_prefix}/{name}.code"),
+                    vec![16],
+                    TensorData::F32(code.table_f32()),
+                ));
+                out.push((format!("{key_prefix}/{name}.idx"), vec![n], TensorData::from_indices(&q)));
+                out.push((
+                    format!("{key_prefix}/{name}.scales"),
+                    vec![q.scales.len()],
+                    TensorData::F32(q.scales.clone()),
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The arguments a `score_fp_<model>` artifact expects when serving a
+/// heterogeneous [`crate::plan::QuantPlan`] through **reconstruction**:
+/// every param in manifest order, with each planned matrix replaced by
+/// its quantize→dequantize round trip under the tensor's assigned
+/// code/block size.
+///
+/// This is the fallback path for plans whose shape signature has no
+/// compiled `score_plan_*` artifact (see
+/// [`planned_fused_weight_args`] for the nibble-domain path): serving
+/// the dequantized reconstruction through the fp graph is mathematically
+/// identical to dequantize-then-matmul and keeps the per-tensor
+/// quantization error exactly — it just moves 8× the bytes. Degenerate
+/// uniform plans are routed to the fused `score_q<B>` path by the
+/// service layer instead and never reach this function.
 pub fn planned_weight_args(
     meta: &ModelMeta,
     params: &ParamSet,
@@ -253,6 +315,96 @@ mod tests {
         // …while fp-assigned and vector tensors pass through untouched.
         assert_eq!(args[2].2.as_f32().unwrap(), &params.get("wk").unwrap().2[..]);
         assert_eq!(args[0].2.as_f32().unwrap(), &params.get("ln_g").unwrap().2[..]);
+    }
+
+    #[test]
+    fn planned_fused_args_emit_per_tensor_triples() {
+        use crate::plan::{Assignment, QuantPlan};
+        use crate::quant::QuantSpec;
+        let meta = ModelMeta {
+            name: "t".into(),
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq_len: 4,
+            batch: 2,
+            vocab: 64,
+            param_order: vec![
+                ("ln_g".into(), vec![8]),
+                ("wq".into(), vec![8, 8]),
+                ("wk".into(), vec![8, 8]),
+                ("wv".into(), vec![8, 8]),
+            ],
+            matrix_order: vec![
+                ("wq".into(), vec![8, 8]),
+                ("wk".into(), vec![8, 8]),
+                ("wv".into(), vec![8, 8]),
+            ],
+        };
+        let params = ParamSet::init(&meta, 5);
+        let asg = |tensor: &str, label: &str, dq: Option<usize>| Assignment {
+            tensor: tensor.into(),
+            n_params: 64,
+            spec: QuantSpec::parse_label(label).unwrap(),
+            dq,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        };
+        // Heterogeneous: two codes, two block sizes, one DQ, one fp.
+        let plan = QuantPlan::new(
+            "t",
+            vec![asg("wq", "nf4@16", None), asg("wk", "fp", None), asg("wv", "af4@8", Some(4))],
+        );
+        let args = planned_fused_weight_args(&meta, &params, &plan, "w/t/plan/x").unwrap();
+        // 1 vector + (code,idx,scales) + 1 fp + (code,idx,scales) = 8 args.
+        assert_eq!(args.len(), 8);
+        let names: Vec<&str> = args.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "w/t/plan/x/ln_g",
+                "w/t/plan/x/wq.code",
+                "w/t/plan/x/wq.idx",
+                "w/t/plan/x/wq.scales",
+                "w/t/plan/x/wk",
+                "w/t/plan/x/wv.code",
+                "w/t/plan/x/wv.idx",
+                "w/t/plan/x/wv.scales",
+            ]
+        );
+        // wq's packed indices and scales are exactly the direct per-tensor
+        // quantization under its own code/B.
+        let nf4 = crate::codes::nf4();
+        let direct = crate::quant::quantize(&params.get("wq").unwrap().2, 16, &nf4);
+        assert_eq!(args[1].2.as_f32().unwrap(), &nf4.table_f32()[..]);
+        assert_eq!(args[2].2, TensorData::from_indices(&direct));
+        assert_eq!(args[3].2.as_f32().unwrap(), &direct.scales[..]);
+        // wv carries the af4-8 LUT (not nf4) and DQ-reconstructed scales.
+        let af4 = crate::codes::registry::for_block_size("af4", 8).unwrap();
+        assert_eq!(args[5].2.as_f32().unwrap(), &af4.table_f32()[..]);
+        let raw = crate::quant::quantize(&params.get("wv").unwrap().2, 8, &af4);
+        assert_eq!(args[6].2, TensorData::from_indices(&raw));
+        let dq_scales = args[7].2.as_f32().unwrap();
+        assert_eq!(dq_scales.len(), raw.scales.len());
+        assert_ne!(dq_scales, &raw.scales[..], "DQ must round-trip the scales");
+        // fp tensor passes through untouched.
+        assert_eq!(args[4].2.as_f32().unwrap(), &params.get("wk").unwrap().2[..]);
+
+        // Regression: a plan whose assignments are PERMUTED relative to
+        // matrix_order is still valid (lookups are by name) and must
+        // marshal each tensor with its own LUT, not assignment i's.
+        let permuted = QuantPlan::new(
+            "t",
+            vec![asg("wv", "af4@8", Some(4)), asg("wk", "fp", None), asg("wq", "nf4@16", None)],
+        );
+        let pargs = planned_fused_weight_args(&meta, &params, &permuted, "w/t/plan/x").unwrap();
+        let pnames: Vec<&str> = pargs.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(pnames, names, "marshalling order follows matrix_order, not plan order");
+        assert_eq!(pargs[1].2.as_f32().unwrap(), &nf4.table_f32()[..], "wq keeps its own LUT");
+        assert_eq!(pargs[5].2.as_f32().unwrap(), &af4.table_f32()[..], "wv keeps its own LUT");
+        assert_eq!(pargs[2].2, args[2].2);
+        assert_eq!(pargs[6].2, args[6].2);
     }
 
     #[test]

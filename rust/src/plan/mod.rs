@@ -43,6 +43,23 @@
 //! 64-bit collision). The router keys planned services by this digest, so
 //! re-registering an identical plan is idempotent and distinct plans of
 //! one model serve side by side.
+//!
+//! ## Shape digest (the L2 graph a plan serves on)
+//!
+//! [`QuantPlan::shape_digest`] names the **compiled graph** a
+//! heterogeneous plan can serve through: FNV-1a-64 over the model name
+//! and the ordered `(tensor, n_params, q<B>|fp)` triples — the block
+//! size (or fp pass-through) per tensor, and nothing more. The code
+//! family and DQ grouping are deliberately excluded: the
+//! `score_plan_<shape_digest>_<model>` artifact takes each tensor's
+//! 16-entry code LUT as a *runtime input* (so nf4/af4/balanced share one
+//! executable) and consumes f32 scales (DQ scales are reconstructed
+//! host-side before upload, exactly like the fused uniform path). The
+//! Python AOT compiler (`python/compile/aot.py::plan_shape_digest`)
+//! computes the identical hash over the identical serialization — the
+//! two implementations are a mirrored pair and must move together.
+//! Plans that agree on `shape_digest` but differ in codes serve through
+//! the same executable with different LUT/nibble uploads.
 
 pub mod allocator;
 pub mod stats;
@@ -138,6 +155,83 @@ impl QuantPlan {
         &self.digest
     }
 
+    /// The stable **shape digest** (16 lowercase hex chars): hashes only
+    /// the per-tensor block-size signature (`q<B>` / `fp`), not the code
+    /// family or DQ grouping — see the module-docs contract. Triples are
+    /// hashed in **sorted-by-tensor-name order** (tensor names are unique
+    /// per model), NOT assignment order: the compiled graph depends on
+    /// which block size each named tensor gets, so a plan listing the
+    /// same per-tensor blocks in a different order must still find its
+    /// baked executable. Two plans with equal shape digests serve through
+    /// one `score_plan_<shape_digest>_<model>` executable; mirrored by
+    /// `python/compile/aot.py::plan_shape_digest` (which sorts the same
+    /// way).
+    pub fn shape_digest(&self) -> String {
+        let mut triples: Vec<&Assignment> = self.assignments.iter().collect();
+        triples.sort_by(|a, b| a.tensor.cmp(&b.tensor));
+        let mut h = Fnv1a::new();
+        h.update(self.model.as_bytes());
+        h.update(b"\n");
+        for a in triples {
+            h.update(a.tensor.as_bytes());
+            h.update(b"|");
+            h.update(a.n_params.to_string().as_bytes());
+            h.update(b"|");
+            if a.spec.is_fp() {
+                h.update(b"fp");
+            } else {
+                h.update(format!("q{}", a.spec.block_size).as_bytes());
+            }
+            h.update(b"\n");
+        }
+        format!("{:016x}", h.finish())
+    }
+
+    /// Name of the per-tensor fused executable this plan serves through
+    /// when it exists in the manifest (`score_plan_<shape_digest>_<model>`).
+    pub fn fused_artifact_name(&self) -> String {
+        format!("score_plan_{}_{}", self.shape_digest(), self.model)
+    }
+
+    /// Meta-independent sanity of the plan **content**: at least one
+    /// tensor, every tensor non-empty, block sizes ≥ 2 on non-fp specs,
+    /// DQ groups ≥ 1. [`validate_matrices`](Self::validate_matrices)
+    /// includes these checks; the router's `register_plan` runs them too,
+    /// before any model is registered, so a degenerate hand-built or
+    /// deserialized plan is rejected at the registry door instead of
+    /// serving an empty tensor set. (An empty plan used to slip through
+    /// `validate_matrices` whenever the tensor-count comparison was the
+    /// only guard.)
+    pub fn validate_content(&self) -> Result<(), String> {
+        if self.assignments.is_empty() {
+            return Err(format!(
+                "plan {} for model {:?} has no tensor assignments — refusing to serve an empty plan",
+                self.digest, self.model
+            ));
+        }
+        for a in &self.assignments {
+            if a.n_params == 0 {
+                return Err(format!(
+                    "plan {}: tensor {:?} has n_params == 0 — empty tensors cannot be planned",
+                    self.digest, a.tensor
+                ));
+            }
+            if !a.spec.is_fp() && a.spec.block_size < 2 {
+                return Err(crate::codes::registry::describe_build_failure(
+                    &a.spec.family,
+                    a.spec.block_size,
+                ));
+            }
+            if a.dq.map_or(false, |g| g == 0) {
+                return Err(format!(
+                    "plan {}: tensor {:?} has dq group 0 (must be ≥ 1)",
+                    self.digest, a.tensor
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Check this plan covers `meta`'s matrices **exactly** — same tensor
     /// set, same sizes — and that every assignment is applicable (block
     /// size ≥ 2 for non-fp specs, dq group ≥ 1). Plans are content
@@ -146,6 +240,7 @@ impl QuantPlan {
     /// degenerate plan fail loudly instead of silently dropping
     /// assignments or panicking deep in the quantizer.
     pub fn validate_matrices(&self, meta: &crate::runtime::ModelMeta) -> Result<(), String> {
+        self.validate_content()?;
         if self.assignments.len() != meta.matrix_order.len() {
             return Err(format!(
                 "plan {} covers {} tensor(s) but model {:?} has {} matrices — stale plan?",
@@ -164,18 +259,6 @@ impl QuantPlan {
                 return Err(format!(
                     "plan {} sized tensor {name:?} at {} params but the model has {n} — stale plan?",
                     self.digest, a.n_params
-                ));
-            }
-            if !a.spec.is_fp() && a.spec.block_size < 2 {
-                return Err(crate::codes::registry::describe_build_failure(
-                    &a.spec.family,
-                    a.spec.block_size,
-                ));
-            }
-            if a.dq.map_or(false, |g| g == 0) {
-                return Err(format!(
-                    "plan {}: tensor {name:?} has dq group 0 (must be ≥ 1)",
-                    self.digest
                 ));
             }
         }
@@ -290,6 +373,113 @@ impl QuantPlan {
             );
         o
     }
+
+    /// Inverse of [`to_json`](Self::to_json): rebuild a plan from its
+    /// serialized form. The digest is **recomputed** from the parsed
+    /// content (never trusted from the file) and, when the file carries a
+    /// `digest` field, cross-checked against it — a mismatch means the
+    /// file was edited or the label grammar drifted, and the plan is
+    /// rejected rather than served under a stale identity. Content
+    /// validation ([`validate_content`](Self::validate_content)) runs
+    /// here too, so a hand-edited degenerate file fails at load time.
+    pub fn from_json(j: &Json) -> Result<QuantPlan, String> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or("plan json: missing \"model\"")?
+            .to_string();
+        let arr = j
+            .get("assignments")
+            .and_then(Json::as_arr)
+            .ok_or("plan json: missing \"assignments\"")?;
+        let mut assignments = Vec::with_capacity(arr.len());
+        for (i, a) in arr.iter().enumerate() {
+            let tensor = a
+                .get("tensor")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("plan json: assignment {i} missing \"tensor\""))?
+                .to_string();
+            let n_params = a
+                .get("n_params")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("plan json: assignment {i} missing \"n_params\""))?;
+            let label = a
+                .get("spec")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("plan json: assignment {i} missing \"spec\""))?;
+            // The label grammar (family@B[+dq<G>] / fp) is single-sourced
+            // in config_label; Candidate::parse_label is its exact inverse.
+            let cand = allocator::Candidate::parse_label(label)
+                .map_err(|e| format!("plan json: assignment {i} ({tensor:?}): {e}"))?;
+            assignments.push(Assignment {
+                tensor,
+                n_params,
+                spec: cand.spec,
+                dq: cand.dq,
+                bits_per_param: a.get("bits_per_param").and_then(Json::as_f64).unwrap_or(0.0),
+                predicted_l1: a.get("predicted_l1").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        let plan = QuantPlan::new(&model, assignments);
+        plan.validate_content()?;
+        if let Some(stored) = j.get("digest").and_then(Json::as_str) {
+            if stored != plan.digest() {
+                return Err(format!(
+                    "plan json: stored digest {stored} does not match recomputed {} — \
+                     the file was edited or the label grammar drifted; refusing to load",
+                    plan.digest()
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Load a plan from a JSON file written by [`to_json`](Self::to_json)
+    /// (e.g. `afq plan`'s `results/plan_<model>_<digest>.json`).
+    pub fn load(path: &str) -> Result<QuantPlan, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let j = Json::parse(&src).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+/// The block sizes the AOT compiler bakes into every model's **canonical
+/// mixed-plan artifact** (`python/compile/aot.py::CANONICAL_PLAN_BLOCKS` is
+/// the mirrored constant): matrix `i` gets `CANONICAL_PLAN_BLOCKS[i % 2]`.
+/// Any plan following this block pattern — whatever its code families —
+/// shares the canonical artifact's shape digest and serves fused without a
+/// bespoke `--plans` compile.
+pub const CANONICAL_PLAN_BLOCKS: [usize; 2] = [64, 1024];
+
+/// A genuinely heterogeneous plan matching the canonical baked artifact:
+/// matrix `i` is assigned `families[i % families.len()]` at block size
+/// [`CANONICAL_PLAN_BLOCKS`]`[i % 2]`. With ≥ 2 families this mixes ≥ 2
+/// codes *and* ≥ 2 block sizes (the acceptance shape), and its
+/// [`QuantPlan::shape_digest`] matches the `score_plan_*` artifact
+/// `make artifacts` emits for the model. Used by the parity battery, the
+/// serving bench, and as a template for hand-rolled mixed configs.
+pub fn canonical_mixed_plan(meta: &crate::runtime::ModelMeta, families: &[&str]) -> QuantPlan {
+    assert!(!families.is_empty(), "need at least one code family");
+    let assignments = meta
+        .matrix_order
+        .iter()
+        .enumerate()
+        .map(|(i, (name, shape))| {
+            let spec = QuantSpec {
+                family: families[i % families.len()].to_string(),
+                block_size: CANONICAL_PLAN_BLOCKS[i % CANONICAL_PLAN_BLOCKS.len()],
+            };
+            Assignment {
+                tensor: name.clone(),
+                n_params: shape.iter().product(),
+                spec,
+                dq: None,
+                bits_per_param: 0.0,
+                predicted_l1: 0.0,
+            }
+        })
+        .collect();
+    QuantPlan::new(&meta.name, assignments)
 }
 
 impl std::fmt::Display for QuantPlan {
@@ -408,5 +598,166 @@ mod tests {
         assert_eq!(j.get("assignments").unwrap().as_arr().unwrap().len(), 1);
         assert!(p.summary().contains("nf4@64"));
         assert!(p.to_string().contains(p.digest()));
+    }
+
+    #[test]
+    fn shape_digest_ignores_family_and_dq_but_not_blocks() {
+        // Same blocks, different families / DQ → same graph, same shape
+        // digest (the LUT is a runtime input, DQ scales are reconstructed
+        // host-side). Different blocks, sizes, names, or fp-ness → a
+        // different graph.
+        let base = QuantPlan::new("m", vec![asg("a", 64, "nf4@64", None), asg("b", 2048, "nf4@1024", None)]);
+        let same_shape = [
+            QuantPlan::new("m", vec![asg("a", 64, "af4@64", None), asg("b", 2048, "balanced@1024", None)]),
+            QuantPlan::new("m", vec![asg("a", 64, "nf4@64", Some(256)), asg("b", 2048, "af4@1024", None)]),
+            // Assignment order is NOT part of the graph: triples are
+            // hashed sorted by tensor name, so a permuted listing of the
+            // same per-tensor blocks names the same executable.
+            QuantPlan::new("m", vec![asg("b", 2048, "nf4@1024", None), asg("a", 64, "nf4@64", None)]),
+        ];
+        for v in &same_shape {
+            assert_eq!(base.shape_digest(), v.shape_digest(), "{v}");
+            assert_ne!(base.digest(), v.digest(), "content digests still differ: {v}");
+        }
+        let diff_shape = [
+            QuantPlan::new("m", vec![asg("a", 64, "nf4@1024", None), asg("b", 2048, "nf4@64", None)]),
+            QuantPlan::new("m", vec![asg("a", 64, "fp", None), asg("b", 2048, "nf4@1024", None)]),
+            QuantPlan::new("m", vec![asg("a", 128, "nf4@64", None), asg("b", 2048, "nf4@1024", None)]),
+            QuantPlan::new("x", vec![asg("a", 64, "nf4@64", None), asg("b", 2048, "nf4@1024", None)]),
+        ];
+        for v in &diff_shape {
+            assert_ne!(base.shape_digest(), v.shape_digest(), "{v}");
+        }
+        assert_eq!(base.shape_digest().len(), 16);
+        assert_eq!(
+            base.fused_artifact_name(),
+            format!("score_plan_{}_m", base.shape_digest())
+        );
+        // Cross-language golden pin: python/compile/aot.py::plan_shape_digest
+        // over the identical signature ("m", [("a",64,64), ("b",2048,1024)])
+        // produces this value — if either mirror drifts, this fails.
+        assert_eq!(base.shape_digest(), "d8eab88f96622190");
+    }
+
+    #[test]
+    fn validate_content_rejects_empty_and_degenerate_plans() {
+        // The historical hole: an empty plan validated cleanly whenever
+        // the tensor-count comparison was the only guard.
+        let empty = QuantPlan::new("m", vec![]);
+        let e = empty.validate_content().unwrap_err();
+        assert!(e.contains("no tensor assignments"), "{e}");
+        let zero = QuantPlan::new("m", vec![asg("a", 0, "nf4@64", None)]);
+        let e = zero.validate_content().unwrap_err();
+        assert!(e.contains("n_params == 0"), "{e}");
+        let mut bad_b = asg("a", 10, "nf4@64", None);
+        bad_b.spec.block_size = 1;
+        let e = QuantPlan::new("m", vec![bad_b]).validate_content().unwrap_err();
+        assert!(e.contains("B ≥ 2"), "{e}");
+        let e = QuantPlan::new("m", vec![asg("a", 10, "nf4@64", Some(0))])
+            .validate_content()
+            .unwrap_err();
+        assert!(e.contains("dq group 0"), "{e}");
+        // A healthy plan passes.
+        QuantPlan::new("m", vec![asg("a", 10, "nf4@64", Some(16))]).validate_content().unwrap();
+        // …and validate_matrices inherits the empty-plan rejection even
+        // when the meta has no matrices to disagree with.
+        let meta = crate::runtime::ModelMeta {
+            name: "m".into(),
+            n_layer: 0,
+            d_model: 0,
+            n_head: 0,
+            d_ff: 0,
+            seq_len: 0,
+            batch: 0,
+            vocab: 0,
+            param_order: vec![],
+            matrix_order: vec![],
+        };
+        assert!(empty.validate_matrices(&meta).unwrap_err().contains("no tensor assignments"));
+    }
+
+    #[test]
+    fn json_round_trip_preserves_digest_and_content() {
+        let p = QuantPlan::new(
+            "m",
+            vec![
+                asg("w1", 4096, "nf4@64", None),
+                asg("w2", 8192, "af4@1024", Some(256)),
+                asg("w3", 1024, "fp", None),
+            ],
+        );
+        let back = QuantPlan::from_json(&p.to_json()).expect("round trip");
+        assert_eq!(back.digest(), p.digest(), "digest must survive to_json → from_json");
+        assert_eq!(back.shape_digest(), p.shape_digest());
+        assert_eq!(back.model, p.model);
+        assert_eq!(back.assignments(), p.assignments());
+        // A tampered digest field is rejected loudly.
+        let mut j = p.to_json();
+        j.set("digest", Json::Str("0000000000000000".into()));
+        let e = QuantPlan::from_json(&j).unwrap_err();
+        assert!(e.contains("does not match"), "{e}");
+        // Degenerate content is rejected at load time.
+        let empty = QuantPlan::new("m", vec![]);
+        assert!(QuantPlan::from_json(&empty.to_json()).is_err());
+        // Loaded stale plans still fail validate_matrices: shrink the
+        // model so the tensor set no longer matches.
+        let meta = crate::runtime::ModelMeta {
+            name: "m".into(),
+            n_layer: 0,
+            d_model: 0,
+            n_head: 0,
+            d_ff: 0,
+            seq_len: 0,
+            batch: 0,
+            vocab: 0,
+            param_order: vec![("w1".into(), vec![64, 64])],
+            matrix_order: vec![("w1".into(), vec![64, 64])],
+        };
+        let e = back.validate_matrices(&meta).unwrap_err();
+        assert!(e.contains("stale plan"), "{e}");
+    }
+
+    #[test]
+    fn plan_file_round_trip() {
+        let p = QuantPlan::new("m", vec![asg("w1", 256, "balanced@8", None)]);
+        let path = std::env::temp_dir().join("afq_plan_roundtrip.json");
+        let path = path.to_str().unwrap();
+        crate::util::write_file(path, &p.to_json().to_string_pretty()).unwrap();
+        let back = QuantPlan::load(path).unwrap();
+        assert_eq!(back.digest(), p.digest());
+        let _ = std::fs::remove_file(path);
+        assert!(QuantPlan::load("/nonexistent/afq_plan.json").is_err());
+    }
+
+    #[test]
+    fn canonical_mixed_plan_shape() {
+        let meta = crate::runtime::ModelMeta {
+            name: "t".into(),
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq_len: 4,
+            batch: 2,
+            vocab: 64,
+            param_order: vec![],
+            matrix_order: vec![
+                ("a".into(), vec![64, 64]),
+                ("b".into(), vec![64, 64]),
+                ("c".into(), vec![64, 64]),
+            ],
+        };
+        let p = canonical_mixed_plan(&meta, &["nf4", "af4"]);
+        assert_eq!(p.assignments().len(), 3);
+        assert_eq!(p.assignments()[0].label(), "nf4@64");
+        assert_eq!(p.assignments()[1].label(), "af4@1024");
+        assert_eq!(p.assignments()[2].label(), "nf4@64");
+        assert!(p.uniform_spec().is_none(), "canonical plan must be heterogeneous");
+        assert!(p.n_distinct_configs() >= 2);
+        // Family choice does not move the shape digest (same graph).
+        let q = canonical_mixed_plan(&meta, &["balanced", "nf4"]);
+        assert_eq!(p.shape_digest(), q.shape_digest());
+        assert_ne!(p.digest(), q.digest());
+        p.validate_matrices(&meta).unwrap();
     }
 }

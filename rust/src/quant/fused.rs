@@ -16,6 +16,15 @@
 //! reconstructed scales in `q.scales` are read as-is, so DQ round-trips
 //! through the same code path).
 //!
+//! The kernel is driven by a **per-call** `(code, B)` — the code table is
+//! an argument and the block size lives on the `MatrixQuant` — never by
+//! any service-wide configuration. That is what makes heterogeneous
+//! [`crate::plan::QuantPlan`]s servable in the nibble domain: the serving
+//! layer calls this same kernel once per tensor with that tensor's own
+//! LUT and block size (see [`MatrixQuant::from_flat`] for the flat L2
+//! view and `rust/tests/plan_parity.rs` for the battery pinning the
+//! per-tensor path bitwise to this kernel).
+//!
 //! ## Determinism contract
 //!
 //! [`qgemm_par`] shards **output columns** over

@@ -130,6 +130,32 @@ impl MatrixQuant {
         }
     }
 
+    /// View a flat quantized buffer (the L2 artifact layout: W^T row-major,
+    /// absmax blocks running along the flat axis) as a `rows × cols`
+    /// matrix. This is the serve-time bridge for per-tensor plans: the
+    /// bytes a `score_q<B>`/`score_plan_*` artifact consumes, wrapped so
+    /// the host fused [`Self::qgemm`] can multiply through them with the
+    /// tensor's **own** `(code, B)` — no service-wide code required.
+    /// Panics if the buffer does not hold exactly `rows * cols` elements.
+    pub fn from_flat(rows: usize, cols: usize, q: Quantized, code_name: &str) -> Self {
+        assert_eq!(
+            rows * cols,
+            q.len,
+            "from_flat: {rows}x{cols} matrix needs {} elements, buffer has {}",
+            rows * cols,
+            q.len
+        );
+        MatrixQuant {
+            rows,
+            cols,
+            axis: QuantAxis::Row,
+            q,
+            dq: None,
+            code_name: code_name.to_string(),
+            per_line: None,
+        }
+    }
+
     /// Enable double quantization of scales with the given group size.
     pub fn with_double_quant(mut self, group: usize) -> Self {
         let dq = DqScales::quantize(&self.q.scales, group);
@@ -303,6 +329,32 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn from_flat_views_l2_layout() {
+        // A flat quantization (blocks along W^T row-major, possibly
+        // spanning stored lines) viewed through from_flat must qgemm to
+        // the same result as dequantize-then-matmul — the per-tensor
+        // serve path for heterogeneous plans.
+        let mut rng = Rng::new(7);
+        let code = nf4();
+        let (rows, cols, bs) = (12usize, 5usize, 8usize); // blocks span lines
+        let flat: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 0.1).collect();
+        let q = quantize(&flat, bs, &code);
+        let mq = MatrixQuant::from_flat(rows, cols, q, &code.name);
+        let x = Matrix::randn(3, rows, 1.0, &mut rng);
+        let got = mq.qgemm(&x, &code);
+        let want = x.matmul(&mq.dequantize(&code));
+        assert!(got.max_abs_diff(&want) <= 1e-4 * (1.0f32).max(want.data.iter().fold(0.0, |a, &v| a.max(v.abs()))));
+    }
+
+    #[test]
+    #[should_panic(expected = "from_flat")]
+    fn from_flat_rejects_size_mismatch() {
+        let code = nf4();
+        let q = quantize(&vec![0.5f32; 60], 8, &code);
+        let _ = MatrixQuant::from_flat(8, 8, q, &code.name);
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct ArtifactSpec {
     pub kind: String,
     pub model: Option<String>,
     pub block_size: Option<usize>,
+    /// For `kind == "score_plan"` artifacts: the plan **shape digest**
+    /// (see `QuantPlan::shape_digest`) naming the per-tensor block-size
+    /// signature this graph was compiled for.
+    pub shape_digest: Option<String>,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
 }
@@ -100,11 +104,16 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn load(dir: &str) -> Result<Manifest, String> {
+        // Resolve through the shared cwd-quirk owner (repo root vs the
+        // rust/ package root cargo gives test binaries) so "artifacts"
+        // works from either; the resolved dir is kept so hlo_path stays
+        // consistent with where the manifest was found.
+        let dir = crate::util::resolve_artifacts_dir(dir).unwrap_or_else(|| dir.to_string());
         let path = format!("{dir}/manifest.json");
         let src = std::fs::read_to_string(&path)
             .map_err(|e| format!("cannot read {path}: {e} — run `make artifacts` first"))?;
         let j = Json::parse(&src).map_err(|e| format!("{path}: {e}"))?;
-        Self::from_json(&j, dir)
+        Self::from_json(&j, &dir)
     }
 
     pub fn from_json(j: &Json, dir: &str) -> Result<Manifest, String> {
@@ -118,6 +127,7 @@ impl Manifest {
                 kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("").into(),
                 model: a.get("model").and_then(|v| v.as_str()).map(String::from),
                 block_size: a.get("block_size").and_then(|v| v.as_usize()),
+                shape_digest: a.get("shape_digest").and_then(|v| v.as_str()).map(String::from),
                 inputs: a
                     .get("inputs")
                     .and_then(|v| v.as_arr())
@@ -212,7 +222,11 @@ mod tests {
                     {"name": "embed", "dtype": "f32", "shape": [256, 128]}],
          "outputs": [{"name": "out0", "dtype": "f32", "shape": [8, 128]}]},
         {"name": "kernel_quantize_b64", "file": "k.hlo.txt", "kind": "kernel",
-         "block_size": 64, "inputs": [], "outputs": []}
+         "block_size": 64, "inputs": [], "outputs": []},
+        {"name": "score_plan_00ff00ff00ff00ff_tiny", "file": "p.hlo.txt",
+         "kind": "score_plan", "model": "tiny",
+         "shape_digest": "00ff00ff00ff00ff",
+         "inputs": [], "outputs": []}
       ],
       "configs": {
         "tiny": {"n_layer": 2, "d_model": 128, "n_head": 4, "d_ff": 512,
@@ -235,6 +249,11 @@ mod tests {
         assert_eq!(a.model.as_deref(), Some("tiny"));
         let k = m.artifact("kernel_quantize_b64").unwrap();
         assert_eq!(k.block_size, Some(64));
+        assert_eq!(k.shape_digest, None);
+        let p = m.artifact("score_plan_00ff00ff00ff00ff_tiny").unwrap();
+        assert_eq!(p.kind, "score_plan");
+        assert_eq!(p.shape_digest.as_deref(), Some("00ff00ff00ff00ff"));
+        assert_eq!(p.model.as_deref(), Some("tiny"));
         let cfg = m.config("tiny").unwrap();
         assert_eq!(cfg.d_model, 128);
         assert_eq!(cfg.n_params(), 256 * 128 + 128 * 128);

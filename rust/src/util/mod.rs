@@ -51,12 +51,33 @@ pub fn artifacts_required() -> bool {
     std::env::var("AFQ_REQUIRE_ARTIFACTS").map(|v| v == "1").unwrap_or(false)
 }
 
-/// Single artifact-gate for tests: true when the AOT artifacts exist at
-/// `dir`. When absent, panics under [`artifacts_required`] (CI mode),
-/// otherwise logs the skip and returns false — so every artifact-gated
-/// test reduces to `if !artifacts_available("artifacts") { return; }`.
-pub fn artifacts_available(dir: &str) -> bool {
+/// Resolve an artifacts directory to wherever its `manifest.json`
+/// actually is: `dir` as given, or — when `dir` is relative and empty —
+/// one level up (`../dir`). The single owner of the cwd quirk that
+/// `make artifacts` writes to the repo root while cargo runs test/bench
+/// binaries with cwd = the package root (`rust/`), so every caller can
+/// keep saying `"artifacts"` and work from either directory.
+/// [`crate::runtime::Manifest::load`] resolves through this too.
+pub fn resolve_artifacts_dir(dir: &str) -> Option<String> {
     if std::path::Path::new(dir).join("manifest.json").exists() {
+        return Some(dir.to_string());
+    }
+    if std::path::Path::new(dir).is_relative() {
+        let up = format!("../{dir}");
+        if std::path::Path::new(&up).join("manifest.json").exists() {
+            return Some(up);
+        }
+    }
+    None
+}
+
+/// Single artifact-gate for tests: true when the AOT artifacts exist at
+/// `dir` (resolved via [`resolve_artifacts_dir`]). When absent, panics
+/// under [`artifacts_required`] (CI mode), otherwise logs the skip and
+/// returns false — so every artifact-gated test reduces to
+/// `if !artifacts_available("artifacts") { return; }`.
+pub fn artifacts_available(dir: &str) -> bool {
+    if resolve_artifacts_dir(dir).is_some() {
         return true;
     }
     assert!(

@@ -1,0 +1,482 @@
+//! Parity battery for **fused heterogeneous serving**: per-tensor plans
+//! (mixing code families and block sizes, ± double-quantized scales) must
+//! serve in the nibble domain exactly as the per-tensor fused `qgemm`
+//! reference computes, and track dequantize-then-matmul within the
+//! documented f32 accumulation tolerance.
+//!
+//! Three rings, innermost first:
+//!
+//! 1. **Marshalling parity (artifact-free, property-swept):** the bytes
+//!    [`afq::model::planned_fused_weight_args`] emits for a plan — per
+//!    tensor `(code LUT, packed idx, scales)` — reconstruct to outputs
+//!    **bitwise equal** to quantizing each tensor directly with its own
+//!    `(code, B)` and multiplying through the fused kernel; and within
+//!    `1e-4·max|y|` of dequantize-then-matmul.
+//! 2. **Routing parity (artifact-free, mock backend):** a fused-plan
+//!    [`ScoreBackend`] served through the real [`Batcher`] returns
+//!    responses bitwise equal to scoring the same rows directly on the
+//!    backend (batch assembly/padding/fan-out cannot perturb bits), and a
+//!    dequant-reference backend agrees within tolerance.
+//! 3. **Executable parity (artifact-gated):** the canonical mixed plan
+//!    serves through its baked `score_plan_<shape_digest>` executable via
+//!    the router, its input marshalling matches the manifest spec, and
+//!    its scores match the same plan's reconstruction pushed through the
+//!    fp executable.
+//!
+//! Runs green without `make artifacts` (rings 1–2 always execute);
+//! `AFQ_REQUIRE_ARTIFACTS=1` turns ring-3 skips into failures.
+
+use afq::codes::registry;
+use afq::codes::Code;
+use afq::coordinator::{Batcher, BatcherConfig, Counters, ScoreBackend};
+use afq::model::{planned_fused_weight_args, planned_weight_args, ParamSet};
+use afq::plan::{canonical_mixed_plan, Assignment, QuantPlan};
+use afq::quant::{double::DqScales, quantize, MatrixQuant, QuantSpec, Quantized};
+use afq::runtime::{ModelMeta, TensorData};
+use afq::tensor::Matrix;
+use afq::util::prop;
+use std::sync::Arc;
+
+/// The acceptance grid: code families × block sizes the battery mixes.
+const FAMILIES: [&str; 3] = ["nf4", "af4", "balanced"];
+const BLOCKS: [usize; 3] = [8, 64, 1024];
+
+fn toy_meta(shapes: &[(usize, usize)]) -> ModelMeta {
+    let mut param_order = vec![("v0".to_string(), vec![4usize])];
+    let mut matrix_order = Vec::new();
+    for (i, &(r, c)) in shapes.iter().enumerate() {
+        param_order.push((format!("m{i}"), vec![r, c]));
+        matrix_order.push((format!("m{i}"), vec![r, c]));
+    }
+    ModelMeta {
+        name: "toy".into(),
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        d_ff: 16,
+        seq_len: 16,
+        batch: 4,
+        vocab: 64,
+        param_order,
+        matrix_order,
+    }
+}
+
+fn asg(tensor: &str, n: usize, family: &str, block: usize, dq: Option<usize>) -> Assignment {
+    Assignment {
+        tensor: tensor.into(),
+        n_params: n,
+        spec: QuantSpec { family: family.into(), block_size: block },
+        dq,
+        bits_per_param: 0.0,
+        predicted_l1: 0.0,
+    }
+}
+
+/// Pull one tensor's `(code LUT, idx, scales)` triple (or fp buffer) back
+/// out of the marshalled args — exactly the bytes a `score_plan` artifact
+/// would consume.
+fn uploaded_triple<'a>(
+    args: &'a [(String, Vec<usize>, TensorData)],
+    prefix: &str,
+    name: &str,
+) -> Option<(&'a [f32], &'a [i32], &'a [f32])> {
+    let find = |suffix: &str| args.iter().find(|(k, _, _)| k == &format!("{prefix}/{name}{suffix}"));
+    let code = find(".code")?;
+    let idx = find(".idx")?;
+    let scales = find(".scales")?;
+    Some((code.2.as_f32().unwrap(), idx.2.as_i32().unwrap(), scales.2.as_f32().unwrap()))
+}
+
+/// Per-tensor fused reference: quantize `data` with the assignment's own
+/// `(code, B)` (+ DQ scale round-trip) and return the quantized view —
+/// the ground truth the served bytes must reproduce bit-for-bit.
+fn reference_quant(data: &[f32], a: &Assignment) -> (Quantized, Arc<Code>) {
+    let code = registry::for_block_size(&a.spec.family, a.spec.block_size).expect("known family");
+    let mut q = quantize(data, a.spec.block_size, &code);
+    if let Some(group) = a.dq {
+        q.scales = DqScales::quantize(&q.scales, group).dequantize_all();
+    }
+    (q, code)
+}
+
+/// Ring 1: marshalled bytes → fused qgemm is bitwise the per-tensor
+/// reference, and tracks dequant+matmul within the documented tolerance —
+/// property-swept over heterogeneous plans mixing all of FAMILIES ×
+/// BLOCKS ± DQ, partial final blocks included.
+#[test]
+fn prop_fused_plan_args_bitwise_match_per_tensor_qgemm() {
+    prop::check(24, |g| {
+        let n_mats = g.usize_in(2, 4);
+        let shapes: Vec<(usize, usize)> =
+            (0..n_mats).map(|_| (g.usize_in(3, 12), g.usize_in(3, 12))).collect();
+        let meta = toy_meta(&shapes);
+        let params = ParamSet::init(&meta, g.usize_in(0, 1 << 20) as u64);
+        // First two tensors pin the acceptance shape (≥2 codes AND ≥2
+        // block sizes); the rest draw freely from the grid.
+        let mut assignments = Vec::new();
+        for (i, &(r, c)) in shapes.iter().enumerate() {
+            let (family, block) = match i {
+                0 => ("nf4", 64),
+                1 => (*g.pick(&["af4", "balanced"]), *g.pick(&[8usize, 1024])),
+                _ => (*g.pick(&FAMILIES), *g.pick(&BLOCKS)),
+            };
+            let dq = if g.bool(0.3) { Some(*g.pick(&[4usize, 16])) } else { None };
+            assignments.push(asg(&format!("m{i}"), r * c, family, block, dq));
+        }
+        let plan = QuantPlan::new("toy", assignments);
+        assert!(plan.uniform_spec().is_none(), "battery plans must be heterogeneous");
+        let args = planned_fused_weight_args(&meta, &params, &plan, "w")
+            .map_err(|e| format!("marshalling failed: {e}"))?;
+
+        let mut rng = afq::util::rng::Rng::new(0xBEEF);
+        for (i, &(rows, cols)) in shapes.iter().enumerate() {
+            let name = format!("m{i}");
+            let a = plan.get(&name).unwrap();
+            let data = &params.get(&name).unwrap().2;
+            let (lut, idx, scales) = uploaded_triple(&args, "w", &name)
+                .ok_or_else(|| format!("missing triple for {name}"))?;
+            let (ref_q, ref_code) = reference_quant(data, a);
+
+            // The uploaded bytes ARE the per-tensor quantization.
+            let idx_u8: Vec<u8> = idx.iter().map(|&v| v as u8).collect();
+            let ref_idx: Vec<u8> = (0..ref_q.len).map(|j| ref_q.index(j)).collect();
+            if idx_u8 != ref_idx {
+                return Err(format!("{name}: uploaded indices diverge from reference"));
+            }
+            if scales != &ref_q.scales[..] {
+                return Err(format!("{name}: uploaded scales diverge from reference"));
+            }
+            if lut != &ref_code.table_f32()[..] {
+                return Err(format!("{name}: uploaded LUT diverges from {}", ref_code.name));
+            }
+
+            // Fused qgemm through the uploaded bytes (a Code rebuilt from
+            // the LUT, exactly what the artifact consumes) is BITWISE the
+            // per-tensor fused reference…
+            let uploaded_code =
+                Code::new("uploaded", lut.iter().map(|&v| v as f64).collect());
+            let served_q =
+                Quantized::from_unpacked(&idx_u8, a.spec.block_size, scales.to_vec());
+            let served = MatrixQuant::from_flat(rows, cols, served_q, "uploaded");
+            let reference =
+                MatrixQuant::from_flat(rows, cols, ref_q, &ref_code.name);
+            let x = Matrix::randn(2, rows, 1.0, &mut rng);
+            let y_served = served.qgemm(&x, &uploaded_code);
+            let y_ref = reference.qgemm(&x, &ref_code);
+            if y_served.data != y_ref.data {
+                return Err(format!(
+                    "{name} ({}): served fused output is not bitwise the per-tensor qgemm reference",
+                    a.label()
+                ));
+            }
+            // …and within the documented tolerance of dequant+matmul.
+            let y_dq = x.matmul(&served.dequantize(&uploaded_code));
+            let denom = y_dq.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0);
+            let diff = y_served.max_abs_diff(&y_dq);
+            if diff > 1e-4 * denom {
+                return Err(format!(
+                    "{name} ({}): fused vs dequant+matmul diff {diff} > 1e-4·{denom}",
+                    a.label()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Ring 2: the fused plan path behind the real Batcher, artifact-free.
+
+/// One planned tensor as the mock backend holds it.
+enum PlannedTensor {
+    Quant(MatrixQuant, Arc<Code>),
+    Fp(Matrix),
+}
+
+/// A [`ScoreBackend`] serving a heterogeneous plan **on the host**: every
+/// score folds the request ids through each tensor's fused qgemm (or
+/// dequant+matmul in `dequant` mode) with that tensor's own `(code, B)`.
+/// Rows are independent, so batch padding cannot leak across requests.
+struct PlanBackend {
+    batch: usize,
+    seq: usize,
+    counters: Counters,
+    tensors: Vec<PlannedTensor>,
+    dequant: bool,
+}
+
+impl PlanBackend {
+    fn build(meta: &ModelMeta, params: &ParamSet, plan: &QuantPlan, dequant: bool) -> PlanBackend {
+        let tensors = meta
+            .matrix_order
+            .iter()
+            .map(|(name, shape)| {
+                let a = plan.get(name).expect("plan covers tensor");
+                let data = &params.get(name).unwrap().2;
+                if a.spec.is_fp() {
+                    PlannedTensor::Fp(Matrix::from_vec(shape[0], shape[1], data.clone()))
+                } else {
+                    let (q, code) = reference_quant(data, a);
+                    PlannedTensor::Quant(
+                        MatrixQuant::from_flat(shape[0], shape[1], q, &code.name),
+                        code,
+                    )
+                }
+            })
+            .collect();
+        PlanBackend { batch: meta.batch, seq: meta.seq_len, counters: Counters::default(), tensors, dequant }
+    }
+
+    /// Deterministic per-row pseudo-score: probe each tensor with a row
+    /// built from the ids, sum the per-tensor outputs cyclically. Both
+    /// modes compute the same formula; only the per-tensor matmul differs.
+    fn row_score(&self, ids: &[i32]) -> (Vec<f32>, Vec<i32>) {
+        let mut nll = vec![0.0f32; self.seq];
+        for t in &self.tensors {
+            let (rows, y) = match t {
+                PlannedTensor::Quant(w, code) => {
+                    let x = Self::probe(ids, w.rows);
+                    let y = if self.dequant {
+                        x.matmul(&w.dequantize(code))
+                    } else {
+                        w.qgemm(&x, code)
+                    };
+                    (w.rows, y)
+                }
+                PlannedTensor::Fp(m) => {
+                    let x = Self::probe(ids, m.rows);
+                    (m.rows, x.matmul(m))
+                }
+            };
+            debug_assert!(rows >= 1);
+            for (j, v) in nll.iter_mut().enumerate() {
+                *v += y.data[j % y.cols];
+            }
+        }
+        let correct = nll.iter().map(|&v| (v > 0.0) as i32).collect();
+        (nll, correct)
+    }
+
+    fn probe(ids: &[i32], len: usize) -> Matrix {
+        let data: Vec<f32> =
+            (0..len).map(|j| (ids[j % ids.len()] as f32 - 128.0) / 128.0).collect();
+        Matrix::from_vec(1, len, data)
+    }
+}
+
+impl ScoreBackend for PlanBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+    fn score(&self, ids: Vec<i32>, _targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
+        let mut nll = Vec::with_capacity(self.batch * self.seq);
+        let mut correct = Vec::with_capacity(self.batch * self.seq);
+        for r in 0..self.batch {
+            let (n, c) = self.row_score(&ids[r * self.seq..(r + 1) * self.seq]);
+            nll.extend(n);
+            correct.extend(c);
+        }
+        Ok((nll, correct))
+    }
+}
+
+fn battery_plan_and_params() -> (ModelMeta, ParamSet, QuantPlan) {
+    let shapes = [(8usize, 6usize), (12, 4), (5, 9), (16, 16)];
+    let meta = toy_meta(&shapes);
+    let params = ParamSet::init(&meta, 71);
+    // Mixes 3 families × 3 block sizes, one DQ, one fp — the full grid.
+    let plan = QuantPlan::new(
+        "toy",
+        vec![
+            asg("m0", 48, "nf4", 64, None),
+            asg("m1", 48, "af4", 8, Some(4)),
+            asg("m2", 45, "balanced", 1024, None),
+            {
+                let mut a = asg("m3", 256, "fp", 2, None);
+                a.spec = QuantSpec::fp();
+                a
+            },
+        ],
+    );
+    plan.validate_matrices(&meta).expect("battery plan is coherent");
+    (meta, params, plan)
+}
+
+/// Ring 2: routed through the real Batcher under concurrent clients, the
+/// fused-plan backend's responses are bitwise what the backend computes
+/// directly for those rows, and the dequant-reference backend agrees
+/// within the documented tolerance.
+#[test]
+fn fused_plan_backend_through_batcher_is_bitwise_stable() {
+    let (meta, params, plan) = battery_plan_and_params();
+    let fused = Arc::new(PlanBackend::build(&meta, &params, &plan, false));
+    let dequant = PlanBackend::build(&meta, &params, &plan, true);
+    let (handle, mut batcher) =
+        Batcher::spawn(Arc::clone(&fused) as Arc<dyn ScoreBackend>, BatcherConfig::default());
+    let seq = meta.seq_len;
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..6)
+            .map(|c| {
+                let handle = handle.clone();
+                let fused = Arc::clone(&fused);
+                let dequant = &dequant;
+                s.spawn(move || {
+                    for q in 0..4 {
+                        let ids: Vec<i32> =
+                            (0..seq).map(|j| ((c * 41 + q * 7 + j) % 256) as i32).collect();
+                        let resp = handle.score(ids.clone(), ids.clone()).expect("scored");
+                        // Bitwise: routing/batch padding must not perturb.
+                        let (want_nll, want_cor) = fused.row_score(&ids);
+                        assert_eq!(resp.nll, want_nll, "client {c} req {q}: routed ≠ direct");
+                        assert_eq!(resp.correct, want_cor);
+                        // Tolerance vs the dequant+matmul reference.
+                        let (ref_nll, _) = dequant.row_score(&ids);
+                        let denom =
+                            ref_nll.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0);
+                        for (a, b) in resp.nll.iter().zip(&ref_nll) {
+                            assert!(
+                                (a - b).abs() <= 1e-4 * denom,
+                                "fused vs dequant reference: {a} vs {b} (denom {denom})"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+    batcher.stop();
+    let c = fused.counters.snapshot();
+    assert_eq!(c.requests, 24, "exactly the submitted requests");
+    assert_eq!(c.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Ring 3: the baked score_plan executable (needs `make artifacts`).
+
+/// The canonical mixed plan for the bundled model, as the battery serves it.
+fn canonical_tiny_plan(meta: &ModelMeta) -> QuantPlan {
+    canonical_mixed_plan(meta, &["nf4", "af4"])
+}
+
+/// Skip (or fail under `AFQ_REQUIRE_ARTIFACTS=1`) when the fused plan
+/// executable is not available.
+fn plan_artifact_available(manifest: &afq::runtime::Manifest, name: &str) -> bool {
+    if manifest.artifacts.contains_key(name) {
+        return true;
+    }
+    assert!(
+        !afq::util::artifacts_required(),
+        "AFQ_REQUIRE_ARTIFACTS=1 but {name} is not in the manifest — \
+         re-run `make artifacts` (aot.py now bakes canonical score_plan artifacts)"
+    );
+    eprintln!("skipping: no {name} in the manifest (stale artifacts?)");
+    false
+}
+
+/// Ring 3a: the marshaller's output order/dtypes/shapes exactly match the
+/// baked score_plan artifact's input spec.
+#[test]
+fn canonical_plan_args_match_artifact_spec() {
+    if !afq::util::artifacts_available("artifacts") {
+        return;
+    }
+    let manifest = afq::runtime::Manifest::load("artifacts").expect("manifest parses");
+    let meta = manifest.config("tiny").unwrap().clone();
+    let plan = canonical_tiny_plan(&meta);
+    let artifact = plan.fused_artifact_name();
+    if !plan_artifact_available(&manifest, &artifact) {
+        return;
+    }
+    let spec = manifest.artifact(&artifact).unwrap();
+    assert_eq!(spec.kind, "score_plan");
+    assert_eq!(spec.shape_digest.as_deref(), Some(plan.shape_digest().as_str()));
+    let params = ParamSet::init(&meta, 1);
+    let args = planned_fused_weight_args(&meta, &params, &plan, "chk").unwrap();
+    assert_eq!(args.len(), spec.inputs.len() - 2, "{artifact}");
+    for (arg, ispec) in args.iter().zip(spec.inputs.iter().skip(2)) {
+        assert!(
+            arg.0.ends_with(&ispec.name),
+            "order mismatch: {} vs {}",
+            arg.0,
+            ispec.name
+        );
+        arg.2.check(ispec).unwrap_or_else(|e| panic!("{artifact}: {e}"));
+    }
+}
+
+/// Ring 3b (the acceptance scenario): a heterogeneous plan mixing 2 codes
+/// and 2 block sizes serves through the nibble-domain executable via the
+/// router — observably, by artifact name — and its scores match the same
+/// plan's reconstruction pushed through the fp executable.
+#[test]
+fn canonical_plan_serves_fused_and_matches_reconstruction() {
+    use afq::coordinator::{Router, ScoreRequest};
+    use afq::model::{generate_corpus, BatchSampler};
+    if !afq::util::artifacts_available("artifacts") {
+        return;
+    }
+    let r = Router::new("artifacts").expect("router");
+    let meta = r.manifest().config("tiny").unwrap().clone();
+    let plan = canonical_tiny_plan(&meta);
+    let fused_artifact = plan.fused_artifact_name();
+    if !plan_artifact_available(r.manifest(), &fused_artifact) {
+        return;
+    }
+    assert!(plan.n_distinct_configs() >= 2, "≥2 codes and ≥2 block sizes");
+    let params = r.register_model("tiny", ParamSet::init(&meta, 23)).unwrap();
+    let key = r.register_plan(plan.clone()).unwrap();
+
+    let data = generate_corpus("english", 60_000, 13).unwrap();
+    let sampler = BatchSampler::new(data.clone(), meta.seq_len, meta.batch, 0);
+    let batches = sampler.eval_batches(2);
+    let nll_fused = r.mean_nll(&key, &batches).unwrap();
+    let snap = r.snapshot();
+    assert_eq!(
+        snap.get(&key).unwrap().artifact,
+        fused_artifact,
+        "the plan must serve in the nibble domain, not the fp fallback"
+    );
+
+    // Reference: the SAME plan's quantize→dequantize reconstruction pushed
+    // straight through the fp executable — mathematically the identical
+    // function (the score_plan graph dequantizes the identical bytes
+    // in-graph), so the scores must agree to f32 graph-compilation noise.
+    let recon = planned_weight_args(&meta, &params, &plan, "ref").unwrap();
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (ids, tgt) in &batches {
+        let mut args: Vec<afq::coordinator::OwnedArg> = Vec::with_capacity(2 + recon.len());
+        args.push(afq::coordinator::OwnedArg::Data(TensorData::I32(ids.clone())));
+        args.push(afq::coordinator::OwnedArg::Data(TensorData::I32(tgt.clone())));
+        for (_, _, t) in &recon {
+            args.push(afq::coordinator::OwnedArg::Data(t.clone()));
+        }
+        let out = r.engine().execute("score_fp_tiny", args).unwrap();
+        let nll = out[0].as_f32().unwrap();
+        total += nll.iter().map(|&x| x as f64).sum::<f64>();
+        n += nll.len();
+    }
+    let nll_recon = total / n as f64;
+    assert!(
+        (nll_fused - nll_recon).abs() < 1e-3,
+        "fused {nll_fused} vs reconstruction {nll_recon}: the nibble-domain path \
+         must compute the plan's exact quantization"
+    );
+
+    // A routed single request also lands on the fused service.
+    let ids: Vec<i32> = data[..meta.seq_len].iter().map(|&b| b as i32).collect();
+    let tgt: Vec<i32> = data[1..meta.seq_len + 1].iter().map(|&b| b as i32).collect();
+    let resp = r.score(ScoreRequest::new(&key, ids, tgt)).unwrap();
+    assert_eq!(resp.nll.len(), meta.seq_len);
+    r.shutdown();
+}
