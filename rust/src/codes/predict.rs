@@ -38,9 +38,26 @@ fn bump(key: &(String, usize), hit: bool) {
     let entry = guard.get_or_insert_with(HashMap::new).entry(key.clone()).or_insert((0, 0));
     if hit {
         entry.0 += 1;
+        global_tallies().hits.inc(1);
     } else {
         entry.1 += 1;
+        global_tallies().misses.inc(1);
     }
+}
+
+struct MemoTallies {
+    hits: crate::obs::registry::Counter,
+    misses: crate::obs::registry::Counter,
+}
+
+/// Registry mirror of the aggregate memo tallies (resolved once; bumps
+/// are relaxed atomic adds). Per-key counts stay in `STATS` for tests.
+fn global_tallies() -> &'static MemoTallies {
+    static T: OnceLock<MemoTallies> = OnceLock::new();
+    T.get_or_init(|| MemoTallies {
+        hits: crate::obs::registry::counter("afq_codes_predict_memo_hits_total"),
+        misses: crate::obs::registry::counter("afq_codes_predict_memo_misses_total"),
+    })
 }
 
 /// Predicted (E|err|, E err²) of quantizing `F_X(·; B)` with the code the
@@ -133,6 +150,11 @@ mod tests {
         );
         let (h, m) = cache_counts();
         assert!(h >= 5 && m >= 1, "global tallies fold the per-key counts");
+        let reg_hits =
+            crate::obs::registry::counter("afq_codes_predict_memo_hits_total").get();
+        let reg_misses =
+            crate::obs::registry::counter("afq_codes_predict_memo_misses_total").get();
+        assert!(reg_hits >= 5 && reg_misses >= 1, "registry mirrors the tallies");
         // Concurrent cold queries on one fresh key construct at most once.
         std::thread::scope(|s| {
             let joins: Vec<_> = (0..6)

@@ -61,9 +61,13 @@ pub fn build(spec: &str) -> Option<Arc<Code>> {
     };
     slot.get_or_init(|| {
         let code = construct(spec);
-        #[cfg(test)]
-        {
-            if code.is_some() {
+        if code.is_some() {
+            // Registry tally of actual constructions (never cache hits):
+            // quadrature-heavy builds showing up here more than once per
+            // spec per process would mean the memo broke.
+            constructions_total().inc(1);
+            #[cfg(test)]
+            {
                 let mut guard = BUILT.lock().unwrap();
                 *guard
                     .get_or_insert_with(HashMap::new)
@@ -74,6 +78,13 @@ pub fn build(spec: &str) -> Option<Arc<Code>> {
         code.map(Arc::new)
     })
     .clone()
+}
+
+/// Process-wide count of code constructions, mirrored into the metrics
+/// registry as `afq_codes_registry_constructions_total`.
+fn constructions_total() -> &'static crate::obs::registry::Counter {
+    static C: OnceLock<crate::obs::registry::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry::counter("afq_codes_registry_constructions_total"))
 }
 
 /// How many times `spec` has actually been constructed (not cache hits).
@@ -239,6 +250,9 @@ mod tests {
         for c in &codes[1..] {
             assert!(Arc::ptr_eq(&codes[0], c), "all racers share one allocation");
         }
+        let total =
+            crate::obs::registry::counter("afq_codes_registry_constructions_total").get();
+        assert!(total >= 1, "registry mirrors construction tallies: {total}");
     }
 
     #[test]

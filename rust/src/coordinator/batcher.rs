@@ -8,13 +8,23 @@
 //! the router-wide queue (a counter shared by every service's handle) is at
 //! the global quota.
 //!
+//! Request-lifecycle tracing: every admitted request carries a span ID and
+//! monotonic stage timestamps (admitted → dequeued → dispatched → scored);
+//! the batcher folds the deltas into the backend's
+//! [`ServiceMetrics`] stage histograms and returns them per request as
+//! [`ScoreResponse::trace`]. The three stage durations partition the
+//! end-to-end time exactly (see [`crate::obs::trace`]); stage stamping is
+//! gated by [`crate::obs::trace::enabled`].
+//!
 //! Shutdown contract: after [`Batcher::stop`] no new request is admitted,
 //! the in-flight batch finishes, and everything already queued is **drained
 //! through the backend** (graceful stop) or failed with an explicit
 //! "shutting down" error ([`Batcher::abort`]) — queued requests are never
-//! silently dropped.
+//! silently dropped, and abort-failed requests are tallied in
+//! `Counters::aborted` (never lost from the counters either).
 
-use crate::coordinator::metrics::Counters;
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::obs::trace::{self, RequestTrace};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -28,18 +38,24 @@ pub trait ScoreBackend: Send + Sync {
     fn batch(&self) -> usize;
     /// Tokens per row (the fixed sequence dimension).
     fn seq(&self) -> usize;
-    /// Per-service counters the batcher tallies requests/padding/errors on.
-    fn counters(&self) -> &Counters;
+    /// Per-service metrics (counters + stage histograms) the batcher
+    /// tallies requests/padding/errors/aborts and stage latencies on.
+    fn metrics(&self) -> &ServiceMetrics;
     /// Execute one assembled [batch, seq] batch.
     fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String>;
 }
 
 /// One queued single-sequence request (internal to the batcher).
 struct Pending {
+    span: u64,
     ids: Vec<i32>,
     targets: Vec<i32>,
     reply: Sender<Result<ScoreResponse, String>>,
-    enqueued: Instant,
+    /// Stamped when admission succeeds (the send into the queue).
+    admitted: Instant,
+    /// Stamped when the batch loop pops the request into a forming batch;
+    /// initialized to `admitted` so an unpopped request is well-formed.
+    dequeued: Instant,
 }
 
 /// Per-sequence result.
@@ -48,6 +64,9 @@ pub struct ScoreResponse {
     pub nll: Vec<f32>,
     pub correct: Vec<i32>,
     pub queue_delay: Duration,
+    /// Span ID + per-stage durations for this request (zeroed durations
+    /// when tracing is disabled; the span ID is always real).
+    pub trace: RequestTrace,
 }
 
 /// Batcher policy + quotas. `global_queued`/`max_global_queue` implement the
@@ -96,8 +115,21 @@ pub struct BatcherHandle {
 impl BatcherHandle {
     /// Submit one sequence for scoring; blocks until the result arrives.
     /// Fails fast (without queueing) on bad shape, shutdown, or when a
-    /// queue quota — per-service or router-wide — is exhausted.
+    /// queue quota — per-service or router-wide — is exhausted. Allocates
+    /// a fresh span ID; callers that already own one use
+    /// [`score_traced`](Self::score_traced).
     pub fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<ScoreResponse, String> {
+        self.score_traced(trace::next_span_id(), ids, targets)
+    }
+
+    /// As [`score`](Self::score) with a caller-provided span ID, so a
+    /// request traced across layers keeps one identity end to end.
+    pub fn score_traced(
+        &self,
+        span: u64,
+        ids: Vec<i32>,
+        targets: Vec<i32>,
+    ) -> Result<ScoreResponse, String> {
         if ids.len() != self.seq || targets.len() != self.seq {
             return Err(format!(
                 "request must be exactly seq={} tokens (got ids={}, targets={})",
@@ -111,7 +143,7 @@ impl BatcherHandle {
         // that passes the flag check below is guaranteed to be received by
         // the drain, never dropped with the channel.
         self.submitting.fetch_add(1, Ordering::SeqCst);
-        let admitted = self.admit(ids, targets);
+        let admitted = self.admit(span, ids, targets);
         self.submitting.fetch_sub(1, Ordering::SeqCst);
         admitted?.recv().map_err(|_| "batcher dropped request".to_string())?
     }
@@ -121,6 +153,7 @@ impl BatcherHandle {
     /// cannot overshoot `max_queue`/`max_global_queue`.
     fn admit(
         &self,
+        span: u64,
         ids: Vec<i32>,
         targets: Vec<i32>,
     ) -> Result<std::sync::mpsc::Receiver<Result<ScoreResponse, String>>, String> {
@@ -137,9 +170,10 @@ impl BatcherHandle {
             return Err("backpressure: router queue full".into());
         }
         let (rtx, rrx) = channel();
+        let now = Instant::now();
         if self
             .tx
-            .send(Pending { ids, targets, reply: rtx, enqueued: Instant::now() })
+            .send(Pending { span, ids, targets, reply: rtx, admitted: now, dequeued: now })
             .is_err()
         {
             self.queued.fetch_sub(1, Ordering::Relaxed);
@@ -233,7 +267,10 @@ impl Drop for Batcher {
 
 /// Assemble, execute, and fan out one batch. `pending` is 1..=batch rows of
 /// exactly `seq` tokens each (validated at submit time); the tail is padded
-/// by broadcasting the first row.
+/// by broadcasting the first row. Stage accounting happens here: queue and
+/// batch-wait durations close at dispatch, the engine duration (shared by
+/// the whole batch) closes when the backend returns, and each request's
+/// trace + the backend's stage histograms absorb the deltas.
 fn run_batch(backend: &Arc<dyn ScoreBackend>, pending: Vec<Pending>) {
     let batch = backend.batch();
     let seq = backend.seq();
@@ -249,19 +286,47 @@ fn run_batch(backend: &Arc<dyn ScoreBackend>, pending: Vec<Pending>) {
         ids.extend_from_slice(&pending[0].ids);
         tgt.extend_from_slice(&pending[0].targets);
     }
-    let c = backend.counters();
-    c.inc(&c.requests, n as u64);
+    let m = backend.metrics();
+    let c = &m.counters;
+    m.count_requests(n as u64);
     c.inc(&c.padded_slots, (batch - n) as u64);
+    let dispatch = Instant::now();
+    let traced = trace::enabled();
+    let mut traces: Vec<RequestTrace> = pending
+        .iter()
+        .map(|r| {
+            let mut t = RequestTrace { span_id: r.span, ..RequestTrace::default() };
+            if traced {
+                t.queue = r.dequeued.duration_since(r.admitted);
+                t.batch_wait = dispatch.duration_since(r.dequeued);
+                m.queue.observe(t.queue);
+                m.batch_wait.observe(t.batch_wait);
+            }
+            t
+        })
+        .collect();
     // Queue delay ends when the batch is assembled — execution time is the
     // backend's latency histogram's job, not this field's.
-    let delays: Vec<Duration> = pending.iter().map(|r| r.enqueued.elapsed()).collect();
-    match backend.score(ids, tgt) {
+    let delays: Vec<Duration> = pending.iter().map(|r| dispatch.duration_since(r.admitted)).collect();
+    let result = backend.score(ids, tgt);
+    let scored = Instant::now();
+    let engine_d = scored.duration_since(dispatch);
+    if traced {
+        for (t, r) in traces.iter_mut().zip(&pending) {
+            t.engine = engine_d;
+            t.total = scored.duration_since(r.admitted);
+            m.engine.observe(t.engine);
+            m.e2e.observe(t.total);
+        }
+    }
+    match result {
         Ok((nll, correct)) => {
             for (i, r) in pending.into_iter().enumerate() {
                 let resp = ScoreResponse {
                     nll: nll[i * seq..(i + 1) * seq].to_vec(),
                     correct: correct[i * seq..(i + 1) * seq].to_vec(),
                     queue_delay: delays[i],
+                    trace: traces[i],
                 };
                 let _ = r.reply.send(Ok(resp));
             }
@@ -297,11 +362,12 @@ fn batch_loop(
             break;
         }
         // Block for the first request (with timeout so `stop` is honoured).
-        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+        let mut first = match rx.recv_timeout(Duration::from_millis(20)) {
             Ok(r) => r,
             Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => break,
         };
+        first.dequeued = Instant::now();
         let mut pending = vec![first];
         let deadline = Instant::now() + max_wait;
         // Fill the batch until full, deadline, or stop (short waits so a
@@ -313,7 +379,10 @@ fn batch_loop(
             }
             let step = (deadline - now).min(Duration::from_millis(20));
             match rx.recv_timeout(step) {
-                Ok(r) => pending.push(r),
+                Ok(mut r) => {
+                    r.dequeued = Instant::now();
+                    pending.push(r);
+                }
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -335,7 +404,10 @@ fn batch_loop(
         let mut pending = Vec::new();
         while pending.len() < batch {
             match rx.try_recv() {
-                Ok(r) => pending.push(r),
+                Ok(mut r) => {
+                    r.dequeued = Instant::now();
+                    pending.push(r);
+                }
                 Err(_) => break,
             }
         }
@@ -353,6 +425,11 @@ fn batch_loop(
         confirmed_idle = false;
         dec_queued(&queued, &global_queued, pending.len());
         if hard {
+            // Queued-then-aborted requests appear in the failure counters —
+            // they must never vanish from the accounting (every admitted
+            // request lands in exactly one of requests/aborted).
+            let c = &backend.metrics().counters;
+            c.inc(&c.aborted, pending.len() as u64);
             for r in pending {
                 let _ = r
                     .reply
@@ -377,7 +454,7 @@ mod tests {
         batch: usize,
         seq: usize,
         delay: Duration,
-        counters: Counters,
+        metrics: ServiceMetrics,
         /// Batches that have *entered* score() (possibly still sleeping).
         entered: AtomicU64,
         fail: AtomicBool,
@@ -385,11 +462,20 @@ mod tests {
 
     impl MockBackend {
         fn new(batch: usize, seq: usize, delay_ms: u64) -> Arc<MockBackend> {
+            Self::with_metrics(batch, seq, delay_ms, ServiceMetrics::new())
+        }
+
+        fn with_metrics(
+            batch: usize,
+            seq: usize,
+            delay_ms: u64,
+            metrics: ServiceMetrics,
+        ) -> Arc<MockBackend> {
             Arc::new(MockBackend {
                 batch,
                 seq,
                 delay: Duration::from_millis(delay_ms),
-                counters: Counters::default(),
+                metrics,
                 entered: AtomicU64::new(0),
                 fail: AtomicBool::new(false),
             })
@@ -405,8 +491,8 @@ mod tests {
             self.seq
         }
 
-        fn counters(&self) -> &Counters {
-            &self.counters
+        fn metrics(&self) -> &ServiceMetrics {
+            &self.metrics
         }
 
         fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
@@ -461,6 +547,7 @@ mod tests {
                     let (ids, tgt) = row(i * 100, 8);
                     let resp = h.score(ids.clone(), tgt.clone()).expect("scored");
                     check_response(&ids, &tgt, &resp);
+                    assert!(resp.trace.span_id > 0, "every response carries a span");
                 })
             })
             .collect();
@@ -468,9 +555,115 @@ mod tests {
             j.join().unwrap();
         }
         batcher.stop();
-        let c = backend.counters.snapshot();
+        let c = backend.metrics.counters.snapshot();
         assert_eq!(c.requests, 10);
-        assert!(backend.counters.batch_efficiency() <= 1.0);
+        assert!(backend.metrics.counters.batch_efficiency() <= 1.0);
+    }
+
+    /// The tracer acceptance test: per-stage histogram sums must be
+    /// consistent with the end-to-end histogram, because the three stage
+    /// durations partition each request's admitted→scored interval on one
+    /// monotonic clock. Holds the trace test lock so no parallel test can
+    /// flip the global tracing flag mid-count.
+    #[test]
+    fn stage_sums_are_consistent_with_e2e() {
+        let _g = trace::lock_for_tests();
+        assert!(trace::enabled(), "tracing is on by default");
+        let backend = MockBackend::new(4, 8, 3);
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_millis(10), ..Default::default() },
+        );
+        let joins: Vec<_> = (0..8)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let (ids, tgt) = row(i * 100, 8);
+                    h.score(ids, tgt).expect("scored")
+                })
+            })
+            .collect();
+        let responses: Vec<ScoreResponse> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        batcher.stop();
+        let m = &backend.metrics;
+        for h in [&m.queue, &m.batch_wait, &m.engine, &m.e2e] {
+            assert_eq!(h.count(), 8, "every stage sees every request exactly once");
+        }
+        // Per-request: the stages telescope to the total on the nanosecond
+        // clock, so the µs-rounded sums agree to per-stage rounding error.
+        for r in &responses {
+            let t = r.trace;
+            assert!(t.engine >= Duration::from_millis(3), "engine covers the mock delay: {t:?}");
+            let parts = t.queue + t.batch_wait + t.engine;
+            assert!(t.total >= parts, "total includes all stages: {t:?}");
+            assert!(t.total - parts < Duration::from_millis(1), "no unaccounted gap: {t:?}");
+        }
+        // Aggregate: histogram sums are µs-truncated and min-clamped to
+        // 1µs, so each observation contributes < 2µs of slack per stage.
+        let stage_sum = m.queue.sum_us() + m.batch_wait.sum_us() + m.engine.sum_us();
+        let e2e_sum = m.e2e.sum_us();
+        let slack = 8 * 4 * 2; // requests × histograms × µs clamp/truncation
+        assert!(
+            stage_sum <= e2e_sum + slack && e2e_sum <= stage_sum + slack,
+            "stage sums {stage_sum}µs vs e2e {e2e_sum}µs (slack {slack}µs)"
+        );
+        // The engine stage dominates here (3ms mock delay vs µs queueing).
+        assert!(m.engine.sum_us() * 2 > e2e_sum, "engine dominates this workload");
+    }
+
+    /// With tracing disabled, responses still carry span IDs but the stage
+    /// histograms stay untouched (the <2%-overhead off switch).
+    #[test]
+    fn disabled_tracing_skips_stage_histograms() {
+        let _g = trace::lock_for_tests();
+        let was = trace::set_enabled(false);
+        let backend = MockBackend::new(2, 4, 0);
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let (ids, tgt) = row(3, 4);
+        let resp = handle.score(ids, tgt).expect("scored");
+        batcher.stop();
+        trace::set_enabled(was);
+        assert!(resp.trace.span_id > 0);
+        assert_eq!(resp.trace.total, Duration::ZERO, "durations zeroed when off");
+        assert_eq!(backend.metrics.e2e.count(), 0);
+        assert_eq!(backend.metrics.queue.count(), 0);
+        assert_eq!(backend.metrics.counters.snapshot().requests, 1, "counters always on");
+    }
+
+    /// Acceptance: per-service fused-vs-reconstructed request counts land in
+    /// the global registry exactly, via `ServiceMetrics::for_service`.
+    #[test]
+    fn per_path_request_counts_are_exact_in_registry() {
+        let svc_a = ServiceMetrics::for_service("batcher-test/a#1", "plan-fused");
+        let svc_b = ServiceMetrics::for_service("batcher-test/b#1", "plan-reconstructed-fp");
+        let ba = MockBackend::with_metrics(2, 4, 0, svc_a);
+        let bb = MockBackend::with_metrics(2, 4, 0, svc_b);
+        let cfg = || BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() };
+        let (ha, mut batcher_a) = Batcher::spawn(Arc::clone(&ba) as Arc<dyn ScoreBackend>, cfg());
+        let (hb, mut batcher_b) = Batcher::spawn(Arc::clone(&bb) as Arc<dyn ScoreBackend>, cfg());
+        for i in 0..3 {
+            let (ids, tgt) = row(i * 10, 4);
+            ha.score(ids, tgt).expect("scored on a");
+        }
+        for i in 0..5 {
+            let (ids, tgt) = row(i * 10, 4);
+            hb.score(ids, tgt).expect("scored on b");
+        }
+        batcher_a.stop();
+        batcher_b.stop();
+        let fused = crate::obs::registry::counter(
+            "afq_service_requests_total{service=\"batcher-test/a#1\",path=\"plan-fused\"}",
+        );
+        let recon = crate::obs::registry::counter(
+            "afq_service_requests_total{service=\"batcher-test/b#1\",path=\"plan-reconstructed-fp\"}",
+        );
+        assert_eq!(fused.get(), 3, "fused path counted exactly");
+        assert_eq!(recon.get(), 5, "reconstructed-fp path counted exactly");
+        assert_eq!(ba.metrics.counters.snapshot().requests, 3);
+        assert_eq!(bb.metrics.counters.snapshot().requests, 5);
     }
 
     #[test]
@@ -532,17 +725,21 @@ mod tests {
         }
         assert_eq!(ok + rejected, 10, "no request may be silently dropped");
         assert!(ok >= 1, "at least the queued requests must drain to results");
-        assert_eq!(backend.counters.snapshot().requests, ok as u64);
+        assert_eq!(backend.metrics.counters.snapshot().requests, ok as u64);
+        // A graceful stop drains through the backend: nothing is aborted.
+        assert_eq!(backend.metrics.counters.snapshot().aborted, 0);
         // New submissions after stop fail fast.
         let (ids, tgt) = row(0, 4);
         assert!(handle.score(ids, tgt).is_err());
     }
 
     #[test]
-    fn abort_fails_queued_with_explicit_error() {
+    fn abort_fails_queued_with_explicit_error_and_counts_them() {
         // batch=1 + slow backend: one request is in flight, the rest queue
         // behind it. abort() must flush the in-flight batch but fail the
-        // queued ones with a "shutting down" error.
+        // queued ones with a "shutting down" error — and tally every one of
+        // them in the aborted counter, so queued-then-aborted requests
+        // appear in the failure accounting instead of vanishing.
         let backend = MockBackend::new(1, 4, 80);
         let (handle, mut batcher) = Batcher::spawn(
             Arc::clone(&backend) as Arc<dyn ScoreBackend>,
@@ -563,18 +760,30 @@ mod tests {
         batcher.abort();
         let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
         let ok = results.iter().filter(|r| r.is_ok()).count();
-        // A racing submitter can also hit the sender-side "batcher stopped"
-        // error; both are explicit, so both satisfy the no-silent-drop
-        // contract.
-        let shut = results
+        // Requests that reached the queue and were then aborted get the
+        // "request not executed" error; a racing submitter can instead hit
+        // the sender-side "batcher stopped" / stop-flag "shutting down"
+        // rejection (never queued, so never counted as aborted).
+        let aborted = results
+            .iter()
+            .filter(|r| matches!(r, Err(e) if e.contains("request not executed")))
+            .count();
+        let rejected = results
             .iter()
             .filter(
-                |r| matches!(r, Err(e) if e.contains("shutting down") || e.contains("batcher stopped")),
+                |r| matches!(r, Err(e) if !e.contains("request not executed")
+                    && (e.contains("shutting down") || e.contains("batcher stopped"))),
             )
             .count();
         assert!(ok >= 1, "the in-flight batch must complete");
-        assert!(shut >= 1, "queued requests must fail with an explicit error");
-        assert_eq!(ok + shut, 6, "no request may be silently dropped: {results:?}");
+        assert!(aborted + rejected >= 1, "queued requests must fail with an explicit error");
+        assert_eq!(ok + aborted + rejected, 6, "no request may be silently dropped: {results:?}");
+        // Exact counting across the drain: executed and aborted tallies
+        // partition the admitted requests — nothing vanishes.
+        let c = backend.metrics.counters.snapshot();
+        assert_eq!(c.requests, ok as u64, "executed requests counted exactly");
+        assert_eq!(c.aborted, aborted as u64, "aborted requests counted exactly");
+        assert_eq!(c.requests + c.aborted, (ok + aborted) as u64);
     }
 
     #[test]
@@ -654,6 +863,6 @@ mod tests {
         let r = handle.score(ids, tgt);
         assert!(matches!(r, Err(e) if e.contains("mock backend failure")));
         batcher.stop();
-        assert_eq!(backend.counters.snapshot().errors, 1);
+        assert_eq!(backend.metrics.counters.snapshot().errors, 1);
     }
 }

@@ -76,10 +76,24 @@ impl EngineHandle {
                         return;
                     }
                 };
+                // Registry handles resolved once, outside the serving loop:
+                // per-op cost is a relaxed atomic add. Gauges track device
+                // residency (process-wide: one engine thread per process is
+                // the normal shape; with several, they report the last
+                // writer, same as EngineStats).
+                use crate::obs::registry;
+                let m_uploads = registry::counter("afq_engine_uploads_total");
+                let m_execs = registry::counter("afq_engine_executions_total");
+                let m_errors = registry::counter("afq_engine_execution_errors_total");
+                let g_buffers = registry::gauge("afq_engine_device_buffers");
+                let g_loaded = registry::gauge("afq_engine_executables");
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Upload { key, shape, data, reply } => {
-                            let _ = reply.send(engine.upload(&key, &data, &shape));
+                            let r = engine.upload(&key, &data, &shape);
+                            m_uploads.inc(1);
+                            g_buffers.set(engine.cached_keys() as i64);
+                            let _ = reply.send(r);
                         }
                         Request::Execute { artifact, args, reply } => {
                             let borrowed: Vec<crate::runtime::Arg> = args
@@ -89,13 +103,23 @@ impl EngineHandle {
                                     OwnedArg::Cached(k) => crate::runtime::Arg::Cached(k),
                                 })
                                 .collect();
-                            let _ = reply.send(engine.execute(&artifact, &borrowed));
+                            let r = engine.execute(&artifact, &borrowed);
+                            m_execs.inc(1);
+                            if r.is_err() {
+                                m_errors.inc(1);
+                            }
+                            g_loaded.set(engine.loaded_count() as i64);
+                            let _ = reply.send(r);
                         }
                         Request::Preload { artifact, reply } => {
-                            let _ = reply.send(engine.load(&artifact));
+                            let r = engine.load(&artifact);
+                            g_loaded.set(engine.loaded_count() as i64);
+                            let _ = reply.send(r);
                         }
                         Request::Evict { prefix, reply } => {
                             engine.evict(&prefix);
+                            g_buffers.set(engine.cached_keys() as i64);
+                            g_loaded.set(engine.loaded_count() as i64);
                             let _ = reply.send(());
                         }
                         Request::Stats { reply } => {

@@ -1,78 +1,20 @@
-//! Serving metrics: log-bucketed latency histogram + counters.
+//! Per-service serving metrics: counters, stage histograms, and the
+//! serving-path classifier.
+//!
+//! The latency histogram itself lives in [`crate::obs::hist`] (re-exported
+//! here for source compatibility); this module owns the *per-service*
+//! bundle: [`Counters`] plus the request-lifecycle stage histograms
+//! ([`ServiceMetrics`]) that the batcher fills and
+//! [`crate::coordinator::RouterSnapshot`] reports. Services constructed
+//! through [`ServiceMetrics::for_service`] additionally mirror their
+//! request count into the global registry as
+//! `afq_service_requests_total{service="…",path="…"}`, where `path` is
+//! the [`serving_path`] classification (fused vs reconstructed-fp vs
+//! uniform) — so fallback usage is exactly countable per service.
 
+pub use crate::obs::hist::LatencyHistogram;
+use crate::obs::registry;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
-
-/// Lock-free latency histogram with log2 microsecond buckets
-/// (1µs … ~17min) plus count/sum for exact means.
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_us: AtomicU64,
-}
-
-const N_BUCKETS: usize = 30;
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl LatencyHistogram {
-    pub fn new() -> Self {
-        Self {
-            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-        }
-    }
-
-    pub fn observe(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let b = (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1);
-        self.buckets[b].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean(&self) -> Duration {
-        let c = self.count().max(1);
-        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
-    }
-
-    /// Upper bound of the bucket holding quantile q (bucket-resolution p50/p99).
-    pub fn quantile(&self, q: f64) -> Duration {
-        let total = self.count();
-        if total == 0 {
-            return Duration::ZERO;
-        }
-        let target = (total as f64 * q).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
-            }
-        }
-        Duration::from_micros(1u64 << N_BUCKETS)
-    }
-
-    pub fn summary(&self) -> String {
-        format!(
-            "n={} mean={:.2?} p50≤{:.2?} p95≤{:.2?} p99≤{:.2?}",
-            self.count(),
-            self.mean(),
-            self.quantile(0.50),
-            self.quantile(0.95),
-            self.quantile(0.99),
-        )
-    }
-}
 
 /// Service-level counters.
 #[derive(Default)]
@@ -82,6 +24,11 @@ pub struct Counters {
     pub tokens: AtomicU64,
     pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests admitted to a batcher queue but never executed (hard
+    /// shutdown abort). Disjoint from `requests` (executed) and `errors`
+    /// (executed, engine failed): every admitted request lands in exactly
+    /// one of the three.
+    pub aborted: AtomicU64,
 }
 
 /// A point-in-time copy of [`Counters`] (what the router snapshot reports).
@@ -92,6 +39,7 @@ pub struct CounterSnapshot {
     pub tokens: u64,
     pub padded_slots: u64,
     pub errors: u64,
+    pub aborted: u64,
 }
 
 impl Counters {
@@ -109,6 +57,7 @@ impl Counters {
             tokens: self.tokens.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            aborted: self.aborted.load(Ordering::Relaxed),
         }
     }
 
@@ -122,48 +71,80 @@ impl Counters {
     }
 }
 
+/// The full metrics bundle one service (or mock backend) owns: counters
+/// plus the four request-lifecycle stage histograms the batcher fills.
+///
+/// Stage timeline (all [`std::time::Instant`] deltas measured in the
+/// batcher; see [`crate::obs::trace`]): `queue` (admitted → picked),
+/// `batch_wait` (picked → batch dispatched), `engine` (dispatched →
+/// scored, shared per batch), `e2e` (admitted → reply construction).
+/// The three stages partition `e2e` exactly, so
+/// `queue.sum_us() + batch_wait.sum_us() + engine.sum_us()` tracks
+/// `e2e.sum_us()` within µs-truncation slack — the batcher test suite
+/// asserts this.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    pub counters: Counters,
+    pub queue: LatencyHistogram,
+    pub batch_wait: LatencyHistogram,
+    pub engine: LatencyHistogram,
+    pub e2e: LatencyHistogram,
+    /// Global-registry mirror of `counters.requests`, labelled by service
+    /// and serving path. `None` for bundles not registered via
+    /// [`ServiceMetrics::for_service`] (unit-test mocks stay out of the
+    /// process-global namespace unless they opt in).
+    requests_by_path: Option<registry::Counter>,
+}
+
+impl ServiceMetrics {
+    /// A bundle with no global-registry mirror.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A bundle that mirrors its request count into the global registry as
+    /// `afq_service_requests_total{service="<service>",path="<path>"}`.
+    pub fn for_service(service: &str, path: &str) -> Self {
+        let name =
+            format!("afq_service_requests_total{{service={service:?},path={path:?}}}");
+        Self { requests_by_path: Some(registry::counter(&name)), ..Self::default() }
+    }
+
+    /// Count `by` executed requests — the one place the local counter and
+    /// its global per-path mirror move together.
+    pub fn count_requests(&self, by: u64) {
+        self.counters.inc(&self.counters.requests, by);
+        if let Some(c) = &self.requests_by_path {
+            c.inc(by);
+        }
+    }
+}
+
+/// Classify how a service actually serves, from its engine artifact name
+/// and plan label: the fused per-tensor nibble path (`score_plan_*`), the
+/// reconstructed-fp fallback (a plan served through `score_fp_*`), plain
+/// fp, or the uniform fused path (`score_q<B>`). This is the `path` label
+/// on `afq_service_requests_total` — per-service fused-vs-reconstructed
+/// counts fall out of it.
+pub fn serving_path(artifact: &str, config_label: &str) -> &'static str {
+    let base = artifact.rsplit('/').next().unwrap_or(artifact);
+    if base.starts_with("score_plan_") {
+        "plan-fused"
+    } else if base.starts_with("score_fp_") {
+        if config_label.starts_with("plan:") {
+            "plan-reconstructed-fp"
+        } else {
+            "fp"
+        }
+    } else {
+        "uniform-fused"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn histogram_orders_quantiles() {
-        let h = LatencyHistogram::new();
-        for us in [10u64, 20, 40, 80, 5000, 100, 60, 30, 15, 90] {
-            h.observe(Duration::from_micros(us));
-        }
-        assert_eq!(h.count(), 10);
-        assert!(h.quantile(0.5) <= h.quantile(0.95));
-        assert!(h.quantile(0.95) <= h.quantile(0.999));
-        // p99 bucket must cover the 5ms outlier
-        assert!(h.quantile(0.99) >= Duration::from_micros(4096));
-        assert!(h.mean() >= Duration::from_micros(500));
-    }
-
-    #[test]
-    fn empty_histogram() {
-        let h = LatencyHistogram::new();
-        assert_eq!(h.quantile(0.5), Duration::ZERO);
-        assert_eq!(h.count(), 0);
-    }
-
-    #[test]
-    fn concurrent_observe() {
-        let h = std::sync::Arc::new(LatencyHistogram::new());
-        let mut joins = Vec::new();
-        for _ in 0..4 {
-            let h = h.clone();
-            joins.push(std::thread::spawn(move || {
-                for i in 0..1000 {
-                    h.observe(Duration::from_micros(i % 100 + 1));
-                }
-            }));
-        }
-        for j in joins {
-            j.join().unwrap();
-        }
-        assert_eq!(h.count(), 4000);
-    }
+    use std::time::Duration;
 
     #[test]
     fn batch_efficiency() {
@@ -181,10 +162,56 @@ mod tests {
         c.inc(&c.tokens, 512);
         c.inc(&c.padded_slots, 1);
         c.inc(&c.errors, 4);
+        c.inc(&c.aborted, 5);
         let s = c.snapshot();
         assert_eq!(
             s,
-            CounterSnapshot { requests: 3, batches: 2, tokens: 512, padded_slots: 1, errors: 4 }
+            CounterSnapshot {
+                requests: 3,
+                batches: 2,
+                tokens: 512,
+                padded_slots: 1,
+                errors: 4,
+                aborted: 5
+            }
         );
+    }
+
+    #[test]
+    fn serving_path_classifies_all_four() {
+        assert_eq!(serving_path("score_plan_ab12cd", "plan:tiny#deadbeef"), "plan-fused");
+        assert_eq!(serving_path("score_fp_tiny", "plan:tiny#deadbeef"), "plan-reconstructed-fp");
+        assert_eq!(serving_path("score_fp_tiny", "fp32"), "fp");
+        assert_eq!(serving_path("score_q64", "nf4@64"), "uniform-fused");
+        // artifact names may arrive path-qualified
+        assert_eq!(serving_path("artifacts/score_plan_x", "plan:m#d"), "plan-fused");
+    }
+
+    #[test]
+    fn for_service_mirrors_requests_into_registry() {
+        let m = ServiceMetrics::for_service("test-svc/metrics-unit", "plan-fused");
+        m.count_requests(3);
+        m.count_requests(2);
+        assert_eq!(m.counters.requests.load(Ordering::Relaxed), 5);
+        let mirrored = crate::obs::registry::counter(
+            "afq_service_requests_total{service=\"test-svc/metrics-unit\",path=\"plan-fused\"}",
+        );
+        assert_eq!(mirrored.get(), 5);
+        // An unmirrored bundle stays out of the global namespace.
+        let plain = ServiceMetrics::new();
+        plain.count_requests(1);
+        assert_eq!(mirrored.get(), 5);
+    }
+
+    #[test]
+    fn stage_histograms_are_independent() {
+        let m = ServiceMetrics::new();
+        m.queue.observe(Duration::from_micros(10));
+        m.engine.observe(Duration::from_micros(100));
+        m.e2e.observe(Duration::from_micros(110));
+        assert_eq!(m.queue.count(), 1);
+        assert_eq!(m.batch_wait.count(), 0);
+        assert_eq!(m.engine.count(), 1);
+        assert_eq!(m.e2e.count(), 1);
     }
 }

@@ -50,6 +50,32 @@
 //!   explicit error on abort) — queued requests are never silently
 //!   dropped. The engine thread stops only after all batchers have
 //!   drained.
+//!
+//! Observability contracts (see [`crate::obs`] for the primitives):
+//! - **Span + stages**: every [`ScoreRequest`] carries a process-unique
+//!   `span` id (from [`crate::obs::trace::next_span_id`], never 0) and its
+//!   reply a [`crate::obs::trace::RequestTrace`]. The batcher stamps one
+//!   monotonic clock at admitted → dequeued → dispatched → scored, and the
+//!   three stage durations (`queue`, `batch_wait`, `engine`) partition the
+//!   end-to-end latency exactly; per-stage [`LatencyHistogram`]s live in
+//!   each service's [`ServiceMetrics`] and surface in [`RouterSnapshot`]
+//!   as [`StageStat`]s, so the snapshot answers *where* latency lives, not
+//!   just how much. Stage stamping is gated by
+//!   [`crate::obs::trace::enabled`] (default on; span ids and counters are
+//!   unconditional).
+//! - **Exact accounting**: every admitted request lands in exactly one of
+//!   `requests` (executed), `errors` (executed, engine failed), or
+//!   `aborted` (hard shutdown before execution) — queued-then-aborted
+//!   requests appear in failure counters, they never vanish. Executed
+//!   requests are additionally mirrored into the global registry as
+//!   `afq_service_requests_total{service="…",path="…"}` with `path` from
+//!   [`metrics::serving_path`] (`plan-fused` / `plan-reconstructed-fp` /
+//!   `fp` / `uniform-fused`), making fused-vs-fallback usage exactly
+//!   countable per service.
+//! - **Engine residency**: the engine thread keeps
+//!   `afq_engine_{uploads,executions,execution_errors}_total` counters and
+//!   `afq_engine_{device_buffers,executables}` gauges current as it
+//!   processes ops; [`EngineStats`] remains the synchronous view.
 
 pub mod batcher;
 pub mod engine_thread;
@@ -60,7 +86,9 @@ pub mod trainer;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
 pub use engine_thread::{EngineHandle, EngineStats, EngineThread, OwnedArg};
-pub use metrics::{CounterSnapshot, Counters, LatencyHistogram};
-pub use router::{PlanRef, Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey, ServiceStat};
+pub use metrics::{serving_path, CounterSnapshot, Counters, LatencyHistogram, ServiceMetrics};
+pub use router::{
+    PlanRef, Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey, ServiceStat, StageStat,
+};
 pub use service::{ModelService, QuantSpec, ServePlan};
 pub use trainer::{ensure_checkpoint, train, TrainConfig, TrainResult};

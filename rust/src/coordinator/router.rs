@@ -109,17 +109,26 @@ impl std::fmt::Display for ServiceKey {
 }
 
 /// A routed request: the key names the service, the payload is one
-/// sequence of exactly `seq` tokens (plus next-token targets).
+/// sequence of exactly `seq` tokens (plus next-token targets). Every
+/// request carries a process-unique span ID (allocated at construction)
+/// that survives into [`ScoreResponse::trace`], so one request is one
+/// identity across router, batcher, and engine accounting.
 #[derive(Clone, Debug)]
 pub struct ScoreRequest {
     pub key: ServiceKey,
+    pub span: u64,
     pub ids: Vec<i32>,
     pub targets: Vec<i32>,
 }
 
 impl ScoreRequest {
     pub fn new(key: &ServiceKey, ids: Vec<i32>, targets: Vec<i32>) -> ScoreRequest {
-        ScoreRequest { key: key.clone(), ids, targets }
+        ScoreRequest {
+            key: key.clone(),
+            span: crate::obs::trace::next_span_id(),
+            ids,
+            targets,
+        }
     }
 }
 
@@ -268,7 +277,7 @@ impl Router {
     /// backpressure (global or per-service queue quota).
     pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, String> {
         let entry = self.entry(&req.key)?;
-        entry.handle.score(req.ids, req.targets)
+        entry.handle.score_traced(req.span, req.ids, req.targets)
     }
 
     /// Full-batch fast path: score one pre-assembled [batch, seq] batch
@@ -342,21 +351,28 @@ impl Router {
         let mut stats: Vec<ServiceStat> = entries
             .iter()
             .map(|(key, e)| {
-                let c = e.service.counters.snapshot();
+                let m = &e.service.metrics;
+                let c = m.counters.snapshot();
                 let lat = &e.service.latency;
                 ServiceStat {
                     key: key.to_string(),
                     artifact: e.service.artifact().to_string(),
+                    serving_path: e.service.path(),
                     requests: c.requests,
                     batches: c.batches,
                     tokens: c.tokens,
                     errors: c.errors,
+                    aborted: c.aborted,
                     padded_slots: c.padded_slots,
-                    batch_efficiency: e.service.counters.batch_efficiency(),
+                    batch_efficiency: m.counters.batch_efficiency(),
                     queued: e.handle.queued(),
                     p50_us: lat.quantile(0.50).as_micros() as u64,
                     p99_us: lat.quantile(0.99).as_micros() as u64,
                     mean_us: lat.mean().as_micros() as u64,
+                    queue: StageStat::of(&m.queue),
+                    batch_wait: StageStat::of(&m.batch_wait),
+                    engine: StageStat::of(&m.engine),
+                    e2e: StageStat::of(&m.e2e),
                 }
             })
             .collect();
@@ -463,6 +479,42 @@ impl Drop for Router {
     }
 }
 
+/// Quantile/mean digest of one request-lifecycle stage histogram, so the
+/// snapshot says *where* latency lives (queue vs batch-wait vs engine),
+/// not just how much there is end to end.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStat {
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: u64,
+    /// Exact µs sum — stage sums telescope to the e2e sum (tracer
+    /// invariant), so consumers can cross-check consistency.
+    pub sum_us: u64,
+}
+
+impl StageStat {
+    fn of(h: &crate::coordinator::metrics::LatencyHistogram) -> StageStat {
+        StageStat {
+            count: h.count(),
+            p50_us: h.quantile(0.50).as_micros() as u64,
+            p99_us: h.quantile(0.99).as_micros() as u64,
+            mean_us: h.mean().as_micros() as u64,
+            sum_us: h.sum_us(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", Json::Num(self.count as f64))
+            .set("p50_us", Json::Num(self.p50_us as f64))
+            .set("p99_us", Json::Num(self.p99_us as f64))
+            .set("mean_us", Json::Num(self.mean_us as f64))
+            .set("sum_us", Json::Num(self.sum_us as f64));
+        o
+    }
+}
+
 /// Per-service row of a [`RouterSnapshot`].
 #[derive(Clone, Debug)]
 pub struct ServiceStat {
@@ -472,33 +524,56 @@ pub struct ServiceStat {
     /// `score_plan_<shape_digest>_…`, `score_fp_…`) — shows which serving
     /// path a planned service landed on (fused vs reconstructed-fp).
     pub artifact: String,
+    /// [`crate::coordinator::metrics::serving_path`] classification of the
+    /// artifact (`plan-fused`, `plan-reconstructed-fp`, `fp`,
+    /// `uniform-fused`).
+    pub serving_path: &'static str,
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
     pub errors: u64,
+    /// Requests admitted but failed by a hard shutdown (never executed).
+    pub aborted: u64,
     pub padded_slots: u64,
     pub batch_efficiency: f64,
     pub queued: usize,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: u64,
+    /// Stage histograms: admitted → picked out of the queue.
+    pub queue: StageStat,
+    /// Picked → batch dispatched to the engine.
+    pub batch_wait: StageStat,
+    /// Dispatched → scored (shared per batch).
+    pub engine: StageStat,
+    /// Admitted → reply construction (the whole request lifecycle).
+    pub e2e: StageStat,
 }
 
 impl ServiceStat {
     pub fn to_json(&self) -> Json {
+        let mut stages = Json::obj();
+        stages
+            .set("queue", self.queue.to_json())
+            .set("batch_wait", self.batch_wait.to_json())
+            .set("engine", self.engine.to_json())
+            .set("e2e", self.e2e.to_json());
         let mut o = Json::obj();
         o.set("key", Json::Str(self.key.clone()))
             .set("artifact", Json::Str(self.artifact.clone()))
+            .set("serving_path", Json::Str(self.serving_path.to_string()))
             .set("requests", Json::Num(self.requests as f64))
             .set("batches", Json::Num(self.batches as f64))
             .set("tokens", Json::Num(self.tokens as f64))
             .set("errors", Json::Num(self.errors as f64))
+            .set("aborted", Json::Num(self.aborted as f64))
             .set("padded_slots", Json::Num(self.padded_slots as f64))
             .set("batch_efficiency", Json::Num(self.batch_efficiency))
             .set("queued", Json::Num(self.queued as f64))
             .set("p50_us", Json::Num(self.p50_us as f64))
             .set("p99_us", Json::Num(self.p99_us as f64))
-            .set("mean_us", Json::Num(self.mean_us as f64));
+            .set("mean_us", Json::Num(self.mean_us as f64))
+            .set("stages", stages);
         o
     }
 }
@@ -507,15 +582,20 @@ impl std::fmt::Display for ServiceStat {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{:<24} req {:>6}  batches {:>5}  err {:>3}  eff {:>5.1}%  queued {:>4}  p50≤{:>7}µs  p99≤{:>7}µs",
+            "{:<24} [{}] req {:>6}  batches {:>5}  err {:>3}  abrt {:>3}  eff {:>5.1}%  queued {:>4}  p50≈{:>7}µs  p99≈{:>7}µs  mean µs q/b/e {}/{}/{}",
             self.key,
+            self.serving_path,
             self.requests,
             self.batches,
             self.errors,
+            self.aborted,
             self.batch_efficiency * 100.0,
             self.queued,
             self.p50_us,
             self.p99_us,
+            self.queue.mean_us,
+            self.batch_wait.mean_us,
+            self.engine.mean_us,
         )
     }
 }
@@ -703,6 +783,9 @@ mod tests {
     /// and the per-service counters tallying the submitted request counts.
     #[test]
     fn concurrent_multi_service_routing_is_correct_and_counted() {
+        // Hold the trace test lock: this test asserts exact stage-histogram
+        // counts, so no parallel test may flip the global tracing flag.
+        let _trace_guard = crate::obs::trace::lock_for_tests();
         let Some((r, meta)) = registered_router(21) else { return };
         let keys = [
             ServiceKey::quant("tiny", "nf4", 64),
@@ -772,6 +855,23 @@ mod tests {
             assert!(stat.batches >= 1);
             assert!(stat.errors == 0);
             assert!(stat.p99_us >= stat.p50_us);
+            assert_eq!(stat.serving_path, "uniform-fused");
+            // The snapshot says WHERE latency lives: each stage histogram
+            // saw every routed request exactly once (score_batch bypasses
+            // the batcher, so only the routed `expected` count here) …
+            for st in [&stat.queue, &stat.batch_wait, &stat.engine, &stat.e2e] {
+                assert_eq!(st.count, expected, "{key}: stage counts");
+            }
+            // … and the stage sums are consistent with the end-to-end sum
+            // (they partition it on one monotonic clock; slack covers the
+            // per-observation µs clamp/truncation of 4 histograms).
+            let parts = stat.queue.sum_us + stat.batch_wait.sum_us + stat.engine.sum_us;
+            let slack = expected * 4 * 2;
+            assert!(
+                parts <= stat.e2e.sum_us + slack && stat.e2e.sum_us <= parts + slack,
+                "{key}: stage sums {parts}µs vs e2e {}µs (slack {slack}µs)",
+                stat.e2e.sum_us
+            );
         }
         assert_eq!(snap.queued, 0);
         assert!(snap.device_buffers > 0);
@@ -1049,6 +1149,17 @@ mod tests {
         let services = j.get("services").unwrap().as_arr().unwrap();
         assert_eq!(services.len(), 1);
         assert_eq!(services[0].get("key").unwrap().as_str().unwrap(), "tiny/nf4@64");
+        assert_eq!(
+            services[0].get("serving_path").unwrap().as_str().unwrap(),
+            "uniform-fused"
+        );
+        // The stage blocks are present even when the batcher never ran
+        // (score_batch bypasses it): zero counts, well-formed shape.
+        for stage in ["queue", "batch_wait", "engine", "e2e"] {
+            let count = services[0].at(&["stages", stage, "count"]).unwrap().as_f64().unwrap();
+            assert!(count >= 0.0, "{stage}");
+        }
+        assert!(services[0].get("aborted").unwrap().as_f64().is_some());
         assert!(j.get("device_buffers").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(
             j.get("models").unwrap().as_arr().unwrap()[0].as_str().unwrap(),

@@ -47,7 +47,7 @@
 use crate::codes::registry;
 use crate::coordinator::batcher::ScoreBackend;
 use crate::coordinator::engine_thread::{EngineHandle, OwnedArg};
-use crate::coordinator::metrics::{Counters, LatencyHistogram};
+use crate::coordinator::metrics::{serving_path, LatencyHistogram, ServiceMetrics};
 use crate::model::{
     fp_weight_args, planned_fused_weight_args, planned_weight_args, quantized_weight_args,
     ParamSet,
@@ -134,7 +134,14 @@ pub struct ModelService {
     prefix: String,
     keys: Vec<String>,
     pub latency: Arc<LatencyHistogram>,
-    pub counters: Arc<Counters>,
+    /// Counters + request-lifecycle stage histograms, filled by this
+    /// service's batcher; requests are mirrored into the global registry
+    /// under this service's label and [`serving_path`] classification.
+    pub metrics: Arc<ServiceMetrics>,
+    /// The [`serving_path`] classification this service landed on
+    /// (`plan-fused`, `plan-reconstructed-fp`, `fp`, `uniform-fused`) —
+    /// decided once at prepare time, after fallback resolution.
+    serving_path: &'static str,
 }
 
 impl ModelService {
@@ -201,6 +208,15 @@ impl ModelService {
             keys.push(key);
         }
         eng.preload(&artifact)?;
+        // Classify the serving path AFTER fallback resolution, so the
+        // per-service registry counters say how requests are actually
+        // served (fused vs reconstructed-fp), not how the plan asked to be.
+        let label = plan.label();
+        let path = serving_path(&artifact, &label);
+        crate::obs::registry::counter(&format!(
+            "afq_service_prepared_total{{path={path:?}}}"
+        ))
+        .inc(1);
         Ok(ModelService {
             eng: eng.clone(),
             meta,
@@ -209,7 +225,8 @@ impl ModelService {
             prefix,
             keys,
             latency: Arc::new(LatencyHistogram::new()),
-            counters: Arc::new(Counters::default()),
+            metrics: Arc::new(ServiceMetrics::for_service(&format!("{model}/{label}"), path)),
+            serving_path: path,
         })
     }
 
@@ -266,8 +283,9 @@ impl ModelService {
         let nll = out[0].as_f32().ok_or("nll dtype")?.to_vec();
         let correct = out[1].as_i32().ok_or("correct dtype")?.to_vec();
         self.latency.observe(t0.elapsed());
-        self.counters.inc(&self.counters.batches, 1);
-        self.counters.inc(&self.counters.tokens, nll.len() as u64);
+        let c = &self.metrics.counters;
+        c.inc(&c.batches, 1);
+        c.inc(&c.tokens, nll.len() as u64);
         Ok((nll, correct))
     }
 
@@ -305,6 +323,11 @@ impl ModelService {
     pub fn artifact(&self) -> &str {
         &self.artifact
     }
+
+    /// The [`serving_path`] classification decided at prepare time.
+    pub fn path(&self) -> &'static str {
+        self.serving_path
+    }
 }
 
 /// The real batcher backend: [`ModelService::score`] already tallies batch
@@ -318,8 +341,8 @@ impl ScoreBackend for ModelService {
         ModelService::seq(self)
     }
 
-    fn counters(&self) -> &Counters {
-        self.counters.as_ref()
+    fn metrics(&self) -> &ServiceMetrics {
+        self.metrics.as_ref()
     }
 
     fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
@@ -401,6 +424,8 @@ mod tests {
         assert!((nll_fp - (256f64).ln()).abs() < 0.5, "fp nll {nll_fp}");
         assert!((nll_q - nll_fp).abs() < 0.1, "q {nll_q} vs fp {nll_fp}");
         assert!(fp.latency.count() >= 2);
+        assert_eq!(fp.path(), "fp");
+        assert_eq!(q.path(), "uniform-fused");
         q.release();
         th.stop(&eng);
     }
@@ -440,6 +465,7 @@ mod tests {
         // fallback — the fused score_plan path is covered by the parity
         // battery (tests/plan_parity.rs) with the canonical plan.
         assert_eq!(planned.artifact(), "score_fp_tiny");
+        assert_eq!(planned.path(), "plan-reconstructed-fp");
         let fused = ModelService::prepare(
             &eng,
             "tiny",

@@ -81,6 +81,30 @@
 //!   model × code × B grids as routed services, plus the planner ablation
 //!   (`afq exp ablation-planner`: planned vs best-uniform at equal
 //!   average bits across a budget sweep).
+//! - [`obs`] — observability: request-lifecycle tracing (span IDs +
+//!   per-stage latency histograms), the process-global metrics registry
+//!   with Prometheus/JSON exposition, `AFQ_LOG` structured logging, and
+//!   the `afq obs compare` perf-regression gate CI runs over
+//!   `results/BENCH_*.json` artifacts.
+//!
+//! ## Observability contracts
+//!
+//! - **Span stages.** Every scored request owns a process-unique span ID
+//!   and a monotonic stage timeline measured in the batcher: *queue*
+//!   (admitted → picked into a forming batch), *batch_wait* (picked →
+//!   batch dispatches), *engine* (dispatch → backend scored; shared per
+//!   batch), and *total* (admitted → reply construction). The three
+//!   stage durations partition *total* exactly (up to the sub-µs
+//!   fan-out slice), so per-service stage histogram sums are consistent
+//!   with the end-to-end histogram — asserted by the batcher tests and
+//!   reported per service in [`coordinator::RouterSnapshot`].
+//! - **Metric naming.** `afq_<subsystem>_<name>`, counters suffixed
+//!   `_total`, durations in µs, Prometheus-style labels baked into the
+//!   registered name (e.g.
+//!   `afq_service_requests_total{service="tiny/nf4@64",path="plan-fused"}`).
+//! - **Exposition.** `afq obs metrics` prints Prometheus text; every
+//!   bench envelope written by [`util::bench::save_bench_doc`] embeds a
+//!   JSON registry snapshot under its `"metrics"` key.
 //!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
 //! [`quant`] (the mechanism), and [`plan`] (the budgeted per-tensor
@@ -95,6 +119,7 @@ pub mod dist;
 pub mod exp;
 pub mod model;
 pub mod numerics;
+pub mod obs;
 pub mod plan;
 pub mod quant;
 pub mod runtime;

@@ -7,22 +7,29 @@
 //!   eval       perplexity / cloze eval of a (model × code × B) config
 //!   exp        regenerate a paper figure (fig01..fig13, sec3, ablations)
 //!   info       artifact manifest summary
+//!   obs        observability: perf-regression compare, metrics exposition
 //!
 //! Run `afq <cmd> --help` for options.
+//!
+//! Diagnostics go through the `AFQ_LOG`-gated `log_*` macros (stderr,
+//! error-only by default); stdout is reserved for program output.
 
 use afq::codes::registry;
 use afq::coordinator::{ensure_checkpoint, QuantSpec, Router, ServiceKey};
 use afq::exp;
 use afq::model::{bytes_per_word, generate_corpus, BatchSampler, ParamSet};
+use afq::obs;
 use afq::plan::{plan_for_params, Candidate, ErrorModel, PlannerOpts};
 use afq::util::cli::{Args, Command};
+use std::path::{Path, PathBuf};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("{}", usage());
+            // Usage is program output, not a diagnostic: stdout.
+            println!("{}", usage());
             std::process::exit(2);
         }
     };
@@ -34,6 +41,7 @@ fn main() {
         "eval" => cmd_eval(&rest),
         "exp" => cmd_exp(&rest),
         "info" => cmd_info(&rest),
+        "obs" => cmd_obs(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -41,7 +49,7 @@ fn main() {
         other => Err(format!("unknown command {other:?}\n\n{}", usage())),
     };
     if let Err(e) = result {
-        eprintln!("error: {e}");
+        afq::log_error!("{e}");
         std::process::exit(1);
     }
 }
@@ -60,7 +68,10 @@ fn usage() -> String {
        eval       perplexity eval of a model × code × block-size config\n\
                   (or a planned config via --plan <bits-budget>)\n\
        exp        regenerate paper figures (fig01..fig13, sec3, ablation-*)\n\
-       info       artifact manifest summary"
+       info       artifact manifest summary\n\
+       obs        observability tooling:\n\
+                    obs compare <baseline> [current…]  gate bench results\n\
+                    obs metrics                        Prometheus exposition"
         .to_string()
 }
 
@@ -412,6 +423,100 @@ fn cmd_exp(argv: &[String]) -> Result<(), String> {
         Ok(())
     } else {
         Err(format!("shape-check failures: {failures:?}"))
+    }
+}
+
+fn cmd_obs(argv: &[String]) -> Result<(), String> {
+    match argv.split_first().map(|(s, r)| (s.as_str(), r)) {
+        Some(("compare", rest)) => cmd_obs_compare(rest),
+        Some(("metrics", _)) => {
+            // Exposition of whatever this process registered so far —
+            // mostly useful under `exp`/`eval`; standalone it shows the
+            // registry wiring itself.
+            print!("{}", afq::obs::registry::to_prometheus());
+            Ok(())
+        }
+        _ => Err("usage: afq obs <compare|metrics> …".to_string()),
+    }
+}
+
+/// `afq obs compare <baseline-dir|file> [current-dir|file …] [--threshold f]`
+///
+/// Gate the current bench results against a baseline run's
+/// `results/BENCH_*.json` artifacts. Exit 1 (via main's error path) when
+/// any matched row's throughput regressed past the threshold; exit 0
+/// with a note when the baseline has no bench files (first run — nothing
+/// to gate against).
+fn cmd_obs_compare(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "obs compare",
+        "gate current bench results against a baseline run's BENCH_*.json",
+    )
+    .opt("threshold", "max tolerated fractional throughput drop", Some("0.15"));
+    let args = cmd.parse(argv)?;
+    let (baseline_root, current_roots) = match args.positional.split_first() {
+        Some((b, rest)) => {
+            let cur = if rest.is_empty() { vec!["results".to_string()] } else { rest.to_vec() };
+            (b.clone(), cur)
+        }
+        None => {
+            return Err(
+                "usage: afq obs compare <baseline-dir|file> [current-dir|file …] \
+                 [--threshold 0.15]"
+                    .to_string(),
+            )
+        }
+    };
+    let threshold = args.f64("threshold", 0.15);
+    let base_files = obs::compare::collect_bench_files(Path::new(&baseline_root));
+    if base_files.is_empty() {
+        println!(
+            "obs compare: no baseline BENCH_*.json under {baseline_root:?} — \
+             nothing to gate (first run?)"
+        );
+        return Ok(());
+    }
+    let cur_paths: Vec<PathBuf> = current_roots.iter().map(PathBuf::from).collect();
+    let (baselines, base_errs) = obs::compare::load_bench_docs(&base_files);
+    let (currents, cur_errs) = obs::compare::load_bench_docs(&cur_paths);
+    for e in base_errs.iter().chain(cur_errs.iter()) {
+        // Unreadable docs are loud even when they don't gate: a corrupt
+        // baseline silently passing would defeat the gate's purpose.
+        println!("obs compare: skipping unreadable bench doc: {e}");
+    }
+    let mut failures = Vec::new();
+    let mut matched = 0usize;
+    for (name, base_doc) in &baselines {
+        match currents.iter().find(|(n, _)| n == name) {
+            Some((_, cur_doc)) => {
+                matched += 1;
+                let report = obs::compare::compare_docs(name, base_doc, cur_doc, threshold);
+                print!("{}", report.render());
+                if !report.passed() {
+                    failures.push(name.clone());
+                }
+            }
+            None => println!("obs compare: bench {name:?} in baseline only — not gated"),
+        }
+    }
+    for (name, _) in &currents {
+        if !baselines.iter().any(|(n, _)| n == name) {
+            println!("obs compare: bench {name:?} is new (no baseline) — not gated");
+        }
+    }
+    if matched == 0 {
+        println!("obs compare: no bench names matched between baseline and current — not gated");
+        return Ok(());
+    }
+    if failures.is_empty() {
+        println!("obs compare: {matched} bench(es) within -{:.0}% threshold", threshold * 100.0);
+        Ok(())
+    } else {
+        Err(format!(
+            "throughput regression beyond {:.0}% in bench(es): {}",
+            threshold * 100.0,
+            failures.join(", ")
+        ))
     }
 }
 

@@ -1,0 +1,361 @@
+//! Perf-regression comparator: diff two bench result documents
+//! (`results/BENCH_*.json`) row by row and flag throughput regressions
+//! past a threshold. `afq obs compare <baseline> <current…>` is the CLI
+//! face; CI runs it against the previous run's uploaded artifacts, so
+//! the serving/quant benches *gate* on regressions instead of silently
+//! drifting (the second half of ROADMAP item 3).
+//!
+//! Both envelope shapes that [`crate::util::bench::save_bench_doc`]
+//! writes are understood:
+//!
+//! - `results: [Stats…]` — rows keyed by `name`; the metric is
+//!   `throughput_per_s` when present, else inverse `median_ns`
+//!   (iterations/s). Higher is better either way.
+//! - `results: {rows: […]}` — the serving sweep; rows keyed by
+//!   `config`/`wait_ms`/`instrumentation`, metric `rps`.
+//!
+//! Rows present only on one side are reported but never fail the gate
+//! (benches grow and shrink across PRs); a missing baseline file or
+//! directory exits clean with a "no baseline" note (first run).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One matched row: the throughput-like metric on both sides.
+#[derive(Clone, Debug)]
+pub struct RowDiff {
+    pub key: String,
+    pub unit: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl RowDiff {
+    /// Relative change, current vs baseline (+0.10 = 10% faster).
+    pub fn delta(&self) -> f64 {
+        if self.baseline <= 0.0 {
+            return 0.0;
+        }
+        self.current / self.baseline - 1.0
+    }
+}
+
+/// Result of comparing one bench document pair.
+#[derive(Debug)]
+pub struct CompareReport {
+    pub bench: String,
+    pub threshold: f64,
+    pub rows: Vec<RowDiff>,
+    /// Row keys only in the baseline (dropped benches — informational).
+    pub only_baseline: Vec<String>,
+    /// Row keys only in the current run (new benches — informational).
+    pub only_current: Vec<String>,
+}
+
+impl CompareReport {
+    /// Rows whose throughput dropped by more than the threshold.
+    pub fn regressions(&self) -> Vec<&RowDiff> {
+        self.rows.iter().filter(|r| r.delta() < -self.threshold).collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.regressions().is_empty()
+    }
+
+    /// Human-readable per-row diff table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "bench {:?}: {} matched row(s), threshold -{:.0}%\n",
+            self.bench,
+            self.rows.len(),
+            self.threshold * 100.0
+        );
+        for r in &self.rows {
+            let verdict = if r.delta() < -self.threshold { "REGRESSED" } else { "ok" };
+            out.push_str(&format!(
+                "  {:<56} base {:>12.1}{} cur {:>12.1}{} {:>+7.1}%  {verdict}\n",
+                r.key,
+                r.baseline,
+                r.unit,
+                r.current,
+                r.unit,
+                r.delta() * 100.0
+            ));
+        }
+        for k in &self.only_baseline {
+            out.push_str(&format!("  {k:<56} (baseline only — dropped row, not gated)\n"));
+        }
+        for k in &self.only_current {
+            out.push_str(&format!("  {k:<56} (new row — no baseline, not gated)\n"));
+        }
+        out
+    }
+}
+
+/// Throughput-like rows of one bench document (higher = better).
+fn rows_of(doc: &Json) -> Vec<(String, f64, &'static str)> {
+    let results = match doc.get("results") {
+        Some(r) => r,
+        None => doc,
+    };
+    if let Some(arr) = results.as_arr() {
+        return arr
+            .iter()
+            .filter_map(|o| {
+                let name = o.get("name")?.as_str()?.to_string();
+                if let Some(tp) = o.get("throughput_per_s").and_then(|j| j.as_f64()) {
+                    return Some((name, tp, "/s"));
+                }
+                let med = o.get("median_ns")?.as_f64()?;
+                if med <= 0.0 {
+                    return None;
+                }
+                Some((name, 1e9 / med, " it/s"))
+            })
+            .collect();
+    }
+    if let Some(rows) = results.get("rows").and_then(|r| r.as_arr()) {
+        return rows
+            .iter()
+            .filter_map(|o| {
+                let config = o.get("config")?.as_str()?;
+                let wait = o.get("wait_ms").and_then(|j| j.as_f64()).unwrap_or(0.0);
+                let instr = o
+                    .get("instrumentation")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("on");
+                let key = format!("{config}/wait{wait}ms/instr-{instr}");
+                let rps = o.get("rps")?.as_f64()?;
+                Some((key, rps, " req/s"))
+            })
+            .collect();
+    }
+    Vec::new()
+}
+
+/// Compare two bench documents of the same bench. Pure: no IO, no exit.
+pub fn compare_docs(bench: &str, baseline: &Json, current: &Json, threshold: f64) -> CompareReport {
+    let base_rows = rows_of(baseline);
+    let cur_rows = rows_of(current);
+    let mut rows = Vec::new();
+    let mut only_current = Vec::new();
+    for (key, cur, unit) in &cur_rows {
+        match base_rows.iter().find(|(k, _, _)| k == key) {
+            Some((_, base, _)) => rows.push(RowDiff {
+                key: key.clone(),
+                unit,
+                baseline: *base,
+                current: *cur,
+            }),
+            None => only_current.push(key.clone()),
+        }
+    }
+    let only_baseline = base_rows
+        .iter()
+        .filter(|(k, _, _)| !cur_rows.iter().any(|(ck, _, _)| ck == k))
+        .map(|(k, _, _)| k.clone())
+        .collect();
+    CompareReport {
+        bench: bench.to_string(),
+        threshold,
+        rows,
+        only_baseline,
+        only_current,
+    }
+}
+
+/// Recursively collect `BENCH_*.json` files under `path` (a file counts
+/// as itself; a missing path yields nothing — the "no baseline" case).
+pub fn collect_bench_files(path: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return out;
+    }
+    let Ok(entries) = std::fs::read_dir(path) else { return out };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            out.extend(collect_bench_files(&p));
+        } else if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Load bench docs from files/directories, keyed by their `bench` field
+/// (falling back to the file stem). Unparseable files are skipped with an
+/// error list so a corrupt baseline can't mask a regression silently.
+pub fn load_bench_docs(paths: &[PathBuf]) -> (Vec<(String, Json)>, Vec<String>) {
+    let mut docs = Vec::new();
+    let mut errors = Vec::new();
+    for path in paths {
+        for file in collect_bench_files(path) {
+            let text = match std::fs::read_to_string(&file) {
+                Ok(t) => t,
+                Err(e) => {
+                    errors.push(format!("{}: {e}", file.display()));
+                    continue;
+                }
+            };
+            match Json::parse(&text) {
+                Ok(doc) => {
+                    let name = doc
+                        .get("bench")
+                        .and_then(|b| b.as_str())
+                        .map(|s| s.to_string())
+                        .or_else(|| {
+                            file.file_stem().and_then(|s| s.to_str()).map(|s| s.to_string())
+                        })
+                        .unwrap_or_default();
+                    // Last writer wins on duplicate names (e.g. results/ and
+                    // rust/results/ both holding one bench): keep the first,
+                    // they are alternates of the same run.
+                    if !docs.iter().any(|(n, _)| n == &name) {
+                        docs.push((name, doc));
+                    }
+                }
+                Err(e) => errors.push(format!("{}: {e:?}", file.display())),
+            }
+        }
+    }
+    (docs, errors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_doc(rows: &[(&str, f64)]) -> Json {
+        let mut arr = Vec::new();
+        for (name, tp) in rows {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(name.to_string()))
+                .set("median_ns", Json::Num(1000.0))
+                .set("throughput_per_s", Json::Num(*tp));
+            arr.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("bench", Json::Str("quant".into())).set("results", Json::Arr(arr));
+        doc
+    }
+
+    fn serving_doc(rows: &[(&str, f64, f64, &str)]) -> Json {
+        let mut arr = Vec::new();
+        for (config, wait, rps, instr) in rows {
+            let mut o = Json::obj();
+            o.set("config", Json::Str(config.to_string()))
+                .set("wait_ms", Json::Num(*wait))
+                .set("rps", Json::Num(*rps))
+                .set("instrumentation", Json::Str(instr.to_string()));
+            arr.push(o);
+        }
+        let mut results = Json::obj();
+        results.set("rows", Json::Arr(arr));
+        let mut doc = Json::obj();
+        doc.set("bench", Json::Str("serving".into())).set("results", results);
+        doc
+    }
+
+    #[test]
+    fn identical_inputs_pass() {
+        let doc = stats_doc(&[("quantize/nf4/B=64", 1e8), ("qgemm", 5e7)]);
+        let rep = compare_docs("quant", &doc, &doc, 0.15);
+        assert_eq!(rep.rows.len(), 2);
+        assert!(rep.passed(), "{}", rep.render());
+        assert!(rep.regressions().is_empty());
+    }
+
+    /// The acceptance case: a synthetic regressed current run fails with a
+    /// per-row diff that names the regressed row.
+    #[test]
+    fn synthetic_regression_fails_with_per_row_diff() {
+        let base = stats_doc(&[("quantize/nf4/B=64", 1e8), ("qgemm", 5e7)]);
+        let cur = stats_doc(&[("quantize/nf4/B=64", 1e8), ("qgemm", 3e7)]); // -40%
+        let rep = compare_docs("quant", &base, &cur, 0.15);
+        assert!(!rep.passed());
+        let regs = rep.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].key, "qgemm");
+        assert!((regs[0].delta() + 0.4).abs() < 1e-9);
+        let rendered = rep.render();
+        assert!(rendered.contains("qgemm"), "{rendered}");
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("quantize/nf4/B=64"), "per-row diff: {rendered}");
+    }
+
+    #[test]
+    fn regression_within_threshold_passes() {
+        let base = stats_doc(&[("a", 100.0)]);
+        let cur = stats_doc(&[("a", 90.0)]); // -10% < 15% threshold
+        assert!(compare_docs("quant", &base, &cur, 0.15).passed());
+        // …and the same drop fails a tighter gate.
+        assert!(!compare_docs("quant", &base, &cur, 0.05).passed());
+    }
+
+    #[test]
+    fn serving_rows_keyed_by_config_wait_and_instrumentation() {
+        let base = serving_doc(&[
+            ("tiny/nf4@64", 10.0, 120.0, "on"),
+            ("tiny/nf4@64", 10.0, 121.0, "off"),
+        ]);
+        let cur = serving_doc(&[
+            ("tiny/nf4@64", 10.0, 60.0, "on"), // -50%
+            ("tiny/nf4@64", 10.0, 122.0, "off"),
+        ]);
+        let rep = compare_docs("serving", &base, &cur, 0.15);
+        assert_eq!(rep.rows.len(), 2);
+        let regs = rep.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].key, "tiny/nf4@64/wait10ms/instr-on");
+    }
+
+    #[test]
+    fn unmatched_rows_do_not_gate() {
+        let base = stats_doc(&[("dropped", 100.0), ("kept", 100.0)]);
+        let cur = stats_doc(&[("kept", 100.0), ("added", 1.0)]);
+        let rep = compare_docs("quant", &base, &cur, 0.15);
+        assert!(rep.passed());
+        assert_eq!(rep.only_baseline, vec!["dropped".to_string()]);
+        assert_eq!(rep.only_current, vec!["added".to_string()]);
+        assert!(rep.render().contains("not gated"));
+    }
+
+    #[test]
+    fn stats_rows_fall_back_to_inverse_median() {
+        let mut o = Json::obj();
+        o.set("name", Json::Str("no-throughput".into()))
+            .set("median_ns", Json::Num(2000.0));
+        let mut doc = Json::obj();
+        doc.set("results", Json::Arr(vec![o]));
+        let rows = rows_of(&doc);
+        assert_eq!(rows.len(), 1);
+        assert!((rows[0].1 - 5e5).abs() < 1.0, "1e9/2000 = 5e5 it/s");
+    }
+
+    #[test]
+    fn collect_and_load_bench_files_recursively() {
+        let dir = std::env::temp_dir().join(format!("afq_obs_compare_{}", std::process::id()));
+        let nested = dir.join("rust/results");
+        std::fs::create_dir_all(&nested).unwrap();
+        let doc = stats_doc(&[("a", 1.0)]);
+        std::fs::write(dir.join("BENCH_quant.json"), doc.to_string_pretty()).unwrap();
+        std::fs::write(nested.join("BENCH_serving.json"), "{\"bench\": \"serving\"}").unwrap();
+        std::fs::write(dir.join("not_a_bench.json"), "{}").unwrap();
+        let files = collect_bench_files(&dir);
+        assert_eq!(files.len(), 2, "{files:?}");
+        let (docs, errors) = load_bench_docs(&[dir.clone()]);
+        assert!(errors.is_empty(), "{errors:?}");
+        let mut names: Vec<&str> = docs.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort();
+        assert_eq!(names, vec!["quant", "serving"]);
+        // Missing path: clean empty result (the "no baseline" case).
+        let (docs, errors) = load_bench_docs(&[dir.join("nope")]);
+        assert!(docs.is_empty() && errors.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,213 @@
+//! Lock-free log2-bucketed latency histogram.
+//!
+//! Bucket `i` covers `[2^i, 2^(i+1))` µs; observations are clamped to
+//! ≥ 1 µs below and saturate into the top bucket above (a pathological
+//! `Duration` can never index out of range or wrap the running sum).
+//! Quantiles interpolate **linearly within the owning bucket**, so
+//! `quantile(q)` lies in `(2^i, 2^(i+1)]` — strictly above the bucket's
+//! lower bound, at most its upper bound — rather than always reporting
+//! the bucket ceiling. `count`/`sum_us` are exact, so `mean()` is exact
+//! to µs truncation.
+//!
+//! This is the one histogram type in the tree: the per-service exec
+//! latency, the request-lifecycle stage histograms
+//! ([`crate::coordinator::metrics::ServiceMetrics`]), and registry
+//! histograms ([`crate::obs::registry`]) all share it.
+//! `coordinator::metrics` re-exports it for source compatibility.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+pub(crate) const N_BUCKETS: usize = 30;
+
+/// Observations above this are recorded as this many µs (~13 days): keeps
+/// the saturating top bucket from wrapping `sum_us` on absurd durations.
+const MAX_US: u64 = 1 << 40;
+
+/// Lock-free latency histogram with log2 microsecond buckets
+/// (1µs … ~17min) plus count/sum for exact means.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = u64::try_from(d.as_micros()).unwrap_or(u64::MAX).clamp(1, MAX_US);
+        let b = (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact running sum of observed durations, in µs (each observation
+    /// truncated to µs and clamped to `[1, 2^40]`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_micros(self.sum_us() / c)
+    }
+
+    /// Quantile `q` with linear interpolation inside the owning log2
+    /// bucket: the k-th ranked observation (k = ⌈q·n⌉) is placed at
+    /// fraction k'/m through its bucket's `[2^i, 2^(i+1))` range, where
+    /// k' is its rank *within* the bucket and m the bucket's count. The
+    /// result is strictly above the bucket's lower bound and at most its
+    /// upper bound, monotone in `q`, and `Duration::ZERO` when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((total as f64 * q).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let m = b.load(Ordering::Relaxed);
+            if m == 0 {
+                continue;
+            }
+            if acc + m >= target {
+                let lower = 1u64 << i; // bucket width == lower bound (log2)
+                let frac = (target - acc) as f64 / m as f64; // ∈ (0, 1]
+                let us = lower as f64 * (1.0 + frac);
+                return Duration::from_micros(us.round() as u64);
+            }
+            acc += m;
+        }
+        Duration::from_micros(1u64 << N_BUCKETS)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2?} p50≈{:.2?} p95≈{:.2?} p99≈{:.2?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_orders_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 5000, 100, 60, 30, 15, 90] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.999));
+        // p99 must land in the bucket covering the 5ms outlier
+        assert!(h.quantile(0.99) >= Duration::from_micros(4096));
+        assert!(h.mean() >= Duration::from_micros(500));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_us(), 0);
+    }
+
+    #[test]
+    fn concurrent_observe() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.observe(Duration::from_micros(i % 100 + 1));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    /// Pins interpolated bucket-boundary behavior (satellite): k samples of
+    /// one value 2^i all land in bucket [2^i, 2^(i+1)); quantiles walk
+    /// linearly from just above the lower bound to exactly the upper bound.
+    #[test]
+    fn interpolated_quantiles_at_bucket_boundaries() {
+        let h = LatencyHistogram::new();
+        for _ in 0..4 {
+            h.observe(Duration::from_micros(8)); // bucket [8, 16)
+        }
+        // rank k of 4 sits at fraction k/4 through the bucket.
+        assert_eq!(h.quantile(0.25), Duration::from_micros(10));
+        assert_eq!(h.quantile(0.50), Duration::from_micros(12));
+        assert_eq!(h.quantile(0.75), Duration::from_micros(14));
+        assert_eq!(h.quantile(1.00), Duration::from_micros(16));
+        // A lone observation at an exact bucket boundary reports within
+        // (lower, upper] of its bucket, for every q.
+        let lone = LatencyHistogram::new();
+        lone.observe(Duration::from_micros(4)); // bucket [4, 8)
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            let v = lone.quantile(q);
+            assert!(v > Duration::from_micros(4) && v <= Duration::from_micros(8), "{v:?}");
+        }
+        // Two buckets: the quantile jumps between them monotonically.
+        let two = LatencyHistogram::new();
+        two.observe(Duration::from_micros(4)); // bucket [4, 8)
+        two.observe(Duration::from_micros(1000)); // bucket [512, 1024)
+        assert_eq!(two.quantile(0.5), Duration::from_micros(8));
+        assert_eq!(two.quantile(1.0), Duration::from_micros(1024));
+    }
+
+    /// Saturating-overflow behavior (satellite): durations past the last
+    /// bucket — including Duration::MAX, whose µs value exceeds u64 — land
+    /// in the top bucket without panicking or wrapping the sum.
+    #[test]
+    fn top_bucket_saturates() {
+        let h = LatencyHistogram::new();
+        h.observe(Duration::from_secs(3600)); // 3.6e9 µs ≫ 2^29
+        h.observe(Duration::MAX);
+        assert_eq!(h.count(), 2);
+        // Both in bucket 29 → q(1.0) interpolates to its upper bound.
+        assert_eq!(h.quantile(1.0), Duration::from_micros(1u64 << N_BUCKETS));
+        // Sum is clamped per-observation, not wrapped.
+        assert!(h.sum_us() <= 2 * (1u64 << 40));
+        assert!(h.mean() >= Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn sum_us_is_exact() {
+        let h = LatencyHistogram::new();
+        h.observe(Duration::from_micros(3));
+        h.observe(Duration::from_micros(5));
+        assert_eq!(h.sum_us(), 8);
+        assert_eq!(h.mean(), Duration::from_micros(4));
+    }
+}

@@ -1,0 +1,38 @@
+//! Observability: tracing, metrics, logging, and perf-regression gating.
+//!
+//! Zero-dependency (like [`crate::util`]) and deliberately small — four
+//! orthogonal pieces that the serving stack threads through:
+//!
+//! - [`trace`]: request-lifecycle span IDs and per-request stage
+//!   durations ([`RequestTrace`]). The batcher stamps monotonic
+//!   timestamps as a request moves admitted → queued → batched →
+//!   engine-dispatch → scored → replied and folds the deltas into
+//!   per-service stage histograms, so
+//!   [`crate::coordinator::RouterSnapshot`] reports *where* latency
+//!   lives, not just how much there is.
+//! - [`registry`]: the process-global metrics registry — named
+//!   counters/gauges/histograms (`afq_<subsystem>_<name>`), lock-free
+//!   after registration, with Prometheus text and JSON expositions. It
+//!   absorbs the previously ad-hoc tallies: service request counters,
+//!   `codes::predict` memo hits/misses, registry construction counts,
+//!   engine residency gauges, threadpool utilization, and per-service
+//!   fused-vs-reconstructed artifact counts.
+//! - [`hist`]: the shared log2-bucket [`LatencyHistogram`] with
+//!   interpolated quantiles; every latency metric in the tree uses it.
+//! - [`log`]: `AFQ_LOG`-gated structured logging behind the crate-root
+//!   `log_error!`/`log_warn!`/`log_info!`/`log_debug!` macros.
+//! - [`compare`]: the perf-regression comparator behind
+//!   `afq obs compare`, which CI runs against the previous run's
+//!   uploaded `results/BENCH_*.json` artifacts to gate on >15%
+//!   throughput regressions.
+
+pub mod compare;
+pub mod hist;
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use compare::{compare_docs, CompareReport, RowDiff};
+pub use hist::LatencyHistogram;
+pub use registry::{Counter, Gauge};
+pub use trace::RequestTrace;

@@ -1,0 +1,259 @@
+//! Process-global metrics registry: named counters, gauges, and latency
+//! histograms with lock-free updates and two exposition formats.
+//!
+//! Naming contract: `afq_<subsystem>_<name>` (counters end `_total`),
+//! with optional Prometheus-style labels baked into the name —
+//! `afq_service_requests_total{service="tiny/nf4@64",path="plan-fused"}`.
+//! Registration takes a short global lock once and hands back a handle
+//! (`Counter`/`Gauge`/`Arc<LatencyHistogram>`) wrapping a shared atomic;
+//! every update after that is a single relaxed atomic op — safe on the
+//! serving hot path. Re-registering a name returns the same underlying
+//! metric (idempotent across services/tests); re-registering under a
+//! different type is a programmer error and panics.
+//!
+//! Exposition: [`to_prometheus`] (text format, histograms as quantile
+//! summaries in µs) and [`snapshot_json`] (the `"metrics"` key
+//! [`crate::util::bench::save_bench_doc`] embeds in every
+//! `results/BENCH_*.json`).
+
+use crate::obs::hist::LatencyHistogram;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone counter handle. Clone freely; all clones share one atomic.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self, by: u64) {
+        self.0.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle (e.g. device-resident buffer counts).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, by: i64) {
+        self.0.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicI64>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+static REGISTRY: Mutex<Option<BTreeMap<String, Metric>>> = Mutex::new(None);
+
+fn with_registry<T>(f: impl FnOnce(&mut BTreeMap<String, Metric>) -> T) -> T {
+    let mut guard = REGISTRY.lock().unwrap();
+    f(guard.get_or_insert_with(BTreeMap::new))
+}
+
+/// Register (or fetch) the counter named `name`.
+pub fn counter(name: &str) -> Counter {
+    with_registry(|m| {
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(AtomicU64::new(0))))
+        {
+            Metric::Counter(c) => Counter(Arc::clone(c)),
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    })
+}
+
+/// Register (or fetch) the gauge named `name`.
+pub fn gauge(name: &str) -> Gauge {
+    with_registry(|m| {
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(AtomicI64::new(0))))
+        {
+            Metric::Gauge(g) => Gauge(Arc::clone(g)),
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    })
+}
+
+/// Register (or fetch) the latency histogram named `name`.
+pub fn histogram(name: &str) -> Arc<LatencyHistogram> {
+    with_registry(|m| {
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(LatencyHistogram::new())))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    })
+}
+
+/// Base metric name: the part before any `{label="…"}` suffix.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// `name` with one extra `key="value"` label merged into its label set.
+fn with_label(name: &str, label: &str) -> String {
+    match name.strip_suffix('}') {
+        Some(head) => format!("{head},{label}}}"),
+        None => format!("{name}{{{label}}}"),
+    }
+}
+
+/// Prometheus text exposition of every registered metric. Histograms are
+/// rendered as quantile summaries (values in µs) plus `_sum_us`/`_count`.
+pub fn to_prometheus() -> String {
+    with_registry(|m| {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, metric) in m.iter() {
+            let base = base_name(name);
+            if base != last_base {
+                let kind = match metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "summary",
+                };
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                last_base = base.to_string();
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{name} {}\n", c.load(Ordering::Relaxed)));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("{name} {}\n", g.load(Ordering::Relaxed)));
+                }
+                Metric::Histogram(h) => {
+                    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        out.push_str(&format!(
+                            "{} {}\n",
+                            with_label(name, &format!("quantile=\"{label}\"")),
+                            h.quantile(q).as_micros()
+                        ));
+                    }
+                    out.push_str(&format!("{}_sum_us {}\n", name, h.sum_us()));
+                    out.push_str(&format!("{}_count {}\n", name, h.count()));
+                }
+            }
+        }
+        out
+    })
+}
+
+/// JSON exposition: one object keyed by metric name. Counters/gauges are
+/// numbers; histograms are `{count, sum_us, mean_us, p50_us, p90_us,
+/// p99_us}` objects. This is what lands under the `"metrics"` key of
+/// every `results/BENCH_*.json`.
+pub fn snapshot_json() -> Json {
+    with_registry(|m| {
+        let mut o = Json::obj();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    o.set(name, Json::Num(c.load(Ordering::Relaxed) as f64));
+                }
+                Metric::Gauge(g) => {
+                    o.set(name, Json::Num(g.load(Ordering::Relaxed) as f64));
+                }
+                Metric::Histogram(h) => {
+                    let mut ho = Json::obj();
+                    ho.set("count", Json::Num(h.count() as f64))
+                        .set("sum_us", Json::Num(h.sum_us() as f64))
+                        .set("mean_us", Json::Num(h.mean().as_micros() as f64))
+                        .set("p50_us", Json::Num(h.quantile(0.5).as_micros() as f64))
+                        .set("p90_us", Json::Num(h.quantile(0.9).as_micros() as f64))
+                        .set("p99_us", Json::Num(h.quantile(0.99).as_micros() as f64));
+                    o.set(name, ho);
+                }
+            }
+        }
+        o
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_is_shared_across_registrations() {
+        let a = counter("afq_test_registry_shared_total");
+        let b = counter("afq_test_registry_shared_total");
+        a.inc(2);
+        b.inc(3);
+        assert_eq!(a.get(), 5);
+        assert_eq!(b.get(), 5);
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let g = gauge("afq_test_registry_gauge");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+        assert_eq!(gauge("afq_test_registry_gauge").get(), 5);
+    }
+
+    #[test]
+    fn histogram_registers_and_observes() {
+        let h = histogram("afq_test_registry_hist_us");
+        h.observe(Duration::from_micros(100));
+        assert!(histogram("afq_test_registry_hist_us").count() >= 1);
+    }
+
+    #[test]
+    fn label_merging() {
+        assert_eq!(with_label("afq_x_total", "q=\"0.5\""), "afq_x_total{q=\"0.5\"}");
+        assert_eq!(
+            with_label("afq_x_total{a=\"b\"}", "q=\"0.5\""),
+            "afq_x_total{a=\"b\",q=\"0.5\"}"
+        );
+        assert_eq!(base_name("afq_x_total{a=\"b\"}"), "afq_x_total");
+        assert_eq!(base_name("afq_x_total"), "afq_x_total");
+    }
+
+    #[test]
+    fn prometheus_and_json_expositions_agree() {
+        let c = counter("afq_test_registry_expo_total{service=\"svc\"}");
+        c.inc(4);
+        let h = histogram("afq_test_registry_expo_us");
+        h.observe(Duration::from_micros(8));
+        let text = to_prometheus();
+        assert!(text.contains("# TYPE afq_test_registry_expo_total counter"), "{text}");
+        assert!(text.contains("afq_test_registry_expo_total{service=\"svc\"} 4"), "{text}");
+        assert!(text.contains("afq_test_registry_expo_us{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("afq_test_registry_expo_us_count 1"), "{text}");
+        let j = snapshot_json();
+        assert_eq!(
+            j.get("afq_test_registry_expo_total{service=\"svc\"}")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            4.0
+        );
+        let hj = j.get("afq_test_registry_expo_us").unwrap();
+        assert_eq!(hj.get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(hj.get("p50_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Request-lifecycle tracing: span IDs and per-request stage durations.
+//!
+//! Every [`crate::coordinator::ScoreRequest`] carries a process-unique
+//! span ID; the batcher stamps monotonic (`Instant`) stage timestamps as
+//! the request moves admitted → queued → batched → engine-dispatch →
+//! scored → replied, folds the inter-stage durations into the owning
+//! service's stage histograms
+//! ([`crate::coordinator::metrics::ServiceMetrics`]), and returns them
+//! per request as a [`RequestTrace`]. The four stage durations partition
+//! the end-to-end wall time exactly, so stage histogram sums are
+//! consistent with the e2e histogram up to µs rounding — an invariant
+//! the batcher test suite asserts.
+//!
+//! Tracing is on by default and costs a handful of `Instant::now()`
+//! calls plus relaxed atomic bumps per request; [`set_enabled`] turns
+//! the stage stamping off process-wide (span IDs and counters remain)
+//! so the serving bench can price the overhead.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Allocate a process-unique span ID (monotone, never 0).
+pub fn next_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Is stage-timestamp tracing enabled? (Span IDs and request counters are
+/// always on; this only gates the per-stage histogram work.)
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle stage tracing process-wide. Returns the previous value so
+/// benches can restore it.
+pub fn set_enabled(on: bool) -> bool {
+    ENABLED.swap(on, Ordering::Relaxed)
+}
+
+/// Serialize tests that flip — or assert exact effects of — the global
+/// tracing flag. Tests run in parallel in one process, so a test that
+/// disables tracing must hold this while any test counting stage
+/// observations holds it too.
+pub fn lock_for_tests() -> std::sync::MutexGuard<'static, ()> {
+    static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    M.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-request stage durations, returned with every
+/// [`crate::coordinator::ScoreResponse`]. All four stages are measured on
+/// one monotonic timeline in the batcher:
+///
+/// - `queue`: admitted → picked out of the queue into a forming batch
+/// - `batch_wait`: picked → the assembled batch dispatches to the engine
+/// - `engine`: dispatch → the backend returned (scored); shared by every
+///   request in the batch
+/// - `total`: admitted → reply construction (`queue + batch_wait +
+///   engine` plus the sub-µs fan-out slice)
+///
+/// Zeroed (except `span_id`) when tracing is disabled via [`set_enabled`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub span_id: u64,
+    pub queue: Duration,
+    pub batch_wait: Duration,
+    pub engine: Duration,
+    pub total: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ids_are_unique_and_nonzero() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let id = next_span_id();
+            assert!(id > 0);
+            assert!(seen.insert(id), "span id {id} repeated");
+        }
+    }
+
+    #[test]
+    fn enabled_toggle_round_trips() {
+        let _g = lock_for_tests();
+        let was = set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(was);
+    }
+}

@@ -50,6 +50,7 @@ impl Engine {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
         crate::log_debug!("{}", t.report());
+        crate::obs::registry::counter("afq_runtime_compiles_total").inc(1);
         self.exes.insert(name.to_string(), exe);
         Ok(())
     }

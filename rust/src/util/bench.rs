@@ -202,16 +202,22 @@ impl Bencher {
 
 /// Write a bench payload as `results/BENCH_<name>.json` via
 /// [`crate::util::write_file`] (which creates `results/` as needed). The
-/// payload is one JSON object — `{"bench": <name>, "results": [...]}` — so
+/// payload is one JSON object —
+/// `{"bench": <name>, "results": [...], "metrics": {...}}` — so
 /// downstream tooling can glob `BENCH_*.json` and key on the `bench`
-/// field. Single owner of that envelope: used by [`Bencher::save`] and by
-/// bench binaries that collect rows without a `Bencher` (the serving
-/// sweep). Returns the written path.
+/// field; `metrics` is the process's metrics-registry snapshot
+/// ([`crate::obs::registry::snapshot_json`]) taken at save time, so every
+/// archived bench run carries its counters (memo hits, fallbacks, pool
+/// utilization) alongside the timings. Single owner of that envelope:
+/// used by [`Bencher::save`] and by bench binaries that collect rows
+/// without a `Bencher` (the serving sweep). Returns the written path.
 pub fn save_bench_doc(name: &str, results: crate::util::json::Json) -> std::io::Result<String> {
     use crate::util::json::Json;
     let path = format!("results/BENCH_{name}.json");
     let mut doc = Json::obj();
-    doc.set("bench", Json::Str(name.to_string())).set("results", results);
+    doc.set("bench", Json::Str(name.to_string()))
+        .set("results", results)
+        .set("metrics", crate::obs::registry::snapshot_json());
     crate::util::write_file(&path, &doc.to_string_pretty())?;
     Ok(path)
 }
@@ -275,6 +281,24 @@ mod tests {
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "unit_test_tmp");
         assert_eq!(back.at(&["results"]).unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The envelope embeds a metrics-registry snapshot that survives a JSON
+    /// round trip: registered counters come back under `"metrics"` with
+    /// their exact values.
+    #[test]
+    fn save_bench_doc_embeds_metrics_snapshot() {
+        use crate::util::json::Json;
+        let c = crate::obs::registry::counter("afq_test_bench_embed_total");
+        c.inc(7);
+        let path = save_bench_doc("unit_test_metrics_tmp", Json::Arr(vec![])).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let got = back
+            .at(&["metrics", "afq_test_bench_embed_total"])
+            .and_then(|j| j.as_f64())
+            .unwrap();
+        assert!(got >= 7.0, "snapshot counter round-trips: {got}");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -84,39 +84,10 @@ pub fn artifacts_available(dir: &str) -> bool {
         !artifacts_required(),
         "AFQ_REQUIRE_ARTIFACTS=1 but {dir}/manifest.json is missing — run `make artifacts`"
     );
-    eprintln!("skipping: no artifacts at {dir}/ (run `make artifacts`)");
+    // CI can never hit this branch silently: artifact jobs set
+    // AFQ_REQUIRE_ARTIFACTS=1, which panics above instead of skipping.
+    crate::log_warn!("skipping: no artifacts at {dir}/ (run `make artifacts`)");
     false
-}
-
-/// Simple leveled logger controlled by AFQ_LOG (error|warn|info|debug).
-pub fn log_level() -> u8 {
-    match std::env::var("AFQ_LOG").as_deref() {
-        Ok("error") => 0,
-        Ok("warn") => 1,
-        Ok("debug") => 3,
-        _ => 2, // info default
-    }
-}
-
-#[macro_export]
-macro_rules! log_info {
-    ($($arg:tt)*) => {
-        if $crate::util::log_level() >= 2 { eprintln!("[info] {}", format!($($arg)*)); }
-    };
-}
-
-#[macro_export]
-macro_rules! log_debug {
-    ($($arg:tt)*) => {
-        if $crate::util::log_level() >= 3 { eprintln!("[debug] {}", format!($($arg)*)); }
-    };
-}
-
-#[macro_export]
-macro_rules! log_warn {
-    ($($arg:tt)*) => {
-        if $crate::util::log_level() >= 1 { eprintln!("[warn] {}", format!($($arg)*)); }
-    };
 }
 
 #[cfg(test)]

@@ -12,10 +12,27 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pool utilization counters in the global metrics registry, registered
+/// once (OnceLock) so the hot paths never take the registry lock.
+struct PoolMetrics {
+    jobs: crate::obs::registry::Counter,
+    items: crate::obs::registry::Counter,
+    busy_us: crate::obs::registry::Counter,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static M: OnceLock<PoolMetrics> = OnceLock::new();
+    M.get_or_init(|| PoolMetrics {
+        jobs: crate::obs::registry::counter("afq_threadpool_jobs_total"),
+        items: crate::obs::registry::counter("afq_threadpool_items_total"),
+        busy_us: crate::obs::registry::counter("afq_threadpool_busy_us_total"),
+    })
+}
 
 enum Msg {
     Run(Job),
@@ -65,6 +82,7 @@ impl ThreadPool {
 
     /// Fire-and-forget.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        pool_metrics().jobs.inc(1);
         self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
     }
 
@@ -78,6 +96,7 @@ impl ThreadPool {
         if n == 0 {
             return Vec::new();
         }
+        pool_metrics().items.inc(n as u64);
         let f = Arc::new(f);
         let (rtx, rrx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
         let next = Arc::new(AtomicUsize::new(0));
@@ -137,6 +156,7 @@ where
     if n == 0 {
         return Vec::new();
     }
+    pool_metrics().items.inc(n as u64);
     let workers = workers.max(1).min(n);
     if workers == 1 {
         return (0..n).map(f).collect();
@@ -147,6 +167,10 @@ where
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
+                    // Worker utilization: one timer per worker per call, not
+                    // per item — the per-index loop stays allocation- and
+                    // atomic-inc-free beyond the work-stealing counter.
+                    let t0 = std::time::Instant::now();
                     let mut got: Vec<(usize, T)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -155,15 +179,20 @@ where
                         }
                         got.push((i, f(i)));
                     }
-                    got
+                    let busy = t0.elapsed().as_micros() as u64;
+                    (got, busy)
                 })
             })
             .collect();
+        let mut busy_total = 0u64;
         for h in handles {
-            for (i, v) in h.join().expect("scoped worker panicked") {
+            let (got, busy) = h.join().expect("scoped worker panicked");
+            busy_total += busy;
+            for (i, v) in got {
                 slots[i] = Some(v);
             }
         }
+        pool_metrics().busy_us.inc(busy_total);
     });
     slots.into_iter().map(|s| s.unwrap()).collect()
 }
@@ -250,6 +279,18 @@ mod tests {
     #[test]
     fn default_workers_at_least_one() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn utilization_counters_advance() {
+        let before = pool_metrics().items.get();
+        let _ = scope_map(4, 32, |i| i);
+        assert!(pool_metrics().items.get() >= before + 32);
+        let jobs_before = pool_metrics().jobs.get();
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool);
+        assert!(pool_metrics().jobs.get() >= jobs_before + 1);
     }
 
     #[test]

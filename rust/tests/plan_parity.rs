@@ -28,7 +28,7 @@
 
 use afq::codes::registry;
 use afq::codes::Code;
-use afq::coordinator::{Batcher, BatcherConfig, Counters, ScoreBackend};
+use afq::coordinator::{Batcher, BatcherConfig, ScoreBackend, ServiceMetrics};
 use afq::model::{planned_fused_weight_args, planned_weight_args, ParamSet};
 use afq::plan::{canonical_mixed_plan, Assignment, QuantPlan};
 use afq::quant::{double::DqScales, quantize, MatrixQuant, QuantSpec, Quantized};
@@ -201,7 +201,7 @@ enum PlannedTensor {
 struct PlanBackend {
     batch: usize,
     seq: usize,
-    counters: Counters,
+    metrics: ServiceMetrics,
     tensors: Vec<PlannedTensor>,
     dequant: bool,
 }
@@ -225,7 +225,7 @@ impl PlanBackend {
                 }
             })
             .collect();
-        PlanBackend { batch: meta.batch, seq: meta.seq_len, counters: Counters::default(), tensors, dequant }
+        PlanBackend { batch: meta.batch, seq: meta.seq_len, metrics: ServiceMetrics::new(), tensors, dequant }
     }
 
     /// Deterministic per-row pseudo-score: probe each tensor with a row
@@ -272,8 +272,8 @@ impl ScoreBackend for PlanBackend {
     fn seq(&self) -> usize {
         self.seq
     }
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
     }
     fn score(&self, ids: Vec<i32>, _targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
         let mut nll = Vec::with_capacity(self.batch * self.seq);
@@ -355,7 +355,7 @@ fn fused_plan_backend_through_batcher_is_bitwise_stable() {
         }
     });
     batcher.stop();
-    let c = fused.counters.snapshot();
+    let c = fused.metrics.counters.snapshot();
     assert_eq!(c.requests, 24, "exactly the submitted requests");
     assert_eq!(c.errors, 0);
 }
