@@ -1,7 +1,9 @@
 //! Bench: L3 quantizer hot path — blockwise quantize/dequantize throughput
 //! across block sizes, the encode kernel variants, double quantization, and
-//! the fused serving path: qgemm vs dequantize-then-matmul, plus
-//! serial-vs-parallel rows for both the quantizer and qgemm.
+//! the fused serving path: qgemm vs dequantize-then-matmul, the tiled
+//! microkernel vs the order-faithful scalar reference, batched vs
+//! per-request scoring, plus serial-vs-parallel rows for both the
+//! quantizer and qgemm.
 //! (harness = false; uses afq::util::bench.)
 //!
 //! Run: `cargo bench --bench quant [-- <filter>]`
@@ -77,6 +79,34 @@ fn main() {
     b.bench_with_elements("qgemm/fused/B=64", Some(flops), || wq.qgemm(&x, &nf4));
     b.bench_with_elements("qgemm/dequant+matmul/B=64", Some(flops), || {
         x.matmul(&wq.dequantize(&nf4))
+    });
+
+    // Tiled microkernel vs the order-faithful scalar reference (bitwise
+    // equal outputs — the gap is pure tiling/register blocking). The B=64
+    // rows share wq above; B=1024 stresses long segments per panel.
+    println!("-- tiled qgemm vs scalar reference --");
+    let wq1024 = MatrixQuant::quantize(&m, 1024, &nf4, QuantAxis::Col);
+    b.bench_with_elements("qgemm/tiled/B=64", Some(flops), || wq.qgemm(&x, &nf4));
+    b.bench_with_elements("qgemm/scalar/B=64", Some(flops), || {
+        afq::quant::qgemm_scalar(&x, &wq, &nf4)
+    });
+    b.bench_with_elements("qgemm/tiled/B=1024", Some(flops), || wq1024.qgemm(&x, &nf4));
+    b.bench_with_elements("qgemm/scalar/B=1024", Some(flops), || {
+        afq::quant::qgemm_scalar(&x, &wq1024, &nf4)
+    });
+
+    // Batched scoring: 8 requests sharing one service amortize a single
+    // weight decode via qgemm_batch vs decoding per request (bitwise
+    // equal per-request outputs; same total flops).
+    println!("-- batched vs per-request qgemm (8 requests of 2x512) --");
+    let mut rng4 = Rng::new(3);
+    let reqs: Vec<Matrix> = (0..8).map(|_| Matrix::randn(2, 512, 1.0, &mut rng4)).collect();
+    let batch_flops = (8 * 2 * 512 * 512) as f64;
+    b.bench_with_elements("qgemm/batched/B=64", Some(batch_flops), || {
+        wq.qgemm_batch(&reqs, &nf4, 1)
+    });
+    b.bench_with_elements("qgemm/per-request/B=64", Some(batch_flops), || {
+        reqs.iter().map(|r| wq.qgemm(r, &nf4)).collect::<Vec<_>>()
     });
 
     // Serial baselines for these: quantize/nf4/B=64 and qgemm/fused/B=64

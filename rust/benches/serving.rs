@@ -10,7 +10,10 @@
 //! fused-vs-reconstructed cost shows up as two adjacent rows. The first
 //! wait setting additionally runs with stage tracing on AND off
 //! (`instrumentation` column), so the observability cost is itself a
-//! measured pair of rows (acceptance target: <2%).
+//! measured pair of rows (acceptance target: <2%), and a
+//! batched-vs-per-request pair on the direct service path shows what
+//! `score_batches` (one weight-arg marshal per set) buys over a
+//! per-request `score_batch` loop.
 //!
 //! Needs `make artifacts`. Run: `cargo bench --bench serving`
 //! Quick mode (CI): `AFQ_BENCH_QUICK=1 cargo bench --bench serving`
@@ -220,6 +223,47 @@ fn main() {
                 rps_by_mode[0],
                 rps_by_mode[1]
             );
+        }
+        // Batched vs per-request scoring on the direct (batcher-bypassing)
+        // service path: score_batches marshals the cached weight-arg tail
+        // once for the whole set, where the per-request loop re-marshals
+        // it every call. Two adjacent rows at the first wait only — the
+        // wait setting doesn't touch this path.
+        if wait == waits_ms[0] {
+            let key = &configs[0];
+            let n_batches = if quick { 4 } else { 16 };
+            let mut sampler = BatchSampler::new(corpus.clone(), seq, 1, 99);
+            let batches: Vec<(Vec<i32>, Vec<i32>)> =
+                (0..n_batches).map(|_| sampler.sample()).collect();
+            for (label, runner) in [
+                ("per-request", Box::new(|| {
+                    for (ids, tgt) in &batches {
+                        router.score_batch(key, ids.clone(), tgt.clone()).expect("scored");
+                    }
+                }) as Box<dyn Fn() + '_>),
+                ("batched", Box::new(|| {
+                    router.score_batches(key, &batches).expect("scored");
+                })),
+            ] {
+                runner(); // warm
+                let t0 = Instant::now();
+                let reps = if quick { 2 } else { 5 };
+                for _ in 0..reps {
+                    runner();
+                }
+                let per_pass = t0.elapsed() / reps;
+                let rps = n_batches as f64 / per_pass.as_secs_f64();
+                println!(
+                    "direct/{label}: {n_batches} batches in {per_pass:.2?}/pass ({rps:.1} req/s)"
+                );
+                let mut row = Json::obj();
+                row.set("config", Json::Str(format!("direct/{label}")))
+                    .set("model", Json::Str(model.into()))
+                    .set("wait_ms", Json::Num(wait as f64))
+                    .set("requests", Json::Num(n_batches as f64))
+                    .set("rps", Json::Num(rps));
+                rows.push(row);
+            }
         }
         router.shutdown();
     }

@@ -611,6 +611,85 @@ mod tests {
         assert!(m.engine.sum_us() * 2 > e2e_sum, "engine dominates this workload");
     }
 
+    /// Stage-sum re-check with the engine stage running on the
+    /// **work-stealing pool**: a backend that shards each batch's rows
+    /// over `scope_map` (the host fused-qgemm shape) must keep the
+    /// e2e-partition property exactly as tight as the sleeping mock —
+    /// stealing/joining inside the engine stage cannot leak time into an
+    /// unaccounted gap, and results stay per-request correct.
+    #[test]
+    fn stage_sums_stay_consistent_under_work_stealing_pool() {
+        struct PoolBackend {
+            batch: usize,
+            seq: usize,
+            metrics: ServiceMetrics,
+        }
+        impl ScoreBackend for PoolBackend {
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn seq(&self) -> usize {
+                self.seq
+            }
+            fn metrics(&self) -> &ServiceMetrics {
+                &self.metrics
+            }
+            fn score(&self, ids: Vec<i32>, targets: Vec<i32>) -> Result<(Vec<f32>, Vec<i32>), String> {
+                // Rows sharded over the work-stealing scope_map, with
+                // deliberately uneven per-row cost so chunks get stolen.
+                let rows = crate::util::threadpool::scope_map(4, self.batch, |r| {
+                    let row = &ids[r * self.seq..(r + 1) * self.seq];
+                    let spin = 1_000 * (r as u64 + 1);
+                    let mut sink = 0u64;
+                    for k in 0..spin {
+                        sink = sink.wrapping_add(k);
+                    }
+                    std::hint::black_box(sink);
+                    row.iter().map(|&v| v as f32 * 0.5).collect::<Vec<f32>>()
+                });
+                Ok((rows.concat(), targets))
+            }
+        }
+        let _g = trace::lock_for_tests();
+        assert!(trace::enabled(), "tracing is on by default");
+        let backend =
+            Arc::new(PoolBackend { batch: 4, seq: 8, metrics: ServiceMetrics::new() });
+        let (handle, mut batcher) = Batcher::spawn(
+            Arc::clone(&backend) as Arc<dyn ScoreBackend>,
+            BatcherConfig { max_wait: Duration::from_millis(10), ..Default::default() },
+        );
+        let joins: Vec<_> = (0..8)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let (ids, tgt) = row(i * 100, 8);
+                    let resp = h.score(ids.clone(), tgt.clone()).expect("scored");
+                    check_response(&ids, &tgt, &resp);
+                    resp
+                })
+            })
+            .collect();
+        let responses: Vec<ScoreResponse> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        batcher.stop();
+        let m = &backend.metrics;
+        for h in [&m.queue, &m.batch_wait, &m.engine, &m.e2e] {
+            assert_eq!(h.count(), 8, "every stage sees every request exactly once");
+        }
+        for r in &responses {
+            let t = r.trace;
+            let parts = t.queue + t.batch_wait + t.engine;
+            assert!(t.total >= parts, "total includes all stages: {t:?}");
+            assert!(t.total - parts < Duration::from_millis(1), "no unaccounted gap: {t:?}");
+        }
+        let stage_sum = m.queue.sum_us() + m.batch_wait.sum_us() + m.engine.sum_us();
+        let e2e_sum = m.e2e.sum_us();
+        let slack = 8 * 4 * 2; // requests × histograms × µs clamp/truncation
+        assert!(
+            stage_sum <= e2e_sum + slack && e2e_sum <= stage_sum + slack,
+            "stage sums {stage_sum}µs vs e2e {e2e_sum}µs (slack {slack}µs)"
+        );
+    }
+
     /// With tracing disabled, responses still carry span IDs but the stage
     /// histograms stay untouched (the <2%-overhead off switch).
     #[test]

@@ -292,6 +292,20 @@ impl Router {
         self.entry(key)?.service.score(ids, targets)
     }
 
+    /// Batched fast path: score several pre-assembled [batch, seq]
+    /// batches on the keyed service through one submission pass — the
+    /// weight-argument tail is marshalled once and the engine sees the
+    /// executions back-to-back (see [`ModelService::score_many`]). The
+    /// batched-vs-per-request cost shows up as adjacent rows in
+    /// `benches/serving.rs`.
+    pub fn score_batches(
+        &self,
+        key: &ServiceKey,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<Vec<(Vec<f32>, Vec<i32>)>, String> {
+        self.entry(key)?.service.score_many(batches)
+    }
+
     /// Mean NLL/token of the keyed service over pre-assembled eval batches.
     pub fn mean_nll(&self, key: &ServiceKey, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<f64, String> {
         self.entry(key)?.service.mean_nll(batches)

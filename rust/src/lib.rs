@@ -34,10 +34,20 @@
 //!   validated — block sizes < 2 are rejected with a clear error), and
 //!   the fused serving path ([`quant::fused`]): `qgemm` multiplies through
 //!   packed nibbles + per-block scales directly (no dequantized
-//!   intermediate), mirroring the L1 Pallas `qmatmul` kernel; the
-//!   `quantize_par`/`qgemm_par` variants are **bit-identical** to their
-//!   serial counterparts for any worker count, and golden-vector parity
-//!   with the Pallas kernel is pinned by `rust/tests/fused_parity.rs`.
+//!   intermediate), mirroring the L1 Pallas `qmatmul` kernel. The host
+//!   kernel is cache-tiled and register-blocked (`MR = 4` independent
+//!   accumulator chains over batch rows; `KC = 32 × NC = 128` decoded
+//!   panels on the row layout) with per-panel segment descriptors
+//!   replacing per-element scale lookups — but every per-element
+//!   accumulation chain keeps the reference order, so the tiled kernel
+//!   is **bitwise identical** to the order-faithful `qgemm_scalar`
+//!   reference, `quantize_par`/`qgemm_par` are **bit-identical** to
+//!   their serial counterparts for any worker count (parallel shards own
+//!   disjoint output windows in the shared buffer — no merge copies),
+//!   and `qgemm_batch` amortizes one weight decode across stacked
+//!   requests while staying bitwise equal to scoring each alone.
+//!   Golden-vector parity with the Pallas kernel is pinned by
+//!   `rust/tests/fused_parity.rs`.
 //! - [`plan`] — the **quantization planner**: given a model's weights, a
 //!   candidate grid (families × block sizes, ± double-quantized scales)
 //!   and a bits-per-parameter budget, assign each tensor its own spec by
@@ -86,6 +96,14 @@
 //!   with Prometheus/JSON exposition, `AFQ_LOG` structured logging, and
 //!   the `afq obs compare` perf-regression gate CI runs over
 //!   `results/BENCH_*.json` artifacts.
+//! - [`util`] — the shared [`util::threadpool`]: a fixed-size pool whose
+//!   `scope_map` runs **work-stealing** over per-worker index arenas
+//!   (chunked atomic claims, steal-on-empty) yet merges results into
+//!   index-ordered slots, so callers see serial-identical output for any
+//!   worker count. Panic semantics are part of the contract: a panicking
+//!   job never hangs or silently kills a worker — the payload propagates
+//!   to the caller (`map_indexed`/`scope_map`) or is caught, counted in
+//!   `afq_threadpool_panics_total`, and the worker survives (`execute`).
 //!
 //! ## Observability contracts
 //!

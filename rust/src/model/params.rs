@@ -127,10 +127,13 @@ impl ParamSet {
     ///
     /// The degenerate uniform case of [`Self::quantize_matrices_planned`]
     /// — one code for every matrix. Blocks are sharded over
-    /// [`crate::util::threadpool::scope_map`] (`quantize_par`), which is
-    /// bit-identical to the serial quantizer — this is the
-    /// `ModelService::prepare` weight path, where serial scalar
-    /// quantization used to dominate service start-up.
+    /// [`crate::util::threadpool::scope_map`] (`quantize_par`) — now a
+    /// work-stealing pool, so one slow matrix no longer idles the other
+    /// workers — and remain bit-identical to the serial quantizer; this
+    /// is the `ModelService::prepare` weight path, where serial scalar
+    /// quantization used to dominate service start-up. (At request time
+    /// the same weights are decoded once per *batch* by
+    /// `Matrix::qgemm_batch`, not once per request.)
     pub fn quantize_matrices(
         &self,
         meta: &ModelMeta,

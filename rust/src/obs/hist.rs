@@ -3,11 +3,15 @@
 //! Bucket `i` covers `[2^i, 2^(i+1))` µs; observations are clamped to
 //! ≥ 1 µs below and saturate into the top bucket above (a pathological
 //! `Duration` can never index out of range or wrap the running sum).
-//! Quantiles interpolate **linearly within the owning bucket**, so
-//! `quantile(q)` lies in `(2^i, 2^(i+1)]` — strictly above the bucket's
-//! lower bound, at most its upper bound — rather than always reporting
-//! the bucket ceiling. `count`/`sum_us` are exact, so `mean()` is exact
-//! to µs truncation.
+//! The saturating top bucket's true range is `[2^29, 2^40]` µs — every
+//! observation at or past `2^29` µs lands there, clamped to `MAX_US`.
+//! Quantiles interpolate **linearly within the owning bucket** over that
+//! bucket's true range, so `quantile(q)` lies in `(2^i, 2^(i+1)]` for
+//! interior buckets and in `(2^29, 2^40]` for the top one — strictly
+//! above the bucket's lower bound, at most its upper bound — rather than
+//! always reporting the bucket ceiling. `count`/`sum_us` are exact, so
+//! `mean()` is exact to µs truncation and can never exceed
+//! `quantile(1.0)` by orders of magnitude (the pre-fix top-bucket bug).
 //!
 //! This is the one histogram type in the tree: the per-service exec
 //! latency, the request-lifecycle stage histograms
@@ -24,8 +28,9 @@ pub(crate) const N_BUCKETS: usize = 30;
 /// the saturating top bucket from wrapping `sum_us` on absurd durations.
 const MAX_US: u64 = 1 << 40;
 
-/// Lock-free latency histogram with log2 microsecond buckets
-/// (1µs … ~17min) plus count/sum for exact means.
+/// Lock-free latency histogram with log2 microsecond buckets (1 µs …
+/// 2^29 µs ≈ 9 min, then one saturating bucket to 2^40 µs ≈ 13 days)
+/// plus count/sum for exact means.
 pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
@@ -72,10 +77,14 @@ impl LatencyHistogram {
 
     /// Quantile `q` with linear interpolation inside the owning log2
     /// bucket: the k-th ranked observation (k = ⌈q·n⌉) is placed at
-    /// fraction k'/m through its bucket's `[2^i, 2^(i+1))` range, where
-    /// k' is its rank *within* the bucket and m the bucket's count. The
-    /// result is strictly above the bucket's lower bound and at most its
-    /// upper bound, monotone in `q`, and `Duration::ZERO` when empty.
+    /// fraction k'/m through its bucket's range, where k' is its rank
+    /// *within* the bucket and m the bucket's count. Interior bucket `i`
+    /// interpolates over `[2^i, 2^(i+1))`; the saturating top bucket over
+    /// its true `[2^29, 2^40]` range (observations saturate there, so its
+    /// ceiling is `MAX_US`, not `2^30` — `quantile(1.0)` can reach the
+    /// clamp and stays consistent with `mean()` for long observations).
+    /// The result is strictly above the bucket's lower bound and at most
+    /// its upper bound, monotone in `q`, and `Duration::ZERO` when empty.
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
@@ -90,14 +99,22 @@ impl LatencyHistogram {
                 continue;
             }
             if acc + m >= target {
-                let lower = 1u64 << i; // bucket width == lower bound (log2)
+                let lower = 1u64 << i;
                 let frac = (target - acc) as f64 / m as f64; // ∈ (0, 1]
-                let us = lower as f64 * (1.0 + frac);
+                let us = if i == N_BUCKETS - 1 {
+                    // Saturating top bucket: width is its TRUE range up to
+                    // the observation clamp, not the log2 width.
+                    lower as f64 + (MAX_US - lower) as f64 * frac
+                } else {
+                    lower as f64 * (1.0 + frac) // width == lower bound (log2)
+                };
                 return Duration::from_micros(us.round() as u64);
             }
             acc += m;
         }
-        Duration::from_micros(1u64 << N_BUCKETS)
+        // Unreachable while count() tallies every observe(); kept as a
+        // safety net at the histogram's true ceiling.
+        Duration::from_micros(MAX_US)
     }
 
     pub fn summary(&self) -> String {
@@ -188,15 +205,25 @@ mod tests {
 
     /// Saturating-overflow behavior (satellite): durations past the last
     /// bucket — including Duration::MAX, whose µs value exceeds u64 — land
-    /// in the top bucket without panicking or wrapping the sum.
+    /// in the top bucket without panicking or wrapping the sum, and the
+    /// top bucket interpolates over its TRUE `[2^29, 2^40]` µs range (the
+    /// pre-fix kernel capped `quantile(1.0)` at 2^30 µs ≈ 17.9 min while
+    /// `mean()` could legitimately exceed an hour).
     #[test]
     fn top_bucket_saturates() {
         let h = LatencyHistogram::new();
         h.observe(Duration::from_secs(3600)); // 3.6e9 µs ≫ 2^29
         h.observe(Duration::MAX);
         assert_eq!(h.count(), 2);
-        // Both in bucket 29 → q(1.0) interpolates to its upper bound.
-        assert_eq!(h.quantile(1.0), Duration::from_micros(1u64 << N_BUCKETS));
+        // Both in bucket 29 → q(1.0) interpolates to the bucket's true
+        // upper bound: the MAX_US observation clamp, not 2^30.
+        assert_eq!(h.quantile(1.0), Duration::from_micros(1u64 << 40));
+        // Any intermediate quantile stays inside the true range…
+        let q5 = h.quantile(0.5);
+        assert!(q5 > Duration::from_micros(1u64 << 29));
+        assert!(q5 <= Duration::from_micros(1u64 << 40));
+        // …and the exact mean can no longer dwarf the top quantile.
+        assert!(h.mean() <= h.quantile(1.0));
         // Sum is clamped per-observation, not wrapped.
         assert!(h.sum_us() <= 2 * (1u64 << 40));
         assert!(h.mean() >= Duration::from_secs(3600));

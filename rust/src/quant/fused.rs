@@ -2,79 +2,169 @@
 //! path for blockwise-absmax 4-bit weights.
 //!
 //! [`qgemm`] computes `y = x · W` reading the packed nibbles and per-block
-//! scales of a [`MatrixQuant`] *directly*: per quantization block it
-//! refreshes a 16-entry `table[idx] * scale` LUT, decodes each weight once
-//! through the LUT, and accumulates in f32 — no intermediate dequantized
-//! matrix is ever materialized. This is the host-side mirror of the L1
-//! Pallas kernel `python/compile/kernels/qmatmul.py` (which dequantizes a
-//! `(K, n_tile)` tile in-register per grid step); the two are held together
-//! by the golden-vector parity test in `rust/tests/fused_parity.rs`.
+//! scales of a [`MatrixQuant`] *directly*: per quantization-block segment
+//! it refreshes a 16-entry `table[idx] * scale` LUT, decodes each weight
+//! once through the LUT, and accumulates in f32 — no intermediate
+//! dequantized matrix is ever materialized. This is the host-side mirror
+//! of the L1 Pallas kernel `python/compile/kernels/qmatmul.py` (which
+//! dequantizes a `(K, n_tile)` tile in-register per grid step); the two
+//! are held together by the golden-vector parity test in
+//! `rust/tests/fused_parity.rs`.
 //!
-//! Both [`QuantAxis`] layouts are supported, including the `per_line` scale
-//! indexing MatrixQuant falls back to when the blocked axis is not
-//! commensurate with the block size, and double-quantized scales (the
-//! reconstructed scales in `q.scales` are read as-is, so DQ round-trips
-//! through the same code path).
+//! ## Tiled microkernel
 //!
-//! The kernel is driven by a **per-call** `(code, B)` — the code table is
-//! an argument and the block size lives on the `MatrixQuant` — never by
-//! any service-wide configuration. That is what makes heterogeneous
-//! [`crate::plan::QuantPlan`]s servable in the nibble domain: the serving
-//! layer calls this same kernel once per tensor with that tensor's own
-//! LUT and block size (see [`MatrixQuant::from_flat`] for the flat L2
-//! view and `rust/tests/plan_parity.rs` for the battery pinning the
-//! per-tensor path bitwise to this kernel).
+//! The kernel is cache-tiled and register-blocked:
+//!
+//! - **Segment descriptors.** Each stored line's quantization-block
+//!   segments (`[start, end)` + scale) are computed **once per line** into
+//!   a reusable descriptor buffer ([`line_segments`]) instead of
+//!   re-deriving the flat vs per-line boundary/scale rules per element.
+//! - **Col layout** ([`QuantAxis::Col`], the Pallas layout): each stored
+//!   line is one output column. The whole line is decoded once through its
+//!   per-segment LUTs into an L1-resident buffer, then multiplied against
+//!   [`MR`] batch rows at a time — MR independent f32 accumulator chains,
+//!   so the dot products pipeline instead of serializing on one FMA chain.
+//! - **Row layout** ([`QuantAxis::Row`]): stored lines run along the
+//!   output axis. Weights decode into a `KC × NC` panel held in L1, then
+//!   every batch row sweeps the panel with an element-independent AXPY
+//!   inner loop (no reduction chain → vectorizable).
+//! - **Shared-output parallel writes.** [`qgemm_par`] shards output
+//!   columns and each shard writes its disjoint column window of the ONE
+//!   shared output buffer directly ([`OutWindow`]) — no per-shard
+//!   allocate-then-copy merge.
+//! - **Batch scoring.** [`qgemm_batch`] stacks several activation
+//!   matrices (requests sharing a service) into one kernel invocation, so
+//!   one weight decode is amortized across the whole batch dimension.
+//!
+//! [`qgemm_scalar`] preserves the pre-tiling scalar loop nest as the
+//! reference implementation: `benches/quant.rs` reports tiled-vs-scalar
+//! rows from it, and the property battery pins the tiled kernel
+//! **bitwise** to it.
 //!
 //! ## Determinism contract
 //!
-//! [`qgemm_par`] shards **output columns** over
-//! [`crate::util::threadpool::scope_map`]; every output element's
-//! accumulation order (ascending along the reduced axis, segment by
-//! segment) is independent of the sharding, so the parallel result is
-//! **bit-identical** to serial [`qgemm`] for any worker count.
+//! Every output element `y[i, c]` is accumulated in a fixed order that no
+//! tiling or sharding choice can alter: segments of the reduced axis in
+//! ascending order, elements within a segment in ascending order, one
+//! fresh accumulator per segment folded into a per-element running total
+//! (Col), or one add per reduced index in ascending order (Row). Register
+//! blocking only interleaves *independent* per-element chains and column
+//! shards own disjoint windows, so:
+//!
+//! - [`qgemm`] (tiled) is **bit-identical** to [`qgemm_scalar`];
+//! - [`qgemm_par`] is **bit-identical** to serial [`qgemm`] for any worker
+//!   count and any shard geometry;
+//! - each matrix [`qgemm_batch`] returns is **bit-identical** to scoring
+//!   that request alone (rows are independent).
+//!
 //! [`quantize_par`] shards whole blocks and delegates each shard to the
 //! serial [`quantize`] kernel, so its packed indices and scales are
 //! likewise bit-identical to a serial [`quantize`] call.
+//!
+//! Both [`QuantAxis`] layouts support the `per_line` scale indexing
+//! MatrixQuant falls back to when the blocked axis is not commensurate
+//! with the block size, and double-quantized scales (the reconstructed
+//! scales in `q.scales` are read as-is). The kernel is driven by a
+//! **per-call** `(code, B)` — the code table is an argument and the block
+//! size lives on the `MatrixQuant` — which is what makes heterogeneous
+//! [`crate::plan::QuantPlan`]s servable in the nibble domain (see
+//! `rust/tests/plan_parity.rs`).
 
 use crate::codes::Code;
 use crate::quant::{quantize, MatrixQuant, QuantAxis, Quantized};
 use crate::tensor::Matrix;
 use crate::util::threadpool::scope_map;
 
+/// Batch rows processed together by the Col-layout microkernel: MR
+/// independent accumulator chains per pass. 4 keeps well inside the
+/// scalar/SIMD register budget with the 16-entry LUT resident.
+const MR: usize = 4;
+
+/// Reduced-axis rows of a decoded Row-layout panel (KC × NC f32 ≤ 16 KiB —
+/// L1-resident alongside the output row).
+const KC: usize = 32;
+
+/// Output-column width of a Row-layout panel pass.
+const NC: usize = 128;
+
 /// Fused blockwise matmul `y = x · W` over a quantized `W` (no dequantized
 /// intermediate). `x` is `(m, W.rows)`; the result is `(m, W.cols)`.
+/// Tiled microkernel; bit-identical to [`qgemm_scalar`].
 pub fn qgemm(x: &Matrix, w: &MatrixQuant, code: &Code) -> Matrix {
-    let out = qgemm_range(x, w, code, 0, w.cols);
+    let table = check_args(x, w, code);
+    let mut out = vec![0.0f32; x.rows * w.cols];
+    // SAFETY: exclusive access to `out`; the window spans all columns.
+    unsafe { qgemm_into(x, w, &table, 0, w.cols, w.cols, out.as_mut_ptr()) };
     Matrix::from_vec(x.rows, w.cols, out)
 }
 
 /// Parallel [`qgemm`]: output columns sharded over `workers` scoped
-/// threads. Bit-identical to serial `qgemm` for any `workers` (see the
-/// module-level determinism contract).
+/// threads, each writing its disjoint column window of the shared output
+/// buffer directly (no allocate-then-copy merge). Bit-identical to serial
+/// [`qgemm`] for any `workers` (see the module-level determinism
+/// contract).
 pub fn qgemm_par(x: &Matrix, w: &MatrixQuant, code: &Code, workers: usize) -> Matrix {
     let n = w.cols;
     let m = x.rows;
     let workers = workers.max(1);
-    // Several chunks per worker so scope_map's atomic-counter stealing can
-    // balance uneven column costs; chunk boundaries don't affect bits.
+    // Several chunks per worker so the work-stealing pool can balance
+    // uneven column costs; chunk boundaries don't affect bits.
     let cols_per_chunk = n.div_ceil(workers * 4).max(1);
     let n_chunks = n.div_ceil(cols_per_chunk);
-    if n_chunks <= 1 {
+    if n_chunks <= 1 || workers == 1 {
         return qgemm(x, w, code);
     }
-    let parts = scope_map(workers, n_chunks, |ci| {
+    let table = check_args(x, w, code);
+    let mut out = vec![0.0f32; m * n];
+    let base = SendPtr(out.as_mut_ptr());
+    scope_map(workers, n_chunks, |ci| {
         let c0 = ci * cols_per_chunk;
         let c1 = (c0 + cols_per_chunk).min(n);
-        (c0, c1, qgemm_range(x, w, code, c0, c1))
+        let base = base;
+        // SAFETY: shard `ci` exclusively writes columns [c0, c1) of every
+        // row — the windows of distinct shards are disjoint, and `out`
+        // (m·n f32s) outlives the scope (scope_map joins before
+        // returning).
+        unsafe { qgemm_into(x, w, &table, c0, c1, n, base.0) };
     });
-    let mut out = vec![0.0f32; m * n];
-    for (c0, c1, part) in &parts {
-        let width = c1 - c0;
-        for i in 0..m {
-            out[i * n + c0..i * n + c1].copy_from_slice(&part[i * width..(i + 1) * width]);
-        }
-    }
     Matrix::from_vec(m, n, out)
+}
+
+/// Batched fused scoring: multiply several activation matrices — requests
+/// sharing one service — through the SAME quantized weights in a single
+/// kernel invocation, so one weight decode is amortized across the whole
+/// batch dimension instead of repeated per request. The kernel computes
+/// rows independently, so each returned matrix is **bit-identical** to
+/// calling [`qgemm`]/[`qgemm_par`] on that request alone.
+pub fn qgemm_batch(xs: &[Matrix], w: &MatrixQuant, code: &Code, workers: usize) -> Vec<Matrix> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let k = w.rows;
+    let total_rows: usize = xs
+        .iter()
+        .map(|x| {
+            assert_eq!(
+                x.cols, k,
+                "qgemm shape mismatch: x is {}x{}, W is {}x{}",
+                x.rows, x.cols, w.rows, w.cols
+            );
+            x.rows
+        })
+        .sum();
+    let mut stacked = Vec::with_capacity(total_rows * k);
+    for x in xs {
+        stacked.extend_from_slice(&x.data);
+    }
+    let y = qgemm_par(&Matrix::from_vec(total_rows, k, stacked), w, code, workers);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut r0 = 0usize;
+    for x in xs {
+        let r1 = r0 + x.rows;
+        out.push(Matrix::from_vec(x.rows, w.cols, y.data[r0 * w.cols..r1 * w.cols].to_vec()));
+        r0 = r1;
+    }
+    out
 }
 
 /// Parallel blockwise quantization: shards contiguous runs of blocks over
@@ -116,27 +206,114 @@ pub fn quantize_par(x: &[f32], block_size: usize, code: &Code, workers: usize) -
     Quantized { len: x.len(), block_size, packed, scales }
 }
 
-/// Compute output columns `[c0, c1)` of `y = x · W` as an `(x.rows,
-/// c1-c0)` row-major buffer. Shared by the serial and parallel entry
-/// points so both run the exact same per-element code path.
-fn qgemm_range(x: &Matrix, w: &MatrixQuant, code: &Code, c0: usize, c1: usize) -> Vec<f32> {
+/// Validate shapes/code and build the f32 code table shared by all tiles.
+fn check_args(x: &Matrix, w: &MatrixQuant, code: &Code) -> [f32; 16] {
     assert_eq!(
         x.cols, w.rows,
         "qgemm shape mismatch: x is {}x{}, W is {}x{}",
         x.rows, x.cols, w.rows, w.cols
     );
-    assert!(c0 <= c1 && c1 <= w.cols);
     assert!(code.k() <= 16, "packed nibbles hold at most 16 code values");
     let mut table = [0.0f32; 16];
     for (t, &v) in table.iter_mut().zip(code.values.iter()) {
         *t = v as f32;
     }
-    let mut out = vec![0.0f32; x.rows * (c1 - c0)];
-    match w.axis {
-        QuantAxis::Col => qgemm_range_col(x, w, &table, c0, c1, &mut out),
-        QuantAxis::Row => qgemm_range_row(x, w, &table, c0, c1, &mut out),
+    table
+}
+
+/// Raw base pointer of the shared output buffer, made sendable so column
+/// shards can build their disjoint [`OutWindow`]s inside scoped workers.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: the pointer is only dereferenced through OutWindows over
+// provably disjoint column windows; the buffer outlives the thread scope.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// A shard's exclusive column window `[c0, c1)` of the shared row-major
+/// `(rows × stride)` output buffer. All writes land inside the window, so
+/// concurrent shards never alias.
+struct OutWindow {
+    base: *mut f32,
+    stride: usize,
+    c0: usize,
+    c1: usize,
+}
+
+impl OutWindow {
+    /// Mutable view of row `i`'s columns `[lo, hi)` (absolute indices,
+    /// must lie inside this window).
+    ///
+    /// SAFETY (caller): `i < rows`, `c0 <= lo <= hi <= c1`, and no live
+    /// overlapping view of the same cells.
+    #[inline]
+    unsafe fn row(&self, i: usize, lo: usize, hi: usize) -> &mut [f32] {
+        debug_assert!(self.c0 <= lo && lo <= hi && hi <= self.c1);
+        std::slice::from_raw_parts_mut(self.base.add(i * self.stride + lo), hi - lo)
     }
-    out
+
+    /// SAFETY (caller): `i < rows` and `c0 <= c < c1`.
+    #[inline]
+    unsafe fn write(&self, i: usize, c: usize, v: f32) {
+        debug_assert!(self.c0 <= c && c < self.c1);
+        *self.base.add(i * self.stride + c) = v;
+    }
+}
+
+/// Compute output columns `[c0, c1)` of `y = x · W` directly into the
+/// shared row-major `(x.rows × stride)` buffer at `out`, columns written
+/// at their absolute positions. Shared by the serial and parallel entry
+/// points so both run the exact same per-element code path.
+///
+/// SAFETY (caller): `out` points to at least `x.rows * stride` zeroed
+/// f32s, `c1 <= stride`, and nothing else reads or writes columns
+/// `[c0, c1)` of any row while this runs.
+unsafe fn qgemm_into(
+    x: &Matrix,
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    c0: usize,
+    c1: usize,
+    stride: usize,
+    out: *mut f32,
+) {
+    debug_assert!(c0 <= c1 && c1 <= w.cols && c1 <= stride);
+    let win = OutWindow { base: out, stride, c0, c1 };
+    match w.axis {
+        QuantAxis::Col => qgemm_col_into(x, w, table, &win),
+        QuantAxis::Row => qgemm_row_into(x, w, table, &win),
+    }
+}
+
+/// One quantization-block segment of a stored line: within-line element
+/// range plus the block scale. Hoisted out of the kernels' inner loops by
+/// [`line_segments`].
+struct Seg {
+    start: usize,
+    end: usize,
+    scale: f32,
+}
+
+/// Segment descriptors for elements `[lo, hi)` of the stored line starting
+/// at flat offset `line_base` (line index `li`, full length `line_len`),
+/// honouring the flat vs per-line boundary and scale rules. Fills the
+/// caller's reusable buffer (no allocation in steady state).
+fn line_segments(
+    w: &MatrixQuant,
+    line_base: usize,
+    li: usize,
+    line_len: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut Vec<Seg>,
+) {
+    out.clear();
+    let mut off = lo;
+    while off < hi {
+        let end = seg_end(w, line_base, off, line_len).min(hi);
+        out.push(Seg { start: off, end, scale: scale_at(w, line_base, li, off) });
+        off = end;
+    }
 }
 
 /// End (exclusive, in within-line coordinates) of the quantization-block
@@ -164,26 +341,175 @@ fn scale_at(w: &MatrixQuant, line_base: usize, li: usize, off: usize) -> f32 {
     }
 }
 
-/// Col-axis layout: the packed buffer stores W^T row-major (`w.cols` lines
-/// of length `w.rows`), blocks running along the reduced axis — the Pallas
-/// qmatmul layout. One stored line per output column.
-fn qgemm_range_col(
-    x: &Matrix,
-    w: &MatrixQuant,
-    table: &[f32; 16],
-    c0: usize,
-    c1: usize,
-    out: &mut [f32],
-) {
+/// Col-axis tiled kernel: the packed buffer stores W^T row-major (`w.cols`
+/// lines of length `w.rows`), blocks running along the reduced axis — the
+/// Pallas qmatmul layout. One stored line per output column: the line is
+/// decoded ONCE through its per-segment LUTs into `vals`, then multiplied
+/// against [`MR`] batch rows at a time (MR independent accumulator
+/// chains).
+///
+/// Per-element accumulation order (fresh accumulator per segment in
+/// ascending order, folded into a running total started at 0.0) is
+/// exactly the scalar reference's, so the output is bit-identical to
+/// [`qgemm_scalar`].
+unsafe fn qgemm_col_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &OutWindow) {
     let k = w.rows;
     let m = x.rows;
-    let width = c1 - c0;
-    // Per-segment decode scratch (≤ one block, never a full matrix): each
-    // weight is unpacked + LUT-decoded exactly once, then reused across
-    // all m batch rows. Same products in the same order as decoding
-    // inline, so bitwise output is unchanged.
+    if m == 0 {
+        return;
+    }
+    let mut segs: Vec<Seg> = Vec::new();
+    // Whole-line decode scratch, reused across columns (k f32s — L1 for
+    // typical k; never a full matrix).
+    let mut vals = vec![0.0f32; k];
+    for c in win.c0..win.c1 {
+        let base = c * k;
+        line_segments(w, base, c, k, 0, k, &mut segs);
+        // Decode the stored line once; reused across every batch row.
+        for sg in &segs {
+            let mut lut = [0.0f32; 16];
+            for (l, &t) in lut.iter_mut().zip(table.iter()) {
+                *l = t * sg.scale;
+            }
+            for (j, v) in vals[sg.start..sg.end].iter_mut().enumerate() {
+                *v = lut[w.q.index(base + sg.start + j) as usize];
+            }
+        }
+        // Register-blocked batch rows: MR independent accumulator chains
+        // pipeline the FMAs that a single row's dot product serializes.
+        let mut i = 0usize;
+        while i + MR <= m {
+            let x0 = &x.data[i * k..(i + 1) * k];
+            let x1 = &x.data[(i + 1) * k..(i + 2) * k];
+            let x2 = &x.data[(i + 2) * k..(i + 3) * k];
+            let x3 = &x.data[(i + 3) * k..(i + 4) * k];
+            let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for sg in &segs {
+                let vs = &vals[sg.start..sg.end];
+                let s0 = &x0[sg.start..sg.end];
+                let s1 = &x1[sg.start..sg.end];
+                let s2 = &x2[sg.start..sg.end];
+                let s3 = &x3[sg.start..sg.end];
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for (j, &v) in vs.iter().enumerate() {
+                    a0 += s0[j] * v;
+                    a1 += s1[j] * v;
+                    a2 += s2[j] * v;
+                    a3 += s3[j] * v;
+                }
+                t0 += a0;
+                t1 += a1;
+                t2 += a2;
+                t3 += a3;
+            }
+            win.write(i, c, t0);
+            win.write(i + 1, c, t1);
+            win.write(i + 2, c, t2);
+            win.write(i + 3, c, t3);
+            i += MR;
+        }
+        // Remainder rows, one chain each (same per-element order).
+        while i < m {
+            let xr = &x.data[i * k..(i + 1) * k];
+            let mut tot = 0.0f32;
+            for sg in &segs {
+                let vs = &vals[sg.start..sg.end];
+                let xs = &xr[sg.start..sg.end];
+                let mut acc = 0.0f32;
+                for (j, &v) in vs.iter().enumerate() {
+                    acc += xs[j] * v;
+                }
+                tot += acc;
+            }
+            win.write(i, c, tot);
+            i += 1;
+        }
+    }
+}
+
+/// Row-axis tiled kernel: the packed buffer stores W row-major (`w.rows`
+/// lines of length `w.cols`), blocks running along the output axis. A
+/// `KC × NC` panel of W is decoded into L1 once, then every batch row
+/// sweeps it with an element-independent AXPY inner loop (vectorizable —
+/// no reduction chain).
+///
+/// Per output element the adds happen once per reduced index `r`, in
+/// ascending `r` (panels are visited in order), exactly the scalar
+/// reference's order — bit-identical output. No zero-weight skip: both
+/// layouts must propagate whatever the activations carry (incl.
+/// non-finite values) exactly like the dequantize-then-matmul reference.
+unsafe fn qgemm_row_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &OutWindow) {
+    let k = w.rows;
+    let n = w.cols;
+    let m = x.rows;
+    if m == 0 {
+        return;
+    }
+    let mut segs: Vec<Seg> = Vec::new();
+    let mut panel = vec![0.0f32; KC * NC.min((win.c1 - win.c0).max(1))];
+    let mut nc0 = win.c0;
+    while nc0 < win.c1 {
+        let nc1 = (nc0 + NC).min(win.c1);
+        let ncw = nc1 - nc0;
+        let mut r0 = 0usize;
+        while r0 < k {
+            let r1 = (r0 + KC).min(k);
+            // Decode rows [r0, r1) × cols [nc0, nc1) of W into the panel.
+            for r in r0..r1 {
+                let base = r * n;
+                line_segments(w, base, r, n, nc0, nc1, &mut segs);
+                let prow = &mut panel[(r - r0) * ncw..(r - r0) * ncw + ncw];
+                for sg in &segs {
+                    let mut lut = [0.0f32; 16];
+                    for (l, &t) in lut.iter_mut().zip(table.iter()) {
+                        *l = t * sg.scale;
+                    }
+                    for (j, v) in prow[sg.start - nc0..sg.end - nc0].iter_mut().enumerate() {
+                        *v = lut[w.q.index(base + sg.start + j) as usize];
+                    }
+                }
+            }
+            // Sweep the L1-hot panel with every batch row: the output row
+            // window stays register/L1-resident across the KC updates.
+            for i in 0..m {
+                let out_row = win.row(i, nc0, nc1);
+                for r in r0..r1 {
+                    let xv = x.data[i * k + r];
+                    let prow = &panel[(r - r0) * ncw..(r - r0) * ncw + ncw];
+                    for (o, &v) in out_row.iter_mut().zip(prow.iter()) {
+                        *o += xv * v;
+                    }
+                }
+            }
+            r0 = r1;
+        }
+        nc0 = nc1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernel (pre-tiling loop nest).
+
+/// The pre-tiling scalar loop nest, kept as the **reference kernel**: the
+/// property battery pins the tiled [`qgemm`] bitwise to this, and
+/// `benches/quant.rs` reports tiled-vs-scalar rows from it. Do not
+/// optimize — its value is being obviously order-faithful.
+pub fn qgemm_scalar(x: &Matrix, w: &MatrixQuant, code: &Code) -> Matrix {
+    let table = check_args(x, w, code);
+    let mut out = vec![0.0f32; x.rows * w.cols];
+    match w.axis {
+        QuantAxis::Col => scalar_col(x, w, &table, &mut out),
+        QuantAxis::Row => scalar_row(x, w, &table, &mut out),
+    }
+    Matrix::from_vec(x.rows, w.cols, out)
+}
+
+fn scalar_col(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], out: &mut [f32]) {
+    let k = w.rows;
+    let m = x.rows;
+    let n = w.cols;
     let mut vals = vec![0.0f32; k.min(w.q.block_size).max(1)];
-    for c in c0..c1 {
+    for c in 0..n {
         let base = c * k;
         let mut off = 0usize;
         while off < k {
@@ -203,45 +529,31 @@ fn qgemm_range_col(
                 for (xv, v) in xrow.iter().zip(seg.iter()) {
                     acc += xv * v;
                 }
-                out[i * width + (c - c0)] += acc;
+                out[i * n + c] += acc;
             }
             off = end;
         }
     }
 }
 
-/// Row-axis layout: the packed buffer stores W row-major (`w.rows` lines
-/// of length `w.cols`), blocks running along the output axis. Each stored
-/// line contributes rank-1 updates `x[:, r] ⊗ W[r, c0..c1]`.
-fn qgemm_range_row(
-    x: &Matrix,
-    w: &MatrixQuant,
-    table: &[f32; 16],
-    c0: usize,
-    c1: usize,
-    out: &mut [f32],
-) {
+fn scalar_row(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], out: &mut [f32]) {
     let k = w.rows;
     let n = w.cols;
     let m = x.rows;
-    let width = c1 - c0;
     for r in 0..k {
         let base = r * n;
-        let mut off = c0;
-        while off < c1 {
-            let end = seg_end(w, base, off, n).min(c1);
+        let mut off = 0usize;
+        while off < n {
+            let end = seg_end(w, base, off, n);
             let s = scale_at(w, base, r, off);
             let mut lut = [0.0f32; 16];
             for (l, &t) in lut.iter_mut().zip(table.iter()) {
                 *l = t * s;
             }
-            // No zero-weight skip here: both layouts must propagate
-            // whatever the activations carry (incl. non-finite values)
-            // exactly like the dequantize-then-matmul reference.
             for c in off..end {
                 let v = lut[w.q.index(base + c) as usize];
                 for i in 0..m {
-                    out[i * width + (c - c0)] += x.data[i * k + r] * v;
+                    out[i * n + c] += x.data[i * k + r] * v;
                 }
             }
             off = end;
@@ -292,6 +604,7 @@ mod tests {
         let y = qgemm(&x, &wq, &code);
         // y = x @ W = [[1, 1], [3, 1]]
         assert_eq!(y.data, vec![1.0, 1.0, 3.0, 1.0]);
+        assert_eq!(qgemm_scalar(&x, &wq, &code).data, y.data);
     }
 
     #[test]
@@ -321,16 +634,53 @@ mod tests {
         });
     }
 
+    /// The tiled microkernel is pinned BITWISE to the preserved scalar
+    /// reference across both layouts, per-line and flat blocking, partial
+    /// blocks, DQ scales, and batch rows on both sides of the MR register
+    /// block (m < MR, m == MR, m ≫ MR with remainder).
+    #[test]
+    fn prop_tiled_bitwise_matches_scalar_reference() {
+        let code = nf4();
+        prop::check(72, |g| {
+            let m = g.usize_in(1, 11);
+            let k = g.usize_in(1, 50);
+            let n = g.usize_in(1, 50);
+            let bs = *g.pick(&[3usize, 8, 64, 1024]);
+            let axis = if g.bool(0.5) { QuantAxis::Row } else { QuantAxis::Col };
+            let w_mat = Matrix::from_vec(k, n, g.vec_normal_f32(k * n));
+            let mut wq = MatrixQuant::quantize(&w_mat, bs, &code, axis);
+            if g.bool(0.3) {
+                wq = wq.with_double_quant(16);
+            }
+            let x = Matrix::from_vec(m, k, g.vec_normal_f32(m * k));
+            let tiled = qgemm(&x, &wq, &code);
+            let scalar = qgemm_scalar(&x, &wq, &code);
+            if tiled.data != scalar.data {
+                return Err(format!(
+                    "tiled diverged from scalar at m={m} k={k} n={n} bs={bs} axis={axis:?} per_line={:?}",
+                    wq.per_line
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// par == serial bitwise for any worker count — including the new
+    /// tile-boundary geometries: batch rows straddling the MR register
+    /// block, dims past one KC/NC panel, per_line layouts, and worker
+    /// counts far exceeding the number of column panels.
     #[test]
     fn prop_qgemm_par_bit_identical_to_serial() {
         let code = nf4();
-        prop::check(48, |g| {
-            let m = g.usize_in(1, 4);
-            let k = g.usize_in(1, 30);
-            let n = g.usize_in(1, 30);
+        prop::check(64, |g| {
+            let m = g.usize_in(1, 10);
+            // Occasionally exceed one KC panel (k > 32) and stress tiny
+            // panel counts (n as small as 1) under many workers.
+            let k = g.usize_in(1, 70);
+            let n = g.usize_in(1, 50);
             let bs = *g.pick(&[3usize, 8, 64]);
             let axis = if g.bool(0.5) { QuantAxis::Row } else { QuantAxis::Col };
-            let workers = g.usize_in(1, 9);
+            let workers = *g.pick(&[1usize, 2, 3, 5, 8, 9, 17, 33]);
             let w_mat = Matrix::from_vec(k, n, g.vec_normal_f32(k * n));
             let wq = MatrixQuant::quantize(&w_mat, bs, &code, axis);
             let x = Matrix::from_vec(m, k, g.vec_normal_f32(m * k));
@@ -343,6 +693,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Row-axis blocks straddle the parallel column-shard boundaries when
+    /// chunks are narrower than a block — force 1-column shards so EVERY
+    /// block straddles, and check par == serial == scalar bitwise.
+    #[test]
+    fn partial_blocks_straddling_column_panels() {
+        let code = nf4();
+        let w_mat = randn(6, 30, 41);
+        for bs in [8usize, 64] {
+            let wq = MatrixQuant::quantize(&w_mat, bs, &code, QuantAxis::Row);
+            let x = randn(5, 6, 42);
+            let serial = qgemm(&x, &wq, &code);
+            assert_eq!(serial.data, qgemm_scalar(&x, &wq, &code).data, "bs={bs}");
+            for workers in [7usize, 16, 64] {
+                assert_eq!(
+                    qgemm_par(&x, &wq, &code, workers).data,
+                    serial.data,
+                    "bs={bs} workers={workers}"
+                );
+            }
+        }
+    }
+
+    /// Batched scoring returns, per request, exactly the bits of scoring
+    /// that request alone — rows are independent in the kernel, so the
+    /// shared weight decode cannot leak across the batch dimension.
+    #[test]
+    fn qgemm_batch_bitwise_matches_per_request() {
+        let code = nf4();
+        for axis in [QuantAxis::Col, QuantAxis::Row] {
+            let w_mat = randn(20, 17, 51);
+            let wq = MatrixQuant::quantize(&w_mat, 8, &code, axis);
+            // Ragged request sizes across the MR block boundary.
+            let reqs: Vec<Matrix> =
+                [1usize, 4, 3, 7].iter().enumerate().map(|(i, &m)| randn(m, 20, 60 + i as u64)).collect();
+            for workers in [1usize, 4, 32] {
+                let batched = qgemm_batch(&reqs, &wq, &code, workers);
+                assert_eq!(batched.len(), reqs.len());
+                for (i, (x, y)) in reqs.iter().zip(&batched).enumerate() {
+                    let solo = qgemm(x, &wq, &code);
+                    assert_eq!((y.rows, y.cols), (solo.rows, solo.cols));
+                    assert_eq!(
+                        y.data, solo.data,
+                        "axis={axis:?} workers={workers} request {i} diverged from solo scoring"
+                    );
+                }
+            }
+        }
+        let none: Vec<Matrix> = Vec::new();
+        assert!(qgemm_batch(&none, &MatrixQuant::quantize(&randn(2, 2, 1), 2, &code, QuantAxis::Col), &code, 4).is_empty());
     }
 
     #[test]
@@ -359,6 +760,7 @@ mod tests {
             let want = reference(&x, &wq, &code);
             assert_close(&got, &want, &format!("per_line axis {axis:?} bs={bs}")).unwrap();
             assert_eq!(qgemm_par(&x, &wq, &code, 4).data, got.data);
+            assert_eq!(qgemm_scalar(&x, &wq, &code).data, got.data);
         }
     }
 
@@ -376,15 +778,19 @@ mod tests {
         let got = qgemm(&x, &wq, &code);
         assert_close(&got, &reference(&x, &wq, &code), "block spans lines").unwrap();
         assert_eq!(qgemm_par(&x, &wq, &code, 3).data, got.data);
+        assert_eq!(qgemm_scalar(&x, &wq, &code).data, got.data);
     }
 
+    /// quantize_par == quantize bitwise — now also sweeping worker counts
+    /// far above the block count (tiny inputs, many shards) alongside the
+    /// partial-final-block and odd-block-size cases.
     #[test]
     fn prop_quantize_par_bit_identical() {
         let code = nf4();
         prop::check(64, |g| {
             let n = g.usize_in(0, 600);
             let bs = *g.pick(&[3usize, 8, 64, 1024]);
-            let workers = g.usize_in(1, 9);
+            let workers = *g.pick(&[1usize, 2, 4, 7, 9, 16, 33]);
             let xs = g.vec_normal_f32(n);
             let serial = quantize(&xs, bs, &code);
             let par = quantize_par(&xs, bs, &code, workers);
@@ -426,6 +832,8 @@ mod tests {
         assert_eq!((y.rows, y.cols), (0, 3));
         let y = qgemm_par(&x, &wq, &code, 8);
         assert_eq!((y.rows, y.cols), (0, 3));
+        let b = qgemm_batch(std::slice::from_ref(&x), &wq, &code, 4);
+        assert_eq!((b[0].rows, b[0].cols), (0, 3));
     }
 
     #[test]
@@ -435,5 +843,15 @@ mod tests {
         let wq = MatrixQuant::quantize(&randn(4, 3, 6), 2, &code, QuantAxis::Row);
         let x = Matrix::zeros(2, 5);
         qgemm(&x, &wq, &code);
+    }
+
+    #[test]
+    #[should_panic(expected = "qgemm shape mismatch")]
+    fn qgemm_batch_rejects_bad_shapes() {
+        let code = nf4();
+        let wq = MatrixQuant::quantize(&randn(4, 3, 6), 2, &code, QuantAxis::Row);
+        let good = Matrix::zeros(2, 4);
+        let bad = Matrix::zeros(2, 5);
+        qgemm_batch(&[good, bad], &wq, &code, 2);
     }
 }

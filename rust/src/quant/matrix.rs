@@ -191,18 +191,29 @@ impl MatrixQuant {
     }
 
     /// Fused nibble-domain matmul `y = x · W` reading packed indices and
-    /// per-block scales directly — no dequantized intermediate. See
-    /// [`crate::quant::fused`] for the kernel and its determinism
-    /// contract; agrees with `x.matmul(&self.dequantize(code))` to ≤1e-4
-    /// relative error (f32 accumulation-order differences only).
+    /// per-block scales directly — no dequantized intermediate. Tiled,
+    /// register-blocked microkernel; see [`crate::quant::fused`] for the
+    /// kernel and its determinism contract; agrees with
+    /// `x.matmul(&self.dequantize(code))` to ≤1e-4 relative error (f32
+    /// accumulation-order differences only).
     pub fn qgemm(&self, x: &Matrix, code: &Code) -> Matrix {
         crate::quant::fused::qgemm(x, self, code)
     }
 
-    /// Parallel [`Self::qgemm`]: output columns sharded over `workers`
-    /// scoped threads; bit-identical to the serial result for any count.
+    /// Parallel [`Self::qgemm`]: output-column shards write disjoint
+    /// windows of one shared buffer over the work-stealing pool;
+    /// bit-identical to the serial result for any worker count.
     pub fn qgemm_par(&self, x: &Matrix, code: &Code, workers: usize) -> Matrix {
         crate::quant::fused::qgemm_par(x, self, code, workers)
+    }
+
+    /// Batched [`Self::qgemm`]: several activation matrices (requests
+    /// sharing one service) multiply through these weights in a single
+    /// kernel invocation, amortizing one weight decode across the batch
+    /// dimension. Each returned matrix is bit-identical to scoring that
+    /// request alone.
+    pub fn qgemm_batch(&self, xs: &[Matrix], code: &Code, workers: usize) -> Vec<Matrix> {
+        crate::quant::fused::qgemm_batch(xs, self, code, workers)
     }
 
     /// Total storage bytes (packed + scales or DQ store).

@@ -25,7 +25,7 @@ pub mod fused;
 pub mod matrix;
 pub mod spec;
 
-pub use fused::{qgemm, qgemm_par, quantize_par};
+pub use fused::{qgemm, qgemm_batch, qgemm_par, qgemm_scalar, quantize_par};
 pub use matrix::{MatrixQuant, QuantAxis};
 pub use spec::QuantSpec;
 

@@ -7,15 +7,50 @@
 //!   be `'static` (jobs cross a channel), so inputs get `Arc`'d.
 //! - [`scope_map`] — free function on std scoped threads; closures may
 //!   **borrow** from the caller. This is what the quantizer/fused-GEMM hot
-//!   paths use ([`crate::quant::fused`]): no `Arc`, no clones, and the
-//!   same atomic work-stealing discipline.
+//!   paths use ([`crate::quant::fused`]).
+//!
+//! ## Scheduling
+//!
+//! [`scope_map`] is a **work-stealing** scheduler: the index range `0..n`
+//! is split into one contiguous arena per worker, each worker claims small
+//! chunks from its own arena with a per-arena atomic cursor, and a worker
+//! whose arena drains steals chunks from the other arenas (scanning from
+//! its neighbour, wrapping). Owners and thieves use the same cursor, so
+//! every index is claimed exactly once; chunked claims keep the common
+//! case one atomic op per `CHUNK` items instead of one per item, while
+//! stealing still balances uneven per-item costs (different block sizes,
+//! ragged tail panels).
+//!
+//! ## Determinism contract
+//!
+//! Scheduling never touches results: `f` is called exactly once per index
+//! and results are returned **in index order**, so any caller computing
+//! independent per-index outputs gets a result *bit-identical* to the
+//! serial `(0..n).map(f)` — regardless of worker count, arena layout,
+//! chunk size, or which worker stole what. The fused quantizer paths rely
+//! on this.
+//!
+//! ## Panic semantics
+//!
+//! A panic inside a job is never a hang and never silently shrinks the
+//! pool:
+//!
+//! - [`scope_map`] and [`ThreadPool::map_indexed`] catch the panic at the
+//!   item, stop handing out further work, and **re-raise the first panic
+//!   payload on the calling thread** after the workers wind down.
+//! - Fire-and-forget [`ThreadPool::execute`] jobs are unwound inside the
+//!   worker loop; the worker stays alive for subsequent jobs.
+//! - Every caught panic increments `afq_threadpool_panics_total` in the
+//!   metrics registry.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 
 /// Pool utilization counters in the global metrics registry, registered
 /// once (OnceLock) so the hot paths never take the registry lock.
@@ -23,6 +58,7 @@ struct PoolMetrics {
     jobs: crate::obs::registry::Counter,
     items: crate::obs::registry::Counter,
     busy_us: crate::obs::registry::Counter,
+    panics: crate::obs::registry::Counter,
 }
 
 fn pool_metrics() -> &'static PoolMetrics {
@@ -31,6 +67,7 @@ fn pool_metrics() -> &'static PoolMetrics {
         jobs: crate::obs::registry::counter("afq_threadpool_jobs_total"),
         items: crate::obs::registry::counter("afq_threadpool_items_total"),
         busy_us: crate::obs::registry::counter("afq_threadpool_busy_us_total"),
+        panics: crate::obs::registry::counter("afq_threadpool_panics_total"),
     })
 }
 
@@ -60,7 +97,19 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Run(job)) => {
+                                // A panicking job must not take the worker
+                                // with it: unwind here, count it, keep
+                                // serving. (map_indexed catches at the item
+                                // instead, to carry the payload back to
+                                // its caller.)
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    pool_metrics().panics.inc(1);
+                                    crate::log_warn!(
+                                        "threadpool: job panicked; worker kept alive"
+                                    );
+                                }
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
@@ -80,14 +129,20 @@ impl ThreadPool {
         self.size
     }
 
-    /// Fire-and-forget.
+    /// Fire-and-forget. A panicking job is unwound inside the worker (the
+    /// worker survives) and counted in `afq_threadpool_panics_total`.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         pool_metrics().jobs.inc(1);
         self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
     }
 
     /// Parallel map over 0..n: `f(i)` for each index, results in order.
-    /// Blocks until all complete. `f` must be cloneable across threads.
+    /// Blocks until all complete.
+    ///
+    /// If `f` panics for any index, the panic is caught at the item,
+    /// remaining work is abandoned, and the **first** payload is re-raised
+    /// on the calling thread — never a deadlock on the result channel, and
+    /// the pool's workers all survive for the next call.
     pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -98,11 +153,12 @@ impl ThreadPool {
         }
         pool_metrics().items.inc(n as u64);
         let f = Arc::new(f);
-        let (rtx, rrx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+        type Slot<T> = (usize, Result<T, PanicPayload>);
+        let (rtx, rrx): (Sender<Slot<T>>, Receiver<Slot<T>>) = channel();
         let next = Arc::new(AtomicUsize::new(0));
         // One task per worker; each pulls indices from the shared counter
-        // (work stealing by atomic increment — good load balance for uneven
-        // item costs like different block sizes).
+        // (good load balance for uneven item costs like different block
+        // sizes).
         let tasks = self.size.min(n);
         for _ in 0..tasks {
             let f = Arc::clone(&f);
@@ -113,8 +169,15 @@ impl ThreadPool {
                 if i >= n {
                     break;
                 }
-                let out = f(i);
-                if rtx.send((i, out)).is_err() {
+                // AssertUnwindSafe: on Err the payload is re-raised to the
+                // caller before any result is observed, so torn state in
+                // `f`'s captures is never read.
+                let out = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let panicked = out.is_err();
+                if panicked {
+                    pool_metrics().panics.inc(1);
+                }
+                if rtx.send((i, out)).is_err() || panicked {
                     break;
                 }
             });
@@ -122,8 +185,20 @@ impl ThreadPool {
         drop(rtx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
-            let (i, v) = rrx.recv().expect("worker died");
-            slots[i] = Some(v);
+            match rrx.recv() {
+                Ok((i, Ok(v))) => slots[i] = Some(v),
+                // First panic wins: dropping `rrx` makes the surviving
+                // tasks' sends fail so they stop pulling work, then the
+                // payload unwinds the caller.
+                Ok((_, Err(payload))) => {
+                    drop(rrx);
+                    resume_unwind(payload);
+                }
+                // Unreachable while the pool holds its workers (each task
+                // sends every result it produces before exiting), but a
+                // clear message beats a unwrap if that ever changes.
+                Err(_) => panic!("threadpool: result channel closed early"),
+            }
         }
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
@@ -135,16 +210,35 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Blocking parallel map over `0..n` with *borrowing* closures: spawns up
-/// to `workers` scoped threads that pull indices from a shared atomic
-/// counter (work stealing by atomic increment, like
-/// [`ThreadPool::map_indexed`]) and returns `f(0), f(1), …` in index order.
+/// One worker's contiguous slice of the index range: a cursor that both
+/// the owner and thieves advance with the same `fetch_add`, so chunks are
+/// handed out exactly once no matter who claims them.
+struct Arena {
+    next: AtomicUsize,
+    end: usize,
+}
+
+/// How many indices a single cursor claim takes. Small enough that the
+/// tail of an uneven workload still spreads across workers, large enough
+/// that the per-item cost is amortized over several items.
+const CHUNK: usize = 4;
+
+/// Blocking parallel map over `0..n` with *borrowing* closures, scheduled
+/// by **work stealing**: the range splits into one contiguous arena per
+/// scoped worker; each worker claims `CHUNK`-sized runs from its own arena
+/// and, when that drains, steals runs from the other arenas (scanning from
+/// its neighbour, wrapping). Results come back `f(0), f(1), …` in index
+/// order.
 ///
 /// Determinism contract: `f` is called exactly once per index and results
 /// are returned in index order, so any caller that computes independent
 /// per-index outputs gets a result *bit-identical* to the serial
-/// `(0..n).map(f)` — regardless of worker count or scheduling. The fused
-/// quantizer paths rely on this.
+/// `(0..n).map(f)` — regardless of worker count, arena split, or steal
+/// interleaving. The fused quantizer paths rely on this.
+///
+/// Panic semantics: a panic in `f` is caught at the item; all workers
+/// stop claiming new chunks, the scope joins (never a hang), and the
+/// first payload is re-raised on the calling thread.
 ///
 /// `workers == 1` (or `n <= 1`) short-circuits to the serial loop on the
 /// calling thread: no spawn overhead on the degenerate configurations.
@@ -161,23 +255,54 @@ where
     if workers == 1 {
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
+    // Contiguous per-worker arenas (the last may be short or empty when n
+    // doesn't divide evenly — stealing erases the imbalance).
+    let per = n.div_ceil(workers);
+    let arenas: Vec<Arena> = (0..workers)
+        .map(|w| Arena { next: AtomicUsize::new((w * per).min(n)), end: ((w + 1) * per).min(n) })
+        .collect();
+    let poisoned = AtomicBool::new(false);
+    let first_panic: Mutex<Option<PanicPayload>> = Mutex::new(None);
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                s.spawn(|| {
+            .map(|wid| {
+                let arenas = &arenas;
+                let poisoned = &poisoned;
+                let first_panic = &first_panic;
+                let f = &f;
+                s.spawn(move || {
                     // Worker utilization: one timer per worker per call, not
-                    // per item — the per-index loop stays allocation- and
-                    // atomic-inc-free beyond the work-stealing counter.
+                    // per item — the per-index loop costs one atomic op per
+                    // CHUNK items beyond the work itself.
                     let t0 = std::time::Instant::now();
                     let mut got: Vec<(usize, T)> = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
+                    // Own arena first, then steal round-robin from wid+1.
+                    'arenas: for off in 0..workers {
+                        let a = &arenas[(wid + off) % workers];
+                        loop {
+                            let lo = a.next.fetch_add(CHUNK, Ordering::Relaxed);
+                            if lo >= a.end {
+                                break; // drained (overshoot is harmless)
+                            }
+                            let hi = (lo + CHUNK).min(a.end);
+                            for i in lo..hi {
+                                if poisoned.load(Ordering::Relaxed) {
+                                    break 'arenas;
+                                }
+                                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                                    Ok(v) => got.push((i, v)),
+                                    Err(payload) => {
+                                        pool_metrics().panics.inc(1);
+                                        poisoned.store(true, Ordering::Relaxed);
+                                        if let Ok(mut slot) = first_panic.lock() {
+                                            slot.get_or_insert(payload);
+                                        }
+                                        break 'arenas;
+                                    }
+                                }
+                            }
                         }
-                        got.push((i, f(i)));
                     }
                     let busy = t0.elapsed().as_micros() as u64;
                     (got, busy)
@@ -194,6 +319,9 @@ where
         }
         pool_metrics().busy_us.inc(busy_total);
     });
+    if let Some(payload) = first_panic.lock().ok().and_then(|mut s| s.take()) {
+        resume_unwind(payload);
+    }
     slots.into_iter().map(|s| s.unwrap()).collect()
 }
 
@@ -257,6 +385,49 @@ mod tests {
         }
     }
 
+    /// Satellite regression: a panic-injecting job used to deadlock
+    /// `map_indexed` forever (the panicking worker's result never arrived
+    /// but `rrx.recv()` kept waiting). It must now propagate the panic to
+    /// the caller — and leave the pool fully usable afterwards.
+    #[test]
+    fn map_indexed_propagates_job_panic_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let panics_before = pool_metrics().panics.get();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map_indexed(64, |i| {
+                if i == 17 {
+                    panic!("injected job panic");
+                }
+                i * 2
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate, not hang");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "injected job panic");
+        assert!(pool_metrics().panics.get() > panics_before);
+        // No silent worker loss: the same pool still completes a full map.
+        let out = pool.map_indexed(32, |i| i + 1);
+        assert_eq!(out, (1..=32).collect::<Vec<_>>());
+    }
+
+    /// Satellite regression: a panicking fire-and-forget job must not kill
+    /// its worker — all later jobs still run on a size-1 pool, where a
+    /// dead worker would stall everything.
+    #[test]
+    fn execute_survives_job_panic() {
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.execute(|| panic!("injected execute panic"));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
     #[test]
     fn scope_map_matches_serial_for_any_worker_count() {
         let data: Vec<u64> = (0..97).map(|i| i * 3 + 1).collect();
@@ -266,6 +437,51 @@ mod tests {
             let out = scope_map(workers, data.len(), |i| data[i] * data[i]);
             assert_eq!(out, serial, "workers={workers}");
         }
+    }
+
+    /// The stealing path specifically: give worker 0's arena all the heavy
+    /// items so the other workers must steal to finish, and check the
+    /// result is still index-ordered and serial-identical.
+    #[test]
+    fn scope_map_steals_from_uneven_arenas() {
+        let n = 64;
+        let serial: Vec<u64> = (0..n as u64)
+            .map(|i| {
+                let spin = if i < 8 { 200_000 } else { 10 };
+                (0..spin).fold(i, |a, k| a.wrapping_add(k))
+            })
+            .collect();
+        for workers in [2usize, 4, 8, 32] {
+            let out = scope_map(workers, n, |i| {
+                let i = i as u64;
+                let spin = if i < 8 { 200_000u64 } else { 10 };
+                (0..spin).fold(i, |a, k| a.wrapping_add(k))
+            });
+            assert_eq!(out, serial, "workers={workers}");
+        }
+    }
+
+    /// Satellite regression: a panic inside a scoped worker's item must
+    /// re-raise on the caller (with the original payload), never hang the
+    /// scope or poison later calls.
+    #[test]
+    fn scope_map_propagates_panic() {
+        let panics_before = pool_metrics().panics.get();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            scope_map(4, 100, |i| {
+                if i == 63 {
+                    panic!("injected scope panic");
+                }
+                i
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "injected scope panic");
+        assert!(pool_metrics().panics.get() > panics_before);
+        // Subsequent calls are unaffected.
+        let out = scope_map(4, 10, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
