@@ -10,10 +10,12 @@
 #   make bench       run every bench target (engine/serving skip gracefully
 #                    without artifacts); JSON lands in results/BENCH_*.json
 #   make bench-quick same, with short measurement windows
+#   make bench-cache the decoded-panel-cache rows only: cached-vs-cold
+#                    qgemm and the hot-tenant serving scenario
 
 PY_SOURCES := $(shell find python/compile -name '*.py' 2>/dev/null)
 
-.PHONY: verify parity bench bench-quick artifacts clean
+.PHONY: verify parity bench bench-quick bench-cache artifacts clean
 
 verify:
 	cargo build --release
@@ -39,6 +41,14 @@ bench-quick:
 	AFQ_BENCH_QUICK=1 cargo bench --bench quant
 	AFQ_BENCH_QUICK=1 cargo bench --bench plan
 	AFQ_BENCH_QUICK=1 cargo bench --bench serving
+
+# Panel-cache rows only: qgemm/cached + qgemm/cold (filter) and the
+# hot-tenant serving scenario (artifact-free). Note: the filtered quant
+# run overwrites results/BENCH_quant.json with just these rows — run
+# `make bench` for the full document.
+bench-cache:
+	cargo bench --bench quant -- qgemm/c
+	cargo bench --bench serving
 
 clean:
 	cargo clean

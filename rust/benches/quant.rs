@@ -95,6 +95,29 @@ fn main() {
         afq::quant::qgemm_scalar(&x, &wq1024, &nf4)
     });
 
+    // Decode-once serving: the same qgemm with the decoded-panel cache
+    // enabled (warm after one populate pass) vs the cold decode-every-call
+    // path. The ratio is the per-call decode share the cache removes;
+    // informational here — the 15% gate on these rows is what protects it.
+    println!("-- cached vs cold qgemm (panel cache warm) --");
+    afq::quant::panelcache::set_budget(Some(64 << 20));
+    let wq_c = wq.clone().with_cache_tag("bench/quant", "w512x512.B64");
+    let wq1024_c = wq1024.clone().with_cache_tag("bench/quant", "w512x512.B1024");
+    wq_c.qgemm(&x, &nf4); // populate
+    wq1024_c.qgemm(&x, &nf4);
+    b.bench_with_elements("qgemm/cached/B=64", Some(flops), || wq_c.qgemm(&x, &nf4));
+    b.bench_with_elements("qgemm/cold/B=64", Some(flops), || wq.qgemm(&x, &nf4));
+    b.bench_with_elements("qgemm/cached/B=1024", Some(flops), || wq1024_c.qgemm(&x, &nf4));
+    b.bench_with_elements("qgemm/cold/B=1024", Some(flops), || wq1024.qgemm(&x, &nf4));
+    let stats = afq::quant::panelcache::owner_stats("bench/quant").unwrap_or_default();
+    println!(
+        "   panel cache: {} bytes resident, hit rate {:.1}%",
+        stats.bytes,
+        stats.hit_rate() * 100.0
+    );
+    afq::quant::panelcache::invalidate_owner("bench/quant");
+    afq::quant::panelcache::set_budget(None); // back to the env-driven default
+
     // Batched scoring: 8 requests sharing one service amortize a single
     // weight decode via qgemm_batch vs decoding per request (bitwise
     // equal per-request outputs; same total flops).

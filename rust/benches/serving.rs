@@ -48,14 +48,91 @@ fn uncompiled_mixed_plan(meta: &afq::runtime::ModelMeta) -> QuantPlan {
     QuantPlan::new(&meta.name, assignments)
 }
 
+/// Host-side hot-tenant scenario: several tenant weight matrices share one
+/// decoded-panel cache sized for only ~2.5 of them, with 80% of traffic
+/// skewed to tenant 0 — the serving shape the cache exists for. The hot
+/// tenant's panels stay resident (decode paid once), the cold tail churns
+/// through LRU. Runs without artifacts (pure host kernels), so the
+/// cached-vs-cold pair is produced — and perf-gated — even on a CI job
+/// that never ran `make artifacts`.
+fn hot_tenant_rows(quick: bool) -> Vec<Json> {
+    use afq::quant::{panelcache, MatrixQuant, QuantAxis};
+    use afq::tensor::Matrix;
+    use afq::util::rng::Rng;
+    let nf4 = afq::codes::registry::build("nf4").unwrap();
+    let tenants = 6usize;
+    let (k, n) = (256usize, 256usize);
+    let mut rng = Rng::new(7);
+    let quants: Vec<MatrixQuant> = (0..tenants)
+        .map(|_| {
+            let m = Matrix::randn(k, n, 0.02, &mut rng);
+            MatrixQuant::quantize(&m, 64, &nf4, QuantAxis::Col)
+        })
+        .collect();
+    let tagged: Vec<MatrixQuant> = quants
+        .iter()
+        .enumerate()
+        .map(|(i, q)| q.clone().with_cache_tag("bench/serving", &format!("tenant{i}")))
+        .collect();
+    let x = Matrix::randn(4, k, 1.0, &mut rng);
+    // 4 of every 5 calls hit tenant 0; the fifth round-robins the tail.
+    let calls = if quick { 200 } else { 2000 };
+    let schedule: Vec<usize> = (0..calls)
+        .map(|i| if i % 5 != 4 { 0 } else { 1 + (i / 5) % (tenants - 1) })
+        .collect();
+    let per_tenant = (k * n * 4) as u64; // decoded f32 panel bytes per tenant
+    panelcache::set_budget(Some(per_tenant * 5 / 2));
+    println!("-- hot-tenant host-cache scenario ({tenants} tenants, 80% tenant-0) --");
+    let mut rows = Vec::new();
+    for (label, set) in [("cached", &tagged), ("cold", &quants)] {
+        for &t in &schedule {
+            set[t].qgemm(&x, &nf4); // warm pass (populates the cache once)
+        }
+        let t0 = Instant::now();
+        for &t in &schedule {
+            set[t].qgemm(&x, &nf4);
+        }
+        let wall = t0.elapsed();
+        let rps = calls as f64 / wall.as_secs_f64();
+        println!("hot-tenant/{label}: {calls} calls in {wall:.2?} ({rps:.1} req/s)");
+        let mut row = Json::obj();
+        row.set("config", Json::Str(format!("hot-tenant/{label}")))
+            .set("model", Json::Str("host-kernel".into()))
+            .set("wait_ms", Json::Num(0.0))
+            .set("requests", Json::Num(calls as f64))
+            .set("rps", Json::Num(rps));
+        rows.push(row);
+    }
+    let stats = panelcache::owner_stats("bench/serving").unwrap_or_default();
+    println!(
+        "  panel cache: {} bytes resident (budget {}), hit rate {:.1}%, {} evictions",
+        stats.bytes,
+        per_tenant * 5 / 2,
+        stats.hit_rate() * 100.0,
+        stats.evictions
+    );
+    panelcache::invalidate_owner("bench/serving");
+    panelcache::set_budget(None); // back to the env-driven default
+    rows
+}
+
 fn main() {
+    let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
+    // Host-kernel scenario first: it needs no artifacts, and its rows must
+    // land in the saved doc even when the router sweep below is skipped.
+    let mut rows = hot_tenant_rows(quick);
     // The resolver handles the repo-root vs rust/ cwd difference (cargo
     // runs bench binaries from the package root).
     if afq::util::resolve_artifacts_dir("artifacts").is_none() {
-        eprintln!("skipping serving bench: run `make artifacts` first");
+        eprintln!("skipping serving router sweep: run `make artifacts` first");
+        let mut doc = Json::obj();
+        doc.set("rows", Json::Arr(rows));
+        match afq::util::bench::save_bench_doc("serving", doc) {
+            Ok(path) => println!("saved {path}"),
+            Err(e) => eprintln!("could not save bench results: {e}"),
+        }
         return;
     }
-    let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
     let model = "tiny";
     let uniform_configs: Vec<ServiceKey> = vec![
         ServiceKey::quant(model, "nf4", 64),
@@ -67,7 +144,6 @@ fn main() {
     let reqs_per_client = if quick { 4 } else { 12 };
 
     let corpus = generate_corpus("english", 200_000, 11).unwrap();
-    let mut rows = Vec::new();
     let mut last_snapshot = Json::obj();
     for &wait in waits_ms {
         let router = Router::with_config(

@@ -368,6 +368,8 @@ impl Router {
                 let m = &e.service.metrics;
                 let c = m.counters.snapshot();
                 let lat = &e.service.latency;
+                let cs = crate::quant::panelcache::owner_stats(e.service.weight_prefix())
+                    .unwrap_or_default();
                 ServiceStat {
                     key: key.to_string(),
                     artifact: e.service.artifact().to_string(),
@@ -387,6 +389,10 @@ impl Router {
                     batch_wait: StageStat::of(&m.batch_wait),
                     engine: StageStat::of(&m.engine),
                     e2e: StageStat::of(&m.e2e),
+                    cache_bytes: cs.bytes,
+                    cache_hits: cs.hits,
+                    cache_misses: cs.misses,
+                    cache_hit_rate: cs.hit_rate(),
                 }
             })
             .collect();
@@ -397,6 +403,7 @@ impl Router {
             queued: self.queued(),
             device_buffers: estats.cached_buffers,
             executables: estats.executables,
+            panelcache_bytes: crate::quant::panelcache::bytes_in_use(),
             models: self.registered_models(),
         }
     }
@@ -562,6 +569,15 @@ pub struct ServiceStat {
     pub engine: StageStat,
     /// Admitted → reply construction (the whole request lifecycle).
     pub e2e: StageStat,
+    /// Decoded-panel cache bytes currently held for this service's weights
+    /// (0 when the cache is disabled or nothing is resident).
+    pub cache_bytes: u64,
+    /// Panel-cache hits attributed to this service's weight prefix.
+    pub cache_hits: u64,
+    /// Panel-cache misses attributed to this service's weight prefix.
+    pub cache_misses: u64,
+    /// hits / (hits + misses), 0.0 when no lookups happened.
+    pub cache_hit_rate: f64,
 }
 
 impl ServiceStat {
@@ -587,6 +603,10 @@ impl ServiceStat {
             .set("p50_us", Json::Num(self.p50_us as f64))
             .set("p99_us", Json::Num(self.p99_us as f64))
             .set("mean_us", Json::Num(self.mean_us as f64))
+            .set("cache_bytes", Json::Num(self.cache_bytes as f64))
+            .set("cache_hits", Json::Num(self.cache_hits as f64))
+            .set("cache_misses", Json::Num(self.cache_misses as f64))
+            .set("cache_hit_rate", Json::Num(self.cache_hit_rate))
             .set("stages", stages);
         o
     }
@@ -625,6 +645,9 @@ pub struct RouterSnapshot {
     pub device_buffers: usize,
     /// Compiled executables held by the engine.
     pub executables: usize,
+    /// Host decoded-panel cache bytes in use across all services (0 when
+    /// `AFQ_PANEL_CACHE_BYTES` is unset — the cache is opt-in).
+    pub panelcache_bytes: u64,
     /// Registered model names.
     pub models: Vec<String>,
 }
@@ -642,6 +665,7 @@ impl RouterSnapshot {
             .set("queued", Json::Num(self.queued as f64))
             .set("device_buffers", Json::Num(self.device_buffers as f64))
             .set("executables", Json::Num(self.executables as f64))
+            .set("panelcache_bytes", Json::Num(self.panelcache_bytes as f64))
             .set(
                 "models",
                 Json::from_strs(&self.models.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
@@ -654,12 +678,13 @@ impl std::fmt::Display for RouterSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "router: {} service(s), {} model(s), {} queued, {} device buffers, {} executables",
+            "router: {} service(s), {} model(s), {} queued, {} device buffers, {} executables, {} panel-cache bytes",
             self.services.len(),
             self.models.len(),
             self.queued,
             self.device_buffers,
-            self.executables
+            self.executables,
+            self.panelcache_bytes
         )?;
         for s in &self.services {
             writeln!(f, "  {s}")?;
@@ -1174,6 +1199,12 @@ mod tests {
             assert!(count >= 0.0, "{stage}");
         }
         assert!(services[0].get("aborted").unwrap().as_f64().is_some());
+        // Panel-cache fields are present (zeros when the cache is disabled,
+        // which is the default in tests that don't opt in).
+        for field in ["cache_bytes", "cache_hits", "cache_misses", "cache_hit_rate"] {
+            assert!(services[0].get(field).unwrap().as_f64().unwrap() >= 0.0, "{field}");
+        }
+        assert!(j.get("panelcache_bytes").unwrap().as_f64().unwrap() >= 0.0);
         assert!(j.get("device_buffers").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(
             j.get("models").unwrap().as_arr().unwrap()[0].as_str().unwrap(),

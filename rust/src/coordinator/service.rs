@@ -201,6 +201,11 @@ impl ModelService {
         eng.manifest().artifact(&artifact)?; // fail fast if missing
         let generation = PREPARE_SEQ.fetch_add(1, Ordering::Relaxed);
         let prefix = format!("{}/g{generation}", plan.key_prefix(model));
+        // The generation-tagged prefix is also this service's owner key
+        // in the decoded-panel cache: registering up front makes the
+        // tenant visible in snapshots (0 bytes) before any host qgemm —
+        // AFQ_HOST_PARITY probes, benches, mock backends — touches it.
+        crate::quant::panelcache::register_owner(&prefix);
         let weight_args = Self::weight_args(&plan, &meta, params, &prefix, fused_planned)?;
         let mut keys = Vec::with_capacity(weight_args.len());
         for (key, shape, data) in weight_args {
@@ -333,11 +338,21 @@ impl ModelService {
         Ok(total / n.max(1) as f64)
     }
 
-    /// Free this service's device-resident weights. Crate-internal: the
-    /// router evicts a service only after its batcher has drained. The
-    /// trailing `/` keeps `…/g3` from also matching `…/g30`.
+    /// Free this service's device-resident weights AND its decoded-panel
+    /// cache entries (entries die with their service — the cache half of
+    /// the coherence contract). Crate-internal: the router evicts a
+    /// service only after its batcher has drained, so drain/teardown/
+    /// shutdown all funnel through here. The trailing `/` keeps `…/g3`
+    /// from also matching `…/g30`.
     pub(crate) fn release(&self) {
         self.eng.evict(&format!("{}/", self.prefix));
+        crate::quant::panelcache::invalidate_owner(&self.prefix);
+    }
+
+    /// This instance's generation-tagged weight prefix — the device
+    /// buffer namespace and the decoded-panel cache owner key.
+    pub fn weight_prefix(&self) -> &str {
+        &self.prefix
     }
 
     pub fn batch(&self) -> usize {

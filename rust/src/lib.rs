@@ -47,7 +47,16 @@
 //!   and `qgemm_batch` amortizes one weight decode across stacked
 //!   requests while staying bitwise equal to scoring each alone.
 //!   Golden-vector parity with the Pallas kernel is pinned by
-//!   `rust/tests/fused_parity.rs`.
+//!   `rust/tests/fused_parity.rs`. On top sits [`quant::panelcache`]:
+//!   an opt-in (`AFQ_PANEL_CACHE_BYTES`), byte-budgeted, process-wide
+//!   LRU cache of exactly those decoded f32 panels, keyed by
+//!   `(service weight prefix, tensor, panel coords, LUT hash)` — decode
+//!   once across *calls*, not just within one. Cache coherence is a
+//!   contract: because decode is elementwise and the cache stores the
+//!   very panels the kernel would have produced, cached and uncached
+//!   runs are **bitwise identical** for any budget, eviction history,
+//!   and worker count; the budget never overshoots (evict-before-insert);
+//!   and entries die with their owning service.
 //! - [`plan`] — the **quantization planner**: given a model's weights, a
 //!   candidate grid (families × block sizes, ± double-quantized scales)
 //!   and a bits-per-parameter budget, assign each tensor its own spec by
@@ -120,9 +129,14 @@
 //!   `_total`, durations in µs, Prometheus-style labels baked into the
 //!   registered name (e.g.
 //!   `afq_service_requests_total{service="tiny/nf4@64",path="plan-fused"}`).
-//! - **Exposition.** `afq obs metrics` prints Prometheus text; every
-//!   bench envelope written by [`util::bench::save_bench_doc`] embeds a
-//!   JSON registry snapshot under its `"metrics"` key.
+//! - **Exposition.** `afq obs metrics` prints Prometheus text (families
+//!   grouped by base name — one `# TYPE` line each, deterministic order);
+//!   every bench envelope written by [`util::bench::save_bench_doc`]
+//!   embeds a JSON registry snapshot under its `"metrics"` key plus the
+//!   decoded-panel cache high-water mark (`panelcache_peak_bytes`).
+//!   The cache itself reports `afq_panelcache_{hits,misses,inserts,
+//!   evictions}_total` and the `afq_panelcache_bytes` gauge; router
+//!   snapshots carry per-service cache bytes and hit rate.
 //!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
 //! [`quant`] (the mechanism), and [`plan`] (the budgeted per-tensor

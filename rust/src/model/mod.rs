@@ -70,7 +70,7 @@ pub fn quantized_weight_args(
     let quantized = params.quantize_matrices(meta, code, block_size);
     for ((name, q), (_, shape)) in quantized.into_iter().zip(&meta.matrix_order) {
         if host_parity {
-            host_parity_check(&name, &q, shape, code);
+            host_parity_check(&name, &q, shape, code, key_prefix);
         }
         let n = q.len;
         out.push((
@@ -91,8 +91,17 @@ pub fn quantized_weight_args(
 /// [`quantized_weight_args`]): views the flat buffer as a row-major
 /// matrix, multiplies a deterministic probe batch through both the fused
 /// nibble-domain path and dequantize-then-matmul, and panics when they
-/// disagree beyond f32 accumulation-order noise.
-fn host_parity_check(name: &str, q: &crate::quant::Quantized, shape: &[usize], code: &Code) {
+/// disagree beyond f32 accumulation-order noise. The view is tagged with
+/// the service's weight prefix, so with the decoded-panel cache enabled
+/// these prepare-time probes populate (and are invalidated with) the
+/// owning service's cache entries.
+fn host_parity_check(
+    name: &str,
+    q: &crate::quant::Quantized,
+    shape: &[usize],
+    code: &Code,
+    owner: &str,
+) {
     use crate::quant::MatrixQuant;
     use crate::tensor::Matrix;
     let rows = shape[0];
@@ -100,7 +109,8 @@ fn host_parity_check(name: &str, q: &crate::quant::Quantized, shape: &[usize], c
     if rows * cols != q.len {
         panic!("host parity: {name} shape {shape:?} does not match {} quantized elements", q.len);
     }
-    let view = MatrixQuant::from_flat(rows, cols, q.clone(), &code.name);
+    let view =
+        MatrixQuant::from_flat(rows, cols, q.clone(), &code.name).with_cache_tag(owner, name);
     let mut rng = crate::util::rng::Rng::new(0xA11CE);
     let probe = Matrix::randn(2, rows, 1.0, &mut rng);
     let fused = view.qgemm(&probe, code);
@@ -162,7 +172,7 @@ pub fn planned_fused_weight_args(
                     })?;
                 let code = code.as_ref();
                 if host_parity {
-                    host_parity_check(&name, &q, shape, code);
+                    host_parity_check(&name, &q, shape, code, key_prefix);
                 }
                 let n = q.len;
                 out.push((
@@ -261,7 +271,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(4);
         let data: Vec<f32> = (0..24 * 16).map(|_| rng.normal() as f32 * 0.02).collect();
         let q = crate::quant::quantize(&data, 64, &code);
-        host_parity_check("w.test", &q, &[24, 16], &code); // must not panic
+        host_parity_check("w.test", &q, &[24, 16], &code, "test/model/parity"); // must not panic
     }
 
     #[test]
@@ -269,7 +279,7 @@ mod tests {
     fn host_parity_check_rejects_shape_mismatch() {
         let code = crate::codes::nf4();
         let q = crate::quant::quantize(&vec![0.5f32; 64], 64, &code);
-        host_parity_check("w.bad", &q, &[9, 9], &code);
+        host_parity_check("w.bad", &q, &[9, 9], &code, "test/model/parity");
     }
 
     #[test]

@@ -121,11 +121,21 @@ fn with_label(name: &str, label: &str) -> String {
 
 /// Prometheus text exposition of every registered metric. Histograms are
 /// rendered as quantile summaries (values in µs) plus `_sum_us`/`_count`.
+///
+/// Metric families are grouped: entries are ordered by base name first, so
+/// each family gets exactly one `# TYPE` line and its series stay
+/// contiguous. (Plain BTreeMap order is not enough — `{` sorts after
+/// lowercase letters, so `afq_x_total` would split from `afq_x_total{…}`
+/// whenever a name like `afq_x_totals` sat between them.)
 pub fn to_prometheus() -> String {
     with_registry(|m| {
+        let mut entries: Vec<(&String, &Metric)> = m.iter().collect();
+        entries.sort_by(|a, b| {
+            base_name(a.0).cmp(base_name(b.0)).then_with(|| a.0.cmp(b.0))
+        });
         let mut out = String::new();
         let mut last_base = String::new();
-        for (name, metric) in m.iter() {
+        for (name, metric) in entries {
             let base = base_name(name);
             if base != last_base {
                 let kind = match metric {
@@ -255,5 +265,31 @@ mod tests {
         let hj = j.get("afq_test_registry_expo_us").unwrap();
         assert_eq!(hj.get("count").unwrap().as_f64().unwrap(), 1.0);
         assert!(hj.get("p50_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// Families must stay contiguous with a single `# TYPE` line even when
+    /// a lexically-between name would split the bare series from its
+    /// labelled siblings under plain name order (`{` = 0x7b sorts after
+    /// all lowercase letters, so `afq_test_registry_split_total` <
+    /// `afq_test_registry_split_totals` <
+    /// `afq_test_registry_split_total{…}` under BTreeMap order).
+    #[test]
+    fn prometheus_families_stay_contiguous() {
+        counter("afq_test_registry_split_total").inc(1);
+        counter("afq_test_registry_split_totals").inc(1);
+        counter("afq_test_registry_split_total{service=\"svc\"}").inc(1);
+        let text = to_prometheus();
+        let type_lines = text
+            .lines()
+            .filter(|l| l.starts_with("# TYPE afq_test_registry_split_total "))
+            .count();
+        assert_eq!(type_lines, 1, "family emitted {type_lines} TYPE lines:\n{text}");
+        // The labelled series must sit directly under its family's TYPE
+        // line, before any other family starts.
+        let idx_type = text.find("# TYPE afq_test_registry_split_total ").unwrap();
+        let idx_bare = text.find("afq_test_registry_split_total 1").unwrap();
+        let idx_lbl = text.find("afq_test_registry_split_total{service=\"svc\"} 1").unwrap();
+        let idx_other = text.find("# TYPE afq_test_registry_split_totals ").unwrap();
+        assert!(idx_type < idx_bare && idx_bare < idx_lbl && idx_lbl < idx_other, "{text}");
     }
 }

@@ -35,6 +35,16 @@
 //! - **Batch scoring.** [`qgemm_batch`] stacks several activation
 //!   matrices (requests sharing a service) into one kernel invocation, so
 //!   one weight decode is amortized across the whole batch dimension.
+//! - **Decode-once across calls.** When a matrix carries a cache tag
+//!   (`MatrixQuant::with_cache_tag`) and the router-wide panel cache is
+//!   enabled, the units this kernel decodes — whole Col-layout lines and
+//!   Row-layout KC×NC panels — are looked up in
+//!   [`crate::quant::panelcache`] and populated on miss through the same
+//!   [`decode_line_into`]/[`decode_row_panel_into`] slots the cold path
+//!   uses. Decode is elementwise and deterministic, so a cached panel is
+//!   byte-identical to a fresh decode and the bitwise contract below is
+//!   unaffected; segment descriptors (which fix accumulation order) are
+//!   computed on hit and miss alike.
 //!
 //! [`qgemm_scalar`] preserves the pre-tiling scalar loop nest as the
 //! reference implementation: `benches/quant.rs` reports tiled-vs-scalar
@@ -71,9 +81,11 @@
 //! `rust/tests/plan_parity.rs`).
 
 use crate::codes::Code;
+use crate::quant::panelcache::{self, CacheTag, PanelId};
 use crate::quant::{quantize, MatrixQuant, QuantAxis, Quantized};
 use crate::tensor::Matrix;
 use crate::util::threadpool::scope_map;
+use std::sync::Arc;
 
 /// Batch rows processed together by the Col-layout microkernel: MR
 /// independent accumulator chains per pass. 4 keeps well inside the
@@ -279,10 +291,28 @@ unsafe fn qgemm_into(
 ) {
     debug_assert!(c0 <= c1 && c1 <= w.cols && c1 <= stride);
     let win = OutWindow { base: out, stride, c0, c1 };
+    // Tagged matrix + enabled cache → decoded panels are shared across
+    // calls (and across qgemm_par shards of this call). Untagged or
+    // disabled → the pre-cache code path, byte for byte.
+    let cache = match &w.cache_tag {
+        Some(tag) if panelcache::enabled() => {
+            Some(CacheCtx { tag, thash: panelcache::table_hash(table) })
+        }
+        _ => None,
+    };
     match w.axis {
-        QuantAxis::Col => qgemm_col_into(x, w, table, &win),
-        QuantAxis::Row => qgemm_row_into(x, w, table, &win),
+        QuantAxis::Col => qgemm_col_into(x, w, table, &win, cache.as_ref()),
+        QuantAxis::Row => qgemm_row_into(x, w, table, &win, cache.as_ref()),
     }
+}
+
+/// Panel-cache context for one kernel invocation of a tagged matrix: the
+/// matrix's identity plus this call's code-table hash. The LUT is a
+/// **runtime** input to `qgemm`, so panels are keyed by table content —
+/// the same tagged matrix served under two tables never shares panels.
+struct CacheCtx<'a> {
+    tag: &'a Arc<CacheTag>,
+    thash: u64,
 }
 
 /// One quantization-block segment of a stored line: within-line element
@@ -341,6 +371,60 @@ fn scale_at(w: &MatrixQuant, line_base: usize, li: usize, off: usize) -> f32 {
     }
 }
 
+/// Decode-into-slot: materialize elements `[lo, …)` of one stored line
+/// (described by precomputed segment descriptors) into `out` — the exact
+/// f32 bytes the multiply loops consume, whether `out` is the kernel's
+/// reusable scratch buffer or a fresh panel-cache slot. Elementwise and
+/// deterministic: a cached slot is byte-identical to a fresh decode.
+fn decode_line_into(
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    line_base: usize,
+    lo: usize,
+    segs: &[Seg],
+    out: &mut [f32],
+) {
+    for sg in segs {
+        let mut lut = [0.0f32; 16];
+        for (l, &t) in lut.iter_mut().zip(table.iter()) {
+            *l = t * sg.scale;
+        }
+        for (j, v) in out[sg.start - lo..sg.end - lo].iter_mut().enumerate() {
+            *v = lut[w.q.index(line_base + sg.start + j) as usize];
+        }
+    }
+}
+
+/// Decode-into-slot for a Row-layout `[r0, r1) × [nc0, nc1)` panel
+/// (`(r1-r0) × (nc1-nc0)` row-major f32s in `out`). Segment descriptors
+/// are derived here — the cached path skips them entirely on a hit, the
+/// cold path pays them exactly as before.
+fn decode_row_panel_into(
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    r0: usize,
+    r1: usize,
+    nc0: usize,
+    nc1: usize,
+    segs: &mut Vec<Seg>,
+    out: &mut [f32],
+) {
+    let n = w.cols;
+    let ncw = nc1 - nc0;
+    for r in r0..r1 {
+        let base = r * n;
+        line_segments(w, base, r, n, nc0, nc1, segs);
+        decode_line_into(
+            w,
+            table,
+            base,
+            nc0,
+            segs,
+            &mut out[(r - r0) * ncw..(r - r0) * ncw + ncw],
+        );
+    }
+}
+
 /// Col-axis tiled kernel: the packed buffer stores W^T row-major (`w.cols`
 /// lines of length `w.rows`), blocks running along the reduced axis — the
 /// Pallas qmatmul layout. One stored line per output column: the line is
@@ -352,7 +436,13 @@ fn scale_at(w: &MatrixQuant, line_base: usize, li: usize, off: usize) -> f32 {
 /// ascending order, folded into a running total started at 0.0) is
 /// exactly the scalar reference's, so the output is bit-identical to
 /// [`qgemm_scalar`].
-unsafe fn qgemm_col_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &OutWindow) {
+unsafe fn qgemm_col_into(
+    x: &Matrix,
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    win: &OutWindow,
+    cache: Option<&CacheCtx>,
+) {
     let k = w.rows;
     let m = x.rows;
     if m == 0 {
@@ -360,21 +450,38 @@ unsafe fn qgemm_col_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &O
     }
     let mut segs: Vec<Seg> = Vec::new();
     // Whole-line decode scratch, reused across columns (k f32s — L1 for
-    // typical k; never a full matrix).
+    // typical k; never a full matrix). The cached path holds shared
+    // `Arc`'d lines instead and leaves this untouched.
     let mut vals = vec![0.0f32; k];
     for c in win.c0..win.c1 {
         let base = c * k;
+        // Segment descriptors drive the multiply loops' accumulation
+        // order, so they are computed on hit and miss alike — a cache
+        // hit only skips the decode itself.
         line_segments(w, base, c, k, 0, k, &mut segs);
-        // Decode the stored line once; reused across every batch row.
-        for sg in &segs {
-            let mut lut = [0.0f32; 16];
-            for (l, &t) in lut.iter_mut().zip(table.iter()) {
-                *l = t * sg.scale;
+        let hold: Arc<Vec<f32>>;
+        let line: &[f32] = match cache {
+            Some(ctx) => {
+                let id = PanelId::Line(c as u32);
+                hold = match panelcache::get(ctx.tag, ctx.thash, id) {
+                    Some(hit) => hit,
+                    None => {
+                        let mut v = vec![0.0f32; k];
+                        decode_line_into(w, table, base, 0, &segs, &mut v);
+                        let fresh = Arc::new(v);
+                        panelcache::insert(ctx.tag, ctx.thash, id, Arc::clone(&fresh));
+                        fresh
+                    }
+                };
+                &hold
             }
-            for (j, v) in vals[sg.start..sg.end].iter_mut().enumerate() {
-                *v = lut[w.q.index(base + sg.start + j) as usize];
+            None => {
+                // Decode the stored line once; reused across every batch
+                // row.
+                decode_line_into(w, table, base, 0, &segs, &mut vals);
+                &vals
             }
-        }
+        };
         // Register-blocked batch rows: MR independent accumulator chains
         // pipeline the FMAs that a single row's dot product serializes.
         let mut i = 0usize;
@@ -385,7 +492,7 @@ unsafe fn qgemm_col_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &O
             let x3 = &x.data[(i + 3) * k..(i + 4) * k];
             let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
             for sg in &segs {
-                let vs = &vals[sg.start..sg.end];
+                let vs = &line[sg.start..sg.end];
                 let s0 = &x0[sg.start..sg.end];
                 let s1 = &x1[sg.start..sg.end];
                 let s2 = &x2[sg.start..sg.end];
@@ -413,7 +520,7 @@ unsafe fn qgemm_col_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &O
             let xr = &x.data[i * k..(i + 1) * k];
             let mut tot = 0.0f32;
             for sg in &segs {
-                let vs = &vals[sg.start..sg.end];
+                let vs = &line[sg.start..sg.end];
                 let xs = &xr[sg.start..sg.end];
                 let mut acc = 0.0f32;
                 for (j, &v) in vs.iter().enumerate() {
@@ -438,9 +545,14 @@ unsafe fn qgemm_col_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &O
 /// reference's order — bit-identical output. No zero-weight skip: both
 /// layouts must propagate whatever the activations carry (incl.
 /// non-finite values) exactly like the dequantize-then-matmul reference.
-unsafe fn qgemm_row_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &OutWindow) {
+unsafe fn qgemm_row_into(
+    x: &Matrix,
+    w: &MatrixQuant,
+    table: &[f32; 16],
+    win: &OutWindow,
+    cache: Option<&CacheCtx>,
+) {
     let k = w.rows;
-    let n = w.cols;
     let m = x.rows;
     if m == 0 {
         return;
@@ -454,28 +566,42 @@ unsafe fn qgemm_row_into(x: &Matrix, w: &MatrixQuant, table: &[f32; 16], win: &O
         let mut r0 = 0usize;
         while r0 < k {
             let r1 = (r0 + KC).min(k);
-            // Decode rows [r0, r1) × cols [nc0, nc1) of W into the panel.
-            for r in r0..r1 {
-                let base = r * n;
-                line_segments(w, base, r, n, nc0, nc1, &mut segs);
-                let prow = &mut panel[(r - r0) * ncw..(r - r0) * ncw + ncw];
-                for sg in &segs {
-                    let mut lut = [0.0f32; 16];
-                    for (l, &t) in lut.iter_mut().zip(table.iter()) {
-                        *l = t * sg.scale;
-                    }
-                    for (j, v) in prow[sg.start - nc0..sg.end - nc0].iter_mut().enumerate() {
-                        *v = lut[w.q.index(base + sg.start + j) as usize];
-                    }
+            let hold: Arc<Vec<f32>>;
+            let pan: &[f32] = match cache {
+                Some(ctx) => {
+                    // The shard's column window shapes the panel grid, so
+                    // the panel width is part of the key — different
+                    // worker counts cache different (correct) panels.
+                    let id =
+                        PanelId::Panel { r0: r0 as u32, c0: nc0 as u32, w: ncw as u32 };
+                    hold = match panelcache::get(ctx.tag, ctx.thash, id) {
+                        Some(hit) => hit,
+                        None => {
+                            let mut v = vec![0.0f32; (r1 - r0) * ncw];
+                            decode_row_panel_into(
+                                w, table, r0, r1, nc0, nc1, &mut segs, &mut v,
+                            );
+                            let fresh = Arc::new(v);
+                            panelcache::insert(ctx.tag, ctx.thash, id, Arc::clone(&fresh));
+                            fresh
+                        }
+                    };
+                    &hold
                 }
-            }
+                None => {
+                    // Decode rows [r0, r1) × cols [nc0, nc1) of W into the
+                    // reusable panel.
+                    decode_row_panel_into(w, table, r0, r1, nc0, nc1, &mut segs, &mut panel);
+                    &panel
+                }
+            };
             // Sweep the L1-hot panel with every batch row: the output row
             // window stays register/L1-resident across the KC updates.
             for i in 0..m {
                 let out_row = win.row(i, nc0, nc1);
                 for r in r0..r1 {
                     let xv = x.data[i * k + r];
-                    let prow = &panel[(r - r0) * ncw..(r - r0) * ncw + ncw];
+                    let prow = &pan[(r - r0) * ncw..(r - r0) * ncw + ncw];
                     for (o, &v) in out_row.iter_mut().zip(prow.iter()) {
                         *o += xv * v;
                     }
@@ -744,6 +870,91 @@ mod tests {
         }
         let none: Vec<Matrix> = Vec::new();
         assert!(qgemm_batch(&none, &MatrixQuant::quantize(&randn(2, 2, 1), 2, &code, QuantAxis::Col), &code, 4).is_empty());
+    }
+
+    /// Tentpole acceptance battery: with the decoded-panel cache
+    /// enabled, the cold (first touch), warm (fully populated), and
+    /// post-eviction (invalidated, repopulating) paths all stay
+    /// **bitwise** identical to [`qgemm_scalar`] — across both layouts,
+    /// B ∈ {8, 64, 1024}, several batch sizes around the MR block, and
+    /// serial + parallel worker counts (each worker count run twice:
+    /// its first pass populates shard-shaped panels, its second hits
+    /// them). `qgemm_batch` through the cache matches solo scoring too.
+    #[test]
+    fn cached_qgemm_bitwise_cold_warm_postevict() {
+        let code = nf4();
+        let _g = panelcache::lock_for_tests();
+        panelcache::set_budget(Some(8 << 20));
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for (ai, axis) in [QuantAxis::Col, QuantAxis::Row].into_iter().enumerate() {
+            for &bs in &[8usize, 64, 1024] {
+                let (k, n) = (48usize, 37);
+                let w_mat = randn(k, n, 700 + (ai * 7) as u64 + bs as u64);
+                let plain = MatrixQuant::quantize(&w_mat, bs, &code, axis);
+                let owner = format!("test/fused/cached-{axis:?}-{bs}");
+                let tagged = plain.clone().with_cache_tag(&owner, "w");
+                for &m in &[1usize, 3, 4, 9] {
+                    let x = randn(m, k, 900 + m as u64 + bs as u64);
+                    let want = qgemm_scalar(&x, &plain, &code);
+                    for phase in ["cold", "warm", "post-eviction"] {
+                        if phase == "post-eviction" {
+                            assert!(
+                                panelcache::invalidate_owner(&owner) > 0,
+                                "warm phase must have populated panels"
+                            );
+                        }
+                        let got = qgemm(&x, &tagged, &code);
+                        assert_eq!(
+                            bits(&got),
+                            bits(&want),
+                            "axis={axis:?} bs={bs} m={m} {phase} diverged from scalar"
+                        );
+                    }
+                    for workers in [2usize, 4, 9] {
+                        for pass in ["populate", "hit"] {
+                            let got = qgemm_par(&x, &tagged, &code, workers);
+                            assert_eq!(
+                                bits(&got),
+                                bits(&want),
+                                "axis={axis:?} bs={bs} m={m} workers={workers} {pass}"
+                            );
+                        }
+                    }
+                }
+                let stats = panelcache::owner_stats(&owner).unwrap();
+                assert!(stats.hits > 0, "warm passes must actually hit the cache");
+                // Batched scoring rides the same cached panels.
+                let reqs: Vec<Matrix> =
+                    [1usize, 4, 2].iter().enumerate().map(|(i, &m)| randn(m, k, 1100 + i as u64)).collect();
+                for (x, y) in reqs.iter().zip(&qgemm_batch(&reqs, &tagged, &code, 4)) {
+                    assert_eq!(
+                        bits(y),
+                        bits(&qgemm_scalar(x, &plain, &code)),
+                        "axis={axis:?} bs={bs} batched request diverged"
+                    );
+                }
+                panelcache::invalidate_owner(&owner);
+            }
+        }
+        panelcache::set_budget(None);
+    }
+
+    /// An untagged matrix never touches the cache even when the cache is
+    /// enabled — opting in is per matrix, and the default path carries
+    /// zero cache overhead.
+    #[test]
+    fn untagged_matrix_bypasses_enabled_cache() {
+        let code = nf4();
+        let _g = panelcache::lock_for_tests();
+        panelcache::clear_for_tests();
+        panelcache::set_budget(Some(1 << 20));
+        let entries_before = panelcache::entry_count();
+        let wq = MatrixQuant::quantize(&randn(16, 12, 77), 8, &code, QuantAxis::Col);
+        assert!(wq.cache_tag.is_none());
+        let x = randn(3, 16, 78);
+        assert_eq!(qgemm(&x, &wq, &code).data, qgemm_scalar(&x, &wq, &code).data);
+        assert_eq!(panelcache::entry_count(), entries_before, "no entries from untagged qgemm");
+        panelcache::set_budget(None);
     }
 
     #[test]

@@ -48,6 +48,13 @@ pub struct MatrixQuant {
     /// `q.scales[li * bpl + off / block]` is the scale of element `off` of
     /// line `li`, and the flat `i / block_size` rule does NOT apply.
     pub per_line: Option<(usize, usize)>,
+    /// Identity in the router-wide decoded-panel cache
+    /// ([`crate::quant::panelcache`]): `None` (the default) means every
+    /// `qgemm` call decodes — the pre-cache behavior. Set via
+    /// [`Self::with_cache_tag`] for weights that are immutable for the
+    /// tag's lifetime (the owner must be invalidated before the bytes
+    /// under it can change).
+    pub cache_tag: Option<std::sync::Arc<crate::quant::panelcache::CacheTag>>,
 }
 
 impl MatrixQuant {
@@ -127,6 +134,7 @@ impl MatrixQuant {
             dq: None,
             code_name: code.name.clone(),
             per_line,
+            cache_tag: None,
         }
     }
 
@@ -153,7 +161,19 @@ impl MatrixQuant {
             dq: None,
             code_name: code_name.to_string(),
             per_line: None,
+            cache_tag: None,
         }
+    }
+
+    /// Opt this matrix into the router-wide decoded-panel cache under
+    /// `(owner, tensor)` — see [`crate::quant::panelcache`] for the key
+    /// semantics and coherence contract. The caller owns uniqueness:
+    /// `owner` must name exactly one immutable weight set (services use
+    /// their generation-tagged weight prefix) and must be invalidated
+    /// (`panelcache::invalidate_owner`) when those weights die.
+    pub fn with_cache_tag(mut self, owner: &str, tensor: &str) -> Self {
+        self.cache_tag = Some(crate::quant::panelcache::tag(owner, tensor));
+        self
     }
 
     /// Enable double quantization of scales with the given group size.

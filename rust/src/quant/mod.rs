@@ -23,6 +23,7 @@
 pub mod double;
 pub mod fused;
 pub mod matrix;
+pub mod panelcache;
 pub mod spec;
 
 pub use fused::{qgemm, qgemm_batch, qgemm_par, qgemm_scalar, quantize_par};

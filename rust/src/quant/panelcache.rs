@@ -1,0 +1,503 @@
+//! Router-wide decoded-panel cache: decode each weight panel once, serve
+//! it many times — under a hard byte budget.
+//!
+//! Weights behind a [`crate::coordinator::Router`] are immutable after
+//! prepare, yet every host `qgemm` call pays the nibble→LUT→scale decode
+//! for every panel it touches; `qgemm_batch` only amortizes that decode
+//! *within* one batch. This module caches the exact f32 panels the tiled
+//! kernel in [`crate::quant::fused`] already materializes — Col-layout
+//! decoded lines ([`PanelId::Line`]) and Row-layout KC×NC panels
+//! ([`PanelId::Panel`]) — keyed by `(owner, tensor, table hash, panel
+//! coordinates)` where `owner` is the service's generation-tagged weight
+//! prefix. One process-global LRU spans *all* services, so a byte budget
+//! set once bounds the fleet's decode memory no matter how many (model ×
+//! plan) tenants are resident.
+//!
+//! ## Cache-coherence contract
+//!
+//! - **Bitwise transparency**: decode is elementwise and deterministic,
+//!   so a cached panel is byte-identical to a freshly decoded one and
+//!   the kernel's accumulation order is untouched. Cached, cold,
+//!   evicted-and-repopulated, and parallel paths all produce outputs
+//!   byte-identical to [`crate::quant::qgemm_scalar`], for any budget
+//!   and worker count (pinned by the fused property battery and
+//!   [`tests::many_tenant_churn_respects_budget_and_lru`]).
+//! - **Budget never overshoots**: an insert evicts LRU entries *first*
+//!   and is dropped entirely if the panel alone exceeds the budget
+//!   (computed locally, used, not cached). [`bytes_in_use`] ≤
+//!   [`budget_bytes`] is an invariant, not a target.
+//! - **Entries die with their service**: [`crate::coordinator::Router`]
+//!   teardown/drain calls `ModelService::release`, which calls
+//!   [`invalidate_owner`] on the service's weight prefix.
+//!
+//! ## Enabling
+//!
+//! Off by default (current behavior: every call decodes). Enabled by
+//! `AFQ_PANEL_CACHE_BYTES=<bytes>` in the environment, or
+//! programmatically via [`set_budget`] (benches/tests; takes precedence
+//! over the env var). Panels participate only when their
+//! [`crate::quant::MatrixQuant`] carries a cache tag
+//! (`MatrixQuant::with_cache_tag`) — untagged matrices always decode.
+//!
+//! Counters `afq_panelcache_{hits,misses,evictions,inserts}_total`, the
+//! `afq_panelcache_bytes` gauge, and its high-water mark
+//! `afq_panelcache_bytes_peak` mirror into [`crate::obs::registry`];
+//! [`crate::util::bench::save_bench_doc`] stamps the peak into every
+//! bench envelope so the memory-for-throughput tradeoff is visible in
+//! `results/BENCH_*.json`.
+
+use crate::obs::registry::{counter, gauge, Counter, Gauge};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Identity of a cacheable weight matrix: the owning service's weight
+/// prefix (generation-tagged, e.g. `tiny/nf4@64/3/g7`) plus the tensor
+/// name within it. Owners must be unique per immutable weight set — the
+/// router's `PREPARE_SEQ` generation suffix guarantees that for
+/// services; bench/test users pick their own unique owner strings.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheTag {
+    pub owner: String,
+    pub tensor: String,
+}
+
+/// Build a shared cache tag for (`owner`, `tensor`).
+pub fn tag(owner: &str, tensor: &str) -> Arc<CacheTag> {
+    Arc::new(CacheTag { owner: owner.to_string(), tensor: tensor.to_string() })
+}
+
+/// Coordinates of one decoded panel within a tagged matrix, matching the
+/// units the tiled kernel decodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PanelId {
+    /// Col-layout: one whole decoded stored line (output column `c`,
+    /// `k` f32 values).
+    Line(u32),
+    /// Row-layout: the decoded KC×NC panel starting at stored row `r0`,
+    /// output column `c0`, of width `w` columns. The width is part of
+    /// the key because `qgemm_par` shards the column range, so the same
+    /// `(r0, c0)` can denote different panel widths under different
+    /// worker counts.
+    Panel { r0: u32, c0: u32, w: u32 },
+}
+
+type Key = (Arc<CacheTag>, u64, PanelId);
+
+/// Per-owner accounting, surfaced per service in
+/// `coordinator::ServiceStat`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OwnerStats {
+    /// Decoded bytes currently resident for this owner.
+    pub bytes: u64,
+    /// Resident entry count.
+    pub entries: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+impl OwnerStats {
+    /// Hits / (hits + misses); 0 when the owner never looked anything up.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+}
+
+struct Entry {
+    data: Arc<Vec<f32>>,
+    bytes: u64,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<Key, Entry>,
+    /// LRU order: tick of last use → key. Ticks are unique (monotone
+    /// counter bumped under the lock), so this is a total order.
+    lru: BTreeMap<u64, Key>,
+    tick: u64,
+    bytes: u64,
+    peak: u64,
+    /// `Some(b)` overrides the `AFQ_PANEL_CACHE_BYTES` env default
+    /// (benches/tests); `None` defers to the env var.
+    budget_override: Option<u64>,
+    owners: HashMap<String, OwnerStats>,
+}
+
+static CACHE: Mutex<Option<Inner>> = Mutex::new(None);
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_cache<T>(f: impl FnOnce(&mut Inner) -> T) -> T {
+    let mut guard = CACHE.lock().unwrap_or_else(|e| e.into_inner());
+    f(guard.get_or_insert_with(Inner::default))
+}
+
+/// Serializes tests that enable the cache or assert on its global
+/// counters (the cache is process-wide; `cargo test` runs in threads).
+/// Poisoning is ignored so one failing cache test doesn't cascade.
+pub fn lock_for_tests() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn env_budget() -> u64 {
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("AFQ_PANEL_CACHE_BYTES")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(0)
+    })
+}
+
+struct Handles {
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+    inserts: Counter,
+    bytes: Gauge,
+    peak: Gauge,
+}
+
+fn handles() -> &'static Handles {
+    static H: OnceLock<Handles> = OnceLock::new();
+    H.get_or_init(|| Handles {
+        hits: counter("afq_panelcache_hits_total"),
+        misses: counter("afq_panelcache_misses_total"),
+        evictions: counter("afq_panelcache_evictions_total"),
+        inserts: counter("afq_panelcache_inserts_total"),
+        bytes: gauge("afq_panelcache_bytes"),
+        peak: gauge("afq_panelcache_bytes_peak"),
+    })
+}
+
+/// Override the byte budget (`Some(bytes)`; `Some(0)` disables) or
+/// revert to the `AFQ_PANEL_CACHE_BYTES` env default (`None`). Shrinking
+/// the budget evicts immediately so the invariant holds at all times.
+pub fn set_budget(budget: Option<u64>) {
+    with_cache(|c| {
+        c.budget_override = budget;
+        let b = budget.unwrap_or_else(env_budget);
+        evict_to(c, b, 0);
+        handles().bytes.set(c.bytes as i64);
+    });
+}
+
+/// The active byte budget; 0 means the cache is disabled.
+pub fn budget_bytes() -> u64 {
+    with_cache(|c| c.budget_override.unwrap_or_else(env_budget))
+}
+
+/// Whether lookups/inserts do anything at all (budget > 0).
+pub fn enabled() -> bool {
+    budget_bytes() > 0
+}
+
+/// FNV-1a-64 over a code table's f32 bit patterns. Part of every cache
+/// key: decoded panel bytes are a function of (packed weights, scales,
+/// LUT), and the LUT is a *runtime* input to `qgemm` — the same tagged
+/// matrix served under two tables must never share panels.
+pub fn table_hash(table: &[f32; 16]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &v in table {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Look up a decoded panel. Counts a hit or miss (globally and for the
+/// owner) and refreshes LRU position on hit. Returns `None` when the
+/// cache is disabled (no stats recorded — disabled means inert).
+pub fn get(tag: &Arc<CacheTag>, thash: u64, id: PanelId) -> Option<Arc<Vec<f32>>> {
+    with_cache(|c| {
+        if c.budget_override.unwrap_or_else(env_budget) == 0 {
+            return None;
+        }
+        c.tick += 1;
+        let t = c.tick;
+        let key: Key = (Arc::clone(tag), thash, id);
+        if let Some(e) = c.map.get_mut(&key) {
+            let old = e.tick;
+            e.tick = t;
+            let data = Arc::clone(&e.data);
+            c.lru.remove(&old);
+            c.lru.insert(t, key);
+            handles().hits.inc(1);
+            c.owners.entry(tag.owner.clone()).or_default().hits += 1;
+            Some(data)
+        } else {
+            handles().misses.inc(1);
+            c.owners.entry(tag.owner.clone()).or_default().misses += 1;
+            None
+        }
+    })
+}
+
+/// Evict LRU entries until `bytes + incoming <= budget`.
+fn evict_to(c: &mut Inner, budget: u64, incoming: u64) {
+    while c.bytes + incoming > budget {
+        let Some((&t, _)) = c.lru.iter().next() else { break };
+        let key = c.lru.remove(&t).expect("lru key just observed");
+        let e = c.map.remove(&key).expect("map entry mirrors lru");
+        c.bytes -= e.bytes;
+        let os = c.owners.entry(key.0.owner.clone()).or_default();
+        os.bytes = os.bytes.saturating_sub(e.bytes);
+        os.entries = os.entries.saturating_sub(1);
+        os.evictions += 1;
+        handles().evictions.inc(1);
+    }
+}
+
+/// Insert a freshly decoded panel, evicting LRU entries first so the
+/// budget is never overshot. A panel larger than the whole budget is
+/// dropped (the caller already used it); re-inserting a key another
+/// thread populated concurrently is a no-op.
+pub fn insert(tag: &Arc<CacheTag>, thash: u64, id: PanelId, data: Arc<Vec<f32>>) {
+    let bytes = (data.len() * std::mem::size_of::<f32>()) as u64;
+    with_cache(|c| {
+        let budget = c.budget_override.unwrap_or_else(env_budget);
+        if budget == 0 || bytes > budget {
+            return;
+        }
+        let key: Key = (Arc::clone(tag), thash, id);
+        if c.map.contains_key(&key) {
+            return;
+        }
+        evict_to(c, budget, bytes);
+        c.tick += 1;
+        let t = c.tick;
+        c.lru.insert(t, key.clone());
+        c.map.insert(key, Entry { data, bytes, tick: t });
+        c.bytes += bytes;
+        c.peak = c.peak.max(c.bytes);
+        let os = c.owners.entry(tag.owner.clone()).or_default();
+        os.bytes += bytes;
+        os.entries += 1;
+        os.inserts += 1;
+        let h = handles();
+        h.inserts.inc(1);
+        h.bytes.set(c.bytes as i64);
+        h.peak.set(c.peak as i64);
+    })
+}
+
+/// Make an owner visible in [`owner_stats`] before its first lookup
+/// (services register at prepare so snapshots show 0-byte tenants).
+pub fn register_owner(owner: &str) {
+    with_cache(|c| {
+        c.owners.entry(owner.to_string()).or_default();
+    })
+}
+
+/// Drop every entry (and the stats row) belonging to `owner`. Returns
+/// the number of entries released. Called by `ModelService::release`,
+/// i.e. on router drain/teardown/shutdown — a dead service's panels
+/// never linger against the budget.
+pub fn invalidate_owner(owner: &str) -> usize {
+    with_cache(|c| {
+        let doomed: Vec<Key> =
+            c.map.keys().filter(|k| k.0.owner == owner).cloned().collect();
+        for key in &doomed {
+            let e = c.map.remove(key).expect("key just listed");
+            c.lru.remove(&e.tick);
+            c.bytes -= e.bytes;
+        }
+        c.owners.remove(owner);
+        handles().bytes.set(c.bytes as i64);
+        doomed.len()
+    })
+}
+
+/// Per-owner accounting, if the owner has registered or touched the
+/// cache.
+pub fn owner_stats(owner: &str) -> Option<OwnerStats> {
+    with_cache(|c| c.owners.get(owner).copied())
+}
+
+/// Total decoded bytes currently resident (the `afq_panelcache_bytes`
+/// gauge).
+pub fn bytes_in_use() -> u64 {
+    with_cache(|c| c.bytes)
+}
+
+/// High-water mark of [`bytes_in_use`] since process start (stamped into
+/// every bench envelope as `panelcache_peak_bytes`).
+pub fn peak_bytes() -> u64 {
+    with_cache(|c| c.peak)
+}
+
+/// Resident entry count across all owners.
+pub fn entry_count() -> usize {
+    with_cache(|c| c.map.len())
+}
+
+/// Drop everything, including owner stats and the peak (registry
+/// counters stay monotone). Test hygiene only.
+pub fn clear_for_tests() {
+    with_cache(|c| {
+        c.map.clear();
+        c.lru.clear();
+        c.bytes = 0;
+        c.peak = 0;
+        c.owners.clear();
+        handles().bytes.set(0);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::registry;
+    use crate::quant::{qgemm_scalar, MatrixQuant, QuantAxis};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn panel(n: usize, fill: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let _g = lock_for_tests();
+        set_budget(Some(0));
+        let t = tag("test/pc/disabled", "w");
+        insert(&t, 1, PanelId::Line(0), panel(64, 1.0));
+        assert_eq!(get(&t, 1, PanelId::Line(0)), None);
+        assert_eq!(owner_stats("test/pc/disabled").map(|s| s.misses), None);
+        set_budget(None);
+    }
+
+    #[test]
+    fn budget_never_overshoots_and_lru_evicts_oldest() {
+        let _g = lock_for_tests();
+        clear_for_tests();
+        // Budget fits exactly two 1 KiB panels.
+        set_budget(Some(2048));
+        let t = tag("test/pc/lru", "w");
+        insert(&t, 7, PanelId::Line(0), panel(256, 0.0));
+        insert(&t, 7, PanelId::Line(1), panel(256, 1.0));
+        assert_eq!(bytes_in_use(), 2048);
+        // Touch line 0 so line 1 becomes LRU; the third insert must
+        // evict line 1, not line 0, and never exceed the budget.
+        assert!(get(&t, 7, PanelId::Line(0)).is_some());
+        insert(&t, 7, PanelId::Line(2), panel(256, 2.0));
+        assert_eq!(bytes_in_use(), 2048);
+        assert!(get(&t, 7, PanelId::Line(0)).is_some(), "recently used entry survived");
+        assert!(get(&t, 7, PanelId::Line(1)).is_none(), "LRU entry evicted");
+        assert!(get(&t, 7, PanelId::Line(2)).is_some());
+        let s = owner_stats("test/pc/lru").unwrap();
+        assert_eq!((s.entries, s.bytes, s.evictions), (2, 2048, 1));
+        // Same (owner, tensor) under a different table hash is a
+        // distinct panel — LUTs are runtime inputs.
+        assert!(get(&t, 8, PanelId::Line(0)).is_none());
+        invalidate_owner("test/pc/lru");
+        set_budget(None);
+    }
+
+    #[test]
+    fn oversized_panel_is_used_but_never_cached() {
+        let _g = lock_for_tests();
+        clear_for_tests();
+        set_budget(Some(128));
+        let t = tag("test/pc/oversize", "w");
+        insert(&t, 1, PanelId::Line(0), panel(256, 0.5)); // 1 KiB > 128 B
+        assert_eq!(bytes_in_use(), 0);
+        assert!(get(&t, 1, PanelId::Line(0)).is_none());
+        invalidate_owner("test/pc/oversize");
+        set_budget(None);
+    }
+
+    #[test]
+    fn invalidate_owner_removes_only_that_owner() {
+        let _g = lock_for_tests();
+        clear_for_tests();
+        set_budget(Some(1 << 20));
+        let a = tag("test/pc/own-a", "w");
+        let b = tag("test/pc/own-b", "w");
+        insert(&a, 1, PanelId::Line(0), panel(64, 1.0));
+        insert(&b, 1, PanelId::Line(0), panel(64, 2.0));
+        assert_eq!(invalidate_owner("test/pc/own-a"), 1);
+        assert!(get(&a, 1, PanelId::Line(0)).is_none());
+        assert!(get(&b, 1, PanelId::Line(0)).is_some());
+        assert!(owner_stats("test/pc/own-a").is_none(), "stats row died with the owner");
+        invalidate_owner("test/pc/own-b");
+        set_budget(None);
+    }
+
+    /// Satellite churn stress (mini ROADMAP item 4): many tenants whose
+    /// combined decoded weights exceed the budget, hammered in a random
+    /// interleaving. Invariants: bytes never exceed the budget at any
+    /// observation point; eviction + repopulation stays bitwise
+    /// identical to the uncached scalar reference; after an exclusive
+    /// final pass the hot tenant is fully resident (LRU keeps the hot
+    /// set, evicts the cold one).
+    #[test]
+    fn many_tenant_churn_respects_budget_and_lru() {
+        let _g = lock_for_tests();
+        clear_for_tests();
+        let code = registry::build("nf4").unwrap();
+        let tenants = 8usize;
+        let (k, n) = (64usize, 96usize);
+        // Decoded bytes per tenant: n lines of k f32 = 24 KiB; budget
+        // holds ~2.5 tenants, so churn forces constant eviction.
+        let per_tenant = (n * k * 4) as u64;
+        let budget = per_tenant * 5 / 2;
+        set_budget(Some(budget));
+        let mut rng = Rng::new(0xC0FFEE);
+        let mats: Vec<(MatrixQuant, MatrixQuant)> = (0..tenants)
+            .map(|i| {
+                let m = Matrix::randn(k, n, 0.02, &mut rng);
+                let plain = MatrixQuant::quantize(&m, 32, &code, QuantAxis::Col);
+                let tagged =
+                    plain.clone().with_cache_tag(&format!("test/pc/churn-{i}"), "w");
+                (plain, tagged)
+            })
+            .collect();
+        let x = Matrix::randn(4, k, 1.0, &mut rng);
+        let want: Vec<Matrix> =
+            mats.iter().map(|(plain, _)| qgemm_scalar(&x, plain, &code)).collect();
+        for step in 0..200 {
+            let i = rng.index(tenants);
+            let got = mats[i].1.qgemm(&x, &code);
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want[i].data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tenant {i} diverged from qgemm_scalar at step {step} \
+                 (evict→repopulate must be bitwise transparent)"
+            );
+            assert!(
+                bytes_in_use() <= budget,
+                "budget overshot at step {step}: {} > {budget}",
+                bytes_in_use()
+            );
+        }
+        let evicted: u64 = (0..tenants)
+            .filter_map(|i| owner_stats(&format!("test/pc/churn-{i}")))
+            .map(|s| s.evictions)
+            .sum();
+        assert!(evicted > 0, "churn past the budget must evict");
+        // Exclusive hot pass: tenant 0 ends fully resident…
+        for _ in 0..3 {
+            mats[0].1.qgemm(&x, &code);
+        }
+        let hot = owner_stats("test/pc/churn-0").unwrap();
+        assert_eq!(hot.bytes, per_tenant, "hot tenant fully resident after exclusive use");
+        assert!(hot.hit_rate() > 0.0);
+        // …and a fresh lookup of it is all hits (fully warm), while the
+        // budget still holds.
+        assert!(bytes_in_use() <= budget);
+        for i in 0..tenants {
+            invalidate_owner(&format!("test/pc/churn-{i}"));
+        }
+        assert_eq!(bytes_in_use(), 0, "invalidation released everything");
+        set_budget(None);
+    }
+}

@@ -217,7 +217,14 @@ pub fn save_bench_doc(name: &str, results: crate::util::json::Json) -> std::io::
     let mut doc = Json::obj();
     doc.set("bench", Json::Str(name.to_string()))
         .set("results", results)
-        .set("metrics", crate::obs::registry::snapshot_json());
+        .set("metrics", crate::obs::registry::snapshot_json())
+        // High-water mark of the decoded-panel cache over this process —
+        // the `afq_panelcache_bytes` gauge only shows the instantaneous
+        // value, so the envelope pins the peak a bench run actually paid.
+        .set(
+            "panelcache_peak_bytes",
+            Json::Num(crate::quant::panelcache::peak_bytes() as f64),
+        );
     crate::util::write_file(&path, &doc.to_string_pretty())?;
     Ok(path)
 }
@@ -281,6 +288,9 @@ mod tests {
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "unit_test_tmp");
         assert_eq!(back.at(&["results"]).unwrap().as_arr().unwrap().len(), 1);
+        // The envelope always carries the panel-cache high-water mark
+        // (0 when the cache never ran in this process).
+        assert!(back.get("panelcache_peak_bytes").unwrap().as_f64().unwrap() >= 0.0);
         let _ = std::fs::remove_file(&path);
     }
 
