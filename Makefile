@@ -12,10 +12,12 @@
 #   make bench-quick same, with short measurement windows
 #   make bench-cache the decoded-panel-cache rows only: cached-vs-cold
 #                    qgemm and the hot-tenant serving scenario
+#   make bench-simd  the simd-vs-scalar rows only: forced-dispatch qgemm/
+#                    quantize pairs and the host-kernel serving scenario
 
 PY_SOURCES := $(shell find python/compile -name '*.py' 2>/dev/null)
 
-.PHONY: verify parity bench bench-quick bench-cache artifacts clean
+.PHONY: verify parity bench bench-quick bench-cache bench-simd artifacts clean
 
 verify:
 	cargo build --release
@@ -48,6 +50,16 @@ bench-quick:
 # `make bench` for the full document.
 bench-cache:
 	cargo bench --bench quant -- qgemm/c
+	cargo bench --bench serving
+
+# SIMD-vs-scalar rows only: every forced-dispatch pair from the quant
+# bench (filter) plus the host-kernel serving scenario. The dispatch level
+# is part of each row name, so comparing against a baseline recorded on a
+# machine with different CPU features yields informational rows, not gate
+# failures. Same caveat as bench-cache: the filtered quant run overwrites
+# results/BENCH_quant.json with just these rows.
+bench-simd:
+	cargo bench --bench quant -- simd/
 	cargo bench --bench serving
 
 clean:

@@ -143,6 +143,72 @@ fn main() {
         wq.qgemm_par(&x, &nf4, workers)
     });
 
+    // SIMD dispatch levels vs forced scalar — outputs are bitwise
+    // identical at every level, so these rows measure pure vectorization
+    // speedup: decode-bound (one activation row — LUT decode dominates)
+    // and compute-bound (32 rows amortize the decode) shapes on both
+    // layouts, plus the quantizer. The dispatch level is baked into each
+    // row name so `afq obs compare` never silently diffs an AVX2 baseline
+    // against a scalar current run (level mismatch → informational row).
+    println!("-- simd vs scalar (forced dispatch levels) --");
+    use afq::util::simd;
+    let initial = simd::level();
+    let wq_row = MatrixQuant::quantize(&m, 64, &nf4, QuantAxis::Row);
+    let wq_row1024 = MatrixQuant::quantize(&m, 1024, &nf4, QuantAxis::Row);
+    let x1 = Matrix::randn(1, 512, 1.0, &mut rng3);
+    let x32 = Matrix::randn(32, 512, 1.0, &mut rng3);
+    let flops1 = (512 * 512) as f64;
+    let flops32 = (32 * 512 * 512) as f64;
+    let mut levels = vec![simd::SimdLevel::Scalar];
+    let best = simd::detect_best();
+    if best != simd::SimdLevel::Scalar {
+        levels.push(best);
+    }
+    for &lvl in &levels {
+        simd::set_level(lvl);
+        let tag = format!("[{lvl}]");
+        b.bench_with_elements(&format!("simd/qgemm-row/decode-bound/B=64{tag}"), Some(flops1), || {
+            wq_row.qgemm(&x1, &nf4)
+        });
+        b.bench_with_elements(
+            &format!("simd/qgemm-row/decode-bound/B=1024{tag}"),
+            Some(flops1),
+            || wq_row1024.qgemm(&x1, &nf4),
+        );
+        b.bench_with_elements(&format!("simd/qgemm-col/decode-bound/B=64{tag}"), Some(flops1), || {
+            wq.qgemm(&x1, &nf4)
+        });
+        b.bench_with_elements(
+            &format!("simd/qgemm-col/decode-bound/B=1024{tag}"),
+            Some(flops1),
+            || wq1024.qgemm(&x1, &nf4),
+        );
+        b.bench_with_elements(
+            &format!("simd/qgemm-row/compute-bound/B=64{tag}"),
+            Some(flops32),
+            || wq_row.qgemm(&x32, &nf4),
+        );
+        b.bench_with_elements(
+            &format!("simd/qgemm-row/compute-bound/B=1024{tag}"),
+            Some(flops32),
+            || wq_row1024.qgemm(&x32, &nf4),
+        );
+        b.bench_with_elements(
+            &format!("simd/qgemm-col/compute-bound/B=64{tag}"),
+            Some(flops32),
+            || wq.qgemm(&x32, &nf4),
+        );
+        b.bench_with_elements(
+            &format!("simd/qgemm-col/compute-bound/B=1024{tag}"),
+            Some(flops32),
+            || wq1024.qgemm(&x32, &nf4),
+        );
+        b.bench_with_elements(&format!("simd/quantize/B=64{tag}"), Some(n as f64), || {
+            quantize(&w, 64, &nf4)
+        });
+    }
+    simd::set_level(initial);
+
     match b.save("quant") {
         Ok(path) => println!("\nsaved {path}"),
         Err(e) => eprintln!("\ncould not save bench results: {e}"),

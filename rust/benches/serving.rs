@@ -116,11 +116,64 @@ fn hot_tenant_rows(quick: bool) -> Vec<Json> {
     rows
 }
 
+/// Host-kernel serving throughput at each forced SIMD dispatch level.
+/// Outputs are bitwise identical across levels, so the rps delta is pure
+/// vectorization. Runs without artifacts. The dispatch level is baked into
+/// each config name so `afq obs compare` treats a baseline recorded at a
+/// different level as informational rather than a gated regression.
+fn simd_kernel_rows(quick: bool) -> Vec<Json> {
+    use afq::quant::{MatrixQuant, QuantAxis};
+    use afq::tensor::Matrix;
+    use afq::util::rng::Rng;
+    use afq::util::simd;
+    let nf4 = afq::codes::registry::build("nf4").unwrap();
+    let (k, n) = (512usize, 512usize);
+    let mut rng = Rng::new(21);
+    let m = Matrix::randn(k, n, 0.02, &mut rng);
+    // Row layout, B=1024: the decode-bound serving shape the AXPY and
+    // byte-walk decode paths target.
+    let wq = MatrixQuant::quantize(&m, 1024, &nf4, QuantAxis::Row);
+    let x = Matrix::randn(1, k, 1.0, &mut rng);
+    let calls = if quick { 50 } else { 500 };
+    let initial = simd::level();
+    let mut levels = vec![simd::SimdLevel::Scalar];
+    let best = simd::detect_best();
+    if best != simd::SimdLevel::Scalar {
+        levels.push(best);
+    }
+    println!("-- host-kernel simd dispatch ({} levels) --", levels.len());
+    let mut rows = Vec::new();
+    for &lvl in &levels {
+        simd::set_level(lvl);
+        for _ in 0..calls {
+            wq.qgemm(&x, &nf4); // warm
+        }
+        let t0 = Instant::now();
+        for _ in 0..calls {
+            wq.qgemm(&x, &nf4);
+        }
+        let wall = t0.elapsed();
+        let rps = calls as f64 / wall.as_secs_f64();
+        println!("simd/host-kernel[{lvl}]: {calls} calls in {wall:.2?} ({rps:.1} req/s)");
+        let mut row = Json::obj();
+        row.set("config", Json::Str(format!("simd/host-kernel[{lvl}]")))
+            .set("model", Json::Str("host-kernel".into()))
+            .set("wait_ms", Json::Num(0.0))
+            .set("requests", Json::Num(calls as f64))
+            .set("rps", Json::Num(rps));
+        rows.push(row);
+    }
+    simd::set_level(initial);
+    rows
+}
+
 fn main() {
     let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
-    // Host-kernel scenario first: it needs no artifacts, and its rows must
-    // land in the saved doc even when the router sweep below is skipped.
+    // Host-kernel scenarios first: they need no artifacts, and their rows
+    // must land in the saved doc even when the router sweep below is
+    // skipped.
     let mut rows = hot_tenant_rows(quick);
+    rows.extend(simd_kernel_rows(quick));
     // The resolver handles the repo-root vs rust/ cwd difference (cargo
     // runs bench binaries from the package root).
     if afq::util::resolve_artifacts_dir("artifacts").is_none() {

@@ -114,6 +114,32 @@
 //!   to the caller (`map_indexed`/`scope_map`) or is caught, counted in
 //!   `afq_threadpool_panics_total`, and the worker survives (`execute`).
 //!
+//! ## Determinism and SIMD
+//!
+//! Every performance variant of the serving kernels — tiled, parallel,
+//! cached, batched, and now vectorized — is **bitwise identical** to the
+//! order-faithful `qgemm_scalar` reference. The rule that makes SIMD
+//! compatible with that contract ([`util::simd`]):
+//!
+//! > **Vectorize across independent outputs, never across a reduction.**
+//!
+//! Vector lanes may hold different output columns (the row-layout AXPY),
+//! different batch rows (the col-layout `MR = 4` accumulator chains), or
+//! different elements of an order-free computation (absmax over `|x|`,
+//! the branchless encode tree, LUT decode) — but a single dot product's
+//! k-order accumulation chain is never reassociated and FMA is never
+//! emitted (scalar Rust `a + b * c` rounds twice; contracting it would
+//! change bits). Dispatch is at runtime — AVX2/SSE4.1 on x86_64, NEON on
+//! aarch64, with the scalar path always compiled — and is overridable via
+//! `AFQ_SIMD=auto|off|sse4.1|avx2|neon`. Because all levels produce
+//! identical bits, the level is *observability*, not semantics: it is
+//! exported as the `afq_simd_level` gauge, labels the
+//! `afq_simd_kernel_calls_total` counters, is stamped into every bench
+//! envelope (`simd_level`), and is baked into simd bench row names so the
+//! perf gate treats cross-level comparisons as informational. The
+//! forced-level parity batteries (`fused_parity`/`plan_parity`/the lib
+//! `simd` tests) pin every supported level bitwise to forced scalar.
+//!
 //! ## Observability contracts
 //!
 //! - **Span stages.** Every scored request owns a process-unique span ID

@@ -50,6 +50,11 @@ pub struct CompareReport {
     pub only_baseline: Vec<String>,
     /// Row keys only in the current run (new benches — informational).
     pub only_current: Vec<String>,
+    /// Same logical row measured under different SIMD dispatch levels
+    /// (`name[avx2]` vs `name[scalar]`): (baseline key, current key).
+    /// Level-tagged timings are not comparable across levels, so these
+    /// are informational, never a gate failure.
+    pub level_mismatch: Vec<(String, String)>,
 }
 
 impl CompareReport {
@@ -88,7 +93,12 @@ impl CompareReport {
         for k in &self.only_current {
             out.push_str(&format!("  {k:<56} (new row — no baseline, not gated)\n"));
         }
-        if self.rows.is_empty() && self.only_current.is_empty() {
+        for (bk, ck) in &self.level_mismatch {
+            out.push_str(&format!(
+                "  {ck:<56} (simd level mismatch vs baseline {bk} — informational, not gated)\n"
+            ));
+        }
+        if self.rows.is_empty() && self.only_current.is_empty() && self.level_mismatch.is_empty() {
             out.push_str(
                 "  (current run has no comparable rows — informational pass, nothing gated)\n",
             );
@@ -138,6 +148,15 @@ fn rows_of(doc: &Json) -> Vec<(String, f64, &'static str)> {
     Vec::new()
 }
 
+/// Stem of a row key carrying a trailing `[<simd-level>]` tag (simd bench
+/// rows bake the dispatch level into the name so cross-level runs never
+/// silently diff). `None` for untagged keys.
+fn strip_level_tag(key: &str) -> Option<&str> {
+    let body = key.strip_suffix(']')?;
+    let open = body.rfind('[')?;
+    Some(&key[..open])
+}
+
 /// Compare two bench documents of the same bench. Pure: no IO, no exit.
 pub fn compare_docs(bench: &str, baseline: &Json, current: &Json, threshold: f64) -> CompareReport {
     let base_rows = rows_of(baseline);
@@ -155,17 +174,35 @@ pub fn compare_docs(bench: &str, baseline: &Json, current: &Json, threshold: f64
             None => only_current.push(key.clone()),
         }
     }
-    let only_baseline = base_rows
+    let mut only_baseline: Vec<String> = base_rows
         .iter()
         .filter(|(k, _, _)| !cur_rows.iter().any(|(ck, _, _)| ck == k))
         .map(|(k, _, _)| k.clone())
         .collect();
+    // Pair up level-tagged rows that differ only in their `[level]` tag —
+    // e.g. an AVX2 baseline against a scalar current run. Exact-tag
+    // matches were already diffed above; a cross-level pair is the same
+    // logical row on incomparable hardware paths, so it becomes an
+    // explicit informational row instead of two unrelated only-* lines.
+    let mut level_mismatch = Vec::new();
+    only_baseline.retain(|bk| {
+        if let Some(stem) = strip_level_tag(bk) {
+            if let Some(pos) =
+                only_current.iter().position(|ck| strip_level_tag(ck) == Some(stem))
+            {
+                level_mismatch.push((bk.clone(), only_current.remove(pos)));
+                return false;
+            }
+        }
+        true
+    });
     CompareReport {
         bench: bench.to_string(),
         threshold,
         rows,
         only_baseline,
         only_current,
+        level_mismatch,
     }
 }
 
@@ -339,6 +376,40 @@ mod tests {
         assert_eq!(rep.only_baseline, vec!["dropped".to_string()]);
         assert_eq!(rep.only_current, vec!["added".to_string()]);
         assert!(rep.render().contains("not gated"));
+    }
+
+    /// SIMD-level-tagged rows: same tag diffs (and gates) normally; a
+    /// cross-level pair (AVX2 baseline vs scalar current) becomes one
+    /// informational level-mismatch row, never a gate failure — even when
+    /// the scalar run is far slower than the AVX2 baseline.
+    #[test]
+    fn simd_level_mismatch_rows_are_informational() {
+        let base = stats_doc(&[
+            ("simd/qgemm-row/B=1024[avx2]", 1000.0),
+            ("simd/quantize/B=64[scalar]", 50.0),
+        ]);
+        let cur = stats_doc(&[
+            ("simd/qgemm-row/B=1024[scalar]", 100.0), // -90% vs avx2: not gated
+            ("simd/quantize/B=64[scalar]", 49.0),     // same tag: gated normally
+        ]);
+        let rep = compare_docs("quant", &base, &cur, 0.15);
+        assert!(rep.passed(), "{}", rep.render());
+        assert_eq!(rep.rows.len(), 1, "only the same-tag pair is diffed");
+        assert_eq!(rep.rows[0].key, "simd/quantize/B=64[scalar]");
+        assert_eq!(rep.level_mismatch.len(), 1);
+        assert_eq!(
+            rep.level_mismatch[0],
+            (
+                "simd/qgemm-row/B=1024[avx2]".to_string(),
+                "simd/qgemm-row/B=1024[scalar]".to_string()
+            )
+        );
+        assert!(rep.only_baseline.is_empty() && rep.only_current.is_empty());
+        let rendered = rep.render();
+        assert!(rendered.contains("simd level mismatch"), "{rendered}");
+        // A genuine same-tag regression still fails the gate.
+        let cur_bad = stats_doc(&[("simd/quantize/B=64[scalar]", 10.0)]);
+        assert!(!compare_docs("quant", &base, &cur_bad, 0.15).passed());
     }
 
     #[test]

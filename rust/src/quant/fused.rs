@@ -71,6 +71,19 @@
 //! serial [`quantize`] kernel, so its packed indices and scales are
 //! likewise bit-identical to a serial [`quantize`] call.
 //!
+//! **SIMD** (`AFQ_SIMD`, [`crate::util::simd`]) obeys one additional rule:
+//! *vectorize across independent outputs, never across a reduction*. The
+//! Row-layout AXPY loop vectorizes over output columns (k-order
+//! untouched), the Col kernel's [`MR`] accumulator chains vectorize across
+//! batch rows (lane `i` is row `i`'s chain, fed in scalar `j` order), the
+//! line/panel decode walks packed bytes through a per-scale
+//! byte→two-values pair table (decode is elementwise — any order is the
+//! same bits), and the single-row remainder dot stays scalar because one
+//! reduction chain has no independent lanes to vectorize across. Every
+//! dispatch level is therefore **bit-identical** to `AFQ_SIMD=off` and to
+//! [`qgemm_scalar`]; cached panels populated under one level are coherent
+//! under any other.
+//!
 //! Both [`QuantAxis`] layouts support the `per_line` scale indexing
 //! MatrixQuant falls back to when the blocked axis is not commensurate
 //! with the block size, and double-quantized scales (the reconstructed
@@ -84,6 +97,7 @@ use crate::codes::Code;
 use crate::quant::panelcache::{self, CacheTag, PanelId};
 use crate::quant::{quantize, MatrixQuant, QuantAxis, Quantized};
 use crate::tensor::Matrix;
+use crate::util::simd::{self, SimdLevel};
 use crate::util::threadpool::scope_map;
 use std::sync::Arc;
 
@@ -104,9 +118,11 @@ const NC: usize = 128;
 /// Tiled microkernel; bit-identical to [`qgemm_scalar`].
 pub fn qgemm(x: &Matrix, w: &MatrixQuant, code: &Code) -> Matrix {
     let table = check_args(x, w, code);
+    let lvl = simd::level();
+    simd::count_kernel_call("qgemm", lvl);
     let mut out = vec![0.0f32; x.rows * w.cols];
     // SAFETY: exclusive access to `out`; the window spans all columns.
-    unsafe { qgemm_into(x, w, &table, 0, w.cols, w.cols, out.as_mut_ptr()) };
+    unsafe { qgemm_into(x, w, &table, lvl, 0, w.cols, w.cols, out.as_mut_ptr()) };
     Matrix::from_vec(x.rows, w.cols, out)
 }
 
@@ -127,6 +143,10 @@ pub fn qgemm_par(x: &Matrix, w: &MatrixQuant, code: &Code, workers: usize) -> Ma
         return qgemm(x, w, code);
     }
     let table = check_args(x, w, code);
+    // One level per call (counted once, not per shard): every shard of
+    // this invocation runs the same dispatch path.
+    let lvl = simd::level();
+    simd::count_kernel_call("qgemm", lvl);
     let mut out = vec![0.0f32; m * n];
     let base = SendPtr(out.as_mut_ptr());
     scope_map(workers, n_chunks, |ci| {
@@ -137,7 +157,7 @@ pub fn qgemm_par(x: &Matrix, w: &MatrixQuant, code: &Code, workers: usize) -> Ma
         // row — the windows of distinct shards are disjoint, and `out`
         // (m·n f32s) outlives the scope (scope_map joins before
         // returning).
-        unsafe { qgemm_into(x, w, &table, c0, c1, n, base.0) };
+        unsafe { qgemm_into(x, w, &table, lvl, c0, c1, n, base.0) };
     });
     Matrix::from_vec(m, n, out)
 }
@@ -284,6 +304,7 @@ unsafe fn qgemm_into(
     x: &Matrix,
     w: &MatrixQuant,
     table: &[f32; 16],
+    lvl: SimdLevel,
     c0: usize,
     c1: usize,
     stride: usize,
@@ -301,8 +322,8 @@ unsafe fn qgemm_into(
         _ => None,
     };
     match w.axis {
-        QuantAxis::Col => qgemm_col_into(x, w, table, &win, cache.as_ref()),
-        QuantAxis::Row => qgemm_row_into(x, w, table, &win, cache.as_ref()),
+        QuantAxis::Col => qgemm_col_into(x, w, table, lvl, &win, cache.as_ref()),
+        QuantAxis::Row => qgemm_row_into(x, w, table, lvl, &win, cache.as_ref()),
     }
 }
 
@@ -371,27 +392,142 @@ fn scale_at(w: &MatrixQuant, line_base: usize, li: usize, off: usize) -> f32 {
     }
 }
 
+/// Minimum number of *full packed bytes* in a segment before building the
+/// lazy 256-entry pair table pays for its 256 writes. Below this, the
+/// byte walk reads the 16-entry LUT twice per byte instead.
+const PAIR_TABLE_MIN_BYTES: usize = 128;
+
+/// Per-scale decode tables, reused across segments/lines/panels of one
+/// kernel invocation: the 16-entry `table[idx] * scale` LUT (rebuilt only
+/// when the scale's bits actually change — adjacent segments and whole
+/// per-line panels routinely repeat a scale) and, lazily on top of it, a
+/// 256-entry byte → (low-nibble value, high-nibble value) pair table so
+/// the byte-walk decode handles two elements per packed-byte load.
+/// Identical multiplies, identical lookups → bitwise-identical decode.
+struct ScaledLut {
+    /// False until the first [`ScaledLut::refresh`] — any scale (any bit
+    /// pattern, including one equal to `scale_bits`'s default) must build.
+    has: bool,
+    scale_bits: u32,
+    lut: [f32; 16],
+    pairs: Vec<(f32, f32)>,
+    pairs_valid: bool,
+    /// When false (scalar dispatch), [`decode_line_into`] keeps the
+    /// original per-element loop — the `AFQ_SIMD=off` path stays the
+    /// legacy code shape, with only the (bitwise-neutral) scale hoist.
+    vector: bool,
+}
+
+impl ScaledLut {
+    fn new(vector: bool) -> Self {
+        ScaledLut {
+            has: false,
+            scale_bits: 0,
+            lut: [0.0f32; 16],
+            pairs: Vec::new(),
+            pairs_valid: false,
+            vector,
+        }
+    }
+
+    /// Make the LUT current for `scale`, skipping the rebuild when the
+    /// scale repeats (bits-compare: scales are stored/reconstructed data,
+    /// so only exact bit equality may share a table).
+    #[inline]
+    fn refresh(&mut self, table: &[f32; 16], scale: f32) {
+        let bits = scale.to_bits();
+        if self.has && bits == self.scale_bits {
+            return;
+        }
+        self.has = true;
+        self.scale_bits = bits;
+        for (l, &t) in self.lut.iter_mut().zip(table.iter()) {
+            *l = t * scale;
+        }
+        self.pairs_valid = false;
+    }
+
+    /// The 256-entry pair table for the current scale, built on first use.
+    fn pairs(&mut self) -> &[(f32, f32)] {
+        if !self.pairs_valid {
+            if self.pairs.is_empty() {
+                self.pairs.resize(256, (0.0, 0.0));
+            }
+            for (b, p) in self.pairs.iter_mut().enumerate() {
+                *p = (self.lut[b & 0x0F], self.lut[b >> 4]);
+            }
+            self.pairs_valid = true;
+        }
+        &self.pairs
+    }
+}
+
 /// Decode-into-slot: materialize elements `[lo, …)` of one stored line
 /// (described by precomputed segment descriptors) into `out` — the exact
 /// f32 bytes the multiply loops consume, whether `out` is the kernel's
 /// reusable scratch buffer or a fresh panel-cache slot. Elementwise and
-/// deterministic: a cached slot is byte-identical to a fresh decode.
+/// deterministic: a cached slot is byte-identical to a fresh decode, and
+/// the byte-walk fast path produces the same bits as the per-element
+/// loop (same LUT entries, picked by the same nibbles).
 fn decode_line_into(
     w: &MatrixQuant,
     table: &[f32; 16],
     line_base: usize,
     lo: usize,
     segs: &[Seg],
+    slut: &mut ScaledLut,
     out: &mut [f32],
 ) {
     for sg in segs {
-        let mut lut = [0.0f32; 16];
-        for (l, &t) in lut.iter_mut().zip(table.iter()) {
-            *l = t * sg.scale;
+        slut.refresh(table, sg.scale);
+        let dst = &mut out[sg.start - lo..sg.end - lo];
+        if slut.vector {
+            decode_seg_bytewalk(&w.q, slut, line_base + sg.start, dst);
+        } else {
+            for (j, v) in dst.iter_mut().enumerate() {
+                *v = slut.lut[w.q.index(line_base + sg.start + j) as usize];
+            }
         }
-        for (j, v) in out[sg.start - lo..sg.end - lo].iter_mut().enumerate() {
-            *v = lut[w.q.index(line_base + sg.start + j) as usize];
+    }
+}
+
+/// Byte-walk decode of one segment starting at flat element `fstart`:
+/// unpack straight from the packed buffer, two elements per byte load
+/// (element 2i in the low nibble). Lone leading/trailing nibbles of
+/// odd-aligned segments are handled scalar.
+fn decode_seg_bytewalk(q: &Quantized, slut: &mut ScaledLut, fstart: usize, dst: &mut [f32]) {
+    let len = dst.len();
+    if len == 0 {
+        return;
+    }
+    let mut di = 0usize;
+    let mut f = fstart;
+    if f % 2 == 1 {
+        // Odd flat start: this element is the high nibble of its byte.
+        dst[0] = slut.lut[(q.packed[f / 2] >> 4) as usize];
+        di = 1;
+        f += 1;
+    }
+    let full = (len - di) / 2;
+    let byte0 = f / 2;
+    if full >= PAIR_TABLE_MIN_BYTES {
+        let pairs = slut.pairs();
+        for (b, pair) in dst[di..di + 2 * full].chunks_exact_mut(2).enumerate() {
+            let (lo_v, hi_v) = pairs[q.packed[byte0 + b] as usize];
+            pair[0] = lo_v;
+            pair[1] = hi_v;
         }
+    } else {
+        for (b, pair) in dst[di..di + 2 * full].chunks_exact_mut(2).enumerate() {
+            let byte = q.packed[byte0 + b] as usize;
+            pair[0] = slut.lut[byte & 0x0F];
+            pair[1] = slut.lut[byte >> 4];
+        }
+    }
+    di += 2 * full;
+    if di < len {
+        // Trailing even element: the low nibble of the next byte.
+        dst[di] = slut.lut[(q.packed[byte0 + full] & 0x0F) as usize];
     }
 }
 
@@ -407,6 +543,7 @@ fn decode_row_panel_into(
     nc0: usize,
     nc1: usize,
     segs: &mut Vec<Seg>,
+    slut: &mut ScaledLut,
     out: &mut [f32],
 ) {
     let n = w.cols;
@@ -420,6 +557,7 @@ fn decode_row_panel_into(
             base,
             nc0,
             segs,
+            slut,
             &mut out[(r - r0) * ncw..(r - r0) * ncw + ncw],
         );
     }
@@ -440,6 +578,7 @@ unsafe fn qgemm_col_into(
     x: &Matrix,
     w: &MatrixQuant,
     table: &[f32; 16],
+    lvl: SimdLevel,
     win: &OutWindow,
     cache: Option<&CacheCtx>,
 ) {
@@ -449,6 +588,7 @@ unsafe fn qgemm_col_into(
         return;
     }
     let mut segs: Vec<Seg> = Vec::new();
+    let mut slut = ScaledLut::new(lvl != SimdLevel::Scalar);
     // Whole-line decode scratch, reused across columns (k f32s — L1 for
     // typical k; never a full matrix). The cached path holds shared
     // `Arc`'d lines instead and leaves this untouched.
@@ -467,7 +607,7 @@ unsafe fn qgemm_col_into(
                     Some(hit) => hit,
                     None => {
                         let mut v = vec![0.0f32; k];
-                        decode_line_into(w, table, base, 0, &segs, &mut v);
+                        decode_line_into(w, table, base, 0, &segs, &mut slut, &mut v);
                         let fresh = Arc::new(v);
                         panelcache::insert(ctx.tag, ctx.thash, id, Arc::clone(&fresh));
                         fresh
@@ -478,12 +618,15 @@ unsafe fn qgemm_col_into(
             None => {
                 // Decode the stored line once; reused across every batch
                 // row.
-                decode_line_into(w, table, base, 0, &segs, &mut vals);
+                decode_line_into(w, table, base, 0, &segs, &mut slut, &mut vals);
                 &vals
             }
         };
         // Register-blocked batch rows: MR independent accumulator chains
-        // pipeline the FMAs that a single row's dot product serializes.
+        // pipeline the FMAs that a single row's dot product serializes;
+        // under SIMD the four chains run in lockstep as vector lanes
+        // (vectorizing *across* the independent rows — the per-chain
+        // reduction order is untouched, see the module contract).
         let mut i = 0usize;
         while i + MR <= m {
             let x0 = &x.data[i * k..(i + 1) * k];
@@ -492,22 +635,18 @@ unsafe fn qgemm_col_into(
             let x3 = &x.data[(i + 3) * k..(i + 4) * k];
             let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
             for sg in &segs {
-                let vs = &line[sg.start..sg.end];
-                let s0 = &x0[sg.start..sg.end];
-                let s1 = &x1[sg.start..sg.end];
-                let s2 = &x2[sg.start..sg.end];
-                let s3 = &x3[sg.start..sg.end];
-                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                for (j, &v) in vs.iter().enumerate() {
-                    a0 += s0[j] * v;
-                    a1 += s1[j] * v;
-                    a2 += s2[j] * v;
-                    a3 += s3[j] * v;
-                }
-                t0 += a0;
-                t1 += a1;
-                t2 += a2;
-                t3 += a3;
+                let a = simd::dot4(
+                    lvl,
+                    &x0[sg.start..sg.end],
+                    &x1[sg.start..sg.end],
+                    &x2[sg.start..sg.end],
+                    &x3[sg.start..sg.end],
+                    &line[sg.start..sg.end],
+                );
+                t0 += a[0];
+                t1 += a[1];
+                t2 += a[2];
+                t3 += a[3];
             }
             win.write(i, c, t0);
             win.write(i + 1, c, t1);
@@ -515,7 +654,9 @@ unsafe fn qgemm_col_into(
             win.write(i + 3, c, t3);
             i += MR;
         }
-        // Remainder rows, one chain each (same per-element order).
+        // Remainder rows, one chain each (same per-element order). Stays
+        // scalar at every dispatch level: a lone dot product is a single
+        // reduction — no independent chains to vectorize across.
         while i < m {
             let xr = &x.data[i * k..(i + 1) * k];
             let mut tot = 0.0f32;
@@ -549,6 +690,7 @@ unsafe fn qgemm_row_into(
     x: &Matrix,
     w: &MatrixQuant,
     table: &[f32; 16],
+    lvl: SimdLevel,
     win: &OutWindow,
     cache: Option<&CacheCtx>,
 ) {
@@ -558,6 +700,7 @@ unsafe fn qgemm_row_into(
         return;
     }
     let mut segs: Vec<Seg> = Vec::new();
+    let mut slut = ScaledLut::new(lvl != SimdLevel::Scalar);
     let mut panel = vec![0.0f32; KC * NC.min((win.c1 - win.c0).max(1))];
     let mut nc0 = win.c0;
     while nc0 < win.c1 {
@@ -579,7 +722,7 @@ unsafe fn qgemm_row_into(
                         None => {
                             let mut v = vec![0.0f32; (r1 - r0) * ncw];
                             decode_row_panel_into(
-                                w, table, r0, r1, nc0, nc1, &mut segs, &mut v,
+                                w, table, r0, r1, nc0, nc1, &mut segs, &mut slut, &mut v,
                             );
                             let fresh = Arc::new(v);
                             panelcache::insert(ctx.tag, ctx.thash, id, Arc::clone(&fresh));
@@ -591,20 +734,23 @@ unsafe fn qgemm_row_into(
                 None => {
                     // Decode rows [r0, r1) × cols [nc0, nc1) of W into the
                     // reusable panel.
-                    decode_row_panel_into(w, table, r0, r1, nc0, nc1, &mut segs, &mut panel);
+                    decode_row_panel_into(
+                        w, table, r0, r1, nc0, nc1, &mut segs, &mut slut, &mut panel,
+                    );
                     &panel
                 }
             };
             // Sweep the L1-hot panel with every batch row: the output row
             // window stays register/L1-resident across the KC updates.
+            // The AXPY vectorizes over the NC output columns (independent
+            // outputs — one mul+add each per r) while r advances in the
+            // same ascending order at every dispatch level.
             for i in 0..m {
                 let out_row = win.row(i, nc0, nc1);
                 for r in r0..r1 {
                     let xv = x.data[i * k + r];
                     let prow = &pan[(r - r0) * ncw..(r - r0) * ncw + ncw];
-                    for (o, &v) in out_row.iter_mut().zip(prow.iter()) {
-                        *o += xv * v;
-                    }
+                    simd::axpy(lvl, out_row, xv, prow);
                 }
             }
             r0 = r1;
@@ -936,6 +1082,96 @@ mod tests {
                 panelcache::invalidate_owner(&owner);
             }
         }
+        panelcache::set_budget(None);
+    }
+
+    /// Tentpole battery: every available SIMD dispatch level is pinned
+    /// BITWISE to forced-scalar across both layouts, flat and per-line
+    /// blocking, DQ scales, batch sizes straddling the MR register block,
+    /// and worker counts {1, 4, 64} — the parity contract is level-blind.
+    #[test]
+    fn forced_simd_levels_bitwise_battery() {
+        let _g = simd::lock_for_tests();
+        let code = nf4();
+        let levels = simd::available_levels();
+        let initial = simd::level();
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for (ai, axis) in [QuantAxis::Col, QuantAxis::Row].into_iter().enumerate() {
+            for &bs in &[3usize, 8, 64, 1024] {
+                let (k, n) = (50usize, 41);
+                let w_mat = randn(k, n, 4000 + (ai * 13) as u64 + bs as u64);
+                let mut wq = MatrixQuant::quantize(&w_mat, bs, &code, axis);
+                if bs == 8 {
+                    wq = wq.with_double_quant(16);
+                }
+                for &m in &[1usize, 4, 9] {
+                    let x = randn(m, k, 4100 + m as u64 + bs as u64);
+                    simd::set_level(SimdLevel::Scalar);
+                    let want = qgemm(&x, &wq, &code);
+                    assert_eq!(
+                        bits(&want),
+                        bits(&qgemm_scalar(&x, &wq, &code)),
+                        "forced-scalar dispatch must equal the reference kernel"
+                    );
+                    for &l in &levels {
+                        simd::set_level(l);
+                        assert_eq!(
+                            bits(&qgemm(&x, &wq, &code)),
+                            bits(&want),
+                            "level {l} axis={axis:?} bs={bs} m={m} diverged from scalar"
+                        );
+                        for workers in [1usize, 4, 64] {
+                            assert_eq!(
+                                bits(&qgemm_par(&x, &wq, &code, workers)),
+                                bits(&want),
+                                "level {l} axis={axis:?} bs={bs} m={m} workers={workers}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        simd::set_level(initial);
+    }
+
+    /// Panel-cache entries are coherent across dispatch levels: panels
+    /// populated under the best available level serve bitwise-correct
+    /// results under forced scalar and vice versa (decode is elementwise
+    /// — the cached bytes are level-independent).
+    #[test]
+    fn cached_panels_coherent_across_simd_levels() {
+        let code = nf4();
+        // Lock order: panel-cache first, then simd (the only test taking
+        // both, so no cycle is possible).
+        let _pc = panelcache::lock_for_tests();
+        let _sg = simd::lock_for_tests();
+        let initial = simd::level();
+        let best = simd::detect_best();
+        panelcache::set_budget(Some(8 << 20));
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for axis in [QuantAxis::Col, QuantAxis::Row] {
+            let (k, n) = (48usize, 33);
+            let w_mat = randn(k, n, 5500);
+            let plain = MatrixQuant::quantize(&w_mat, 8, &code, axis);
+            let x = randn(5, k, 5600);
+            let want = bits(&qgemm_scalar(&x, &plain, &code));
+            for (first, second) in [(best, SimdLevel::Scalar), (SimdLevel::Scalar, best)] {
+                let owner = format!("test/fused/simd-cache-{axis:?}-{}", first.name());
+                let tagged = plain.clone().with_cache_tag(&owner, "w");
+                simd::set_level(first);
+                assert_eq!(bits(&qgemm(&x, &tagged, &code)), want, "populate under {first}");
+                simd::set_level(second);
+                assert_eq!(
+                    bits(&qgemm(&x, &tagged, &code)),
+                    want,
+                    "hit under {second} of panels populated under {first}"
+                );
+                let stats = panelcache::owner_stats(&owner).unwrap();
+                assert!(stats.hits > 0, "second pass must hit the cache");
+                panelcache::invalidate_owner(&owner);
+            }
+        }
+        simd::set_level(initial);
         panelcache::set_budget(None);
     }
 

@@ -31,6 +31,7 @@ pub use matrix::{MatrixQuant, QuantAxis};
 pub use spec::QuantSpec;
 
 use crate::codes::Code;
+use crate::util::simd;
 
 /// A quantized flat buffer.
 #[derive(Clone, Debug)]
@@ -103,8 +104,17 @@ impl Quantized {
 /// serving path must never emit NaN/inf into an accumulator, and absmax
 /// saturation is what a clamping device kernel produces; prior to this
 /// contract a NaN silently encoded as index 0 and decoded to `-M`.
+///
+/// **SIMD.** The absmax fold and the per-element encode dispatch through
+/// [`crate::util::simd`] (`AFQ_SIMD` selects the level): both are
+/// order-free operations — an exact `max` fold over non-negative values
+/// and an independent per-element classify — so every dispatch level
+/// produces bit-identical packed bytes and scales. The scalar level runs
+/// the original loop verbatim.
 pub fn quantize(x: &[f32], block_size: usize, code: &Code) -> Quantized {
     assert!(block_size >= 1);
+    let lvl = simd::level();
+    simd::count_kernel_call("quantize", lvl);
     let n_blocks = x.len().div_ceil(block_size);
     let mut scales = Vec::with_capacity(n_blocks);
     let mut packed = vec![0u8; x.len().div_ceil(2)];
@@ -112,30 +122,47 @@ pub fn quantize(x: &[f32], block_size: usize, code: &Code) -> Quantized {
     let bounds: Vec<f32> = code.boundaries().iter().map(|&b| b as f32).collect();
     let zero_idx = encode_f32(&bounds, 0.0);
     let top_idx = (code.k() - 1) as u8;
+    // Per-block index scratch for the vector encode path (one alloc).
+    let mut idx_buf = if lvl == simd::SimdLevel::Scalar {
+        Vec::new()
+    } else {
+        vec![0u8; block_size.min(x.len().max(1))]
+    };
     for bi in 0..n_blocks {
         let lo = bi * block_size;
         let hi = (lo + block_size).min(x.len());
         let blk = &x[lo..hi];
-        let m = blk
-            .iter()
-            .fold(0.0f32, |a, &v| if v.is_finite() { a.max(v.abs()) } else { a });
+        let m = simd::absmax_finite(lvl, blk);
         scales.push(m);
         let inv = if m > 0.0 { 1.0 / m } else { 0.0 };
-        for (off, &v) in blk.iter().enumerate() {
-            let idx = if v.is_finite() {
-                encode_f32(&bounds, v * inv)
-            } else if v.is_nan() {
-                zero_idx
-            } else if v > 0.0 {
-                top_idx
-            } else {
-                0
-            };
-            let i = lo + off;
-            if i % 2 == 0 {
-                packed[i / 2] |= idx;
-            } else {
-                packed[i / 2] |= idx << 4;
+        if lvl == simd::SimdLevel::Scalar {
+            for (off, &v) in blk.iter().enumerate() {
+                let idx = if v.is_finite() {
+                    encode_f32(&bounds, v * inv)
+                } else if v.is_nan() {
+                    zero_idx
+                } else if v > 0.0 {
+                    top_idx
+                } else {
+                    0
+                };
+                let i = lo + off;
+                if i % 2 == 0 {
+                    packed[i / 2] |= idx;
+                } else {
+                    packed[i / 2] |= idx << 4;
+                }
+            }
+        } else {
+            let idxs = &mut idx_buf[..blk.len()];
+            simd::encode_indices(lvl, &bounds, blk, inv, zero_idx, top_idx, idxs);
+            for (off, &idx) in idxs.iter().enumerate() {
+                let i = lo + off;
+                if i % 2 == 0 {
+                    packed[i / 2] |= idx;
+                } else {
+                    packed[i / 2] |= idx << 4;
+                }
             }
         }
     }
@@ -352,6 +379,51 @@ mod tests {
         let par = quantize_par(&x, 64, &code, 4);
         assert_eq!(serial.packed, par.packed);
         assert_eq!(serial.scales, par.scales);
+    }
+
+    /// Satellite: the saturating non-finite contract is bitwise-stable
+    /// across every available SIMD level — NaN, ±inf, all-non-finite
+    /// blocks (inv == 0, where `inf * 0.0 = NaN` would corrupt a naive
+    /// vector encode) and partial tail blocks included.
+    #[test]
+    fn prop_non_finite_quantize_identical_across_simd_levels() {
+        use crate::util::simd;
+        let _g = simd::lock_for_tests();
+        let code = nf4();
+        let levels = simd::available_levels();
+        let initial = simd::level();
+        prop::check(48, |g| {
+            let n = g.usize_in(1, 200);
+            let bs = *g.pick(&[6usize, 16, 32, 64]);
+            let mut xs = g.vec_normal_f32(n);
+            for v in xs.iter_mut() {
+                if g.bool(0.2) {
+                    *v = *g.pick(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+                }
+            }
+            if g.bool(0.15) {
+                // Whole block non-finite → scale 0, inv 0.
+                for v in xs.iter_mut().take(bs.min(n)) {
+                    *v = *g.pick(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+                }
+            }
+            simd::set_level(simd::SimdLevel::Scalar);
+            let want = quantize(&xs, bs, &code);
+            for &l in &levels {
+                simd::set_level(l);
+                let got = quantize(&xs, bs, &code);
+                if got.packed != want.packed {
+                    return Err(format!("packed bytes diverged at level {l}"));
+                }
+                let wb: Vec<u32> = want.scales.iter().map(|s| s.to_bits()).collect();
+                let gb: Vec<u32> = got.scales.iter().map(|s| s.to_bits()).collect();
+                if wb != gb {
+                    return Err(format!("scales diverged at level {l}"));
+                }
+            }
+            Ok(())
+        });
+        simd::set_level(initial);
     }
 
     #[test]

@@ -224,6 +224,13 @@ pub fn save_bench_doc(name: &str, results: crate::util::json::Json) -> std::io::
         .set(
             "panelcache_peak_bytes",
             Json::Num(crate::quant::panelcache::peak_bytes() as f64),
+        )
+        // The SIMD dispatch level at save time, so archived runs are
+        // comparable: `afq obs compare` treats rows from different levels
+        // as informational, never a gate failure.
+        .set(
+            "simd_level",
+            Json::Str(crate::util::simd::level().name().to_string()),
         );
     crate::util::write_file(&path, &doc.to_string_pretty())?;
     Ok(path)

@@ -10,6 +10,7 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod threadpool;
 
 use std::time::Instant;

@@ -1,0 +1,936 @@
+//! Runtime-dispatched SIMD primitives for the quantize/decode/qgemm hot
+//! loops — zero dependencies, `std::arch` only, with a scalar fallback
+//! that is always compiled and always available.
+//!
+//! ## Dispatch
+//!
+//! The active [`SimdLevel`] is resolved once per process: the `AFQ_SIMD`
+//! environment variable (`auto` | `off` | `scalar` | `sse4.1` | `avx2` |
+//! `neon`) if set, else the best level the CPU supports
+//! ([`detect_best`]: AVX2 → SSE4.1 → scalar on x86_64, NEON on aarch64,
+//! scalar elsewhere). Requesting a level the runner cannot execute falls
+//! back to [`detect_best`] with a warning — the override is a knob, not a
+//! way to SIGILL. Tests and benches flip levels with [`set_level`]
+//! (serialized via [`lock_for_tests`]); because every level is
+//! bitwise-identical (below), a racing reader observing a stale level is
+//! benign.
+//!
+//! The resolved level is wired into observability: the `afq_simd_level`
+//! gauge (numeric [`SimdLevel::code`]), an `afq_simd_kernel_calls_total
+//! {kernel=…,simd=…}` counter per dispatched kernel entry, and a
+//! `simd_level` stamp in every bench envelope
+//! ([`crate::util::bench::save_bench_doc`]).
+//!
+//! ## The determinism rule: vectorize across independent outputs, never
+//! across a reduction
+//!
+//! Every vector path here must produce **bitwise** the scalar fallback's
+//! output. f32 addition is not associative, so any reordering of a
+//! reduction (a dot product's `acc += x[j]*v[j]` chain) changes bits —
+//! lane-splitting a single accumulator into partial sums is therefore
+//! forbidden, no matter how profitable. What *is* safe:
+//!
+//! - **Independent outputs.** [`axpy`] vectorizes over output elements
+//!   (each gets exactly one `mul`+`add` per call) and [`dot4`] vectorizes
+//!   across four *independent* accumulator chains — lane `i` is row `i`'s
+//!   chain, fed in exactly the scalar `j` order via a 4×4 transpose. The
+//!   reduction order per output never changes; only separate chains run
+//!   in lockstep.
+//! - **Exact order-free folds.** [`absmax_finite`] vectorizes a `max`
+//!   fold: `max` over non-negative values rounds nothing, so it is
+//!   associative/commutative in f32 and any fold order gives identical
+//!   bits. [`encode_indices`] vectorizes a per-element classify
+//!   (count of `x > bound` over the sorted boundary table — exact
+//!   comparisons, no accumulation).
+//! - **Never FMA.** Scalar Rust `a + b * c` rounds twice (Rust never
+//!   contracts); a fused multiply-add rounds once. All vector paths use
+//!   separate multiply and add intrinsics.
+//!
+//! A single-row dot product has no independent partner chains — it stays
+//! scalar. The kernels in [`crate::quant::fused`] obey the same rule (the
+//! Row-layout AXPY loop and the Col-layout MR=4 chains vectorize; the
+//! remainder-row dot does not).
+
+use crate::obs::registry::{counter, gauge, Counter};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// A dispatchable instruction-set level. `Scalar` is always available;
+/// the vector levels exist only on their architecture and only when the
+/// CPU reports the feature at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    Scalar,
+    Sse41,
+    Avx2,
+    Neon,
+}
+
+impl SimdLevel {
+    /// Canonical lowercase name (the `AFQ_SIMD` spelling, the counter
+    /// label, and the `[level]` token baked into simd bench row names).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse41 => "sse4.1",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Stable numeric code for the `afq_simd_level` gauge (and the atomic
+    /// dispatch slot): scalar 0, sse4.1 1, avx2 2, neon 3.
+    pub fn code(self) -> u8 {
+        match self {
+            SimdLevel::Scalar => 0,
+            SimdLevel::Sse41 => 1,
+            SimdLevel::Avx2 => 2,
+            SimdLevel::Neon => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<SimdLevel> {
+        match c {
+            0 => Some(SimdLevel::Scalar),
+            1 => Some(SimdLevel::Sse41),
+            2 => Some(SimdLevel::Avx2),
+            3 => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+
+    /// Parse an `AFQ_SIMD` value. `auto` (and empty) → `None` = detect;
+    /// `off` is an alias for `scalar`; unknown strings → `None` is NOT
+    /// returned (callers must warn) — they yield `Err(())` semantics via
+    /// [`parse_env`].
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "none" => Some(SimdLevel::Scalar),
+            "sse4.1" | "sse41" | "sse" => Some(SimdLevel::Sse41),
+            "avx2" | "avx" => Some(SimdLevel::Avx2),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Whether this process can actually execute `level`'s instructions.
+pub fn supported(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => std::arch::is_x86_feature_detected!("sse4.1"),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        // NEON is baseline on aarch64 — no runtime probe needed.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => true,
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// Best level the runner supports: AVX2 → SSE4.1 → scalar on x86_64,
+/// NEON on aarch64, scalar on everything else.
+pub fn detect_best() -> SimdLevel {
+    for l in [SimdLevel::Avx2, SimdLevel::Sse41, SimdLevel::Neon] {
+        if supported(l) {
+            return l;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Every level this runner can execute, scalar first — the sweep the
+/// forced-level parity batteries iterate.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut out = vec![SimdLevel::Scalar];
+    for l in [SimdLevel::Sse41, SimdLevel::Avx2, SimdLevel::Neon] {
+        if supported(l) {
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// Dispatch slot. `UNINIT` until the first [`level`] call resolves
+/// `AFQ_SIMD`; after that it always holds a *supported* level's code.
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+const UNINIT: u8 = 0xFF;
+
+fn level_gauge() -> &'static crate::obs::registry::Gauge {
+    static G: OnceLock<crate::obs::registry::Gauge> = OnceLock::new();
+    G.get_or_init(|| gauge("afq_simd_level"))
+}
+
+fn init_from_env() -> SimdLevel {
+    let resolved = match std::env::var("AFQ_SIMD") {
+        Ok(v) if !v.trim().is_empty() && v.trim().to_ascii_lowercase() != "auto" => {
+            match SimdLevel::parse(&v) {
+                Some(l) if supported(l) => l,
+                Some(l) => {
+                    let best = detect_best();
+                    crate::log_warn!(
+                        "AFQ_SIMD={} not supported on this CPU; using {}",
+                        l.name(),
+                        best.name()
+                    );
+                    best
+                }
+                None => {
+                    let best = detect_best();
+                    crate::log_warn!(
+                        "unrecognized AFQ_SIMD={v:?} (want auto|off|scalar|sse4.1|avx2|neon); \
+                         using {}",
+                        best.name()
+                    );
+                    best
+                }
+            }
+        }
+        _ => detect_best(),
+    };
+    level_gauge().set(resolved.code() as i64);
+    resolved
+}
+
+/// The active dispatch level (resolving `AFQ_SIMD` on first use). Kernels
+/// read this once per invocation and pass it down, so one call never
+/// mixes levels — not that it would matter: every level is bitwise-equal.
+pub fn level() -> SimdLevel {
+    match SimdLevel::from_code(LEVEL.load(Ordering::Relaxed)) {
+        Some(l) => l,
+        None => {
+            let l = init_from_env();
+            // A racing initializer may store first; both resolve the same
+            // env+CPU, so last-writer-wins is deterministic.
+            LEVEL.store(l.code(), Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Force the dispatch level (tests, benches, CLI). Panics on a level this
+/// runner cannot execute. Returns the previous level. Serialize
+/// concurrent forcing with [`lock_for_tests`] — though a stale read is
+/// harmless (all levels agree bitwise), an unsupported stale *write*
+/// cannot happen because only supported levels are ever stored.
+pub fn set_level(l: SimdLevel) -> SimdLevel {
+    assert!(supported(l), "SIMD level {} not supported on this CPU", l.name());
+    let prev = level();
+    LEVEL.store(l.code(), Ordering::Relaxed);
+    level_gauge().set(l.code() as i64);
+    prev
+}
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes tests that force dispatch levels (the level is
+/// process-wide; `cargo test` runs in threads). Poisoning is ignored so
+/// one failing forced-level test doesn't cascade.
+pub fn lock_for_tests() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Count one dispatched kernel entry under its level:
+/// `afq_simd_kernel_calls_total{kernel=…,simd=…}`. Handles are cached —
+/// the hot path pays one relaxed atomic add, no registry lock.
+pub fn count_kernel_call(kernel: &'static str, l: SimdLevel) {
+    fn build(kernel: &str) -> [Counter; 4] {
+        let mk = |lv: SimdLevel| {
+            counter(&format!(
+                "afq_simd_kernel_calls_total{{kernel=\"{kernel}\",simd=\"{}\"}}",
+                lv.name()
+            ))
+        };
+        [mk(SimdLevel::Scalar), mk(SimdLevel::Sse41), mk(SimdLevel::Avx2), mk(SimdLevel::Neon)]
+    }
+    static QGEMM: OnceLock<[Counter; 4]> = OnceLock::new();
+    static QUANTIZE: OnceLock<[Counter; 4]> = OnceLock::new();
+    static OTHER: OnceLock<[Counter; 4]> = OnceLock::new();
+    let cell = match kernel {
+        "qgemm" => &QGEMM,
+        "quantize" => &QUANTIZE,
+        _ => &OTHER,
+    };
+    cell.get_or_init(|| build(kernel))[l.code() as usize].inc(1);
+}
+
+// ---------------------------------------------------------------------------
+// axpy: out[j] += a * v[j] — the Row-layout inner loop. Outputs are
+// independent (one mul+add each per call), so lane width is free.
+
+/// `out[j] += a * v[j]` over `min(out.len(), v.len())` elements.
+/// Bitwise-identical across levels: each element receives the same
+/// single `mul` then `add` (never fused).
+pub fn axpy(level: SimdLevel, out: &mut [f32], a: f32, v: &[f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level` only holds values that passed `supported()`.
+        SimdLevel::Avx2 => unsafe { axpy_avx2(out, a, v) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { axpy_sse(out, a, v) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { axpy_neon(out, a, v) },
+        _ => axpy_scalar(out, a, v),
+    }
+}
+
+#[inline]
+fn axpy_scalar(out: &mut [f32], a: f32, v: &[f32]) {
+    for (o, &x) in out.iter_mut().zip(v.iter()) {
+        *o += a * x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(out: &mut [f32], a: f32, v: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len().min(v.len());
+    let va = _mm256_set1_ps(a);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let x = _mm256_loadu_ps(v.as_ptr().add(j));
+        let o = _mm256_loadu_ps(out.as_ptr().add(j));
+        // mul then add, never fmadd: scalar `o += a*x` rounds twice.
+        let r = _mm256_add_ps(o, _mm256_mul_ps(va, x));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+        j += 8;
+    }
+    axpy_scalar(&mut out[j..n], a, &v[j..n]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn axpy_sse(out: &mut [f32], a: f32, v: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len().min(v.len());
+    let va = _mm_set1_ps(a);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let x = _mm_loadu_ps(v.as_ptr().add(j));
+        let o = _mm_loadu_ps(out.as_ptr().add(j));
+        let r = _mm_add_ps(o, _mm_mul_ps(va, x));
+        _mm_storeu_ps(out.as_mut_ptr().add(j), r);
+        j += 4;
+    }
+    axpy_scalar(&mut out[j..n], a, &v[j..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(out: &mut [f32], a: f32, v: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = out.len().min(v.len());
+    let va = vdupq_n_f32(a);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let x = vld1q_f32(v.as_ptr().add(j));
+        let o = vld1q_f32(out.as_ptr().add(j));
+        let r = vaddq_f32(o, vmulq_f32(va, x));
+        vst1q_f32(out.as_mut_ptr().add(j), r);
+        j += 4;
+    }
+    axpy_scalar(&mut out[j..n], a, &v[j..n]);
+}
+
+// ---------------------------------------------------------------------------
+// dot4: four independent dot-product chains (the Col-layout MR=4 register
+// block). Lane i is row i's chain; a 4×4 transpose feeds each lane in
+// exactly ascending-j order, so every chain is bitwise the scalar chain.
+// The j loop itself is NEVER lane-split — that would reorder a reduction.
+
+/// Four dot products sharing `v`: returns
+/// `[Σ x0[j]·v[j], Σ x1[j]·v[j], Σ x2[j]·v[j], Σ x3[j]·v[j]]`,
+/// each accumulated in ascending `j` from a fresh 0.0 — bitwise the
+/// scalar four-chain loop for every level.
+pub fn dot4(
+    level: SimdLevel,
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    v: &[f32],
+) -> [f32; 4] {
+    debug_assert!(x0.len() >= v.len() && x1.len() >= v.len());
+    debug_assert!(x2.len() >= v.len() && x3.len() >= v.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // AVX2 gains nothing here (the accumulator is 4 lanes wide by
+        // construction); both x86 levels run the 128-bit transpose body.
+        // SAFETY: `level` only holds values that passed `supported()`.
+        SimdLevel::Avx2 | SimdLevel::Sse41 => unsafe { dot4_sse(x0, x1, x2, x3, v) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { dot4_neon(x0, x1, x2, x3, v) },
+        _ => dot4_scalar(x0, x1, x2, x3, v),
+    }
+}
+
+#[inline]
+fn dot4_scalar(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], v: &[f32]) -> [f32; 4] {
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (j, &w) in v.iter().enumerate() {
+        a0 += x0[j] * w;
+        a1 += x1[j] * w;
+        a2 += x2[j] * w;
+        a3 += x3[j] * w;
+    }
+    [a0, a1, a2, a3]
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn dot4_sse(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], v: &[f32]) -> [f32; 4] {
+    use std::arch::x86_64::*;
+    let n = v.len();
+    let mut acc = _mm_setzero_ps();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let r0 = _mm_loadu_ps(x0.as_ptr().add(j));
+        let r1 = _mm_loadu_ps(x1.as_ptr().add(j));
+        let r2 = _mm_loadu_ps(x2.as_ptr().add(j));
+        let r3 = _mm_loadu_ps(x3.as_ptr().add(j));
+        // 4×4 transpose: cK = [x0[j+K], x1[j+K], x2[j+K], x3[j+K]].
+        let t0 = _mm_unpacklo_ps(r0, r1);
+        let t1 = _mm_unpackhi_ps(r0, r1);
+        let t2 = _mm_unpacklo_ps(r2, r3);
+        let t3 = _mm_unpackhi_ps(r2, r3);
+        let c0 = _mm_movelh_ps(t0, t2);
+        let c1 = _mm_movehl_ps(t2, t0);
+        let c2 = _mm_movelh_ps(t1, t3);
+        let c3 = _mm_movehl_ps(t3, t1);
+        // One mul+add per j, in ascending j — the reduction order of each
+        // lane's chain is exactly the scalar chain's.
+        acc = _mm_add_ps(acc, _mm_mul_ps(c0, _mm_set1_ps(*v.get_unchecked(j))));
+        acc = _mm_add_ps(acc, _mm_mul_ps(c1, _mm_set1_ps(*v.get_unchecked(j + 1))));
+        acc = _mm_add_ps(acc, _mm_mul_ps(c2, _mm_set1_ps(*v.get_unchecked(j + 2))));
+        acc = _mm_add_ps(acc, _mm_mul_ps(c3, _mm_set1_ps(*v.get_unchecked(j + 3))));
+        j += 4;
+    }
+    let mut out = [0.0f32; 4];
+    _mm_storeu_ps(out.as_mut_ptr(), acc);
+    // Tail continues each lane's chain in j order.
+    for jj in j..n {
+        let w = v[jj];
+        out[0] += x0[jj] * w;
+        out[1] += x1[jj] * w;
+        out[2] += x2[jj] * w;
+        out[3] += x3[jj] * w;
+    }
+    out
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot4_neon(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], v: &[f32]) -> [f32; 4] {
+    use std::arch::aarch64::*;
+    let n = v.len();
+    let mut acc = vdupq_n_f32(0.0);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let r0 = vld1q_f32(x0.as_ptr().add(j));
+        let r1 = vld1q_f32(x1.as_ptr().add(j));
+        let r2 = vld1q_f32(x2.as_ptr().add(j));
+        let r3 = vld1q_f32(x3.as_ptr().add(j));
+        // 4×4 transpose via trn1/trn2 on f32 then f64 lanes.
+        let t0 = vtrn1q_f32(r0, r1); // [x0[j],   x1[j],   x0[j+2], x1[j+2]]
+        let t1 = vtrn2q_f32(r0, r1); // [x0[j+1], x1[j+1], x0[j+3], x1[j+3]]
+        let t2 = vtrn1q_f32(r2, r3);
+        let t3 = vtrn2q_f32(r2, r3);
+        let c0 = vreinterpretq_f32_f64(vtrn1q_f64(
+            vreinterpretq_f64_f32(t0),
+            vreinterpretq_f64_f32(t2),
+        )); // [x0[j], x1[j], x2[j], x3[j]]
+        let c1 = vreinterpretq_f32_f64(vtrn1q_f64(
+            vreinterpretq_f64_f32(t1),
+            vreinterpretq_f64_f32(t3),
+        ));
+        let c2 = vreinterpretq_f32_f64(vtrn2q_f64(
+            vreinterpretq_f64_f32(t0),
+            vreinterpretq_f64_f32(t2),
+        ));
+        let c3 = vreinterpretq_f32_f64(vtrn2q_f64(
+            vreinterpretq_f64_f32(t1),
+            vreinterpretq_f64_f32(t3),
+        ));
+        acc = vaddq_f32(acc, vmulq_f32(c0, vdupq_n_f32(*v.get_unchecked(j))));
+        acc = vaddq_f32(acc, vmulq_f32(c1, vdupq_n_f32(*v.get_unchecked(j + 1))));
+        acc = vaddq_f32(acc, vmulq_f32(c2, vdupq_n_f32(*v.get_unchecked(j + 2))));
+        acc = vaddq_f32(acc, vmulq_f32(c3, vdupq_n_f32(*v.get_unchecked(j + 3))));
+        j += 4;
+    }
+    let mut out = [0.0f32; 4];
+    vst1q_f32(out.as_mut_ptr(), acc);
+    for jj in j..n {
+        let w = v[jj];
+        out[0] += x0[jj] * w;
+        out[1] += x1[jj] * w;
+        out[2] += x2[jj] * w;
+        out[3] += x3[jj] * w;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// absmax_finite: the quantizer's saturating absmax fold. `max` over
+// non-negative f32 rounds nothing, so the fold is order-free and the
+// vector version is exact; non-finite lanes are masked to 0.0, matching
+// the scalar fold's skip.
+
+/// `fold(0.0, |a, v| if v.is_finite() { a.max(v.abs()) } else { a })` —
+/// the blockwise absmax with the saturating non-finite contract.
+/// Bitwise-identical across levels (exact fold).
+pub fn absmax_finite(level: SimdLevel, blk: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level` only holds values that passed `supported()`.
+        SimdLevel::Avx2 => unsafe { absmax_avx2(blk) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { absmax_sse(blk) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { absmax_neon(blk) },
+        _ => absmax_scalar(blk),
+    }
+}
+
+#[inline]
+fn absmax_scalar(blk: &[f32]) -> f32 {
+    blk.iter().fold(0.0f32, |a, &v| if v.is_finite() { a.max(v.abs()) } else { a })
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn absmax_avx2(blk: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = blk.len();
+    let abs_mask = _mm256_set1_ps(f32::from_bits(0x7FFF_FFFF));
+    let inf = _mm256_set1_ps(f32::INFINITY);
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let x = _mm256_loadu_ps(blk.as_ptr().add(j));
+        let ax = _mm256_and_ps(x, abs_mask);
+        // |x| < inf is false for both inf and NaN → those lanes mask to 0.
+        let fin = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, inf);
+        acc = _mm256_max_ps(acc, _mm256_and_ps(ax, fin));
+        j += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |a, &v| a.max(v));
+    for &v in &blk[j..] {
+        if v.is_finite() {
+            m = m.max(v.abs());
+        }
+    }
+    m
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn absmax_sse(blk: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = blk.len();
+    let abs_mask = _mm_set1_ps(f32::from_bits(0x7FFF_FFFF));
+    let inf = _mm_set1_ps(f32::INFINITY);
+    let mut acc = _mm_setzero_ps();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let x = _mm_loadu_ps(blk.as_ptr().add(j));
+        let ax = _mm_and_ps(x, abs_mask);
+        let fin = _mm_cmplt_ps(ax, inf);
+        acc = _mm_max_ps(acc, _mm_and_ps(ax, fin));
+        j += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |a, &v| a.max(v));
+    for &v in &blk[j..] {
+        if v.is_finite() {
+            m = m.max(v.abs());
+        }
+    }
+    m
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn absmax_neon(blk: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = blk.len();
+    let inf = vdupq_n_f32(f32::INFINITY);
+    let mut acc = vdupq_n_f32(0.0);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let x = vld1q_f32(blk.as_ptr().add(j));
+        let ax = vabsq_f32(x);
+        let fin = vcltq_f32(ax, inf);
+        let masked = vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(ax), fin));
+        acc = vmaxq_f32(acc, masked);
+        j += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |a, &v| a.max(v));
+    for &v in &blk[j..] {
+        if v.is_finite() {
+            m = m.max(v.abs());
+        }
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// encode_indices: the quantizer's per-element nearest-code classify.
+// `encode_f32`'s branchless tree over 15 sorted boundaries is exactly
+// "count of bounds with x > bound" (binary search ≡ rank), and the linear
+// fallback for other widths IS that count — so the vector form
+// accumulates 15 exact compares per lane. Non-finite inputs take the
+// saturating contract (scalar fixup per affected chunk; the fast path
+// detects all-finite chunks with one extra compare + movemask).
+
+/// Encode one block: `out[i]` = code index of `blk[i]` under the
+/// saturating non-finite contract (`finite → rank of blk[i]*inv in
+/// bounds`, `NaN → zero_idx`, `+inf → top_idx`, `-inf → 0`). Bitwise the
+/// scalar quantizer loop for every level.
+pub fn encode_indices(
+    level: SimdLevel,
+    bounds: &[f32],
+    blk: &[f32],
+    inv: f32,
+    zero_idx: u8,
+    top_idx: u8,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(blk.len(), out.len());
+    debug_assert!(bounds.len() < 256);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level` only holds values that passed `supported()`.
+        SimdLevel::Avx2 => unsafe {
+            encode_avx2(bounds, blk, inv, zero_idx, top_idx, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe {
+            encode_sse(bounds, blk, inv, zero_idx, top_idx, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe {
+            encode_neon(bounds, blk, inv, zero_idx, top_idx, out)
+        },
+        _ => encode_scalar(bounds, blk, inv, zero_idx, top_idx, out),
+    }
+}
+
+#[inline]
+fn encode_scalar(
+    bounds: &[f32],
+    blk: &[f32],
+    inv: f32,
+    zero_idx: u8,
+    top_idx: u8,
+    out: &mut [u8],
+) {
+    for (o, &v) in out.iter_mut().zip(blk.iter()) {
+        *o = encode_one(bounds, v, inv, zero_idx, top_idx);
+    }
+}
+
+/// The per-element contract, shared by the scalar path and every vector
+/// path's tail/fixup — verbatim the quantizer's original branch ladder.
+#[inline]
+fn encode_one(bounds: &[f32], v: f32, inv: f32, zero_idx: u8, top_idx: u8) -> u8 {
+    if v.is_finite() {
+        crate::quant::encode_f32(bounds, v * inv)
+    } else if v.is_nan() {
+        zero_idx
+    } else if v > 0.0 {
+        top_idx
+    } else {
+        0
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn encode_avx2(
+    bounds: &[f32],
+    blk: &[f32],
+    inv: f32,
+    zero_idx: u8,
+    top_idx: u8,
+    out: &mut [u8],
+) {
+    use std::arch::x86_64::*;
+    let n = blk.len();
+    let vinv = _mm256_set1_ps(inv);
+    let abs_mask = _mm256_set1_ps(f32::from_bits(0x7FFF_FFFF));
+    let inf = _mm256_set1_ps(f32::INFINITY);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let x = _mm256_loadu_ps(blk.as_ptr().add(j));
+        let p = _mm256_mul_ps(x, vinv);
+        let mut cnt = _mm256_setzero_si256();
+        for &b in bounds {
+            // `p > b` exactly as the scalar rank count (NaN lanes: false).
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(p, _mm256_set1_ps(b));
+            // all-ones is -1: subtracting adds 1 to matching lanes.
+            cnt = _mm256_sub_epi32(cnt, _mm256_castps_si256(gt));
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, cnt);
+        for (l, &c) in lanes.iter().enumerate() {
+            out[j + l] = c as u8;
+        }
+        // Non-finite inputs need the saturating fixup; one compare +
+        // movemask skips it for all-finite chunks.
+        let fin = _mm256_cmp_ps::<_CMP_LT_OQ>(_mm256_and_ps(x, abs_mask), inf);
+        if _mm256_movemask_ps(fin) != 0xFF {
+            for l in 0..8 {
+                let v = blk[j + l];
+                if !v.is_finite() {
+                    out[j + l] = encode_one(bounds, v, inv, zero_idx, top_idx);
+                }
+            }
+        }
+        j += 8;
+    }
+    encode_scalar(bounds, &blk[j..], inv, zero_idx, top_idx, &mut out[j..]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn encode_sse(
+    bounds: &[f32],
+    blk: &[f32],
+    inv: f32,
+    zero_idx: u8,
+    top_idx: u8,
+    out: &mut [u8],
+) {
+    use std::arch::x86_64::*;
+    let n = blk.len();
+    let vinv = _mm_set1_ps(inv);
+    let abs_mask = _mm_set1_ps(f32::from_bits(0x7FFF_FFFF));
+    let inf = _mm_set1_ps(f32::INFINITY);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let x = _mm_loadu_ps(blk.as_ptr().add(j));
+        let p = _mm_mul_ps(x, vinv);
+        let mut cnt = _mm_setzero_si128();
+        for &b in bounds {
+            let gt = _mm_cmpgt_ps(p, _mm_set1_ps(b));
+            cnt = _mm_sub_epi32(cnt, _mm_castps_si128(gt));
+        }
+        let mut lanes = [0i32; 4];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, cnt);
+        for (l, &c) in lanes.iter().enumerate() {
+            out[j + l] = c as u8;
+        }
+        let fin = _mm_cmplt_ps(_mm_and_ps(x, abs_mask), inf);
+        if _mm_movemask_ps(fin) != 0xF {
+            for l in 0..4 {
+                let v = blk[j + l];
+                if !v.is_finite() {
+                    out[j + l] = encode_one(bounds, v, inv, zero_idx, top_idx);
+                }
+            }
+        }
+        j += 4;
+    }
+    encode_scalar(bounds, &blk[j..], inv, zero_idx, top_idx, &mut out[j..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn encode_neon(
+    bounds: &[f32],
+    blk: &[f32],
+    inv: f32,
+    zero_idx: u8,
+    top_idx: u8,
+    out: &mut [u8],
+) {
+    use std::arch::aarch64::*;
+    let n = blk.len();
+    let vinv = vdupq_n_f32(inv);
+    let inf = vdupq_n_f32(f32::INFINITY);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let x = vld1q_f32(blk.as_ptr().add(j));
+        let p = vmulq_f32(x, vinv);
+        let mut cnt = vdupq_n_s32(0);
+        for &b in bounds {
+            let gt = vcgtq_f32(p, vdupq_n_f32(b));
+            cnt = vsubq_s32(cnt, vreinterpretq_s32_u32(gt));
+        }
+        let mut lanes = [0i32; 4];
+        vst1q_s32(lanes.as_mut_ptr(), cnt);
+        for (l, &c) in lanes.iter().enumerate() {
+            out[j + l] = c as u8;
+        }
+        let fin = vcltq_f32(vabsq_f32(x), inf);
+        if vminvq_u32(fin) != u32::MAX {
+            for l in 0..4 {
+                let v = blk[j + l];
+                if !v.is_finite() {
+                    out[j + l] = encode_one(bounds, v, inv, zero_idx, top_idx);
+                }
+            }
+        }
+        j += 4;
+    }
+    encode_scalar(bounds, &blk[j..], inv, zero_idx, top_idx, &mut out[j..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(SimdLevel::parse("off"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("SSE4.1"), Some(SimdLevel::Sse41));
+        assert_eq!(SimdLevel::parse("sse41"), Some(SimdLevel::Sse41));
+        assert_eq!(SimdLevel::parse(" avx2 "), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("neon"), Some(SimdLevel::Neon));
+        assert_eq!(SimdLevel::parse("auto"), None);
+        assert_eq!(SimdLevel::parse("avx512"), None);
+        for l in [SimdLevel::Scalar, SimdLevel::Sse41, SimdLevel::Avx2, SimdLevel::Neon] {
+            assert_eq!(SimdLevel::parse(l.name()), Some(l), "name round-trips");
+            assert_eq!(SimdLevel::from_code(l.code()), Some(l), "code round-trips");
+        }
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        let best = detect_best();
+        assert!(supported(best));
+        let avail = available_levels();
+        assert_eq!(avail[0], SimdLevel::Scalar);
+        assert!(avail.contains(&best));
+        assert!(avail.iter().all(|&l| supported(l)));
+    }
+
+    #[test]
+    fn set_level_round_trips_and_sets_gauge() {
+        let _g = lock_for_tests();
+        let initial = level(); // also forces env init
+        for l in available_levels() {
+            set_level(l);
+            assert_eq!(level(), l);
+            assert_eq!(level_gauge().get(), l.code() as i64);
+        }
+        set_level(initial);
+    }
+
+    /// Every available vector level matches the scalar primitives bitwise
+    /// on random data — odd lengths for tails, non-finites for the masks.
+    #[test]
+    fn prop_primitives_bitwise_match_scalar() {
+        let levels = available_levels();
+        prop::check(64, |g| {
+            let n = g.usize_in(0, 70);
+            let mut v = g.vec_normal_f32(n);
+            let x0 = g.vec_normal_f32(n);
+            let x1 = g.vec_normal_f32(n);
+            let x2 = g.vec_normal_f32(n);
+            let x3 = g.vec_normal_f32(n);
+            let base = g.vec_normal_f32(n);
+            let a = g.f32_in(-2.0, 2.0);
+            for w in v.iter_mut() {
+                if g.bool(0.1) {
+                    *w = *g.pick(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+                }
+            }
+            let want_max = absmax_scalar(&v);
+            let want_dot = dot4_scalar(&x0, &x1, &x2, &x3, &base);
+            let mut want_axpy = base.clone();
+            axpy_scalar(&mut want_axpy, a, &x0);
+            for &l in &levels {
+                if absmax_finite(l, &v).to_bits() != want_max.to_bits() {
+                    return Err(format!("absmax diverged at level {l} n={n}"));
+                }
+                let d = dot4(l, &x0, &x1, &x2, &x3, &base);
+                if bits(&d) != bits(&want_dot) {
+                    return Err(format!("dot4 diverged at level {l} n={n}"));
+                }
+                let mut got = base.clone();
+                axpy(l, &mut got, a, &x0);
+                if bits(&got) != bits(&want_axpy) {
+                    return Err(format!("axpy diverged at level {l} n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// encode_indices: vector rank-count == scalar `encode_f32` tree, and
+    /// the saturating non-finite contract survives every level — NaN,
+    /// ±inf, and inv == 0 (all-non-finite block) included.
+    #[test]
+    fn prop_encode_indices_bitwise_match_scalar() {
+        let code = crate::codes::nf4();
+        let bounds: Vec<f32> = code.boundaries().iter().map(|&b| b as f32).collect();
+        let levels = available_levels();
+        prop::check(64, |g| {
+            let n = g.usize_in(0, 70);
+            let mut blk = g.vec_normal_f32(n);
+            for v in blk.iter_mut() {
+                if g.bool(0.15) {
+                    *v = *g.pick(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+                }
+            }
+            let inv = *g.pick(&[0.0f32, 0.37, 1.0, 4.5]);
+            let mut want = vec![0u8; n];
+            encode_scalar(&bounds, &blk, inv, 7, 15, &mut want);
+            for &l in &levels {
+                let mut got = vec![0u8; n];
+                encode_indices(l, &bounds, &blk, inv, 7, 15, &mut got);
+                if got != want {
+                    return Err(format!("encode diverged at level {l} n={n} inv={inv}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Non-15-bound tables (the linear-scan encode path) vectorize to the
+    /// same rank count too.
+    #[test]
+    fn encode_indices_non_nf4_width() {
+        let bounds = vec![-0.5f32, 0.0, 0.5]; // 4-entry code
+        let mut rng = Rng::new(42);
+        let blk: Vec<f32> = (0..37).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0u8; blk.len()];
+        encode_scalar(&bounds, &blk, 1.0, 1, 3, &mut want);
+        for l in available_levels() {
+            let mut got = vec![0u8; blk.len()];
+            encode_indices(l, &bounds, &blk, 1.0, 1, 3, &mut got);
+            assert_eq!(got, want, "level {l}");
+        }
+    }
+
+    #[test]
+    fn kernel_call_counters_register() {
+        let _g = lock_for_tests();
+        count_kernel_call("qgemm", SimdLevel::Scalar);
+        count_kernel_call("quantize", SimdLevel::Scalar);
+        let c = counter("afq_simd_kernel_calls_total{kernel=\"qgemm\",simd=\"scalar\"}");
+        assert!(c.get() >= 1);
+    }
+}

@@ -185,6 +185,40 @@ fn prop_fused_plan_args_bitwise_match_per_tensor_qgemm() {
     });
 }
 
+/// Ring 1 under forced SIMD dispatch: the marshalled-bytes → fused-qgemm
+/// path produces bitwise identical outputs at every supported dispatch
+/// level, for the full heterogeneous battery plan (3 families × 3 block
+/// sizes ± DQ). Heterogeneous serving must not observe the vector width.
+#[test]
+fn fused_plan_args_simd_levels_bitwise_stable() {
+    use afq::util::simd;
+    let _guard = simd::lock_for_tests();
+    let (meta, params, plan) = battery_plan_and_params();
+    let args = planned_fused_weight_args(&meta, &params, &plan, "w").expect("marshal");
+    let initial = simd::level();
+    let mut rng = afq::util::rng::Rng::new(0xF00D);
+    for (name, shape) in &meta.matrix_order {
+        let a = plan.get(name).unwrap();
+        if a.spec.is_fp() {
+            continue; // fp tensors never touch the quantized kernels
+        }
+        let (lut, idx, scales) = uploaded_triple(&args, "w", name).expect("triple");
+        let idx_u8: Vec<u8> = idx.iter().map(|&v| v as u8).collect();
+        let code = Code::new("uploaded", lut.iter().map(|&v| v as f64).collect());
+        let q = Quantized::from_unpacked(&idx_u8, a.spec.block_size, scales.to_vec());
+        let served = MatrixQuant::from_flat(shape[0], shape[1], q, "uploaded");
+        let x = Matrix::randn(3, shape[0], 1.0, &mut rng);
+        simd::set_level(simd::SimdLevel::Scalar);
+        let want = served.qgemm(&x, &code);
+        for lvl in simd::available_levels() {
+            simd::set_level(lvl);
+            let got = served.qgemm(&x, &code);
+            assert_eq!(got.data, want.data, "{name} ({}): level={lvl}", a.label());
+        }
+    }
+    simd::set_level(initial);
+}
+
 // ---------------------------------------------------------------------------
 // Ring 2: the fused plan path behind the real Batcher, artifact-free.
 
