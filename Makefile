@@ -14,10 +14,13 @@
 #                    qgemm and the hot-tenant serving scenario
 #   make bench-simd  the simd-vs-scalar rows only: forced-dispatch qgemm/
 #                    quantize pairs and the host-kernel serving scenario
+#   make bench-fleet the fleet-operations serving rows: many-tenant churn
+#                    under a device-residency budget vs unlimited (plus
+#                    the fleet integration tests by name); needs artifacts
 
 PY_SOURCES := $(shell find python/compile -name '*.py' 2>/dev/null)
 
-.PHONY: verify parity bench bench-quick bench-cache bench-simd artifacts clean
+.PHONY: verify parity bench bench-quick bench-cache bench-simd bench-fleet artifacts clean
 
 verify:
 	cargo build --release
@@ -60,6 +63,14 @@ bench-cache:
 # results/BENCH_quant.json with just these rows.
 bench-simd:
 	cargo bench --bench quant -- simd/
+	cargo bench --bench serving
+
+# Fleet-operations rows + tests: the serving bench's many-tenant churn
+# pair (budgeted vs unlimited device residency) and the fleet integration
+# tests (weighted rollout, canary auto-rollback, budget churn, compile
+# hot-swap). The bench and the tests both self-skip without artifacts.
+bench-fleet:
+	cargo test -q --test fleet
 	cargo bench --bench serving
 
 clean:

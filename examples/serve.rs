@@ -6,13 +6,25 @@
 //! (the paper-comparison-as-a-service scenario: A/B-serve NF4 vs AF4 vs
 //! balanced vs a planner output under load).
 //!
+//! A second phase demos the fleet operations: install a weighted rollout
+//! with a canary arm (`--canary af4@64`), drive traffic through
+//! `score_rollout` (deterministic per-span weighted assignment), then
+//! promote the canary if its guard stayed healthy — or report the
+//! auto-rollback if the router already pulled it. `--device-budget-bytes`
+//! caps engine-resident weight bytes, forcing LRU eviction + lazy
+//! re-preparation under tenant churn.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve -- \
 //!     [--codes nf4@64,af4@64,af4@4096] [--plan 4.25] \
-//!     [--clients 16] [--requests 16]
+//!     [--clients 16] [--requests 16] \
+//!     [--canary af4@64] [--canary-share 0.2] [--device-budget-bytes N]
 //! ```
 
-use afq::coordinator::{QuantSpec, Router, RouterConfig, ScoreRequest, ServiceKey};
+use afq::coordinator::{
+    CanaryGuard, PlanRef, QuantSpec, RolloutPolicy, Router, RouterConfig, ScoreRequest,
+    ServiceKey,
+};
 use afq::model::{generate_corpus, BatchSampler, ParamSet};
 use afq::plan::{plan_for_params, ErrorModel, PlannerOpts};
 use afq::util::cli::Command;
@@ -38,6 +50,13 @@ fn run() -> Result<(), String> {
         .opt("clients", "concurrent client threads (round-robin over configs)", Some("16"))
         .opt("requests", "requests per client", Some("16"))
         .opt("max-wait-ms", "batcher deadline", Some("20"))
+        .opt("canary", "run a weighted-rollout demo with this config as the canary arm", None)
+        .opt("canary-share", "traffic share routed to the canary", Some("0.2"))
+        .opt(
+            "device-budget-bytes",
+            "cap engine-resident weight bytes (LRU-evicts idle tenants)",
+            None,
+        )
         .opt("artifacts", "artifacts dir", Some("artifacts"));
     let args = cmd.parse(&argv)?;
     let model = args.get_or("model", "tiny");
@@ -47,10 +66,17 @@ fn run() -> Result<(), String> {
         .map(|s| QuantSpec::parse_label(s).map(|spec| ServiceKey::new(model, spec)))
         .collect::<Result<_, _>>()?;
 
+    let device_budget_bytes = match args.get("device-budget-bytes") {
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|_| format!("bad --device-budget-bytes {v:?}"))?,
+        ),
+        None => None,
+    };
     let router = Router::with_config(
         args.get_or("artifacts", "artifacts"),
         RouterConfig {
             max_wait: Duration::from_millis(args.u64("max-wait-ms", 20)),
+            device_budget_bytes,
             ..Default::default()
         },
     )?;
@@ -132,6 +158,51 @@ fn run() -> Result<(), String> {
         all_lat[all_lat.len() * 99 / 100]
     );
     print!("\n{}", router.snapshot());
+
+    // Fleet-operations demo: weighted rollout with a canary arm, judged
+    // live by its guard, then promoted (or already auto-rolled-back).
+    if let Some(label) = args.get("canary") {
+        let canary = PlanRef::Uniform(QuantSpec::parse_label(label)?);
+        let share = args.f64("canary-share", 0.2);
+        let base = keys[0].plan.clone();
+        let guard =
+            CanaryGuard { max_p99_ratio: 1.5, max_error_rate_delta: 0.05, min_requests: 16 };
+        router.set_rollout(
+            model,
+            RolloutPolicy::single(42, base.clone()).with_canary(canary.clone(), share, guard)?,
+        )?;
+        println!(
+            "\n== rollout: canary {label} at {share:.0}% of {model} traffic \
+             (baseline {}) ==",
+            base.label()
+        );
+        let mut sampler = BatchSampler::new(corpus.clone(), seq, 1, 77);
+        let (mut to_canary, mut to_base) = (0u64, 0u64);
+        for _ in 0..(n_requests.max(4) * 8) {
+            let (ids, tgt) = sampler.sample();
+            let (key, _) = router.score_rollout(model, ids, tgt)?;
+            if key.plan == canary {
+                to_canary += 1;
+            } else {
+                to_base += 1;
+            }
+        }
+        println!(
+            "routed {to_base} to the baseline, {to_canary} to the canary \
+             (deterministic per-span weighted assignment)"
+        );
+        match router.rollout_of(model) {
+            Some(p) if p.canary().is_some() => {
+                router.promote(model)?;
+                println!("canary healthy under its guard — promoted to 100%");
+            }
+            _ => println!("the guard saw a regression — the router auto-rolled the canary back"),
+        }
+        for r in &router.snapshot().rollouts {
+            println!("rollout[{}]: {:?} canary={:?}", r.model, r.arms, r.canary);
+        }
+    }
+
     println!("\ngraceful shutdown (drains per-service batchers, then the engine)…");
     router.shutdown();
     println!("done");

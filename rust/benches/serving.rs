@@ -13,7 +13,10 @@
 //! measured pair of rows (acceptance target: <2%), and a
 //! batched-vs-per-request pair on the direct service path shows what
 //! `score_batches` (one weight-arg marshal per set) buys over a
-//! per-request `score_batch` loop.
+//! per-request `score_batch` loop. A many-tenant heavy-churn fleet
+//! scenario (8 tenants round-robin under a ~3.5-tenant device budget vs
+//! unlimited) prices the residency eviction + lazy re-preparation flow as
+//! another gated row pair.
 //!
 //! Needs `make artifacts`. Run: `cargo bench --bench serving`
 //! Quick mode (CI): `AFQ_BENCH_QUICK=1 cargo bench --bench serving`
@@ -167,6 +170,87 @@ fn simd_kernel_rows(quick: bool) -> Vec<Json> {
     rows
 }
 
+/// Many-tenant heavy-churn fleet scenario: 8 quantized tenants behind a
+/// device budget sized for ~3.5 of the largest, driven round-robin so
+/// every round evicts idle tenants and lazily re-prepares the ones the
+/// previous round pushed out — the fleet-operations stress shape. Two
+/// adjacent rows (budgeted vs unlimited residency) make the
+/// eviction + re-preparation cost a gated pair for `afq obs compare`.
+/// Needs artifacts (callers gate on `resolve_artifacts_dir`).
+fn fleet_churn_rows(quick: bool, corpus: &[u8]) -> Vec<Json> {
+    let model = "tiny";
+    let tenants: Vec<ServiceKey> = [64usize, 256, 1024, 4096]
+        .iter()
+        .flat_map(|&b| ["nf4", "af4"].iter().map(move |f| ServiceKey::quant(model, f, b)))
+        .collect();
+    let rounds = if quick { 2 } else { 6 };
+    // Size the budget off one real tenant footprint (the 64-block tenants
+    // carry the most scale overhead, so ~3.5× the probe forces churn).
+    let probe = Router::new("artifacts").expect("router");
+    let meta = probe.manifest().config(model).unwrap().clone();
+    probe.register_model(model, ParamSet::init(&meta, 3)).unwrap();
+    probe.prepare(&tenants[0]).expect("probe prepare");
+    let per_tenant = probe.snapshot().get(&tenants[0]).expect("probe stat").device_bytes;
+    probe.shutdown();
+    let budget = per_tenant * 7 / 2;
+    println!(
+        "-- fleet churn scenario ({} tenants, budget {budget}B = 3.5 × {per_tenant}B) --",
+        tenants.len()
+    );
+    let mut rows = Vec::new();
+    for (label, device_budget_bytes) in
+        [("budgeted", Some(budget)), ("unlimited", None)]
+    {
+        let router = Router::with_config(
+            "artifacts",
+            RouterConfig {
+                max_wait: Duration::from_millis(1),
+                device_budget_bytes,
+                ..Default::default()
+            },
+        )
+        .expect("router");
+        router.register_model(model, ParamSet::init(&meta, 3)).unwrap();
+        let mut sampler = BatchSampler::new(corpus.to_vec(), meta.seq_len, meta.batch, 17);
+        let (ids, tgt) = sampler.sample();
+        // Warm round (prepares everything once), then timed churn rounds.
+        for key in &tenants {
+            router.score_batch(key, ids.clone(), tgt.clone()).expect("warm");
+        }
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            for key in &tenants {
+                router.score_batch(key, ids.clone(), tgt.clone()).expect("scored");
+            }
+        }
+        let wall = t0.elapsed();
+        let snap = router.snapshot();
+        assert!(
+            device_budget_bytes.map_or(true, |b| snap.device_bytes <= b),
+            "residency budget overshot: {} > {budget}",
+            snap.device_bytes
+        );
+        let requests = rounds * tenants.len();
+        let rps = requests as f64 / wall.as_secs_f64();
+        println!(
+            "fleet/churn[{label}]: {requests} batch-requests in {wall:.2?} ({rps:.1} req/s, \
+             {} evictions, {} re-preparations, {}B resident)",
+            snap.evictions, snap.repreparations, snap.device_bytes
+        );
+        let mut row = Json::obj();
+        row.set("config", Json::Str(format!("fleet/churn[{label}]")))
+            .set("model", Json::Str(model.into()))
+            .set("wait_ms", Json::Num(1.0))
+            .set("requests", Json::Num(requests as f64))
+            .set("rps", Json::Num(rps))
+            .set("evictions", Json::Num(snap.evictions as f64))
+            .set("repreparations", Json::Num(snap.repreparations as f64));
+        rows.push(row);
+        router.shutdown();
+    }
+    rows
+}
+
 fn main() {
     let quick = std::env::var("AFQ_BENCH_QUICK").is_ok();
     // Host-kernel scenarios first: they need no artifacts, and their rows
@@ -197,6 +281,9 @@ fn main() {
     let reqs_per_client = if quick { 4 } else { 12 };
 
     let corpus = generate_corpus("english", 200_000, 11).unwrap();
+    // Fleet churn first: it owns its routers (budgeted vs unlimited) and
+    // its rows feed the same perf gate as the sweep below.
+    rows.extend(fleet_churn_rows(quick, &corpus));
     let mut last_snapshot = Json::obj();
     for &wait in waits_ms {
         let router = Router::with_config(

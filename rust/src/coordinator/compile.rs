@@ -1,0 +1,298 @@
+//! Background compile queue: retire the reconstructed-fp fallback.
+//!
+//! When a heterogeneous plan registers whose block signature was never
+//! AOT-compiled, the router serves it through the fp reconstruction
+//! (mathematically identical, ~8× the bytes). This queue turns that
+//! permanent fallback into a transient one: the router submits a
+//! [`CompileJob`] for the missing `score_plan_<shape_digest>` artifact, a
+//! worker thread builds it (by default shelling to
+//! `python/compile/aot.py --plans`, overridable for tests and air-gapped
+//! hosts via `AFQ_COMPILE_CMD` or an injected [`CompileWorker`]), and the
+//! router hot-swaps the service onto the fused path when the artifact
+//! lands — atomically, with in-flight requests draining on the old
+//! instance (see `Router::poll_compiled`).
+//!
+//! Dedupe is by **shape digest** and sticky: several plans (or several
+//! registrations of one plan) sharing a block signature compile once,
+//! and a failed compile is not retried — the fallback keeps serving, the
+//! failure is logged and counted (`afq_compile_failures_total`), and an
+//! operator can re-register after fixing the toolchain.
+
+use crate::coordinator::router::ServiceKey;
+use crate::plan::QuantPlan;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// One requested artifact build: the service that wants it and the plan
+/// whose shape digest names it.
+#[derive(Clone)]
+pub struct CompileJob {
+    /// The (model × plan) service currently on the fallback path.
+    pub key: ServiceKey,
+    pub model: String,
+    pub plan: Arc<QuantPlan>,
+}
+
+/// A compile backend: build the fused artifact for `job`'s plan into the
+/// artifacts directory (and update `manifest.json`). Runs on the queue's
+/// worker thread; blocking is expected.
+pub type CompileWorker = Box<dyn Fn(&CompileJob) -> Result<(), String> + Send>;
+
+/// A finished job, as drained by the router.
+pub(crate) struct CompileOutcome {
+    pub job: CompileJob,
+    pub result: Result<(), String>,
+}
+
+/// FIFO single-worker compile queue. Owned by the router; dropping it
+/// closes the channel and joins the worker.
+pub struct CompileQueue {
+    tx: Option<Sender<CompileJob>>,
+    done: Mutex<Receiver<CompileOutcome>>,
+    /// Completed-but-undrained outcomes; lets the router skip the `done`
+    /// lock entirely on the request path when nothing finished.
+    pending: Arc<AtomicUsize>,
+    /// Shape digests ever submitted (sticky — see module docs).
+    queued: Mutex<HashSet<String>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CompileQueue {
+    pub fn with_worker(worker: CompileWorker) -> Result<CompileQueue, String> {
+        Self::with_worker_and_flag(worker, Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// `pending` is shared with the owner (the router keeps its own clone
+    /// so the per-request "anything finished?" check is one relaxed load,
+    /// no queue lock).
+    pub(crate) fn with_worker_and_flag(
+        worker: CompileWorker,
+        pending: Arc<AtomicUsize>,
+    ) -> Result<CompileQueue, String> {
+        let (tx, rx) = channel::<CompileJob>();
+        let (dtx, drx) = channel::<CompileOutcome>();
+        let flag = Arc::clone(&pending);
+        let join = std::thread::Builder::new()
+            .name("afq-compile".into())
+            .spawn(move || {
+                use crate::obs::registry;
+                let m_jobs = registry::counter("afq_compile_jobs_total");
+                let m_ok = registry::counter("afq_compile_success_total");
+                let m_err = registry::counter("afq_compile_failures_total");
+                while let Ok(job) = rx.recv() {
+                    m_jobs.inc(1);
+                    let digest = job.plan.shape_digest();
+                    crate::log_info!(
+                        "compile queue: building {} for service {}",
+                        job.plan.fused_artifact_name(),
+                        job.key
+                    );
+                    let result = worker(&job);
+                    match &result {
+                        Ok(()) => m_ok.inc(1),
+                        Err(e) => {
+                            m_err.inc(1);
+                            crate::log_warn!(
+                                "compile queue: shape {digest} failed (fallback keeps \
+                                 serving): {e}"
+                            );
+                        }
+                    }
+                    // Count BEFORE send: a drainer woken by the recv must
+                    // see pending > 0, never a finished outcome with a
+                    // zero flag.
+                    flag.fetch_add(1, Ordering::SeqCst);
+                    if dtx.send(CompileOutcome { job, result }).is_err() {
+                        break; // queue dropped mid-build
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn compile worker: {e}"))?;
+        Ok(CompileQueue {
+            tx: Some(tx),
+            done: Mutex::new(drx),
+            pending,
+            queued: Mutex::new(HashSet::new()),
+            join: Some(join),
+        })
+    }
+
+    /// Submit a job unless its shape digest was already submitted (ever).
+    /// Returns whether the job was enqueued.
+    pub fn submit(&self, job: CompileJob) -> bool {
+        let digest = job.plan.shape_digest();
+        {
+            let mut seen = self
+                .queued
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            if !seen.insert(digest) {
+                return false;
+            }
+        }
+        match &self.tx {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Whether any finished outcome is waiting to be drained (one relaxed
+    /// load — safe on the request hot path).
+    pub fn has_pending(&self) -> bool {
+        self.pending.load(Ordering::Relaxed) > 0
+    }
+
+    /// Take every finished outcome (non-blocking).
+    pub(crate) fn drain(&self) -> Vec<CompileOutcome> {
+        let rx = self.done.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        let mut out = Vec::new();
+        while let Ok(o) = rx.try_recv() {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            out.push(o);
+        }
+        out
+    }
+}
+
+impl Drop for CompileQueue {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel → worker's recv() errors out
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The production worker: shell to the AOT compiler so the plan's
+/// `score_plan_<shape_digest>` artifact (and refreshed manifest) land in
+/// `artifacts_dir`.
+///
+/// The plan is written to `<artifacts_dir>/plan_<shape_digest>.json` and
+/// passed via `--plans`. The full AOT build runs (no skip flags) because
+/// `aot.py` rewrites `manifest.json` with only the entries it built this
+/// run — a partial build would destroy the existing manifest.
+///
+/// `AFQ_COMPILE_CMD`, when set, replaces the python invocation with
+/// `sh -c <cmd>` run in the current directory with `AFQ_PLAN_JSON`,
+/// `AFQ_MODEL`, and `AFQ_OUT_DIR` in the environment — the hook tests use
+/// to stub the compiler, and operators can use to route through a build
+/// farm.
+pub fn default_worker(artifacts_dir: &str) -> CompileWorker {
+    let dir = artifacts_dir.to_string();
+    Box::new(move |job: &CompileJob| {
+        let out_dir = std::path::Path::new(&dir);
+        std::fs::create_dir_all(out_dir)
+            .map_err(|e| format!("create artifacts dir {dir}: {e}"))?;
+        let plan_path = out_dir.join(format!("plan_{}.json", job.plan.shape_digest()));
+        std::fs::write(&plan_path, job.plan.to_json().to_string_pretty())
+            .map_err(|e| format!("write {}: {e}", plan_path.display()))?;
+        let out_abs = out_dir
+            .canonicalize()
+            .map_err(|e| format!("resolve {dir}: {e}"))?;
+        let plan_abs = plan_path
+            .canonicalize()
+            .map_err(|e| format!("resolve {}: {e}", plan_path.display()))?;
+
+        let status = if let Ok(cmd) = std::env::var("AFQ_COMPILE_CMD") {
+            std::process::Command::new("sh")
+                .args(["-c", &cmd])
+                .env("AFQ_PLAN_JSON", &plan_abs)
+                .env("AFQ_MODEL", &job.model)
+                .env("AFQ_OUT_DIR", &out_abs)
+                .status()
+                .map_err(|e| format!("spawn AFQ_COMPILE_CMD: {e}"))?
+        } else {
+            let py_dir = ["python", "../python"]
+                .iter()
+                .map(std::path::Path::new)
+                .find(|d| d.join("compile/aot.py").exists())
+                .ok_or("python/compile/aot.py not found (run from the repo root)")?;
+            std::process::Command::new("python3")
+                .args(["-m", "compile.aot", "--out-dir"])
+                .arg(&out_abs)
+                .arg("--plans")
+                .arg(&plan_abs)
+                .current_dir(py_dir)
+                .status()
+                .map_err(|e| format!("spawn python3 compile.aot: {e}"))?
+        };
+        if status.success() {
+            Ok(())
+        } else {
+            Err(format!("compiler exited with {status}"))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{Assignment, QuantPlan};
+    use crate::quant::QuantSpec;
+
+    fn job(b0: usize, b1: usize) -> CompileJob {
+        let asg = |tensor: &str, b: usize| Assignment {
+            tensor: tensor.into(),
+            n_params: 4,
+            spec: QuantSpec { family: "nf4".into(), block_size: b },
+            dq: None,
+            bits_per_param: 0.0,
+            predicted_l1: 0.0,
+        };
+        let plan = Arc::new(QuantPlan::new("tiny", vec![asg("a", b0), asg("b", b1)]));
+        CompileJob { key: ServiceKey::planned(&plan), model: "tiny".into(), plan }
+    }
+
+    #[test]
+    fn submit_runs_worker_and_dedupes_by_shape_digest() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = Arc::clone(&ran);
+        let q = CompileQueue::with_worker(Box::new(move |_j| {
+            ran2.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }))
+        .unwrap();
+        assert!(q.submit(job(64, 256)), "first submission enqueues");
+        assert!(!q.submit(job(64, 256)), "same shape digest dedupes");
+        assert!(q.submit(job(64, 1024)), "different shape digest enqueues");
+        // Wait for both outcomes, then drain.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while q.pending.load(Ordering::SeqCst) < 2 {
+            assert!(std::time::Instant::now() < deadline, "worker stalled");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(q.has_pending());
+        let outcomes = q.drain();
+        assert_eq!(outcomes.len(), 2);
+        assert!(outcomes.iter().all(|o| o.result.is_ok()));
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "deduped job never ran");
+        assert!(!q.has_pending(), "drain clears the pending flag");
+        assert!(q.drain().is_empty());
+    }
+
+    #[test]
+    fn failures_are_outcomes_not_retries() {
+        let q = CompileQueue::with_worker(Box::new(|_j| Err("toolchain broken".into())))
+            .unwrap();
+        assert!(q.submit(job(64, 256)));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !q.has_pending() {
+            assert!(std::time::Instant::now() < deadline, "worker stalled");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let outcomes = q.drain();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].result.as_ref().is_err());
+        // Sticky dedupe: the failed shape is not accepted again.
+        assert!(!q.submit(job(64, 256)));
+    }
+
+    #[test]
+    fn drop_joins_the_worker_cleanly() {
+        let q = CompileQueue::with_worker(Box::new(|_j| Ok(()))).unwrap();
+        assert!(q.submit(job(256, 1024)));
+        drop(q); // must not hang or panic, even with a job possibly in flight
+    }
+}

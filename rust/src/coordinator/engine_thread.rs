@@ -20,6 +20,9 @@ pub struct EngineStats {
     pub cached_buffers: usize,
     /// Compiled executables held by the engine.
     pub executables: usize,
+    /// Host-byte size of the device-resident buffer cache — what the
+    /// router's residency budget is charged against.
+    pub resident_bytes: u64,
 }
 
 enum Request {
@@ -44,6 +47,11 @@ enum Request {
     },
     Stats {
         reply: Sender<EngineStats>,
+    },
+    /// Re-read manifest.json (artifacts compiled after boot); replies with
+    /// the refreshed manifest so callers can route to new artifacts.
+    RefreshManifest {
+        reply: Sender<Result<Manifest, String>>,
     },
     Shutdown,
 }
@@ -86,6 +94,7 @@ impl EngineHandle {
                 let m_execs = registry::counter("afq_engine_executions_total");
                 let m_errors = registry::counter("afq_engine_execution_errors_total");
                 let g_buffers = registry::gauge("afq_engine_device_buffers");
+                let g_bytes = registry::gauge("afq_engine_device_bytes");
                 let g_loaded = registry::gauge("afq_engine_executables");
                 while let Ok(req) = rx.recv() {
                     match req {
@@ -93,6 +102,7 @@ impl EngineHandle {
                             let r = engine.upload(&key, &data, &shape);
                             m_uploads.inc(1);
                             g_buffers.set(engine.cached_keys() as i64);
+                            g_bytes.set(engine.cached_bytes() as i64);
                             let _ = reply.send(r);
                         }
                         Request::Execute { artifact, args, reply } => {
@@ -119,6 +129,7 @@ impl EngineHandle {
                         Request::Evict { prefix, reply } => {
                             engine.evict(&prefix);
                             g_buffers.set(engine.cached_keys() as i64);
+                            g_bytes.set(engine.cached_bytes() as i64);
                             g_loaded.set(engine.loaded_count() as i64);
                             let _ = reply.send(());
                         }
@@ -126,7 +137,14 @@ impl EngineHandle {
                             let _ = reply.send(EngineStats {
                                 cached_buffers: engine.cached_keys(),
                                 executables: engine.loaded_count(),
+                                resident_bytes: engine.cached_bytes(),
                             });
+                        }
+                        Request::RefreshManifest { reply } => {
+                            let r = engine
+                                .refresh_manifest()
+                                .map(|()| engine.manifest().clone());
+                            let _ = reply.send(r);
                         }
                         Request::Shutdown => break,
                     }
@@ -144,6 +162,24 @@ impl EngineHandle {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// The boot-time manifest as a shared handle (cheap clone for callers
+    /// that need ownership, e.g. the router's hot-swap path).
+    pub(crate) fn manifest_arc(&self) -> Arc<Manifest> {
+        Arc::clone(&self.manifest)
+    }
+
+    /// Ask the engine thread to re-read manifest.json, returning the
+    /// refreshed manifest. `manifest()` keeps returning the boot view —
+    /// callers that need post-boot artifacts must thread the returned
+    /// manifest through explicitly (the router does, for hot-swaps).
+    pub fn refresh_manifest(&self) -> Result<Manifest, String> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::RefreshManifest { reply: rtx })
+            .map_err(|_| "engine thread gone")?;
+        rrx.recv().map_err(|_| "engine thread gone")?
     }
 
     pub fn upload(&self, key: &str, shape: &[usize], data: TensorData) -> Result<(), String> {

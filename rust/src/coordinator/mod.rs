@@ -74,21 +74,59 @@
 //!   countable per service.
 //! - **Engine residency**: the engine thread keeps
 //!   `afq_engine_{uploads,executions,execution_errors}_total` counters and
-//!   `afq_engine_{device_buffers,executables}` gauges current as it
-//!   processes ops; [`EngineStats`] remains the synchronous view.
+//!   `afq_engine_{device_buffers,executables,device_bytes}` gauges current
+//!   as it processes ops; [`EngineStats`] remains the synchronous view.
+//!
+//! Fleet-operations contracts (PR 10 — rollout, residency, compilation):
+//! - **Weighted rollout**: a per-model [`RolloutPolicy`]
+//!   ([`Router::set_rollout`]) splits [`Router::score_rollout`] traffic
+//!   deterministically by span hash; the canary share comes off the top
+//!   without reshuffling the stable arms. Canary → promote / rollback /
+//!   **auto-rollback** (p99 or error-rate regression past the
+//!   [`CanaryGuard`], judged against the live baseline stats) are all
+//!   logged and counted in `afq_rollout_transitions_total{action}`;
+//!   transitions re-point only *future* assignments.
+//! - **Device-residency budget**: with
+//!   `RouterConfig::device_budget_bytes` (env `AFQ_DEVICE_BUDGET_BYTES`)
+//!   set, a preparation reserves its weight bytes **before uploading**,
+//!   evicting least-recently-used idle tenants until it fits — the budget
+//!   never overshoots, mirroring the panel cache's evict-before-insert
+//!   contract. Evicted tenants re-prepare lazily; both flows are counted
+//!   (`evictions` / `repreparations` in [`RouterSnapshot`], plus
+//!   `afq_router_{evictions,repreparations}_total`).
+//! - **Background compilation**: with a [`CompileQueue`] enabled
+//!   ([`Router::enable_compile_queue`]), a heterogeneous plan on the fp
+//!   fallback gets its fused artifact built out of band (dedupe by shape
+//!   digest, failures logged + counted, never retried) and is
+//!   **hot-swapped** atomically: requests route to exactly one of
+//!   old/new, the old instance drains gracefully, and no request is
+//!   dropped or double-counted across the flip.
+//! - **Poison recovery**: router locks are acquired via a recovering
+//!   wrapper — a panicking lock holder (e.g. inside a preparation) never
+//!   turns later requests into panics; recoveries are counted in
+//!   `afq_router_lock_poisoned_total`.
+//! - **Shutdown vs prepare**: the shutting-down flag is set under the
+//!   same `services` lock as the drain snapshot, so a racing preparation
+//!   either lands before the drain (and is torn down with it) or fails
+//!   with an explicit "shutting down" error — never a stranded service.
 
 pub mod batcher;
+pub mod compile;
 pub mod engine_thread;
 pub mod metrics;
+pub mod rollout;
 pub mod router;
 pub mod service;
 pub mod trainer;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
+pub use compile::{default_worker, CompileJob, CompileQueue, CompileWorker};
 pub use engine_thread::{EngineHandle, EngineStats, EngineThread, OwnedArg};
 pub use metrics::{serving_path, CounterSnapshot, Counters, LatencyHistogram, ServiceMetrics};
+pub use rollout::{CanaryArm, CanaryGuard, RolloutAction, RolloutPolicy};
 pub use router::{
-    PlanRef, Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey, ServiceStat, StageStat,
+    PlanRef, RolloutStat, Router, RouterConfig, RouterSnapshot, ScoreRequest, ServiceKey,
+    ServiceStat, StageStat,
 };
 pub use service::{ModelService, QuantSpec, ServePlan};
 pub use trainer::{ensure_checkpoint, train, TrainConfig, TrainResult};

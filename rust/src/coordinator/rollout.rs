@@ -1,0 +1,414 @@
+//! Rollout policy: weighted traffic splitting between plan arms of one
+//! model, plus the canary → promote / rollback state machine.
+//!
+//! A [`RolloutPolicy`] is pure routing state — no device handles, no
+//! services — so every property the router relies on is testable without
+//! artifacts:
+//!
+//! - **Weights normalize.** Construction rejects empty arm lists and
+//!   non-finite / non-positive weights, then normalizes the weights to
+//!   sum to 1, so `assign` can treat them as a probability distribution.
+//! - **Assignment is deterministic and proportional.** `assign(span)`
+//!   hashes `(seed, span)` through SplitMix64 into `[0, 1)` and walks the
+//!   cumulative weights: the same `(seed, span)` always lands on the same
+//!   arm, and over many spans each arm receives its weight share in
+//!   expectation (spans are process-unique request IDs, so the hash
+//!   sequence is equidistributed). A canary claims its share
+//!   proportionally from each arm's interval, so it never moves a span
+//!   between stable arms — see `assign`.
+//! - **Transitions are legal from every state.** A policy is either
+//!   *stable* (no canary) or *canarying* (one canary arm holding a fixed
+//!   `share` of traffic off the top). `with_canary` is legal only from
+//!   stable, [`RolloutPolicy::promoted`] / [`RolloutPolicy::rolled_back`]
+//!   only from canarying — illegal transitions are errors, never silent
+//!   no-ops.
+//!
+//! The router drives the live half: it validates that every referenced
+//! plan digest is registered, counts every transition in
+//! `afq_rollout_transitions_total{action}`, and judges the canary against
+//! its [`CanaryGuard`] using live per-service latency/error snapshots
+//! (auto-rollback on breach). See `Router::set_rollout` and friends.
+
+use crate::coordinator::router::PlanRef;
+
+/// Health gate for a canary arm, judged against the weighted baseline
+/// arms once `min_requests` canary requests have completed.
+#[derive(Clone, Copy, Debug)]
+pub struct CanaryGuard {
+    /// Breach when canary p99 latency > `max_p99_ratio` × baseline p99.
+    pub max_p99_ratio: f64,
+    /// Breach when canary error rate > baseline rate + this (absolute).
+    pub max_error_rate_delta: f64,
+    /// Minimum completed canary requests before judging at all (too-small
+    /// samples make p99 meaningless).
+    pub min_requests: u64,
+}
+
+impl Default for CanaryGuard {
+    fn default() -> Self {
+        CanaryGuard { max_p99_ratio: 2.0, max_error_rate_delta: 0.05, min_requests: 32 }
+    }
+}
+
+/// The canary arm: a plan taking `share` of traffic off the top, judged
+/// by `guard`.
+#[derive(Clone, Debug)]
+pub struct CanaryArm {
+    pub plan: PlanRef,
+    /// Fraction of total traffic routed to the canary, in (0, 1).
+    pub share: f64,
+    pub guard: CanaryGuard,
+}
+
+/// A rollout transition, as logged and counted in
+/// `afq_rollout_transitions_total{action}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutAction {
+    /// A policy (re)installed without a canary.
+    Set,
+    /// A canary arm started taking traffic.
+    Canary,
+    /// Operator promote: the canary became the sole stable arm.
+    Promote,
+    /// Operator rollback: the canary was dropped, baseline unchanged.
+    Rollback,
+    /// Guard breach: the router rolled the canary back itself.
+    AutoRollback,
+}
+
+impl RolloutAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RolloutAction::Set => "set",
+            RolloutAction::Canary => "canary",
+            RolloutAction::Promote => "promote",
+            RolloutAction::Rollback => "rollback",
+            RolloutAction::AutoRollback => "auto-rollback",
+        }
+    }
+}
+
+/// Weighted traffic split over plan arms of one model, with an optional
+/// canary arm. See the module docs for the invariants.
+#[derive(Clone, Debug)]
+pub struct RolloutPolicy {
+    /// Stable arms, weights normalized to sum to 1.
+    arms: Vec<(PlanRef, f64)>,
+    canary: Option<CanaryArm>,
+    seed: u64,
+}
+
+impl RolloutPolicy {
+    /// A weighted policy over the given arms. Rejects an empty arm list,
+    /// duplicate plans, and non-finite or non-positive weights; weights
+    /// are normalized so callers can pass any positive scale (ratios,
+    /// percents, raw counts).
+    pub fn weighted(seed: u64, arms: Vec<(PlanRef, f64)>) -> Result<RolloutPolicy, String> {
+        if arms.is_empty() {
+            return Err("rollout policy needs at least one arm".into());
+        }
+        for (plan, w) in &arms {
+            if !w.is_finite() || *w <= 0.0 {
+                return Err(format!(
+                    "rollout arm {} has weight {w} — weights must be finite and > 0",
+                    plan.label()
+                ));
+            }
+        }
+        for i in 1..arms.len() {
+            if arms[..i].iter().any(|(p, _)| p == &arms[i].0) {
+                return Err(format!("rollout arm {} listed twice", arms[i].0.label()));
+            }
+        }
+        let total: f64 = arms.iter().map(|(_, w)| w).sum();
+        let arms = arms.into_iter().map(|(p, w)| (p, w / total)).collect();
+        Ok(RolloutPolicy { arms, canary: None, seed })
+    }
+
+    /// The degenerate all-traffic-to-one-plan policy.
+    pub fn single(seed: u64, plan: PlanRef) -> RolloutPolicy {
+        RolloutPolicy::weighted(seed, vec![(plan, 1.0)]).expect("one positive arm")
+    }
+
+    /// Start a canary: `plan` takes `share ∈ (0, 1)` of traffic off the
+    /// top, judged by `guard`. Legal only from the stable state (resolve
+    /// the current canary — promote or roll back — before starting
+    /// another) and only for a plan that is not already a stable arm.
+    pub fn with_canary(
+        mut self,
+        plan: PlanRef,
+        share: f64,
+        guard: CanaryGuard,
+    ) -> Result<RolloutPolicy, String> {
+        if self.canary.is_some() {
+            return Err("a canary is already running — promote or roll it back first".into());
+        }
+        if !(share > 0.0 && share < 1.0) || !share.is_finite() {
+            return Err(format!("canary share {share} must be in (0, 1)"));
+        }
+        if self.arms.iter().any(|(p, _)| p == &plan) {
+            return Err(format!(
+                "canary plan {} is already a stable arm of this policy",
+                plan.label()
+            ));
+        }
+        self.canary = Some(CanaryArm { plan, share, guard });
+        Ok(self)
+    }
+
+    /// Promote the canary: it becomes the sole stable arm (weight 1), the
+    /// old arms are dropped. Legal only while canarying.
+    pub fn promoted(&self) -> Result<RolloutPolicy, String> {
+        match &self.canary {
+            Some(c) => Ok(RolloutPolicy {
+                arms: vec![(c.plan.clone(), 1.0)],
+                canary: None,
+                seed: self.seed,
+            }),
+            None => Err("no canary to promote".into()),
+        }
+    }
+
+    /// Drop the canary, baseline arms unchanged. Legal only while
+    /// canarying.
+    pub fn rolled_back(&self) -> Result<RolloutPolicy, String> {
+        match &self.canary {
+            Some(_) => {
+                Ok(RolloutPolicy { arms: self.arms.clone(), canary: None, seed: self.seed })
+            }
+            None => Err("no canary to roll back".into()),
+        }
+    }
+
+    /// Deterministic weighted assignment: hash `(seed, span)` to `[0, 1)`
+    /// and walk the cumulative stable weights. A canary claims the leading
+    /// `share` fraction of **every** arm's interval — it takes exactly its
+    /// share of total traffic proportionally from each arm, and a span the
+    /// stable policy assigns to arm X either stays on X or goes to the
+    /// canary, never to another stable arm (rescaling the remainder
+    /// instead would shift the arm boundaries and reshuffle spans between
+    /// stable arms every time a canary starts or resolves).
+    pub fn assign(&self, span: u64) -> &PlanRef {
+        let u = unit(self.seed, span);
+        let last = self.arms.len() - 1;
+        let mut lo = 0.0;
+        for (i, (plan, w)) in self.arms.iter().enumerate() {
+            // Cumulative rounding can leave the total at 1 - ε; the tail
+            // belongs to the last arm.
+            if u < lo + w || i == last {
+                if let Some(c) = &self.canary {
+                    if u - lo < c.share * w {
+                        return &c.plan;
+                    }
+                }
+                return plan;
+            }
+            lo += w;
+        }
+        unreachable!("arms are non-empty")
+    }
+
+    /// Stable arms with normalized weights.
+    pub fn arms(&self) -> &[(PlanRef, f64)] {
+        &self.arms
+    }
+
+    pub fn canary(&self) -> Option<&CanaryArm> {
+        self.canary.as_ref()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Every plan the policy can route to (stable arms + canary).
+    pub fn referenced_plans(&self) -> Vec<&PlanRef> {
+        let mut v: Vec<&PlanRef> = self.arms.iter().map(|(p, _)| p).collect();
+        if let Some(c) = &self.canary {
+            v.push(&c.plan);
+        }
+        v
+    }
+}
+
+/// SplitMix64 finalizer — a full-avalanche mix, so consecutive span IDs
+/// land uniformly in `[0, 1)`.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash `(seed, span)` to the unit interval using the top 53 bits (the
+/// full f64 mantissa), so assignment granularity is far below any
+/// realistic weight.
+fn unit(seed: u64, span: u64) -> f64 {
+    (splitmix64(seed ^ splitmix64(span)) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantSpec;
+
+    fn arm(family: &str, b: usize) -> PlanRef {
+        PlanRef::Uniform(QuantSpec { family: family.into(), block_size: b })
+    }
+
+    #[test]
+    fn weights_normalize_and_degenerates_are_rejected() {
+        let p = RolloutPolicy::weighted(1, vec![(arm("nf4", 64), 3.0), (arm("af4", 64), 1.0)])
+            .unwrap();
+        let total: f64 = p.arms().iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-12, "weights must sum to 1, got {total}");
+        assert!((p.arms()[0].1 - 0.75).abs() < 1e-12);
+        assert!((p.arms()[1].1 - 0.25).abs() < 1e-12);
+
+        assert!(RolloutPolicy::weighted(1, vec![]).is_err(), "empty arm list");
+        assert!(
+            RolloutPolicy::weighted(1, vec![(arm("nf4", 64), 0.0)]).is_err(),
+            "zero weight"
+        );
+        assert!(
+            RolloutPolicy::weighted(1, vec![(arm("nf4", 64), -1.0)]).is_err(),
+            "negative weight"
+        );
+        assert!(
+            RolloutPolicy::weighted(1, vec![(arm("nf4", 64), f64::NAN)]).is_err(),
+            "NaN weight"
+        );
+        assert!(
+            RolloutPolicy::weighted(1, vec![(arm("nf4", 64), 1.0), (arm("nf4", 64), 1.0)])
+                .is_err(),
+            "duplicate arm"
+        );
+    }
+
+    #[test]
+    fn assignment_is_deterministic_for_a_fixed_seed() {
+        let mk = || {
+            RolloutPolicy::weighted(42, vec![(arm("nf4", 64), 0.6), (arm("af4", 256), 0.4)])
+                .unwrap()
+                .with_canary(arm("af4", 1024), 0.1, CanaryGuard::default())
+                .unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        for span in 0..10_000u64 {
+            assert_eq!(a.assign(span), b.assign(span), "span {span}");
+        }
+        // …and a different seed genuinely reshuffles (not all-equal).
+        let c = RolloutPolicy::weighted(
+            43,
+            vec![(arm("nf4", 64), 0.6), (arm("af4", 256), 0.4)],
+        )
+        .unwrap();
+        let diff = (0..10_000u64).filter(|&s| a.assign(s) != c.assign(s)).count();
+        assert!(diff > 1_000, "different seeds must disagree on many spans (got {diff})");
+    }
+
+    #[test]
+    fn assignment_is_proportional_in_expectation() {
+        let canary = arm("af4", 4096);
+        let p = RolloutPolicy::weighted(
+            7,
+            vec![(arm("nf4", 64), 0.5), (arm("af4", 64), 0.3), (arm("nf4", 1024), 0.2)],
+        )
+        .unwrap()
+        .with_canary(canary.clone(), 0.2, CanaryGuard::default())
+        .unwrap();
+        let n = 100_000u64;
+        let mut counts: std::collections::HashMap<String, u64> = Default::default();
+        for span in 0..n {
+            *counts.entry(p.assign(span).label()).or_default() += 1;
+        }
+        // Canary holds its share off the top; stable arms split the rest.
+        let expect = |share: f64| share * n as f64;
+        let tol = 0.01 * n as f64; // ±1% absolute (SplitMix is equidistributed)
+        let cases = [
+            (canary.label(), expect(0.2)),
+            (arm("nf4", 64).label(), expect(0.8 * 0.5)),
+            (arm("af4", 64).label(), expect(0.8 * 0.3)),
+            (arm("nf4", 1024).label(), expect(0.8 * 0.2)),
+        ];
+        for (label, want) in cases {
+            let got = counts[&label] as f64;
+            assert!(
+                (got - want).abs() < tol,
+                "{label}: got {got}, want {want} ± {tol}"
+            );
+        }
+    }
+
+    #[test]
+    fn transitions_are_legal_from_every_state() {
+        let stable =
+            RolloutPolicy::weighted(1, vec![(arm("nf4", 64), 1.0)]).unwrap();
+        // Stable: promote/rollback illegal, canary legal.
+        assert!(stable.promoted().is_err());
+        assert!(stable.rolled_back().is_err());
+        let canarying = stable
+            .clone()
+            .with_canary(arm("af4", 64), 0.25, CanaryGuard::default())
+            .unwrap();
+        // Canarying: a second canary illegal, promote and rollback legal.
+        assert!(canarying
+            .clone()
+            .with_canary(arm("af4", 256), 0.1, CanaryGuard::default())
+            .is_err());
+        let promoted = canarying.promoted().unwrap();
+        assert_eq!(promoted.arms().len(), 1);
+        assert_eq!(promoted.arms()[0].0, arm("af4", 64), "canary becomes the sole arm");
+        assert!((promoted.arms()[0].1 - 1.0).abs() < 1e-12);
+        assert!(promoted.canary().is_none());
+        let rolled = canarying.rolled_back().unwrap();
+        assert_eq!(rolled.arms(), stable.arms(), "rollback restores the baseline");
+        assert!(rolled.canary().is_none());
+        // Both resolutions land back in stable: transitions legal again.
+        assert!(promoted.promoted().is_err());
+        assert!(rolled.rolled_back().is_err());
+        // The canary cannot duplicate a stable arm.
+        assert!(stable
+            .clone()
+            .with_canary(arm("nf4", 64), 0.1, CanaryGuard::default())
+            .is_err());
+        // Share bounds.
+        for share in [0.0, 1.0, -0.5, f64::NAN] {
+            assert!(
+                stable
+                    .clone()
+                    .with_canary(arm("af4", 64), share, CanaryGuard::default())
+                    .is_err(),
+                "share {share}"
+            );
+        }
+    }
+
+    #[test]
+    fn canary_share_comes_off_the_top_without_reshuffling_stable_arms() {
+        // Resolving a canary must not move traffic BETWEEN the stable
+        // arms: spans the stable-only policy assigns to arm X either stay
+        // on X or go to the canary — never to another stable arm.
+        let stable = RolloutPolicy::weighted(
+            11,
+            vec![(arm("nf4", 64), 0.7), (arm("af4", 64), 0.3)],
+        )
+        .unwrap();
+        let canarying = stable
+            .clone()
+            .with_canary(arm("af4", 1024), 0.15, CanaryGuard::default())
+            .unwrap();
+        let canary_label = arm("af4", 1024).label();
+        for span in 0..20_000u64 {
+            let with = canarying.assign(span).label();
+            if with != canary_label {
+                assert_eq!(
+                    with,
+                    stable.assign(span).label(),
+                    "span {span}: canary must only take traffic off the top"
+                );
+            }
+        }
+    }
+}

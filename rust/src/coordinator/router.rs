@@ -30,19 +30,76 @@
 //! Shutdown contract: [`Router::shutdown`] (or drop) first stops every
 //! batcher — each one flushes its in-flight batch and drains its queue
 //! through the engine — and only then stops the engine thread, so draining
-//! work never races device teardown.
+//! work never races device teardown. The drain and a shutting-down flag
+//! are set under one `services` lock, so a preparation racing shutdown
+//! either lands before the drain snapshot (and is torn down with it) or
+//! fails with an explicit "shutting down" error — never a stranded
+//! batcher.
+//!
+//! On top of plain routing sit the **fleet operations** (PR 10):
+//!
+//! - **Weighted rollout** ([`Router::set_rollout`]): a per-model
+//!   [`RolloutPolicy`] deterministically splits traffic between plan arms
+//!   ([`Router::score_rollout`]), with canary → promote / rollback
+//!   transitions — including **auto-rollback** when the canary's p99 or
+//!   error rate regresses past its
+//!   [`crate::coordinator::rollout::CanaryGuard`] relative to the
+//!   baseline arms' live [`StageStat`]s. Every transition is logged and
+//!   counted in `afq_rollout_transitions_total{action}`; transitions only
+//!   re-point *future* assignments — in-flight requests always finish on
+//!   the service that admitted them.
+//! - **Device-residency budget** (`RouterConfig::device_budget_bytes`,
+//!   env `AFQ_DEVICE_BUDGET_BYTES`): preparing a service first reserves
+//!   its weight bytes against the budget, evicting least-recently-used
+//!   idle services (their generation-tagged prefixes, via
+//!   `Engine::evict`) until the reservation fits — **evict-before-upload,
+//!   the budget never overshoots**. Evicted tenants re-prepare lazily on
+//!   their next request; both sides are counted
+//!   (`evictions`/`repreparations` in [`RouterSnapshot`]).
+//! - **Background compilation** ([`Router::enable_compile_queue`]): a
+//!   heterogeneous plan whose fused artifact was never AOT-compiled
+//!   serves reconstructed-fp and submits a [`crate::coordinator::compile::CompileJob`];
+//!   when the artifact lands, the router refreshes the manifest and
+//!   **hot-swaps** the service onto the fused path — the slot flip is
+//!   atomic under the services lock, the old instance drains gracefully,
+//!   and `ServiceStat::artifact` flips observably with zero dropped or
+//!   miscounted requests.
+//!
+//! Robustness: every router lock is taken through [`lock_sane`], which
+//! recovers from mutex poisoning (a panicking holder — e.g. a panic
+//! inside a preparation — must not turn every later request into a
+//! panic) and counts recoveries in `afq_router_lock_poisoned_total`.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, BatcherHandle, ScoreBackend, ScoreResponse};
+use crate::coordinator::compile::{CompileJob, CompileQueue, CompileWorker};
 use crate::coordinator::engine_thread::{EngineHandle, EngineThread};
+use crate::coordinator::rollout::{RolloutAction, RolloutPolicy};
 use crate::coordinator::service::{ModelService, QuantSpec, ServePlan};
 use crate::model::ParamSet;
 use crate::plan::QuantPlan;
 use crate::runtime::Manifest;
 use crate::util::json::Json;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
+
+/// Lock a router mutex, recovering from poisoning instead of propagating
+/// it. A panic inside a lock holder (a preparation, a test hook, a buggy
+/// metric formatter) poisons the mutex; without recovery every later
+/// request on that lock would panic too — one bad request would take the
+/// whole fleet down. All router state guarded this way holds only
+/// `Arc`-shared slots/registrations that are valid at every lock-release
+/// point (inserts and removes are atomic under the guard), so the data is
+/// safe to keep using. Recoveries are counted in
+/// `afq_router_lock_poisoned_total` and logged.
+fn lock_sane<'a, T>(m: &'a Mutex<T>, what: &'static str) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        crate::obs::registry::counter("afq_router_lock_poisoned_total").inc(1);
+        crate::log_warn!("router: recovered poisoned {what} lock");
+        poisoned.into_inner()
+    })
+}
 
 /// How a service key names its quantization configuration. Uniform specs
 /// are the degenerate one-entry plan; full [`QuantPlan`]s are identified
@@ -141,11 +198,27 @@ pub struct RouterConfig {
     pub service_queue: usize,
     /// Router-wide queue quota (sum of queued requests across services).
     pub global_queue: usize,
+    /// Byte budget over engine-resident weight prefixes (`None` =
+    /// unlimited). When preparing a service would overshoot, the router
+    /// evicts least-recently-used idle services first — the budget is
+    /// enforced *before* any bytes move, mirroring the panel cache's
+    /// evict-before-insert contract. Defaults from
+    /// `AFQ_DEVICE_BUDGET_BYTES` when set to a positive integer.
+    pub device_budget_bytes: Option<u64>,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { max_wait: Duration::from_millis(20), service_queue: 256, global_queue: 2048 }
+        let device_budget_bytes = std::env::var("AFQ_DEVICE_BUDGET_BYTES")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|&b| b > 0);
+        Self {
+            max_wait: Duration::from_millis(20),
+            service_queue: 256,
+            global_queue: 2048,
+            device_budget_bytes,
+        }
     }
 }
 
@@ -154,18 +227,84 @@ struct ServiceEntry {
     service: Arc<ModelService>,
     handle: BatcherHandle,
     batcher: Mutex<Batcher>,
+    /// Residency ledger shared with the owning router, so teardown can
+    /// return this instance's byte reservation no matter which path —
+    /// release, re-registration, budget eviction, shutdown, or the Drop
+    /// safety net — got there first.
+    ledger: Arc<Mutex<Residency>>,
+    torn: AtomicBool,
+}
+
+impl ServiceEntry {
+    /// Drain the batcher (graceful: flushes in-flight batches, fails —
+    /// never drops — queued requests), evict this instance's
+    /// generation-tagged device buffers + panel-cache entries, and return
+    /// its residency reservation. Idempotent: exactly one caller wins the
+    /// `torn` flag, so racing teardown paths (explicit release vs budget
+    /// eviction vs shutdown vs Drop) never double-drain.
+    fn teardown(&self) {
+        if self.torn.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        lock_sane(&self.batcher, "batcher").stop();
+        self.service.release();
+        Residency::remove(&self.ledger, self.service.weight_prefix());
+    }
 }
 
 impl Drop for ServiceEntry {
     /// Safety net for entries orphaned by a racing release/re-registration
     /// (their slot was removed while preparation was still in flight, so
-    /// explicit teardown never saw them): drain the batcher and evict this
-    /// instance's generation-tagged buffers. Idempotent with the explicit
+    /// explicit teardown never saw them). Idempotent with the explicit
     /// teardown path; eviction on a stopped engine is a no-op.
     fn drop(&mut self) {
-        self.batcher.lock().unwrap().stop();
-        self.service.release();
+        self.teardown();
     }
+}
+
+/// One resident tenant in the device-budget ledger.
+struct Resident {
+    key: ServiceKey,
+    bytes: u64,
+    /// Logical LRU clock value of the last touch (reservation or routed
+    /// request).
+    last_used: u64,
+}
+
+/// The device-residency ledger: who holds how many engine-resident weight
+/// bytes, in LRU order. Bytes are **reserved here before they are
+/// uploaded** (evict-before-upload) and returned on teardown, so
+/// `bytes` never exceeds the configured budget even mid-preparation.
+#[derive(Default)]
+struct Residency {
+    /// Logical LRU clock (bumped on every reservation/touch).
+    tick: u64,
+    /// Reserved bytes across all resident prefixes.
+    bytes: u64,
+    /// Generation-tagged weight prefix → tenant.
+    resident: HashMap<String, Resident>,
+    /// Keys evicted by the budget and not yet re-prepared — re-preparation
+    /// accounting pops from here.
+    evicted: HashSet<ServiceKey>,
+}
+
+impl Residency {
+    /// Return a prefix's reservation (idempotent; unknown prefixes are a
+    /// no-op).
+    fn remove(ledger: &Mutex<Residency>, prefix: &str) {
+        let mut led = lock_sane(ledger, "ledger");
+        if let Some(r) = led.resident.remove(prefix) {
+            led.bytes = led.bytes.saturating_sub(r.bytes);
+        }
+    }
+}
+
+/// Per-model rollout state: the policy plus how many canary-assigned
+/// requests have completed since the canary started (the guard's
+/// minimum-sample gate).
+struct RolloutState {
+    policy: RolloutPolicy,
+    canary_seen: u64,
 }
 
 /// A lazily-prepared registry slot. The map lock is held only to fetch or
@@ -185,6 +324,28 @@ pub struct Router {
     plans: Mutex<HashMap<String, Arc<QuantPlan>>>,
     services: Mutex<HashMap<ServiceKey, Slot>>,
     global_queued: Arc<AtomicUsize>,
+    /// Per-model rollout policies ([`Router::set_rollout`]).
+    rollouts: Mutex<HashMap<String, RolloutState>>,
+    /// Device-residency ledger (shared with every [`ServiceEntry`] so
+    /// teardown returns reservations on any path).
+    ledger: Arc<Mutex<Residency>>,
+    evictions: AtomicU64,
+    repreparations: AtomicU64,
+    /// Set under the `services` lock by shutdown, checked under the same
+    /// lock by registration/preparation — the two sides can never miss
+    /// each other (the shutdown/prepare race fix).
+    shutting_down: AtomicBool,
+    artifacts_dir: String,
+    /// Background artifact compiler ([`Router::enable_compile_queue`]).
+    compiler: Mutex<Option<Arc<CompileQueue>>>,
+    /// Finished-compile flag shared with the queue's worker: the request
+    /// hot path checks one relaxed load, and only drains outcomes (locks,
+    /// manifest refresh, hot-swap) when a build actually completed.
+    compile_pending: Arc<AtomicUsize>,
+    /// Manifest re-read after a background compile; `None` until the
+    /// first refresh. Preparations resolve against this when present, so
+    /// post-boot artifacts become routable without restarting the engine.
+    fresh_manifest: Mutex<Option<Arc<Manifest>>>,
 }
 
 impl Router {
@@ -203,6 +364,15 @@ impl Router {
             plans: Mutex::new(HashMap::new()),
             services: Mutex::new(HashMap::new()),
             global_queued: Arc::new(AtomicUsize::new(0)),
+            rollouts: Mutex::new(HashMap::new()),
+            ledger: Arc::new(Mutex::new(Residency::default())),
+            evictions: AtomicU64::new(0),
+            repreparations: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            artifacts_dir: artifacts_dir.to_string(),
+            compiler: Mutex::new(None),
+            compile_pending: Arc::new(AtomicUsize::new(0)),
+            fresh_manifest: Mutex::new(None),
         })
     }
 
@@ -224,12 +394,15 @@ impl Router {
     /// old weights. Returns the shared params for callers that keep using
     /// them host-side.
     pub fn register_model(&self, model: &str, params: ParamSet) -> Result<Arc<ParamSet>, String> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(format!("router is shutting down; rejecting registration of {model:?}"));
+        }
         let meta = self.eng.manifest().config(model)?;
         params.validate(meta)?;
         let params = Arc::new(params);
-        self.models.lock().unwrap().insert(model.to_string(), Arc::clone(&params));
+        lock_sane(&self.models, "models").insert(model.to_string(), Arc::clone(&params));
         let stale: Vec<Slot> = {
-            let mut services = self.services.lock().unwrap();
+            let mut services = lock_sane(&self.services, "services");
             let keys: Vec<ServiceKey> =
                 services.keys().filter(|k| k.model == model).cloned().collect();
             keys.iter().filter_map(|k| services.remove(k)).collect()
@@ -242,7 +415,7 @@ impl Router {
 
     /// Models currently registered (sorted).
     pub fn registered_models(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = lock_sane(&self.models, "models").keys().cloned().collect();
         v.sort();
         v
     }
@@ -259,18 +432,288 @@ impl Router {
     /// register cleanly and only fail (or worse, serve nothing) at
     /// prepare time.
     pub fn register_plan(&self, plan: QuantPlan) -> Result<ServiceKey, String> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err("router is shutting down; rejecting plan registration".into());
+        }
         plan.validate_content()?;
         let key = ServiceKey::planned(&plan);
-        self.plans.lock().unwrap().insert(plan.digest().to_string(), Arc::new(plan));
+        let plan = Arc::new(plan);
+        lock_sane(&self.plans, "plans").insert(plan.digest().to_string(), Arc::clone(&plan));
+        // An uncompiled heterogeneous shape starts its background build
+        // now (if the compile queue is enabled), so the fused artifact is
+        // often ready before — or shortly after — the first request lands
+        // on the fallback.
+        self.maybe_enqueue_compile(&key, &plan);
         Ok(key)
     }
 
     /// Digests of currently registered plans (sorted).
     pub fn registered_plans(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.plans.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = lock_sane(&self.plans, "plans").keys().cloned().collect();
         v.sort();
         v
     }
+
+    // ------------------------------------------------------------------
+    // Weighted rollout
+    // ------------------------------------------------------------------
+
+    /// Install (or replace) the rollout policy for `model`. Every plan
+    /// the policy references must already be registered — a policy that
+    /// routes traffic to a plan the router cannot prepare is rejected
+    /// here, not discovered per-request. The transition is logged and
+    /// counted (`action="canary"` when the policy starts with a canary,
+    /// `"set"` otherwise).
+    pub fn set_rollout(&self, model: &str, policy: RolloutPolicy) -> Result<(), String> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err("router is shutting down; rejecting rollout update".into());
+        }
+        if !lock_sane(&self.models, "models").contains_key(model) {
+            return Err(format!(
+                "model {model:?} not registered with the router (registered: {:?})",
+                self.registered_models()
+            ));
+        }
+        {
+            let plans = lock_sane(&self.plans, "plans");
+            for p in policy.referenced_plans() {
+                if let PlanRef::Digest(d) = p {
+                    if !plans.contains_key(d) {
+                        return Err(format!(
+                            "rollout for {model:?} references unregistered plan {d:?} \
+                             (see register_plan)"
+                        ));
+                    }
+                }
+            }
+        }
+        let action =
+            if policy.canary().is_some() { RolloutAction::Canary } else { RolloutAction::Set };
+        lock_sane(&self.rollouts, "rollouts")
+            .insert(model.to_string(), RolloutState { policy, canary_seen: 0 });
+        self.note_transition(model, action, None);
+        Ok(())
+    }
+
+    /// The current rollout policy for `model`, if one is installed.
+    pub fn rollout_of(&self, model: &str) -> Option<RolloutPolicy> {
+        lock_sane(&self.rollouts, "rollouts").get(model).map(|s| s.policy.clone())
+    }
+
+    /// Deterministic weighted assignment: which service key the policy
+    /// routes `span` to. Errors when no policy is installed for `model`.
+    pub fn rollout_assign(&self, model: &str, span: u64) -> Result<ServiceKey, String> {
+        self.assign_for(model, span).map(|(key, _)| key)
+    }
+
+    fn assign_for(&self, model: &str, span: u64) -> Result<(ServiceKey, bool), String> {
+        let rollouts = lock_sane(&self.rollouts, "rollouts");
+        let state = rollouts.get(model).ok_or_else(|| {
+            format!("no rollout policy installed for model {model:?} (see set_rollout)")
+        })?;
+        let plan = state.policy.assign(span);
+        let is_canary = state.policy.canary().map(|c| &c.plan == plan).unwrap_or(false);
+        Ok((ServiceKey { model: model.to_string(), plan: plan.clone() }, is_canary))
+    }
+
+    /// Score one sequence through `model`'s rollout policy: assign a
+    /// service by span hash, route through its batcher, and — when the
+    /// request was canary-assigned — feed the canary health check.
+    /// Returns the assigned key alongside the response so callers can
+    /// attribute results to arms.
+    pub fn score_rollout(
+        &self,
+        model: &str,
+        ids: Vec<i32>,
+        targets: Vec<i32>,
+    ) -> Result<(ServiceKey, ScoreResponse), String> {
+        let span = crate::obs::trace::next_span_id();
+        let (key, is_canary) = self.assign_for(model, span)?;
+        let res = self.score(ScoreRequest { key: key.clone(), span, ids, targets });
+        if is_canary {
+            self.note_canary(model);
+        }
+        res.map(|r| (key, r))
+    }
+
+    /// Operator promote: the canary becomes the sole arm. Future
+    /// assignments re-point; in-flight requests finish where they are.
+    pub fn promote(&self, model: &str) -> Result<(), String> {
+        self.transition(model, RolloutAction::Promote)
+    }
+
+    /// Operator rollback: the canary is dropped, baseline unchanged.
+    pub fn rollback(&self, model: &str) -> Result<(), String> {
+        self.transition(model, RolloutAction::Rollback)
+    }
+
+    fn transition(&self, model: &str, action: RolloutAction) -> Result<(), String> {
+        {
+            let mut rollouts = lock_sane(&self.rollouts, "rollouts");
+            let state = rollouts.get_mut(model).ok_or_else(|| {
+                format!("no rollout policy installed for model {model:?} (see set_rollout)")
+            })?;
+            state.policy = match action {
+                RolloutAction::Promote => state.policy.promoted()?,
+                RolloutAction::Rollback | RolloutAction::AutoRollback => {
+                    state.policy.rolled_back()?
+                }
+                RolloutAction::Set | RolloutAction::Canary => {
+                    unreachable!("installs go through set_rollout")
+                }
+            };
+            state.canary_seen = 0;
+        }
+        self.note_transition(model, action, None);
+        Ok(())
+    }
+
+    fn note_transition(&self, model: &str, action: RolloutAction, why: Option<&str>) {
+        crate::obs::registry::counter(&format!(
+            "afq_rollout_transitions_total{{action={:?}}}",
+            action.label()
+        ))
+        .inc(1);
+        match why {
+            Some(why) => {
+                crate::log_warn!("router: rollout {} for {model}: {why}", action.label())
+            }
+            None => crate::log_info!("router: rollout {} for {model}", action.label()),
+        }
+    }
+
+    /// A canary-assigned request completed: bump the sample counter and
+    /// judge the canary once the guard's minimum sample is in.
+    fn note_canary(&self, model: &str) {
+        let due = {
+            let mut rollouts = lock_sane(&self.rollouts, "rollouts");
+            match rollouts.get_mut(model) {
+                Some(state) if state.policy.canary().is_some() => {
+                    state.canary_seen += 1;
+                    state.canary_seen >= state.policy.canary().expect("checked").guard.min_requests
+                }
+                _ => false,
+            }
+        };
+        if due {
+            let _ = self.evaluate_canary(model);
+        }
+    }
+
+    /// Judge `model`'s canary against its baseline arms using the live
+    /// per-service latency/error snapshots: **auto-rollback** (logged,
+    /// counted with `action="auto-rollback"`) when the canary's p99
+    /// exceeds `max_p99_ratio` × the weighted baseline p99, or its error
+    /// rate exceeds the baseline rate by more than
+    /// `max_error_rate_delta`. Returns the action taken, if any. Public
+    /// so operators (CLI/examples) can force an immediate judgement; the
+    /// router also calls it itself once the guard's `min_requests`
+    /// canary-assigned requests have completed.
+    pub fn evaluate_canary(&self, model: &str) -> Result<Option<RolloutAction>, String> {
+        let (policy, guard) = {
+            let rollouts = lock_sane(&self.rollouts, "rollouts");
+            let state = rollouts.get(model).ok_or_else(|| {
+                format!("no rollout policy installed for model {model:?} (see set_rollout)")
+            })?;
+            match state.policy.canary() {
+                Some(c) => (state.policy.clone(), c.guard),
+                None => return Ok(None),
+            }
+        };
+        let canary = policy.canary().expect("checked above");
+        let canary_key =
+            ServiceKey { model: model.to_string(), plan: canary.plan.clone() };
+        let Some((c_p99, c_err, c_n)) = self.service_health(&canary_key) else {
+            return Ok(None); // canary cold: nothing to judge yet
+        };
+        if c_n < guard.min_requests {
+            return Ok(None);
+        }
+        // Weighted baseline over the prepared stable arms.
+        let mut base_p99 = 0.0f64;
+        let mut base_err = 0.0f64;
+        let mut base_w = 0.0f64;
+        for (plan, w) in policy.arms() {
+            let key = ServiceKey { model: model.to_string(), plan: plan.clone() };
+            if let Some((p99, err, n)) = self.service_health(&key) {
+                if n > 0 {
+                    base_p99 += w * p99;
+                    base_err += w * err;
+                    base_w += w;
+                }
+            }
+        }
+        if base_w <= 0.0 {
+            return Ok(None); // no baseline evidence: don't judge blind
+        }
+        base_p99 /= base_w;
+        base_err /= base_w;
+        let p99_breach = base_p99 > 0.0 && c_p99 > guard.max_p99_ratio * base_p99;
+        let err_breach = c_err > base_err + guard.max_error_rate_delta;
+        if !(p99_breach || err_breach) {
+            return Ok(None);
+        }
+        let why = format!(
+            "canary {} breached its guard: p99 {c_p99:.0}µs vs baseline {base_p99:.0}µs \
+             (max ratio {}), error rate {c_err:.4} vs baseline {base_err:.4} \
+             (max delta {})",
+            canary.plan.label(),
+            guard.max_p99_ratio,
+            guard.max_error_rate_delta
+        );
+        {
+            let mut rollouts = lock_sane(&self.rollouts, "rollouts");
+            if let Some(state) = rollouts.get_mut(model) {
+                match state.policy.rolled_back() {
+                    Ok(p) => {
+                        state.policy = p;
+                        state.canary_seen = 0;
+                    }
+                    // Someone promoted/rolled back between our snapshot
+                    // and now: nothing left to do.
+                    Err(_) => return Ok(None),
+                }
+            } else {
+                return Ok(None);
+            }
+        }
+        self.note_transition(model, RolloutAction::AutoRollback, Some(&why));
+        Ok(Some(RolloutAction::AutoRollback))
+    }
+
+    /// (p99 µs, error rate, completed requests) for a prepared service —
+    /// `None` when the service is cold or mid-preparation. p99 comes from
+    /// the end-to-end stage histogram when the batcher path has traffic,
+    /// falling back to the raw batch-latency histogram (the score_batch
+    /// fast path bypasses the batcher).
+    fn service_health(&self, key: &ServiceKey) -> Option<(f64, f64, u64)> {
+        let entry = self.peek_entry(key)?;
+        let m = &entry.service.metrics;
+        let c = m.counters.snapshot();
+        let completed = c.requests + c.errors;
+        let p99 = if m.e2e.count() > 0 {
+            m.e2e.quantile(0.99).as_micros() as f64
+        } else {
+            entry.service.latency.quantile(0.99).as_micros() as f64
+        };
+        let err_rate =
+            if completed > 0 { c.errors as f64 / completed as f64 } else { 0.0 };
+        Some((p99, err_rate, completed))
+    }
+
+    /// A prepared entry, without preparing cold ones (rollout health
+    /// checks and hot-swap must never trigger preparation themselves).
+    fn peek_entry(&self, key: &ServiceKey) -> Option<Arc<ServiceEntry>> {
+        let slot = lock_sane(&self.services, "services").get(key).cloned()?;
+        match slot.get() {
+            Some(Ok(entry)) => Some(Arc::clone(entry)),
+            _ => None,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Scoring
+    // ------------------------------------------------------------------
 
     /// Score one sequence through the keyed service's dynamic batcher.
     /// Lazily prepares the service on first use; fails fast under
@@ -324,7 +767,7 @@ impl Router {
 
     /// Drain and evict one service. Returns true if it had been prepared.
     pub fn release(&self, key: &ServiceKey) -> bool {
-        let slot = self.services.lock().unwrap().remove(key);
+        let slot = lock_sane(&self.services, "services").remove(key);
         match slot {
             Some(slot) => {
                 let had = matches!(slot.get(), Some(Ok(_)));
@@ -337,9 +780,7 @@ impl Router {
 
     /// Number of currently prepared (device-resident) services.
     pub fn service_count(&self) -> usize {
-        self.services
-            .lock()
-            .unwrap()
+        lock_sane(&self.services, "services")
             .values()
             .filter(|s| matches!(s.get(), Some(Ok(_))))
             .count()
@@ -354,7 +795,7 @@ impl Router {
     /// residency stats.
     pub fn snapshot(&self) -> RouterSnapshot {
         let entries: Vec<(ServiceKey, Arc<ServiceEntry>)> = {
-            let services = self.services.lock().unwrap();
+            let services = lock_sane(&self.services, "services");
             services
                 .iter()
                 .filter_map(|(k, s)| {
@@ -374,6 +815,7 @@ impl Router {
                     key: key.to_string(),
                     artifact: e.service.artifact().to_string(),
                     serving_path: e.service.path(),
+                    device_bytes: e.service.device_bytes(),
                     requests: c.requests,
                     batches: c.batches,
                     tokens: c.tokens,
@@ -398,13 +840,34 @@ impl Router {
             .collect();
         stats.sort_by(|a, b| a.key.cmp(&b.key));
         let estats = self.eng.stats();
+        let mut rollouts: Vec<RolloutStat> = lock_sane(&self.rollouts, "rollouts")
+            .iter()
+            .map(|(model, state)| RolloutStat {
+                model: model.clone(),
+                arms: state
+                    .policy
+                    .arms()
+                    .iter()
+                    .map(|(p, w)| (p.label(), *w))
+                    .collect(),
+                canary: state.policy.canary().map(|c| c.plan.label()),
+                canary_share: state.policy.canary().map(|c| c.share).unwrap_or(0.0),
+                canary_requests: state.canary_seen,
+            })
+            .collect();
+        rollouts.sort_by(|a, b| a.model.cmp(&b.model));
         RouterSnapshot {
             services: stats,
             queued: self.queued(),
             device_buffers: estats.cached_buffers,
             executables: estats.executables,
+            device_bytes: estats.resident_bytes,
+            device_budget: self.cfg.device_budget_bytes.unwrap_or(0),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            repreparations: self.repreparations.load(Ordering::Relaxed),
             panelcache_bytes: crate::quant::panelcache::bytes_in_use(),
             models: self.registered_models(),
+            rollouts,
         }
     }
 
@@ -416,18 +879,45 @@ impl Router {
     }
 
     fn entry(&self, key: &ServiceKey) -> Result<Arc<ServiceEntry>, String> {
+        // Piggyback on request traffic: if a background compile finished,
+        // hot-swap before routing (one relaxed load when nothing did).
+        if self.compile_pending.load(Ordering::Relaxed) > 0 {
+            self.poll_compiled();
+        }
         let slot: Slot = {
-            let mut map = self.services.lock().unwrap();
+            let mut map = lock_sane(&self.services, "services");
+            // Checked under the same lock shutdown holds for its drain:
+            // either this insert lands before the drain snapshot (and is
+            // torn down with it) or it is refused here — never a service
+            // stranded past shutdown.
+            if self.shutting_down.load(Ordering::SeqCst) {
+                return Err(format!("router is shutting down; rejecting request for {key}"));
+            }
+            #[cfg(test)]
+            test_hooks::maybe_panic_holding_services_lock();
             Arc::clone(map.entry(key.clone()).or_insert_with(|| Arc::new(OnceLock::new())))
         };
         let res = slot.get_or_init(|| self.prepare_entry(key));
         match res {
-            Ok(entry) => Ok(Arc::clone(entry)),
+            Ok(entry) => {
+                // A prepare can complete concurrently with shutdown's drain
+                // (the slow path runs outside the services lock). Re-check:
+                // if shutdown ran meanwhile, this entry either was in the
+                // drain snapshot (torn down there; `torn` makes our extra
+                // teardown a no-op) or raced past it — tear it down here so
+                // nothing outlives shutdown.
+                if self.shutting_down.load(Ordering::SeqCst) {
+                    entry.teardown();
+                    return Err(format!("router is shutting down; rejecting request for {key}"));
+                }
+                self.touch(entry.service.weight_prefix());
+                Ok(Arc::clone(entry))
+            }
             Err(e) => {
                 // Don't cache failures: drop the slot (if it is still ours)
                 // so a later request can retry — e.g. after the model gets
                 // registered.
-                let mut map = self.services.lock().unwrap();
+                let mut map = lock_sane(&self.services, "services");
                 if let Some(cur) = map.get(key) {
                     if Arc::ptr_eq(cur, &slot) {
                         map.remove(key);
@@ -439,10 +929,12 @@ impl Router {
     }
 
     fn prepare_entry(&self, key: &ServiceKey) -> Result<Arc<ServiceEntry>, String> {
+        #[cfg(test)]
+        test_hooks::maybe_delay_prepare();
         // NB: take the params clone in its own statement so the `models`
         // guard is dropped before the error path calls
         // `registered_models()` (which locks `models` again).
-        let params = self.models.lock().unwrap().get(&key.model).cloned();
+        let params = lock_sane(&self.models, "models").get(&key.model).cloned();
         let params = params.ok_or_else(|| {
             format!(
                 "model {:?} not registered with the router (registered: {:?})",
@@ -453,15 +945,50 @@ impl Router {
         let serve_plan = match &key.plan {
             PlanRef::Uniform(spec) => ServePlan::Uniform(spec.clone()),
             PlanRef::Digest(d) => {
-                let plan = self.plans.lock().unwrap().get(d).cloned();
+                let plan = lock_sane(&self.plans, "plans").get(d).cloned();
                 ServePlan::Planned(plan.ok_or_else(|| {
                     format!("plan {d:?} not registered with the router (see register_plan)")
                 })?)
             }
         };
         crate::log_info!("router: preparing service {key}");
-        let service =
-            Arc::new(ModelService::prepare(&self.eng, &key.model, &params, serve_plan)?);
+        // Resolve against the freshest manifest we have (post-compile
+        // refreshes included), reserve device bytes against the residency
+        // budget *before* anything is uploaded (evicting LRU idle tenants
+        // as needed), then prepare under the reserved generation prefix.
+        let manifest = self.current_manifest();
+        let prefix = ModelService::generation_prefix(&serve_plan, &key.model);
+        let reserve = |need: u64| self.reserve_bytes(key, &prefix, need);
+        let service = match ModelService::prepare_at(
+            &self.eng,
+            &manifest,
+            &key.model,
+            &params,
+            serve_plan,
+            prefix.clone(),
+            Some(&reserve),
+        ) {
+            Ok(s) => Arc::new(s),
+            Err(e) => {
+                // The reservation (if it was ever taken) must not outlive
+                // the failed preparation.
+                Residency::remove(&self.ledger, &prefix);
+                return Err(e);
+            }
+        };
+        // Account the lazy re-preparation of a budget-evicted tenant.
+        if lock_sane(&self.ledger, "ledger").evicted.remove(key) {
+            self.repreparations.fetch_add(1, Ordering::Relaxed);
+            crate::obs::registry::counter("afq_router_repreparations_total").inc(1);
+            crate::log_info!("router: re-prepared budget-evicted service {key}");
+        }
+        // A planned service that landed on the fp fallback wants its fused
+        // artifact: make sure a build is queued (idempotent by shape).
+        if service.path() == "plan-reconstructed-fp" {
+            if let ServePlan::Planned(p) = &service.plan {
+                self.maybe_enqueue_compile(key, p);
+            }
+        }
         let cfg = BatcherConfig {
             max_wait: self.cfg.max_wait,
             max_queue: self.cfg.service_queue,
@@ -470,25 +997,313 @@ impl Router {
         };
         let (handle, batcher) =
             Batcher::spawn(Arc::clone(&service) as Arc<dyn ScoreBackend>, cfg);
-        Ok(Arc::new(ServiceEntry { service, handle, batcher: Mutex::new(batcher) }))
+        Ok(Arc::new(ServiceEntry {
+            service,
+            handle,
+            batcher: Mutex::new(batcher),
+            ledger: Arc::clone(&self.ledger),
+            torn: AtomicBool::new(false),
+        }))
+    }
+
+    // ------------------------------------------------------------------
+    // Device-residency budget
+    // ------------------------------------------------------------------
+
+    /// Bump a resident prefix's LRU clock (routed traffic keeps a tenant
+    /// warm; idle tenants age toward eviction).
+    fn touch(&self, prefix: &str) {
+        let mut led = lock_sane(&self.ledger, "ledger");
+        led.tick += 1;
+        let tick = led.tick;
+        if let Some(r) = led.resident.get_mut(prefix) {
+            r.last_used = tick;
+        }
+    }
+
+    /// Reserve `need` bytes for `prefix` against the device budget,
+    /// evicting least-recently-used other tenants until it fits
+    /// (evict-before-upload: the ledger — and therefore the engine cache —
+    /// never overshoots the budget). Always records the reservation, even
+    /// without a budget, so the snapshot and LRU order stay meaningful.
+    fn reserve_bytes(&self, key: &ServiceKey, prefix: &str, need: u64) -> Result<(), String> {
+        let budget = self.cfg.device_budget_bytes;
+        if let Some(b) = budget {
+            if need > b {
+                return Err(format!(
+                    "service {key} needs {need}B of device weights but the budget is {b}B \
+                     (AFQ_DEVICE_BUDGET_BYTES / RouterConfig::device_budget_bytes)"
+                ));
+            }
+        }
+        loop {
+            {
+                let mut led = lock_sane(&self.ledger, "ledger");
+                if budget.map_or(true, |b| led.bytes + need <= b) {
+                    led.tick += 1;
+                    let tick = led.tick;
+                    led.bytes += need;
+                    led.resident.insert(
+                        prefix.to_string(),
+                        Resident { key: key.clone(), bytes: need, last_used: tick },
+                    );
+                    return Ok(());
+                }
+            }
+            if !self.evict_one_for_budget(prefix) {
+                let b = budget.expect("loop only spins when a budget is set");
+                return Err(format!(
+                    "device budget {b}B cannot fit {need}B for {key}: nothing evictable \
+                     (all other resident services are busy or mid-preparation)"
+                ));
+            }
+        }
+    }
+
+    /// Evict the least-recently-used other tenant: prefer idle services
+    /// (empty queue), fall back to busy ones (their queued requests fail
+    /// explicitly on drain — deliberate: an explicit error beats an
+    /// unservable fleet). Returns whether anything was freed. Only fully
+    /// prepared entries are victims — an in-flight preparation holds its
+    /// reservation but has no initialized slot yet, so it cannot be
+    /// evicted out from under itself.
+    fn evict_one_for_budget(&self, skip_prefix: &str) -> bool {
+        let mut candidates: Vec<(String, ServiceKey, u64)> = {
+            let led = lock_sane(&self.ledger, "ledger");
+            led.resident
+                .iter()
+                .filter(|(p, _)| p.as_str() != skip_prefix)
+                .map(|(p, r)| (p.clone(), r.key.clone(), r.last_used))
+                .collect()
+        };
+        candidates.sort_by_key(|(_, _, last_used)| *last_used);
+        for require_idle in [true, false] {
+            for (prefix, key, _) in &candidates {
+                let slot = match lock_sane(&self.services, "services").get(key).cloned() {
+                    Some(s) => s,
+                    None => {
+                        // Ledger row without a routed slot: a racing
+                        // release/re-registration already claimed the entry;
+                        // its teardown returns the bytes. Skip.
+                        continue;
+                    }
+                };
+                let Some(Ok(entry)) = slot.get() else {
+                    continue; // mid-preparation: not a victim
+                };
+                if entry.service.weight_prefix() != prefix.as_str() {
+                    continue; // slot was re-prepared under a newer generation
+                }
+                if require_idle && entry.handle.queued() > 0 {
+                    continue;
+                }
+                // Claim the slot (only if it is still the routed one), then
+                // tear down outside the services lock.
+                let claimed = {
+                    let mut map = lock_sane(&self.services, "services");
+                    match map.get(key) {
+                        Some(cur) if Arc::ptr_eq(cur, &slot) => {
+                            map.remove(key);
+                            true
+                        }
+                        _ => false,
+                    }
+                };
+                if !claimed {
+                    continue;
+                }
+                lock_sane(&self.ledger, "ledger").evicted.insert(key.clone());
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                crate::obs::registry::counter("afq_router_evictions_total").inc(1);
+                crate::log_info!(
+                    "router: budget-evicting LRU service {key} ({}B)",
+                    entry.service.device_bytes()
+                );
+                entry.teardown();
+                return true;
+            }
+        }
+        false
+    }
+
+    // ------------------------------------------------------------------
+    // Background compilation + hot-swap
+    // ------------------------------------------------------------------
+
+    /// Turn on background artifact compilation. `worker` defaults to
+    /// [`crate::coordinator::compile::default_worker`] over this router's
+    /// artifacts directory (shelling to `python/compile/aot.py`); tests and
+    /// build farms inject their own. Idempotent-ish: enabling again
+    /// replaces the queue (the old worker drains and joins).
+    pub fn enable_compile_queue(&self, worker: Option<CompileWorker>) -> Result<(), String> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err("router is shutting down; rejecting compile queue".into());
+        }
+        let worker = worker
+            .unwrap_or_else(|| crate::coordinator::compile::default_worker(&self.artifacts_dir));
+        let q = CompileQueue::with_worker_and_flag(worker, Arc::clone(&self.compile_pending))?;
+        *lock_sane(&self.compiler, "compiler") = Some(Arc::new(q));
+        crate::log_info!("router: compile queue enabled over {:?}", self.artifacts_dir);
+        Ok(())
+    }
+
+    /// The manifest preparations resolve against: the latest post-compile
+    /// refresh when one happened, the boot manifest otherwise.
+    fn current_manifest(&self) -> Arc<Manifest> {
+        lock_sane(&self.fresh_manifest, "fresh_manifest")
+            .clone()
+            .unwrap_or_else(|| self.eng.manifest_arc())
+    }
+
+    /// Queue a background build for a heterogeneous plan whose fused
+    /// artifact is missing. No-op when the queue is disabled, the plan is
+    /// uniform (served fused already), or the artifact exists.
+    fn maybe_enqueue_compile(&self, key: &ServiceKey, plan: &Arc<QuantPlan>) {
+        if plan.uniform_spec().is_some() {
+            return;
+        }
+        let Some(q) = lock_sane(&self.compiler, "compiler").clone() else {
+            return;
+        };
+        if self.current_manifest().artifacts.contains_key(&plan.fused_artifact_name()) {
+            return;
+        }
+        if q.submit(CompileJob {
+            key: key.clone(),
+            model: key.model.clone(),
+            plan: Arc::clone(plan),
+        }) {
+            crate::log_info!(
+                "router: queued background compile of {} for {key}",
+                plan.fused_artifact_name()
+            );
+        }
+    }
+
+    /// Drain finished compiles and hot-swap their services onto the fused
+    /// path. Returns how many services were swapped. Called from the
+    /// request path (one relaxed load when idle) and callable directly by
+    /// tests/operators.
+    pub fn poll_compiled(&self) -> usize {
+        if self.compile_pending.load(Ordering::Relaxed) == 0 {
+            return 0;
+        }
+        let Some(q) = lock_sane(&self.compiler, "compiler").clone() else {
+            return 0;
+        };
+        let outcomes = q.drain();
+        let mut swapped = 0usize;
+        let mut refreshed = false;
+        for o in outcomes {
+            if o.result.is_err() {
+                continue; // already logged + counted by the queue worker
+            }
+            if !refreshed {
+                // One manifest re-read covers every outcome in this drain.
+                match self.eng.refresh_manifest() {
+                    Ok(m) => {
+                        *lock_sane(&self.fresh_manifest, "fresh_manifest") =
+                            Some(Arc::new(m));
+                        refreshed = true;
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "router: compile finished but manifest refresh failed: {e}"
+                        );
+                        return swapped;
+                    }
+                }
+            }
+            match self.hot_swap(&o.job.key) {
+                Ok(true) => swapped += 1,
+                Ok(false) => {}
+                Err(e) => {
+                    crate::log_warn!("router: hot-swap of {} failed: {e}", o.job.key)
+                }
+            }
+        }
+        swapped
+    }
+
+    /// Atomically replace a fallback-path service with a freshly prepared
+    /// fused instance. The flip happens under the services lock (requests
+    /// route to exactly one of old/new); the old instance then drains
+    /// gracefully — its queued requests complete on the old weights, so
+    /// nothing is dropped or double-counted. Returns whether a swap
+    /// happened (cold, already-fused, or mid-preparation services are left
+    /// alone).
+    fn hot_swap(&self, key: &ServiceKey) -> Result<bool, String> {
+        let Some(old_slot) = lock_sane(&self.services, "services").get(key).cloned() else {
+            return Ok(false); // cold: its next prepare sees the new manifest
+        };
+        let Some(Ok(old_entry)) = old_slot.get() else {
+            return Ok(false); // mid-preparation: it resolves the fresh manifest itself
+        };
+        if old_entry.service.path() != "plan-reconstructed-fp" {
+            return Ok(false);
+        }
+        let fresh = self.prepare_entry(key)?;
+        if fresh.service.path() != "plan-fused" {
+            // Still no fused artifact (e.g. stub compiler wrote nothing for
+            // this shape): keep the fallback.
+            fresh.teardown();
+            return Ok(false);
+        }
+        let new_slot: Slot = Arc::new(OnceLock::new());
+        let _ = new_slot.set(Ok(Arc::clone(&fresh)));
+        let installed = {
+            let mut map = lock_sane(&self.services, "services");
+            if self.shutting_down.load(Ordering::SeqCst) {
+                false
+            } else {
+                match map.get(key) {
+                    Some(cur) if Arc::ptr_eq(cur, &old_slot) => {
+                        map.insert(key.clone(), new_slot);
+                        true
+                    }
+                    _ => false, // released/re-registered/evicted meanwhile
+                }
+            }
+        };
+        if !installed {
+            fresh.teardown();
+            return Ok(false);
+        }
+        let old = Arc::clone(old_entry);
+        old.teardown(); // graceful drain: queued requests finish on old weights
+        crate::obs::registry::counter("afq_router_hot_swaps_total").inc(1);
+        crate::log_info!(
+            "router: hot-swapped {key} onto fused artifact {}",
+            fresh.service.artifact()
+        );
+        Ok(true)
     }
 
     /// Stop a removed slot's batcher (graceful drain) and evict its
     /// weights. No-op for slots whose preparation failed or never ran.
     fn teardown_slot(slot: &Slot) {
         if let Some(Ok(entry)) = slot.get() {
-            entry.batcher.lock().unwrap().stop();
-            entry.service.release();
+            entry.teardown();
         }
     }
 
     fn shutdown_inner(&self) {
-        let slots: Vec<Slot> = self.services.lock().unwrap().drain().map(|(_, s)| s).collect();
+        // Stop the compile worker first: a build finishing mid-shutdown
+        // must not hot-swap into the drain. Dropping the queue joins it.
+        drop(lock_sane(&self.compiler, "compiler").take());
+        // Set the flag and snapshot the drain under ONE services lock:
+        // a racing prepare either landed before (drained here) or fails
+        // its shutting-down check — the shutdown/prepare race fix.
+        let slots: Vec<Slot> = {
+            let mut map = lock_sane(&self.services, "services");
+            self.shutting_down.store(true, Ordering::SeqCst);
+            map.drain().map(|(_, s)| s).collect()
+        };
         for slot in &slots {
             Self::teardown_slot(slot);
         }
         // Only after every batcher has drained may the engine thread stop.
-        if let Some(mut th) = self.engine_thread.lock().unwrap().take() {
+        if let Some(mut th) = lock_sane(&self.engine_thread, "engine_thread").take() {
             th.stop(&self.eng);
         }
     }
@@ -549,6 +1364,9 @@ pub struct ServiceStat {
     /// artifact (`plan-fused`, `plan-reconstructed-fp`, `fp`,
     /// `uniform-fused`).
     pub serving_path: &'static str,
+    /// Engine-resident weight bytes this service instance holds (what the
+    /// device budget charges it for).
+    pub device_bytes: u64,
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
@@ -592,6 +1410,7 @@ impl ServiceStat {
         o.set("key", Json::Str(self.key.clone()))
             .set("artifact", Json::Str(self.artifact.clone()))
             .set("serving_path", Json::Str(self.serving_path.to_string()))
+            .set("device_bytes", Json::Num(self.device_bytes as f64))
             .set("requests", Json::Num(self.requests as f64))
             .set("batches", Json::Num(self.batches as f64))
             .set("tokens", Json::Num(self.tokens as f64))
@@ -634,6 +1453,51 @@ impl std::fmt::Display for ServiceStat {
     }
 }
 
+/// One model's rollout policy as the snapshot reports it.
+#[derive(Clone, Debug)]
+pub struct RolloutStat {
+    pub model: String,
+    /// Stable arms: (plan label, normalized weight).
+    pub arms: Vec<(String, f64)>,
+    /// Canary plan label, if one is running.
+    pub canary: Option<String>,
+    /// Canary traffic share (0.0 when no canary).
+    pub canary_share: f64,
+    /// Canary-assigned requests completed since the canary started.
+    pub canary_requests: u64,
+}
+
+impl RolloutStat {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", Json::Str(self.model.clone()))
+            .set(
+                "arms",
+                Json::Arr(
+                    self.arms
+                        .iter()
+                        .map(|(label, w)| {
+                            let mut a = Json::obj();
+                            a.set("plan", Json::Str(label.clone()))
+                                .set("weight", Json::Num(*w));
+                            a
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "canary",
+                match &self.canary {
+                    Some(c) => Json::Str(c.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set("canary_share", Json::Num(self.canary_share))
+            .set("canary_requests", Json::Num(self.canary_requests as f64));
+        o
+    }
+}
+
 /// Point-in-time view of the whole router.
 #[derive(Clone, Debug)]
 pub struct RouterSnapshot {
@@ -645,11 +1509,21 @@ pub struct RouterSnapshot {
     pub device_buffers: usize,
     /// Compiled executables held by the engine.
     pub executables: usize,
+    /// Host-byte size of the engine's device-resident buffer cache.
+    pub device_bytes: u64,
+    /// Configured residency budget (0 = unlimited).
+    pub device_budget: u64,
+    /// Services evicted by the residency budget since boot.
+    pub evictions: u64,
+    /// Budget-evicted services lazily re-prepared since boot.
+    pub repreparations: u64,
     /// Host decoded-panel cache bytes in use across all services (0 when
     /// `AFQ_PANEL_CACHE_BYTES` is unset — the cache is opt-in).
     pub panelcache_bytes: u64,
     /// Registered model names.
     pub models: Vec<String>,
+    /// Installed rollout policies, sorted by model.
+    pub rollouts: Vec<RolloutStat>,
 }
 
 impl RouterSnapshot {
@@ -665,11 +1539,16 @@ impl RouterSnapshot {
             .set("queued", Json::Num(self.queued as f64))
             .set("device_buffers", Json::Num(self.device_buffers as f64))
             .set("executables", Json::Num(self.executables as f64))
+            .set("device_bytes", Json::Num(self.device_bytes as f64))
+            .set("device_budget", Json::Num(self.device_budget as f64))
+            .set("evictions", Json::Num(self.evictions as f64))
+            .set("repreparations", Json::Num(self.repreparations as f64))
             .set("panelcache_bytes", Json::Num(self.panelcache_bytes as f64))
             .set(
                 "models",
                 Json::from_strs(&self.models.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
-            );
+            )
+            .set("rollouts", Json::Arr(self.rollouts.iter().map(|r| r.to_json()).collect()));
         o
     }
 }
@@ -686,10 +1565,62 @@ impl std::fmt::Display for RouterSnapshot {
             self.executables,
             self.panelcache_bytes
         )?;
+        writeln!(
+            f,
+            "  device: {} bytes resident / budget {}, {} eviction(s), {} re-preparation(s)",
+            self.device_bytes,
+            if self.device_budget == 0 {
+                "unlimited".to_string()
+            } else {
+                format!("{} bytes", self.device_budget)
+            },
+            self.evictions,
+            self.repreparations
+        )?;
+        for r in &self.rollouts {
+            let arms: Vec<String> =
+                r.arms.iter().map(|(p, w)| format!("{p}:{:.2}", w)).collect();
+            write!(f, "  rollout {}: [{}]", r.model, arms.join(", "))?;
+            match &r.canary {
+                Some(c) => writeln!(
+                    f,
+                    " canary {c} @ {:.2} ({} req)",
+                    r.canary_share, r.canary_requests
+                )?,
+                None => writeln!(f)?,
+            }
+        }
         for s in &self.services {
             writeln!(f, "  {s}")?;
         }
         Ok(())
+    }
+}
+
+/// Failure-injection points for the poisoning and shutdown-race tests.
+/// Compiled only under `cfg(test)`; production builds carry no hooks.
+#[cfg(test)]
+pub(crate) mod test_hooks {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    /// One-shot: the next `entry()` panics while holding the services
+    /// lock, poisoning it.
+    pub static PANIC_HOLDING_SERVICES: AtomicBool = AtomicBool::new(false);
+    /// Every `prepare_entry()` sleeps this long before doing anything —
+    /// widens the shutdown/prepare race window deterministically.
+    pub static PREPARE_DELAY_MS: AtomicU64 = AtomicU64::new(0);
+
+    pub fn maybe_panic_holding_services_lock() {
+        if PANIC_HOLDING_SERVICES.swap(false, Ordering::SeqCst) {
+            panic!("test hook: panicking while holding the services lock");
+        }
+    }
+
+    pub fn maybe_delay_prepare() {
+        let ms = PREPARE_DELAY_MS.load(Ordering::SeqCst);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
     }
 }
 
@@ -1209,6 +2140,126 @@ mod tests {
         assert_eq!(
             j.get("models").unwrap().as_arr().unwrap()[0].as_str().unwrap(),
             "tiny"
+        );
+        // Fleet-operations fields: residency accounting and rollout list.
+        assert!(
+            services[0].get("device_bytes").unwrap().as_f64().unwrap() > 0.0,
+            "a prepared service holds device weight bytes"
+        );
+        assert!(j.get("device_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("device_budget").unwrap().as_f64().unwrap(), 0.0, "unlimited");
+        assert!(j.get("evictions").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(j.get("repreparations").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("rollouts").unwrap().as_arr().unwrap().len(), 0);
+        // Install a rollout and check the stat row round-trips.
+        r.set_rollout(
+            "tiny",
+            crate::coordinator::rollout::RolloutPolicy::single(7, key.plan.clone()),
+        )
+        .unwrap();
+        let j = r.snapshot().to_json();
+        let rollouts = j.get("rollouts").unwrap().as_arr().unwrap();
+        assert_eq!(rollouts.len(), 1);
+        assert_eq!(rollouts[0].get("model").unwrap().as_str().unwrap(), "tiny");
+        assert_eq!(rollouts[0].get("arms").unwrap().as_arr().unwrap().len(), 1);
+        assert!(
+            rollouts[0].get("canary").unwrap().as_str().is_none(),
+            "no canary installed → null"
+        );
+    }
+
+    /// Satellite 1 (mechanism): a panicking holder poisons a mutex;
+    /// `lock_sane` must recover the guard, count the recovery, and hand
+    /// back consistent data. Artifact-free.
+    #[test]
+    fn lock_sane_recovers_from_poison() {
+        let m = Mutex::new(7i32);
+        let before =
+            crate::obs::registry::counter("afq_router_lock_poisoned_total").get();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the mutex");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_sane(&m, "test"), 7, "recovered guard sees the data");
+        let after =
+            crate::obs::registry::counter("afq_router_lock_poisoned_total").get();
+        assert!(after >= before + 1, "recovery must be counted");
+        // And the lock keeps working afterwards.
+        *lock_sane(&m, "test") = 8;
+        assert_eq!(*lock_sane(&m, "test"), 8);
+    }
+
+    /// Satellite 1 (end to end): a panic while holding the router's
+    /// services lock — injected via a test hook where a buggy prepare
+    /// would sit — must not take the router down. Before the fix, every
+    /// subsequent request panicked on the poisoned lock; now the router
+    /// recovers, counts it, and keeps serving.
+    #[test]
+    fn poisoned_router_still_serves() {
+        let Some((r, meta)) = registered_router(81) else { return };
+        let before =
+            crate::obs::registry::counter("afq_router_lock_poisoned_total").get();
+        test_hooks::PANIC_HOLDING_SERVICES.store(true, Ordering::SeqCst);
+        let key = ServiceKey::quant("tiny", "nf4", 64);
+        let panicked = std::thread::scope(|s| {
+            s.spawn(|| r.prepare(&key)).join().is_err()
+        });
+        assert!(panicked, "the hooked request must panic while holding the lock");
+        test_hooks::PANIC_HOLDING_SERVICES.store(false, Ordering::SeqCst);
+        // The fleet survives: a different service prepares and scores.
+        let other = ServiceKey::quant("tiny", "af4", 256);
+        let ids: Vec<i32> = vec![3; meta.batch * meta.seq_len];
+        r.score_batch(&other, ids.clone(), ids)
+            .expect("router serves after a poisoned lock");
+        let after =
+            crate::obs::registry::counter("afq_router_lock_poisoned_total").get();
+        assert!(after >= before + 1, "the recovery must be observable");
+        r.shutdown();
+    }
+
+    /// Satellite 2: shutdown racing in-flight preparations. Each prepare
+    /// either completes (and is drained by shutdown) or fails with an
+    /// explicit shutting-down/engine-gone error — never a panic, never a
+    /// stranded service, and late arrivals are refused.
+    #[test]
+    fn shutdown_vs_prepare_interleaving() {
+        let Some((r, _meta)) = registered_router(91) else { return };
+        test_hooks::PREPARE_DELAY_MS.store(120, Ordering::SeqCst);
+        let keys = [
+            ServiceKey::quant("tiny", "nf4", 64),
+            ServiceKey::quant("tiny", "nf4", 256),
+            ServiceKey::quant("tiny", "nf4", 1024),
+        ];
+        std::thread::scope(|s| {
+            let joins: Vec<_> = keys
+                .iter()
+                .map(|key| {
+                    let r = &r;
+                    s.spawn(move || r.prepare(key))
+                })
+                .collect();
+            // Let the prepares enter their delay window, then shut down
+            // from under them.
+            std::thread::sleep(Duration::from_millis(30));
+            r.shutdown_inner();
+            for j in joins {
+                match j.join().expect("prepare must not panic") {
+                    Ok(()) => {} // landed before the drain: torn down with it
+                    Err(e) => assert!(
+                        e.contains("shutting down") || e.contains("engine thread gone"),
+                        "unexpected race error: {e}"
+                    ),
+                }
+            }
+        });
+        test_hooks::PREPARE_DELAY_MS.store(0, Ordering::SeqCst);
+        assert_eq!(r.service_count(), 0, "nothing may outlive shutdown");
+        let e = r.prepare(&keys[0]).unwrap_err();
+        assert!(
+            e.contains("shutting down") || e.contains("engine thread gone"),
+            "late arrivals must be refused explicitly: {e}"
         );
     }
 }

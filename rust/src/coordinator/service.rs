@@ -53,7 +53,7 @@ use crate::model::{
     ParamSet,
 };
 use crate::plan::QuantPlan;
-use crate::runtime::{ModelMeta, TensorData};
+use crate::runtime::{Manifest, ModelMeta, TensorData};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -142,6 +142,9 @@ pub struct ModelService {
     /// (`plan-fused`, `plan-reconstructed-fp`, `fp`, `uniform-fused`) —
     /// decided once at prepare time, after fallback resolution.
     serving_path: &'static str,
+    /// Total host bytes this service uploaded to the device — what the
+    /// router's residency budget charges for this tenant.
+    device_bytes: u64,
 }
 
 impl ModelService {
@@ -157,7 +160,38 @@ impl ModelService {
         plan: impl Into<ServePlan>,
     ) -> Result<ModelService, String> {
         let plan: ServePlan = plan.into();
-        let meta = eng.manifest().config(model)?.clone();
+        let prefix = Self::generation_prefix(&plan, model);
+        Self::prepare_at(eng, eng.manifest(), model, params, plan, prefix, None)
+    }
+
+    /// Mint this preparation's unique generation-tagged device-buffer
+    /// prefix. Split out of [`Self::prepare_at`] so the router can learn
+    /// the prefix *before* preparation starts (its residency ledger
+    /// reserves bytes under the prefix mid-prepare).
+    pub(crate) fn generation_prefix(plan: &ServePlan, model: &str) -> String {
+        let generation = PREPARE_SEQ.fetch_add(1, Ordering::Relaxed);
+        format!("{}/g{generation}", plan.key_prefix(model))
+    }
+
+    /// [`Self::prepare`] with the resolution context made explicit:
+    /// `manifest` decides artifact availability (the router passes a
+    /// *refreshed* manifest after a background compile so a fallback plan
+    /// can land fused), `prefix` is a pre-minted generation prefix, and
+    /// `make_room` (given the upload's total byte size) lets the router
+    /// evict under its residency budget before any bytes move. On any
+    /// failure past owner registration, this instance's partial device
+    /// uploads and panel-cache owner are torn down before the error
+    /// returns — a failed prepare leaks nothing.
+    pub(crate) fn prepare_at(
+        eng: &EngineHandle,
+        manifest: &Manifest,
+        model: &str,
+        params: &ParamSet,
+        plan: ServePlan,
+        prefix: String,
+        make_room: Option<&dyn Fn(u64) -> Result<(), String>>,
+    ) -> Result<ModelService, String> {
+        let meta = manifest.config(model)?.clone();
         params.validate(&meta)?;
         match &plan {
             ServePlan::Planned(p) => {
@@ -185,7 +219,7 @@ impl ModelService {
                 // Heterogeneous: prefer the per-tensor nibble-domain
                 // executable; fall back to fp + reconstruction when this
                 // block signature was never compiled.
-                if eng.manifest().artifacts.contains_key(&artifact) {
+                if manifest.artifacts.contains_key(&artifact) {
                     fused_planned = true;
                 } else {
                     crate::log_warn!(
@@ -198,21 +232,40 @@ impl ModelService {
                 }
             }
         }
-        eng.manifest().artifact(&artifact)?; // fail fast if missing
-        let generation = PREPARE_SEQ.fetch_add(1, Ordering::Relaxed);
-        let prefix = format!("{}/g{generation}", plan.key_prefix(model));
+        manifest.artifact(&artifact)?; // fail fast if missing
         // The generation-tagged prefix is also this service's owner key
         // in the decoded-panel cache: registering up front makes the
         // tenant visible in snapshots (0 bytes) before any host qgemm —
         // AFQ_HOST_PARITY probes, benches, mock backends — touches it.
         crate::quant::panelcache::register_owner(&prefix);
-        let weight_args = Self::weight_args(&plan, &meta, params, &prefix, fused_planned)?;
-        let mut keys = Vec::with_capacity(weight_args.len());
-        for (key, shape, data) in weight_args {
-            eng.upload(&key, &shape, data)?;
-            keys.push(key);
-        }
-        eng.preload(&artifact)?;
+        // Everything past owner registration must clean up on failure: an
+        // error mid-upload (or at preload) would otherwise strand this
+        // generation's already-uploaded device buffers and its panel-cache
+        // owner until process exit — dead bytes no release ever reclaims,
+        // silently eating the residency budget.
+        let uploaded = (|| -> Result<(Vec<String>, u64), String> {
+            let weight_args = Self::weight_args(&plan, &meta, params, &prefix, fused_planned)?;
+            let device_bytes: u64 =
+                weight_args.iter().map(|(_, _, d)| d.byte_len() as u64).sum();
+            if let Some(room) = make_room {
+                room(device_bytes)?;
+            }
+            let mut keys = Vec::with_capacity(weight_args.len());
+            for (key, shape, data) in weight_args {
+                eng.upload(&key, &shape, data)?;
+                keys.push(key);
+            }
+            eng.preload(&artifact)?;
+            Ok((keys, device_bytes))
+        })();
+        let (keys, device_bytes) = match uploaded {
+            Ok(v) => v,
+            Err(e) => {
+                eng.evict(&format!("{prefix}/"));
+                crate::quant::panelcache::invalidate_owner(&prefix);
+                return Err(e);
+            }
+        };
         // Classify the serving path AFTER fallback resolution, so the
         // per-service registry counters say how requests are actually
         // served (fused vs reconstructed-fp), not how the plan asked to be.
@@ -232,6 +285,7 @@ impl ModelService {
             latency: Arc::new(LatencyHistogram::new()),
             metrics: Arc::new(ServiceMetrics::for_service(&format!("{model}/{label}"), path)),
             serving_path: path,
+            device_bytes,
         })
     }
 
@@ -374,6 +428,12 @@ impl ModelService {
     /// The [`serving_path`] classification decided at prepare time.
     pub fn path(&self) -> &'static str {
         self.serving_path
+    }
+
+    /// Host bytes this service keeps device-resident (its weight uploads)
+    /// — the charge against the router's residency budget.
+    pub fn device_bytes(&self) -> u64 {
+        self.device_bytes
     }
 }
 

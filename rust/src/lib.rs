@@ -95,7 +95,14 @@
 //!   seq]) → the shared engine thread. Services prepare lazily on first
 //!   request; shutdown drains batchers before the engine stops (never a
 //!   silent drop). `coordinator::trainer` drives the AOT train step on
-//!   the same engine.
+//!   the same engine. Fleet operations make the registry operable at
+//!   scale: a per-model [`coordinator::RolloutPolicy`] splits traffic
+//!   deterministically across weighted plan arms with guarded canary →
+//!   promote / rollback / auto-rollback transitions; a device-residency
+//!   byte budget LRU-evicts idle tenants' weights (reserve-before-upload,
+//!   never overshooting) with lazy re-preparation; and a background
+//!   [`coordinator::CompileQueue`] builds missing `score_plan` artifacts
+//!   out of band, hot-swapping services off the fp fallback atomically.
 //! - [`exp`] — the figure-by-figure experiment harness, running its
 //!   model × code × B grids as routed services, plus the planner ablation
 //!   (`afq exp ablation-planner`: planned vs best-uniform at equal
@@ -163,6 +170,15 @@
 //!   The cache itself reports `afq_panelcache_{hits,misses,inserts,
 //!   evictions}_total` and the `afq_panelcache_bytes` gauge; router
 //!   snapshots carry per-service cache bytes and hit rate.
+//! - **Fleet accounting.** Rollout transitions are counted in
+//!   `afq_rollout_transitions_total{action}`; device-residency churn in
+//!   `afq_router_{evictions,repreparations}_total` (mirrored with the
+//!   resident byte total in [`coordinator::RouterSnapshot`]); compile
+//!   jobs in `afq_compile_{jobs,success,failures}_total` and completed
+//!   swaps in `afq_router_hot_swaps_total`; recovered lock poisonings in
+//!   `afq_router_lock_poisoned_total`. Because the per-service request
+//!   counters live in the global registry (keyed by service + path, not
+//!   by instance), requests stay exactly counted across a hot-swap.
 //!
 //! Start with [`codes`] (the paper's contribution), [`dist`] (its theory),
 //! [`quant`] (the mechanism), and [`plan`] (the budgeted per-tensor

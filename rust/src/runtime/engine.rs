@@ -24,18 +24,38 @@ pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    cache: HashMap<String, xla::PjRtBuffer>,
+    /// Named device-resident buffers with their host byte size, so the
+    /// router's residency budget can account for what actually lives on
+    /// the device.
+    cache: HashMap<String, (xla::PjRtBuffer, u64)>,
+    resident_bytes: u64,
 }
 
 impl Engine {
     pub fn new(artifacts_dir: &str) -> Result<Engine, String> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
-        Ok(Engine { client, manifest, exes: HashMap::new(), cache: HashMap::new() })
+        Ok(Engine {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            cache: HashMap::new(),
+            resident_bytes: 0,
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Re-read `manifest.json` from the artifacts directory, picking up
+    /// artifacts compiled after boot (the background compile queue's
+    /// hot-swap path). Already-memoized executables stay valid; only the
+    /// artifact lookup table is replaced.
+    pub fn refresh_manifest(&mut self) -> Result<(), String> {
+        let dir = self.manifest.dir.clone();
+        self.manifest = Manifest::load(&dir)?;
+        Ok(())
     }
 
     /// Compile (and memoize) an artifact's executable.
@@ -66,16 +86,33 @@ impl Engine {
     /// Upload a named tensor to the device cache (idempotent overwrite).
     pub fn upload(&mut self, key: &str, t: &TensorData, shape: &[usize]) -> Result<(), String> {
         let buf = self.to_buffer(t, shape)?;
-        self.cache.insert(key.to_string(), buf);
+        let bytes = t.byte_len() as u64;
+        if let Some((_, old)) = self.cache.insert(key.to_string(), (buf, bytes)) {
+            self.resident_bytes = self.resident_bytes.saturating_sub(old);
+        }
+        self.resident_bytes += bytes;
         Ok(())
     }
 
     pub fn evict(&mut self, key_prefix: &str) {
-        self.cache.retain(|k, _| !k.starts_with(key_prefix));
+        let mut freed = 0u64;
+        self.cache.retain(|k, (_, bytes)| {
+            let keep = !k.starts_with(key_prefix);
+            if !keep {
+                freed += *bytes;
+            }
+            keep
+        });
+        self.resident_bytes = self.resident_bytes.saturating_sub(freed);
     }
 
     pub fn cached_keys(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Total host-byte size of the device-resident buffer cache.
+    pub fn cached_bytes(&self) -> u64 {
+        self.resident_bytes
     }
 
     /// Number of compiled executables currently memoized.
@@ -123,7 +160,7 @@ impl Engine {
                     buf_refs.push(&temp[ti].1);
                     ti += 1;
                 }
-                Arg::Cached(key) => buf_refs.push(&self.cache[*key]),
+                Arg::Cached(key) => buf_refs.push(&self.cache[*key].0),
             }
         }
         let exe = &self.exes[name];
@@ -240,9 +277,14 @@ mod tests {
             .expect("second execute");
         assert_eq!(a[0], b[0]);
         assert_eq!(eng.cached_keys(), 1);
+        assert_eq!(eng.cached_bytes(), 16 * 4, "one 16-entry f32 LUT resident");
         assert!(eng.loaded_count() >= 1, "executed artifact must be memoized");
+        // Overwriting a key must not double-count its bytes.
+        eng.upload("code/nf4", &TensorData::F32(code.table_f32()), &[16]).unwrap();
+        assert_eq!(eng.cached_bytes(), 16 * 4);
         eng.evict("code/");
         assert_eq!(eng.cached_keys(), 0);
+        assert_eq!(eng.cached_bytes(), 0, "evict returns every accounted byte");
     }
 
     #[test]

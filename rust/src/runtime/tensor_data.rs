@@ -28,6 +28,13 @@ impl TensorData {
         self.len() == 0
     }
 
+    /// Host/device payload size in bytes (both variants are 4-byte
+    /// elements) — what the engine's residency accounting charges for an
+    /// uploaded buffer.
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
+
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
             TensorData::F32(v) => Some(v),

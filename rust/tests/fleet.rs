@@ -1,0 +1,434 @@
+//! Fleet-operations integration tests (PR 10): weighted canary rollout,
+//! device-residency budgeting, and background compile + hot-swap — all
+//! through the public `afq::coordinator` API.
+//!
+//! Needs `make artifacts`; each test skips when artifacts are absent so
+//! `cargo test` stays green pre-build (`AFQ_REQUIRE_ARTIFACTS=1` turns
+//! skips into failures via `artifacts_available`).
+
+use afq::coordinator::{
+    CanaryGuard, PlanRef, RolloutPolicy, Router, RouterConfig, ScoreRequest, ServiceKey,
+};
+use afq::model::{corpus, ParamSet};
+use afq::plan::canonical_mixed_plan;
+use afq::util::json::Json;
+use std::time::Duration;
+
+fn fast_config() -> RouterConfig {
+    RouterConfig { max_wait: Duration::from_millis(1), ..Default::default() }
+}
+
+fn registered_router(cfg: RouterConfig, seed: u64) -> Option<(Router, afq::runtime::ModelMeta)> {
+    if !afq::util::artifacts_available("artifacts") {
+        return None;
+    }
+    let r = Router::with_config("artifacts", cfg).expect("router");
+    let meta = r.manifest().config("tiny").unwrap().clone();
+    r.register_model("tiny", ParamSet::init(&meta, seed)).unwrap();
+    Some((r, meta))
+}
+
+/// One (ids, targets) request payload per call, walking a shared corpus.
+fn payloads(meta: &afq::runtime::ModelMeta, n: usize, seed: u64) -> Vec<(Vec<i32>, Vec<i32>)> {
+    let seq = meta.seq_len;
+    let data = corpus::english(seq * n + n + 1, seed);
+    (0..n)
+        .map(|i| {
+            let off = i % (data.len() - seq - 1);
+            let ids = data[off..off + seq].iter().map(|&b| b as i32).collect();
+            let tgt = data[off + 1..off + seq + 1].iter().map(|&b| b as i32).collect();
+            (ids, tgt)
+        })
+        .collect()
+}
+
+/// Acceptance: a 0.75/0.25 weighted policy shifts routed traffic to the
+/// configured split within tolerance, deterministically per span — and
+/// the per-service request counters account for every routed request.
+#[test]
+fn weighted_rollout_shifts_traffic_within_tolerance() {
+    let Some((r, meta)) = registered_router(fast_config(), 11) else { return };
+    let heavy = PlanRef::Uniform(afq::coordinator::QuantSpec {
+        family: "nf4".into(),
+        block_size: 64,
+    });
+    let light = PlanRef::Uniform(afq::coordinator::QuantSpec {
+        family: "af4".into(),
+        block_size: 64,
+    });
+    let policy =
+        RolloutPolicy::weighted(42, vec![(heavy.clone(), 0.75), (light.clone(), 0.25)]).unwrap();
+    r.set_rollout("tiny", policy).unwrap();
+
+    let total = 400usize;
+    let reqs = payloads(&meta, total, 5);
+    let threads = 4usize;
+    let per = total / threads;
+    let counts: Vec<(u64, u64)> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let r = &r;
+                let chunk = &reqs[t * per..(t + 1) * per];
+                s.spawn(move || {
+                    let (mut h, mut l) = (0u64, 0u64);
+                    for (ids, tgt) in chunk {
+                        let (key, resp) =
+                            r.score_rollout("tiny", ids.clone(), tgt.clone()).expect("routed");
+                        assert_eq!(resp.nll.len(), ids.len());
+                        match &key.plan {
+                            p if *p == heavy => h += 1,
+                            p if *p == light => l += 1,
+                            p => panic!("assigned to a plan outside the policy: {p:?}"),
+                        }
+                    }
+                    (h, l)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let heavy_n: u64 = counts.iter().map(|(h, _)| h).sum();
+    let light_n: u64 = counts.iter().map(|(_, l)| l).sum();
+    assert_eq!(heavy_n + light_n, total as u64, "every request assigned to exactly one arm");
+    let share = heavy_n as f64 / total as f64;
+    assert!(
+        (share - 0.75).abs() < 0.1,
+        "heavy arm took {share:.3} of traffic, wanted 0.75 ± 0.1"
+    );
+    // Per-service counters tally exactly what the assignment said.
+    let snap = r.snapshot();
+    let k_heavy = ServiceKey { model: "tiny".into(), plan: heavy.clone() };
+    let k_light = ServiceKey { model: "tiny".into(), plan: light.clone() };
+    assert_eq!(snap.get(&k_heavy).unwrap().requests, heavy_n);
+    assert_eq!(snap.get(&k_light).unwrap().requests, light_n);
+    assert_eq!(snap.get(&k_heavy).unwrap().errors, 0);
+    assert_eq!(snap.get(&k_light).unwrap().errors, 0);
+    // And assignment is deterministic: replaying a span hits the same arm.
+    let a = r.rollout_assign("tiny", 12345).unwrap();
+    let b = r.rollout_assign("tiny", 12345).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(snap.rollouts.len(), 1);
+    assert_eq!(snap.rollouts[0].arms.len(), 2);
+    r.shutdown();
+}
+
+/// Acceptance: a canary whose guard is set to treat ANY latency as a
+/// regression auto-rolls-back once its minimum sample completes — the
+/// policy returns to the baseline arms, the transition is counted under
+/// `action="auto-rollback"`, and traffic keeps flowing throughout.
+#[test]
+fn regressing_canary_auto_rolls_back() {
+    let Some((r, meta)) = registered_router(fast_config(), 13) else { return };
+    let base = PlanRef::Uniform(afq::coordinator::QuantSpec {
+        family: "nf4".into(),
+        block_size: 64,
+    });
+    let canary = PlanRef::Uniform(afq::coordinator::QuantSpec {
+        family: "af4".into(),
+        block_size: 256,
+    });
+    // max_p99_ratio 0: any measurable canary p99 "regresses" vs a warm
+    // baseline — forcing the breach deterministically.
+    let guard = CanaryGuard { max_p99_ratio: 0.0, max_error_rate_delta: 1.0, min_requests: 8 };
+    let policy = RolloutPolicy::single(7, base.clone())
+        .with_canary(canary.clone(), 0.5, guard)
+        .unwrap();
+    r.set_rollout("tiny", policy).unwrap();
+    let counter_name = "afq_rollout_transitions_total{action=\"auto-rollback\"}";
+    let before = afq::obs::registry::counter(counter_name).get();
+
+    // Drive traffic until the canary has its minimum sample. With a 0.5
+    // share, 64 requests give both arms plenty.
+    for (ids, tgt) in payloads(&meta, 64, 17) {
+        r.score_rollout("tiny", ids, tgt).expect("routed");
+        if r.rollout_of("tiny").unwrap().canary().is_none() {
+            break; // rolled back already
+        }
+    }
+    // The guard judges on canary completions; by now it must have fired.
+    let policy = r.rollout_of("tiny").unwrap();
+    assert!(policy.canary().is_none(), "regressing canary must be rolled back");
+    assert_eq!(policy.arms().len(), 1);
+    assert_eq!(policy.arms()[0].0, base, "baseline arm survives untouched");
+    let after = afq::obs::registry::counter(counter_name).get();
+    assert!(after >= before + 1, "auto-rollback must be counted ({before} → {after})");
+    // The fleet keeps serving after the rollback.
+    let (ids, tgt) = payloads(&meta, 1, 19).pop().unwrap();
+    let (key, _) = r.score_rollout("tiny", ids, tgt).expect("serves after rollback");
+    assert_eq!(key.plan, base, "all traffic back on the baseline");
+    r.shutdown();
+}
+
+/// Operator transitions: promote makes the canary the sole arm; rollback
+/// drops it; both are refused from the wrong state.
+#[test]
+fn promote_and_rollback_drive_the_policy() {
+    let Some((r, _meta)) = registered_router(fast_config(), 15) else { return };
+    let base = PlanRef::Uniform(afq::coordinator::QuantSpec {
+        family: "nf4".into(),
+        block_size: 64,
+    });
+    let canary = PlanRef::Uniform(afq::coordinator::QuantSpec {
+        family: "af4".into(),
+        block_size: 64,
+    });
+    // Guard that can never fire (ratio huge, sample huge): operator-driven
+    // transitions only.
+    let guard =
+        CanaryGuard { max_p99_ratio: 1e12, max_error_rate_delta: 1.0, min_requests: u64::MAX };
+    assert!(r.promote("tiny").is_err(), "no policy installed yet");
+    let policy = RolloutPolicy::single(3, base.clone())
+        .with_canary(canary.clone(), 0.2, guard)
+        .unwrap();
+    r.set_rollout("tiny", policy).unwrap();
+    r.promote("tiny").unwrap();
+    let p = r.rollout_of("tiny").unwrap();
+    assert!(p.canary().is_none());
+    assert_eq!(p.arms(), &[(canary.clone(), 1.0)], "promoted canary is the sole arm");
+    assert!(r.promote("tiny").is_err(), "no canary left to promote");
+    // Fresh canary on the promoted baseline, then operator rollback.
+    let p = p.with_canary(base.clone(), 0.3, guard).unwrap();
+    r.set_rollout("tiny", p).unwrap();
+    r.rollback("tiny").unwrap();
+    let p = r.rollout_of("tiny").unwrap();
+    assert!(p.canary().is_none());
+    assert_eq!(p.arms(), &[(canary, 1.0)], "rollback restores the pre-canary baseline");
+    r.shutdown();
+}
+
+/// Acceptance: under a byte budget sized for ~3.5 services, an 8-tenant
+/// churn keeps every tenant servable, **never exceeds the budget at any
+/// observation point**, and both sides of the flow are counted
+/// (evictions > 0, lazy re-preparations > 0).
+#[test]
+fn device_budget_churn_never_overshoots() {
+    // Measure one quantized service's device footprint first (unbudgeted).
+    let Some((probe, meta)) = registered_router(fast_config(), 23) else { return };
+    let probe_key = ServiceKey::quant("tiny", "nf4", 64);
+    probe.prepare(&probe_key).unwrap();
+    let per_service = probe.snapshot().get(&probe_key).unwrap().device_bytes;
+    assert!(per_service > 0);
+    probe.shutdown();
+
+    let budget = per_service * 7 / 2; // ~3.5 tenants' worth
+    let cfg = RouterConfig {
+        max_wait: Duration::from_millis(1),
+        device_budget_bytes: Some(budget),
+        ..Default::default()
+    };
+    let Some((r, _)) = registered_router(cfg, 23) else { return };
+    let tenants: Vec<ServiceKey> = [64usize, 256, 1024, 4096]
+        .iter()
+        .flat_map(|&b| {
+            ["nf4", "af4"].iter().map(move |f| ServiceKey::quant("tiny", f, b))
+        })
+        .collect();
+    assert_eq!(tenants.len(), 8);
+    let (ids, tgt) = payloads(&meta, 1, 29).pop().unwrap();
+    let mut bids = Vec::new();
+    let mut btgt = Vec::new();
+    for _ in 0..meta.batch {
+        bids.extend_from_slice(&ids);
+        btgt.extend_from_slice(&tgt);
+    }
+    for round in 0..2 {
+        for key in &tenants {
+            r.score_batch(key, bids.clone(), btgt.clone())
+                .unwrap_or_else(|e| panic!("round {round}: {key} must stay servable: {e}"));
+            let snap = r.snapshot();
+            assert!(
+                snap.device_bytes <= budget,
+                "round {round} after {key}: {} resident bytes > budget {budget}",
+                snap.device_bytes
+            );
+            assert_eq!(snap.device_budget, budget);
+        }
+    }
+    let snap = r.snapshot();
+    assert!(snap.evictions > 0, "8 tenants in a 3.5-tenant budget must evict");
+    assert!(
+        snap.repreparations > 0,
+        "round 2 must lazily re-prepare tenants round 1 evicted"
+    );
+    assert!(
+        snap.services.len() < tenants.len(),
+        "not all tenants can be resident at once under the budget"
+    );
+    r.shutdown();
+}
+
+/// Copy the real artifacts directory into a temp dir, optionally dropping
+/// one artifact's manifest entry (`strip`) — the doctored fleet the
+/// compile-queue tests run against. Returns (tmp_dir, real_dir).
+fn doctored_artifacts(tag: &str, strip: Option<&str>) -> Option<(String, String)> {
+    let real = afq::util::resolve_artifacts_dir("artifacts")?;
+    let tmp = std::env::temp_dir().join(format!("afq-fleet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).expect("create temp artifacts dir");
+    for entry in std::fs::read_dir(&real).expect("read artifacts dir") {
+        let entry = entry.expect("dir entry");
+        if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+            std::fs::copy(entry.path(), tmp.join(entry.file_name())).expect("copy artifact");
+        }
+    }
+    if let Some(strip) = strip {
+        let mpath = tmp.join("manifest.json");
+        let src = std::fs::read_to_string(&mpath).expect("read manifest");
+        let mut j = Json::parse(&src).expect("parse manifest");
+        if let Json::Obj(map) = &mut j {
+            if let Some(Json::Arr(arts)) = map.get_mut("artifacts") {
+                let before = arts.len();
+                arts.retain(|a| {
+                    a.get("name").and_then(|n| n.as_str()) != Some(strip)
+                });
+                assert_eq!(arts.len() + 1, before, "{strip} must exist to be stripped");
+            }
+        }
+        std::fs::write(&mpath, j.to_string_pretty()).expect("write doctored manifest");
+    }
+    Some((tmp.to_string_lossy().into_owned(), real))
+}
+
+/// Acceptance: a plan whose fused artifact is missing serves the fp
+/// fallback; the background compile queue builds the artifact (stubbed —
+/// the "build" restores the real manifest, gated so the test controls
+/// when); the router hot-swaps the service onto the fused path with the
+/// `artifact` field flipping observably and ZERO dropped or miscounted
+/// requests — the global per-path counters tally both phases exactly.
+#[test]
+fn compile_queue_hot_swaps_to_fused_path() {
+    if !afq::util::artifacts_available("artifacts") {
+        return;
+    }
+    // Build the plan key from the real manifest first (need model meta).
+    let real_manifest = afq::runtime::Manifest::load("artifacts").unwrap();
+    let meta = real_manifest.config("tiny").unwrap().clone();
+    let plan = canonical_mixed_plan(&meta, &["nf4", "af4"]);
+    let fused_name = plan.fused_artifact_name();
+    if !real_manifest.artifacts.contains_key(&fused_name) {
+        eprintln!("skipping: {fused_name} not baked (re-run `make artifacts`)");
+        return;
+    }
+    let Some((tmp, real)) = doctored_artifacts("hotswap", Some(&fused_name)) else { return };
+
+    let r = Router::with_config(&tmp, fast_config()).expect("router over doctored dir");
+    r.register_model("tiny", ParamSet::init(&meta, 33)).unwrap();
+    // Stub compiler: blocks until released, then "builds" the artifact by
+    // restoring the real (complete) manifest into the doctored dir — the
+    // HLO files were copied up front, so the artifact becomes loadable.
+    let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+    let (tmp_w, real_w) = (tmp.clone(), real.clone());
+    r.enable_compile_queue(Some(Box::new(move |_job| {
+        release_rx.recv().map_err(|_| "release channel closed".to_string())?;
+        std::fs::copy(
+            std::path::Path::new(&real_w).join("manifest.json"),
+            std::path::Path::new(&tmp_w).join("manifest.json"),
+        )
+        .map_err(|e| format!("restore manifest: {e}"))?;
+        Ok(())
+    })))
+    .unwrap();
+    let key = r.register_plan(plan).unwrap();
+
+    let c_fallback = format!(
+        "afq_service_requests_total{{service=\"{key}\",path=\"plan-reconstructed-fp\"}}"
+    );
+    let c_fused =
+        format!("afq_service_requests_total{{service=\"{key}\",path=\"plan-fused\"}}");
+    let fb_before = afq::obs::registry::counter(&c_fallback).get();
+    let fu_before = afq::obs::registry::counter(&c_fused).get();
+
+    // Phase 1: the compiler is gated shut, so every request serves the
+    // reconstructed-fp fallback.
+    let n1 = 6usize;
+    for (ids, tgt) in payloads(&meta, n1, 41) {
+        r.score(ScoreRequest::new(&key, ids, tgt)).expect("fallback serves");
+    }
+    let snap = r.snapshot();
+    assert_eq!(snap.get(&key).unwrap().serving_path, "plan-reconstructed-fp");
+    assert_eq!(snap.get(&key).unwrap().artifact, "score_fp_tiny");
+    assert_eq!(snap.get(&key).unwrap().requests, n1 as u64);
+
+    // Phase 2: release the build, wait for the hot-swap.
+    release_tx.send(()).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut swapped = 0usize;
+    while swapped == 0 {
+        assert!(std::time::Instant::now() < deadline, "hot-swap never happened");
+        swapped = r.poll_compiled();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = r.snapshot();
+    assert_eq!(
+        snap.get(&key).unwrap().artifact,
+        fused_name,
+        "the service's artifact must flip observably"
+    );
+    assert_eq!(snap.get(&key).unwrap().serving_path, "plan-fused");
+
+    // Phase 3: post-swap traffic serves fused; exact per-path accounting
+    // across the swap (the registry outlives the old instance).
+    let n2 = 6usize;
+    for (ids, tgt) in payloads(&meta, n2, 43) {
+        r.score(ScoreRequest::new(&key, ids, tgt)).expect("fused serves");
+    }
+    let fb_after = afq::obs::registry::counter(&c_fallback).get();
+    let fu_after = afq::obs::registry::counter(&c_fused).get();
+    assert_eq!(
+        fb_after - fb_before,
+        n1 as u64,
+        "every pre-swap request counted on the fallback path, none lost"
+    );
+    assert_eq!(
+        fu_after - fu_before,
+        n2 as u64,
+        "every post-swap request counted on the fused path, none lost"
+    );
+    let snap = r.snapshot();
+    assert_eq!(snap.get(&key).unwrap().errors, 0);
+    assert_eq!(snap.get(&key).unwrap().serving_path, "plan-fused");
+    r.shutdown();
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// Regression (satellite): a preparation that fails AFTER uploading
+/// weights (the executable's HLO file is missing at preload) must evict
+/// its partial uploads and panel-cache owner — before the fix, those
+/// bytes leaked until process exit, silently eating the residency budget.
+#[test]
+fn failed_prepare_releases_partial_uploads() {
+    if !afq::util::artifacts_available("artifacts") {
+        return;
+    }
+    let real_manifest = afq::runtime::Manifest::load("artifacts").unwrap();
+    let meta = real_manifest.config("tiny").unwrap().clone();
+    let plan = canonical_mixed_plan(&meta, &["nf4", "af4"]);
+    let fused_name = plan.fused_artifact_name();
+    if !real_manifest.artifacts.contains_key(&fused_name) {
+        return;
+    }
+    // Doctored fleet: manifest intact, but the fused executable's HLO file
+    // is deleted — prepare uploads every weight, then fails at preload.
+    let Some((tmp, _real)) = doctored_artifacts("leak", None) else { return };
+    let hlo = real_manifest.artifact(&fused_name).unwrap().file.clone();
+    std::fs::remove_file(std::path::Path::new(&tmp).join(&hlo)).expect("delete fused hlo");
+
+    let r = Router::with_config(&tmp, fast_config()).expect("router");
+    r.register_model("tiny", ParamSet::init(&meta, 37)).unwrap();
+    let key = r.register_plan(plan).unwrap();
+    let base = r.engine().stats();
+    let e = r.prepare(&key).unwrap_err();
+    assert!(e.contains(&fused_name) || e.contains("compile") || e.contains("parse"), "{e}");
+    let after = r.engine().stats();
+    assert_eq!(
+        after.resident_bytes, base.resident_bytes,
+        "failed prepare must return every uploaded byte"
+    );
+    assert_eq!(
+        after.cached_buffers, base.cached_buffers,
+        "failed prepare must evict every uploaded buffer"
+    );
+    assert_eq!(r.service_count(), 0, "failure is not cached — the key stays retryable");
+    r.shutdown();
+    let _ = std::fs::remove_dir_all(&tmp);
+}
